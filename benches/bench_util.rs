@@ -1,0 +1,45 @@
+//! Minimal benchmarking harness (criterion is not in the vendored dep
+//! closure): warmup + timed repetitions with mean / stddev / min, printed
+//! as aligned rows.  Used by every `cargo bench` target.
+
+use std::time::Instant;
+
+/// Time `f` with warmups, returning (mean_s, std_s, min_s) over `reps`.
+pub fn time_it<F: FnMut()>(warmups: usize, reps: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmups {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    (mean, var.sqrt(), min)
+}
+
+/// Print one benchmark row.
+pub fn report(name: &str, mean: f64, std: f64, min: f64) {
+    println!("{name:<48} mean {:>12}  ±{:>10}  min {:>12}", fmt(mean), fmt(std), fmt(min));
+}
+
+pub fn fmt(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Prevent the optimiser from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,70 @@
+//! Runtime hot-path bench: per-artifact PJRT execution latency for every
+//! artifact kind (embed / select / train buckets / eval) on the cifar10
+//! config — the numbers behind the §Perf L3 accounting and the end-to-end
+//! step-time budget of Tables 8-14.
+//!
+//! Requires `make artifacts`.  Run: `cargo bench --bench runtime_hotpath`
+
+mod bench_util;
+
+use bench_util::{report, time_it};
+use graft::rng::Rng;
+use graft::runtime::{default_dir, Engine, TrainState};
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = match Engine::new(default_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP runtime bench: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let config = "cifar10";
+    let spec = engine.spec(config)?.clone();
+    engine.warmup(config)?;
+
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..spec.k * spec.d).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; spec.k * spec.c];
+    for i in 0..spec.k {
+        y[i * spec.c + rng.below(spec.c)] = 1.0;
+    }
+    let mut state = TrainState::init(&spec, 42);
+
+    println!("== runtime hot path (config {config}: K={}, D={}, Rmax={}) ==\n", spec.k, spec.d, spec.rmax);
+
+    let params = state.params.clone();
+    let (m, s, mn) = time_it(3, 20, || {
+        engine.embed(config, &params, &x, &y).unwrap();
+    });
+    report("embed (features+sketches)", m, s, mn);
+
+    let (m, s, mn) = time_it(3, 20, || {
+        engine.select(config, &params, &x, &y).unwrap();
+    });
+    report("select (L1 Pallas maxvol+proj)", m, s, mn);
+
+    let (m, s, mn) = time_it(3, 20, || {
+        engine.eval_step(config, &params, &x, &y).unwrap();
+    });
+    report("eval_step", m, s, mn);
+
+    for &bucket in &spec.buckets.clone() {
+        let xb = x[..bucket * spec.d].to_vec();
+        let yb = y[..bucket * spec.c].to_vec();
+        let w = vec![1.0 / bucket as f32; bucket];
+        let (m, s, mn) = time_it(3, 20, || {
+            engine
+                .train_step(config, bucket, &mut state, &xb, &yb, &w, 0.01, 0.9)
+                .unwrap();
+        });
+        report(&format!("train_step bucket={bucket}"), m, s, mn);
+    }
+
+    let st = engine.stats();
+    println!(
+        "\nengine: {} compiles ({:.2}s), {} executions ({:.2}s total)",
+        st.compiles, st.compile_secs, st.executions, st.exec_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Table 1 bench: selection-cost scaling per method.  The paper's claim:
+//! GRAFT is O(KR² + |Rset|Rd) — linear in K, quadratic in R, independent
+//! of n — while CRAIG/GradMatch/GLISTER scale with full gradient
+//! comparisons and DRoP/SubSelNet are quadratic in n.
+//!
+//! Run: `cargo bench --bench table1_complexity`
+
+mod bench_util;
+
+use bench_util::{black_box, report, time_it};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::{by_name, BatchView};
+
+fn make_view(k: usize, r: usize, e: usize, classes: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    Owned {
+        features: Mat::from_fn(k, r, |_, _| rng.normal()),
+        grads: Mat::from_fn(k, e, |_, _| rng.normal()),
+        losses: (0..k).map(|_| rng.uniform()).collect(),
+        labels: (0..k).map(|i| (i % classes) as i32).collect(),
+        preds: (0..k).map(|i| (i % classes) as i32).collect(),
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    classes: usize,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+fn main() {
+    println!("== Table 1: per-batch selection cost by method ==");
+    let methods = [
+        "maxvol", "cross-maxvol", "random", "craig", "gradmatch", "glister", "drop", "el2n",
+    ];
+    // K scaling (R fixed): GRAFT-family should be ~linear, CRAIG ~quadratic.
+    println!("\n-- scaling in K (R = 16, E = 64) --");
+    for &k in &[64usize, 128, 256, 512] {
+        let owned = make_view(k, 16, 64, 10, k as u64);
+        for m in methods {
+            let mut sel = by_name(m, 1).unwrap();
+            let r = 16.min(k);
+            let (mean, std, min) = time_it(2, 8, || {
+                black_box(sel.select(&owned.view(), r));
+            });
+            report(&format!("{m:<14} K={k:<5}"), mean, std, min);
+        }
+        println!();
+    }
+    // R scaling (K fixed): MaxVol quadratic in R by design.
+    println!("-- scaling in R (K = 256, E = 64) --");
+    for &r in &[4usize, 8, 16, 32, 64] {
+        let owned = make_view(256, r.max(8), 64, 10, 7 + r as u64);
+        for m in ["maxvol", "gradmatch", "craig"] {
+            let mut sel = by_name(m, 1).unwrap();
+            let (mean, std, min) = time_it(2, 8, || {
+                black_box(sel.select(&owned.view(), r));
+            });
+            report(&format!("{m:<14} R={r:<5}"), mean, std, min);
+        }
+        println!();
+    }
+    println!("(paper Table 1: GRAFT O(KR^2) linear in K; CRAIG/GradMatch linear in n\n with full gradient comparisons; DRoP quadratic in n — shapes above)");
+}

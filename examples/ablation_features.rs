@@ -1,0 +1,14 @@
+//! Table 3 / Fig 4 scenario: feature-extractor ablation — SVD vs AE vs
+//! ICA, as (a) a logistic-probe accuracy/time comparison (Table 3) and
+//! (b) end-to-end GRAFT training with each extractor plus the FastMaxVol
+//! vs CrossMaxVol sampler comparison (Fig 4).
+//!
+//! Run: `cargo run --release --example ablation_features [--epochs 10]`
+
+use graft::config::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    graft::cmd::tables::table3(&args)?;
+    graft::cmd::figures::fig4(&args)
+}

@@ -1,0 +1,13 @@
+//! Table 5 scenario: Fast MaxVol channel pruning — train a full model,
+//! select the most informative 50% of hidden channels by MaxVol on the
+//! activation matrix, and report params / accuracy / FLOPs / latency
+//! before vs after (paper Table 5).
+//!
+//! Run: `cargo run --release --example channel_pruning`
+
+use graft::config::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    graft::cmd::tables::table5(&args)
+}

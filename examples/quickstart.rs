@@ -1,0 +1,39 @@
+//! Quickstart: train a classifier on the synthetic CIFAR-10 stand-in with
+//! GRAFT subset selection at 25% data, and compare against full-data
+//! training — accuracy, emissions, and steps.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use graft::runtime::{default_dir, Engine};
+use graft::train::{self, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+
+    let base = TrainConfig {
+        dataset: "cifar10".into(),
+        epochs: 20,
+        ..TrainConfig::default()
+    };
+
+    println!("== full-data baseline ==");
+    let full = train::run(&mut engine, &TrainConfig { method: "full".into(), ..base.clone() })?;
+    println!("  {}", full.result.summary_row());
+
+    println!("== GRAFT @ 25% ==");
+    let graft = train::run(
+        &mut engine,
+        &TrainConfig { method: "graft".into(), fraction: 0.25, ..base.clone() },
+    )?;
+    println!("  {}", graft.result.summary_row());
+    let (mu, sigma) = graft.alignment.mean_std();
+    println!("  gradient alignment: mu={mu:.2} sigma={sigma:.2}");
+
+    println!(
+        "\nGRAFT kept {:.1}% of the accuracy at {:.0}% of the emissions",
+        100.0 * graft.result.final_acc / full.result.final_acc,
+        100.0 * graft.result.co2_kg / full.result.co2_kg,
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT export: lower every L2 computation to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+text with ``HloModuleProto::from_text_file`` and compiles on the PJRT CPU
+client.  HLO text — NOT ``lowered.compile()``/``.serialize()`` — is the
+interchange format: jax ≥ 0.5 serialises HloModuleProto with 64-bit
+instruction ids, which xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Layout:
+  artifacts/<config>/<name>.hlo.txt
+  artifacts/manifest.txt      flat key-value file the Rust side parses
+  artifacts/manifest.json     human-readable mirror
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--configs a,b,…]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, grad_embed_dim
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser).
+
+    Printed with ``print_large_constants=True``: the default printer elides
+    constants above a size threshold as ``{...}``, which the xla_extension
+    0.5.1 text parser silently materialises as ZEROS — baked constants
+    (e.g. the subspace-iteration test matrix Ω) would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # 0.5.1's parser predates newer metadata attributes (source_end_line…);
+    # metadata is debug-only, so drop it entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def export_config(name: str, cfg: dict, out_dir: str, verbose: bool = True):
+    """Lower and write every artifact of one dataset config."""
+    cfg_dir = os.path.join(out_dir, name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    entries = []
+    for art_name, fn, specs in model.lowerable(cfg):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(cfg_dir, f"{art_name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(art_name)
+        if verbose:
+            print(f"  {name}/{art_name}: {len(text)} chars "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return entries
+
+
+def write_manifest(out_dir: str, exported: dict[str, list[str]]):
+    """Flat key-value manifest (Rust parses this; JSON mirror for humans)."""
+    lines = ["version 1"]
+    for name, arts in exported.items():
+        cfg = CONFIGS[name]
+        lines.append(
+            f"config {name} d {cfg['d']} c {cfg['c']} h {cfg['h']} "
+            f"k {cfg['k']} rmax {cfg['rmax']} e {grad_embed_dim(cfg)} "
+            f"buckets {','.join(str(b) for b in cfg['buckets'])} "
+            f"artifacts {','.join(arts)}"
+        )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({n: {**CONFIGS[n], "e": grad_embed_dim(CONFIGS[n]),
+                       "artifacts": a} for n, a in exported.items()},
+                  f, indent=2)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated subset of configs (default: all)")
+    args = ap.parse_args(argv)
+
+    names = list(CONFIGS) if args.configs is None else args.configs.split(",")
+    unknown = [n for n in names if n not in CONFIGS]
+    if unknown:
+        print(f"unknown configs: {unknown}", file=sys.stderr)
+        return 2
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    exported = {}
+    for n in names:
+        print(f"[aot] lowering config '{n}' …", flush=True)
+        exported[n] = export_config(n, CONFIGS[n], out_dir)
+    write_manifest(out_dir, exported)
+    print(f"[aot] wrote {sum(len(v) for v in exported.values())} artifacts "
+          f"for {len(exported)} configs in {time.time() - t0:.1f}s → {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

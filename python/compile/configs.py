@@ -1,0 +1,42 @@
+"""Dataset/model configurations for artifact generation.
+
+Each entry fixes the static shapes of one artifact family.  The Rust
+coordinator reads the same values from ``artifacts/manifest.txt`` (flat
+key-value format emitted by ``aot.py``) so both sides agree on shapes.
+
+Fields
+------
+d      input feature dimension (flattened)
+c      number of classes
+h      hidden width of the 2-layer MLP classifier
+k      mini-batch size K (rows fed to embed/select/eval)
+rmax   maximum candidate rank / subset size per batch (Fast MaxVol depth)
+buckets padded subset-size buckets for ``train_step`` artifacts; the
+       coordinator rounds the dynamic R* up to the nearest bucket so the
+       per-step compute actually shrinks with the subset (fixed-shape XLA).
+"""
+
+# Buckets are shared across configs (subset sizes as fractions of K=128-ish
+# batches).  The largest bucket equals the batch size -> "full" training
+# reuses the same artifact family.
+DEFAULT_BUCKETS = [8, 16, 32, 64, 128]
+
+CONFIGS = {
+    # Synthetic stand-ins for the paper's image benchmarks (see DESIGN.md §2).
+    "cifar10": dict(d=256, c=10, h=128, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    "cifar100": dict(d=256, c=100, h=128, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    "fashionmnist": dict(d=196, c=10, h=128, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    "tinyimagenet": dict(d=256, c=200, h=160, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    "caltech256": dict(d=256, c=257, h=160, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    "dermamnist": dict(d=147, c=7, h=96, k=128, rmax=64, buckets=DEFAULT_BUCKETS),
+    # Synthetic IMDB: frozen text-embedding features + trainable head
+    # (Table 2 scenario; K=100 matches the paper's fine-tuning batch size).
+    "imdb": dict(d=128, c=2, h=64, k=100, rmax=50, buckets=[5, 10, 25, 50, 100]),
+    # Iris is embedded verbatim on the Rust side (Table 4 scenario).
+    "iris": dict(d=4, c=3, h=16, k=120, rmax=4, buckets=[2, 4, 8, 120]),
+}
+
+
+def grad_embed_dim(cfg: dict) -> int:
+    """Dimension E of the per-sample gradient sketch (hidden + class)."""
+    return cfg["h"] + cfg["c"]

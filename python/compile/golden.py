@@ -1,0 +1,110 @@
+"""Golden-data generator: deterministic inputs + JAX outputs per config.
+
+``make artifacts`` runs this after aot.py.  The Rust integration tests load
+``artifacts/<config>/golden.bin``, execute the corresponding HLO artifacts
+through PJRT, and assert the outputs match JAX bit-for-tolerance — the
+cross-language numerics check for the whole AOT bridge.
+
+Binary record format (little-endian), repeated until EOF:
+    u32  name_len        | name bytes (utf-8)
+    u8   dtype           | 0 = f32, 1 = i32
+    u32  ndim            | ndim × u32 dims
+    data (row-major)
+
+Usage: python -m compile.golden [--out-dir ../artifacts] [--configs a,b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .configs import CONFIGS
+
+
+def write_record(f, name: str, arr: np.ndarray):
+    arr = np.asarray(arr)
+    shape = arr.shape  # before ascontiguousarray, which promotes 0-d to 1-d
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype in (np.float32, np.float64):
+        arr, code = arr.astype(np.float32), 0
+    elif arr.dtype in (np.int32, np.int64):
+        arr, code = arr.astype(np.int32), 1
+    else:
+        raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+    nb = name.encode()
+    f.write(struct.pack("<I", len(nb)))
+    f.write(nb)
+    f.write(struct.pack("<BI", code, len(shape)))
+    for dim in shape:
+        f.write(struct.pack("<I", dim))
+    f.write(arr.tobytes())
+
+
+def golden_inputs(cfg: dict, seed: int = 7):
+    rng = np.random.RandomState(seed)
+    k, d, c = cfg["k"], cfg["d"], cfg["c"]
+    params = model.init_params(d, cfg["h"], c, seed=seed + 1)
+    x = rng.randn(k, d).astype(np.float32)
+    y = rng.randint(0, c, size=k)
+    y1h = np.eye(c, dtype=np.float32)[y]
+    return params, x, y1h
+
+
+def generate(name: str, cfg: dict, out_dir: str):
+    params, x, y1h = golden_inputs(cfg)
+    xj, yj = jnp.asarray(x), jnp.asarray(y1h)
+    path = os.path.join(out_dir, name, "golden.bin")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        for pname, arr in zip(("w1", "b1", "w2", "b2"), params):
+            write_record(f, f"in.{pname}", np.asarray(arr))
+        write_record(f, "in.x", x)
+        write_record(f, "in.y1h", y1h)
+
+        v, g, losses, preds = model.embed(*params, xj, yj, rmax=cfg["rmax"])
+        for n, a in (("v", v), ("g", g), ("losses", losses), ("preds", preds)):
+            write_record(f, f"embed.{n}", np.asarray(a))
+
+        p, d, gnorm, align = model.select(*params, xj, yj, rmax=cfg["rmax"])
+        for n, a in (("p", p), ("d", d), ("gnorm", gnorm), ("align", align)):
+            write_record(f, f"select.{n}", np.asarray(a))
+
+        bucket = cfg["buckets"][min(2, len(cfg["buckets"]) - 1)]
+        w = np.full((bucket,), 1.0 / bucket, np.float32)
+        vel = tuple(jnp.zeros_like(t) for t in params)
+        out = model.train_step(*params, *vel, xj[:bucket], yj[:bucket],
+                               jnp.asarray(w), jnp.float32(0.05),
+                               jnp.float32(0.9))
+        write_record(f, "train.bucket", np.asarray(bucket, np.int32))
+        names = ("w1", "b1", "w2", "b2", "v1", "v2", "v3", "v4", "loss")
+        for n, a in zip(names, out):
+            write_record(f, f"train.{n}", np.asarray(a))
+
+        loss, correct = model.eval_step(*params, xj, yj)
+        write_record(f, "eval.loss", np.asarray(loss))
+        write_record(f, "eval.correct", np.asarray(correct))
+    print(f"  golden {name}: {os.path.getsize(path)} bytes", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default=None)
+    args = ap.parse_args(argv)
+    names = list(CONFIGS) if args.configs is None else args.configs.split(",")
+    out_dir = os.path.abspath(args.out_dir)
+    for n in names:
+        generate(n, CONFIGS[n], out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

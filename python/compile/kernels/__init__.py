@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret-mode on CPU; see DESIGN.md §Hardware-Adaptation)."""
+
+from .fast_maxvol import fast_maxvol
+from .projection import prefix_projection_errors
+
+__all__ = ["fast_maxvol", "prefix_projection_errors"]

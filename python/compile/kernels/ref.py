@@ -1,0 +1,65 @@
+"""Pure-numpy correctness oracles for the L1 Pallas kernels.
+
+These deliberately use an *independent* formulation (explicit linear solves
+and LAPACK QR/SVD) so a bug shared with the kernels cannot cancel out.
+Test-time only — never lowered into HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def fast_maxvol_ref(v: np.ndarray) -> np.ndarray:
+    """Reference Fast MaxVol via explicit residual solves (paper §3.1).
+
+    At step j the residual of column j against the previously selected rows
+    is recomputed from scratch with a least-squares solve — O(KR³) total,
+    but unambiguous.
+    """
+    v = np.asarray(v, dtype=np.float64)
+    k, r = v.shape
+    p: list[int] = []
+    for j in range(r):
+        col = v[:, j]
+        if p:
+            sub = v[np.array(p), :j]          # (j, j)
+            rhs = v[np.array(p), j]           # (j,)
+            coef, *_ = np.linalg.lstsq(sub, rhs, rcond=None)
+            resid = col - v[:, :j] @ coef
+        else:
+            resid = col.copy()
+        score = np.abs(resid)
+        if p:
+            score[np.array(p, dtype=int)] = -1.0  # enforce uniqueness
+        p.append(int(np.argmax(score)))
+    return np.asarray(p, dtype=np.int32)
+
+
+def prefix_projection_ref(g: np.ndarray, gbar: np.ndarray) -> np.ndarray:
+    """Reference prefix projection errors via LAPACK SVD.
+
+    d_r = 1 − ‖Q_r^T ĝ‖² with Q_r a rank-aware orthonormal basis of the
+    first r columns of g (zero/dependent columns contribute nothing).
+    """
+    g = np.asarray(g, dtype=np.float64)
+    gbar = np.asarray(gbar, dtype=np.float64)
+    e, r = g.shape
+    nrm = np.linalg.norm(gbar)
+    ghat = gbar / nrm if nrm > 1e-10 else np.zeros_like(gbar)
+    out = np.empty(r)
+    for j in range(1, r + 1):
+        gj = g[:, :j]
+        q, s, _ = np.linalg.svd(gj, full_matrices=False)
+        rank = int(np.sum(s > s[0] * 1e-9)) if s.size and s[0] > 0 else 0
+        q = q[:, :rank]
+        cum = float(np.sum((q.T @ ghat) ** 2)) if rank else 0.0
+        out[j - 1] = max(1.0 - cum, 0.0)
+    return out
+
+
+def log_volume(v: np.ndarray, rows, cols: int) -> float:
+    """log |det V[rows[:cols], :cols]| — volume-monotonicity test helper."""
+    sub = np.asarray(v, dtype=np.float64)[np.asarray(rows)[:cols], :cols]
+    sign, logdet = np.linalg.slogdet(sub)
+    return -np.inf if sign == 0 else float(logdet)

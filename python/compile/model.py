@@ -1,0 +1,258 @@
+"""L2: JAX model + GRAFT compute graphs (build-time only; AOT → HLO text).
+
+A 2-layer MLP classifier stands in for the paper's backbones (DESIGN.md §2):
+GRAFT only interacts with a model through (a) batch feature matrices and
+(b) per-sample gradient sketches, both of which the MLP exposes identically.
+
+Portability constraint: the image's xla_extension 0.5.1 runtime has no
+LAPACK FFI custom-calls, so every linear-algebra primitive here is plain
+HLO — randomized subspace iteration for features, fori_loop MGS for
+orthonormalisation (no jnp.linalg.svd/qr anywhere on the export path).
+
+Exported computations per dataset config (see aot.py):
+
+  embed(θ, X, Y1h)            → V(K×Rmax), Gemb(K×E), losses(K), preds(K)
+  select(θ, X, Y1h)           → p(Rmax) i32, d(Rmax), gnorm(), align()
+  train_step_b{B}(θ, v, X, Y1h, w, lr, mu) → θ', v', loss
+  eval_step(θ, X, Y1h)        → loss(), ncorrect()
+
+θ = (W1, b1, W2, b2); v = matching momentum buffers; w = per-row weights
+(the masked-subset trick: fixed shapes + dynamic subset size, DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fast_maxvol, prefix_projection_errors
+
+_EPS = 1e-10
+# Power-iteration sweeps for the feature subspace (q=2 is the classic
+# Halko-Martinsson-Tropp recommendation for decaying spectra).
+_POWER_ITERS = 2
+_OMEGA_SEED = 0x5EED
+
+
+class Params(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+def init_params(d: int, h: int, c: int, seed: int = 0) -> Params:
+    """He-initialised MLP parameters (numpy RNG → deterministic artifacts)."""
+    rng = np.random.RandomState(seed)
+    w1 = rng.randn(d, h).astype(np.float32) * np.sqrt(2.0 / d)
+    w2 = rng.randn(h, c).astype(np.float32) * np.sqrt(2.0 / h)
+    return Params(
+        jnp.asarray(w1), jnp.zeros((h,), jnp.float32),
+        jnp.asarray(w2), jnp.zeros((c,), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def forward(params: Params, x: jax.Array):
+    """Returns (logits, hidden activations, pre-activation)."""
+    a1 = x @ params.w1 + params.b1
+    h = jax.nn.relu(a1)
+    logits = h @ params.w2 + params.b2
+    return logits, h, a1
+
+
+def per_sample_losses(params: Params, x: jax.Array, y1h: jax.Array) -> jax.Array:
+    logits, _, _ = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(y1h * logp, axis=-1)
+
+
+def weighted_loss(params: Params, x: jax.Array, y1h: jax.Array, w: jax.Array):
+    """Σ_k w_k ℓ_k — the masked-subset objective (weights already 1/R*)."""
+    return jnp.sum(per_sample_losses(params, x, y1h) * w)
+
+
+# --------------------------------------------------------------------------
+# Plain-HLO linear algebra
+# --------------------------------------------------------------------------
+
+def mgs(b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Modified Gram-Schmidt via fori_loop; returns (Q, column norms).
+
+    Norms are captured *before* normalisation — after power iteration they
+    estimate the singular-value ordering used to rank feature relevance
+    (paper §3.1 Step 1: Rel(1) ≥ … ≥ Rel(R)).
+    """
+    k, r = b.shape
+
+    def body(j, carry):
+        q_all, norms = carry
+        col = jax.lax.dynamic_slice_in_dim(q_all, j, 1, axis=1)[:, 0]
+
+        def inner(i, acc):
+            qi = jax.lax.dynamic_slice_in_dim(q_all, i, 1, axis=1)[:, 0]
+            return acc - qi * jnp.dot(qi, acc)
+
+        col = jax.lax.fori_loop(0, j, inner, col)
+        nrm = jnp.sqrt(jnp.sum(col * col))
+        qj = jnp.where(nrm > _EPS, col / jnp.maximum(nrm, _EPS),
+                       jnp.zeros_like(col))
+        q_all = jax.lax.dynamic_update_slice_in_dim(q_all, qj[:, None], j, axis=1)
+        norms = jax.lax.dynamic_update_slice_in_dim(norms, nrm[None], j, axis=0)
+        return q_all, norms
+
+    return jax.lax.fori_loop(0, r, body, (b, jnp.zeros((r,), b.dtype)))
+
+
+def subspace_features(x: jax.Array, rmax: int) -> jax.Array:
+    """Importance-ordered low-rank feature matrix V = f(X) ∈ R^{K×Rmax}.
+
+    Randomized subspace iteration (HMT 2011) with a *fixed* seeded Gaussian
+    test matrix baked into the HLO as a constant: V spans the dominant
+    left-singular subspace of the centered batch, with columns ordered by
+    estimated singular value — exactly the "ordered extracted features" the
+    Fast MaxVol sampler expects.
+    """
+    k, d = x.shape
+    rng = np.random.RandomState(_OMEGA_SEED)
+    omega = jnp.asarray(rng.randn(d, rmax).astype(np.float32))
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    b = xc @ omega
+    for _ in range(_POWER_ITERS):
+        q, _ = mgs(b)
+        b = xc @ (xc.T @ q)
+    q, norms = mgs(b)
+    order = jnp.argsort(-norms)
+    return jnp.take(q, order, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Gradient sketches
+# --------------------------------------------------------------------------
+
+def grad_sketch(params: Params, x: jax.Array, y1h: jax.Array) -> jax.Array:
+    """Per-sample gradient sketch Gemb ∈ R^{K×(C+H)} (analytic, no vmap).
+
+    Concatenates the exact logit-gradient δ_k = p_k − y_k (the last-layer
+    bias gradient) with the exact hidden-layer backprop signal
+    (δ_k W2ᵀ) ⊙ relu'(a1) (the first-layer bias gradient).  This is the
+    standard last-layer(s) gradient embedding used by GradMatch/BADGE-style
+    methods; ⟨sketch_i, sketch_j⟩ approximates per-sample gradient inner
+    products at ~1/d the cost of full gradients.
+    """
+    logits, h, a1 = forward(params, x)
+    p = jax.nn.softmax(logits, axis=-1)
+    delta = p - y1h                                  # (K, C)
+    hidden = (delta @ params.w2.T) * (a1 > 0)        # (K, H)
+    return jnp.concatenate([delta, hidden], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Exported computations
+# --------------------------------------------------------------------------
+
+def embed(w1, b1, w2, b2, x, y1h, *, rmax: int):
+    """Batch embeddings for all selection methods (GRAFT + baselines)."""
+    params = Params(w1, b1, w2, b2)
+    v = subspace_features(x, rmax)
+    g = grad_sketch(params, x, y1h)
+    losses = per_sample_losses(params, x, y1h)
+    logits, _, _ = forward(params, x)
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return v, g, losses, preds
+
+
+def select(w1, b1, w2, b2, x, y1h, *, rmax: int):
+    """GRAFT Stage-1: Fast MaxVol selection + prefix projection errors.
+
+    Returns (p, d, gnorm, align):
+      p     (Rmax,) int32  prefix-nested selected row indices
+      d     (Rmax,)        normalised projection error per candidate rank
+      gnorm ()             ‖ḡ‖₂ of the batch-mean gradient sketch
+      align ()             cos(ḡ, mean of selected-at-Rmax sketches)
+    """
+    params = Params(w1, b1, w2, b2)
+    v = subspace_features(x, rmax)
+    p = fast_maxvol(v)                               # L1 Pallas kernel
+    g = grad_sketch(params, x, y1h)                  # (K, E)
+    gbar = jnp.mean(g, axis=0)                       # (E,)
+    gsel = jnp.take(g, p, axis=0).T                  # (E, Rmax)
+    d = prefix_projection_errors(gsel, gbar)         # L1 Pallas kernel
+    gnorm = jnp.sqrt(jnp.sum(gbar * gbar))
+    msel = jnp.mean(gsel, axis=1)
+    align = jnp.dot(gbar, msel) / jnp.maximum(
+        gnorm * jnp.sqrt(jnp.sum(msel * msel)), _EPS)
+    return p, d, gnorm, align
+
+
+def train_step(w1, b1, w2, b2, v1, v2, v3, v4, x, y1h, w, lr, mu):
+    """One SGD+momentum step on the weighted (masked-subset) loss.
+
+    Weights w encode the dynamic subset: w_k = 1/R* on selected rows, else 0
+    (full-batch training = uniform 1/K).  lr/mu are runtime scalars so the
+    Rust coordinator owns the cosine-annealing schedule.
+    """
+    params = Params(w1, b1, w2, b2)
+    vel = Params(v1, v2, v3, v4)
+    loss, grads = jax.value_and_grad(weighted_loss)(params, x, y1h, w)
+    new_vel = jax.tree_util.tree_map(lambda v, g: mu * v + g, vel, grads)
+    new_params = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, new_vel)
+    return (*new_params, *new_vel, loss)
+
+
+def eval_step(w1, b1, w2, b2, x, y1h):
+    """Mean loss + per-sample correctness over one evaluation batch.
+
+    Correctness is returned per row (not summed) so the Rust coordinator
+    can mask wrap-padded tail rows exactly when the test set is not a
+    multiple of K.
+    """
+    params = Params(w1, b1, w2, b2)
+    losses = per_sample_losses(params, x, y1h)
+    logits, _, _ = forward(params, x)
+    correct = (jnp.argmax(logits, axis=-1) == jnp.argmax(y1h, axis=-1)
+               ).astype(jnp.int32)
+    return jnp.mean(losses), correct
+
+
+# --------------------------------------------------------------------------
+# Shape helpers for lowering (aot.py)
+# --------------------------------------------------------------------------
+
+def param_specs(d: int, h: int, c: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((d, h), f32), jax.ShapeDtypeStruct((h,), f32),
+        jax.ShapeDtypeStruct((h, c), f32), jax.ShapeDtypeStruct((c,), f32),
+    )
+
+
+def batch_specs(k: int, d: int, c: int):
+    f32 = jnp.float32
+    return (jax.ShapeDtypeStruct((k, d), f32),
+            jax.ShapeDtypeStruct((k, c), f32))
+
+
+def lowerable(cfg: dict):
+    """Yield (name, fn, arg_specs) for every artifact of one config."""
+    d, c, h, k, rmax = cfg["d"], cfg["c"], cfg["h"], cfg["k"], cfg["rmax"]
+    f32 = jnp.float32
+    scalar = jax.ShapeDtypeStruct((), f32)
+    p_specs = param_specs(d, h, c)
+
+    yield ("embed", functools.partial(embed, rmax=rmax),
+           (*p_specs, *batch_specs(k, d, c)))
+    yield ("select", functools.partial(select, rmax=rmax),
+           (*p_specs, *batch_specs(k, d, c)))
+    for bucket in cfg["buckets"]:
+        yield (f"train_step_b{bucket}", train_step,
+               (*p_specs, *p_specs, *batch_specs(bucket, d, c),
+                jax.ShapeDtypeStruct((bucket,), f32), scalar, scalar))
+    yield ("eval_step", eval_step, (*p_specs, *batch_specs(k, d, c)))

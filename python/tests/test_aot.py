@@ -1,0 +1,86 @@
+"""AOT export tests: HLO text round-trip, manifest integrity, golden format."""
+
+import io
+import os
+import struct
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, golden, model
+from compile.configs import CONFIGS, grad_embed_dim
+
+
+def test_to_hlo_text_roundtrips_smallest_config():
+    cfg = CONFIGS["iris"]
+    for name, fn, specs in model.lowerable(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # No LAPACK/FFI custom-calls may appear on the export path —
+        # xla_extension 0.5.1 cannot execute them (DESIGN.md §1).
+        assert "lapack" not in text.lower(), name
+        assert "custom-call" not in text.lower(), name
+
+
+def test_export_and_manifest(tmp_path):
+    out = str(tmp_path)
+    arts = aot.export_config("iris", CONFIGS["iris"], out, verbose=False)
+    aot.write_manifest(out, {"iris": arts})
+    assert (tmp_path / "iris" / "select.hlo.txt").exists()
+    lines = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert lines[0] == "version 1"
+    fields = lines[1].split()
+    kv = dict(zip(fields[2::2], fields[3::2]))
+    assert fields[0] == "config" and fields[1] == "iris"
+    assert int(kv["d"]) == 4 and int(kv["rmax"]) == 4
+    assert int(kv["e"]) == grad_embed_dim(CONFIGS["iris"])
+    assert "select" in kv["artifacts"].split(",")
+
+
+def _read_records(buf: bytes):
+    f = io.BytesIO(buf)
+    out = {}
+    while True:
+        head = f.read(4)
+        if not head:
+            break
+        (nlen,) = struct.unpack("<I", head)
+        name = f.read(nlen).decode()
+        code, ndim = struct.unpack("<BI", f.read(5))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+        dtype = np.float32 if code == 0 else np.int32
+        n = int(np.prod(dims)) if dims else 1
+        data = np.frombuffer(f.read(4 * n), dtype=dtype).reshape(dims)
+        out[name] = data
+    return out
+
+
+def test_golden_roundtrip(tmp_path):
+    golden.generate("iris", CONFIGS["iris"], str(tmp_path))
+    recs = _read_records((tmp_path / "iris" / "golden.bin").read_bytes())
+    cfg = CONFIGS["iris"]
+    assert recs["in.x"].shape == (cfg["k"], cfg["d"])
+    assert recs["select.p"].dtype == np.int32
+    assert recs["select.p"].shape == (cfg["rmax"],)
+    assert len(set(recs["select.p"].tolist())) == cfg["rmax"]
+    # Golden outputs must agree with a fresh JAX evaluation (determinism).
+    params, x, y1h = golden.golden_inputs(cfg)
+    p, d, gnorm, align = model.select(*params, jnp.asarray(x),
+                                      jnp.asarray(y1h), rmax=cfg["rmax"])
+    np.testing.assert_array_equal(recs["select.p"], np.asarray(p))
+    np.testing.assert_allclose(recs["select.d"], np.asarray(d), rtol=1e-6)
+    assert recs["train.loss"].shape == ()
+    assert np.isfinite(recs["train.loss"])
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_config_sanity(name):
+    cfg = CONFIGS[name]
+    assert cfg["rmax"] <= cfg["k"]
+    assert cfg["rmax"] <= max(cfg["d"], cfg["rmax"])  # V is K×Rmax
+    assert max(cfg["buckets"]) == cfg["k"], "largest bucket must be full batch"
+    assert sorted(cfg["buckets"]) == cfg["buckets"]

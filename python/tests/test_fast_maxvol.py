@@ -1,0 +1,125 @@
+"""L1 kernel tests: Fast MaxVol vs the numpy oracle + algebraic invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fast_maxvol
+from compile.kernels.ref import fast_maxvol_ref, log_volume
+
+
+def _rand(k, r, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(k, r) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Oracle agreement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(4, 96),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference(k, r, seed):
+    r = min(r, k)
+    v = _rand(k, r, seed)
+    got = np.asarray(fast_maxvol(v))
+    want = fast_maxvol_ref(v)
+    assert got.shape == (r,)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_matches_reference_scaled(seed, scale):
+    v = _rand(48, 8, seed, scale=scale)
+    np.testing.assert_array_equal(np.asarray(fast_maxvol(v)),
+                                  fast_maxvol_ref(v))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dtypes(dtype):
+    v = _rand(32, 6, 7, dtype=dtype)
+    got = np.asarray(fast_maxvol(v))
+    np.testing.assert_array_equal(got, fast_maxvol_ref(v))
+
+
+# ---------------------------------------------------------------------------
+# Invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(8, 64), r=st.integers(2, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_indices_unique_and_in_range(k, r, seed):
+    r = min(r, k)
+    p = np.asarray(fast_maxvol(_rand(k, r, seed)))
+    assert len(set(p.tolist())) == r
+    assert p.min() >= 0 and p.max() < k
+
+
+def test_prefix_nested():
+    """fast_maxvol(V)[:r] must equal fast_maxvol(V[:, :r]) — the nestedness
+    that makes the one-pass dynamic-rank search valid."""
+    v = _rand(64, 12, 123)
+    full = np.asarray(fast_maxvol(v))
+    for r in (1, 3, 6, 9):
+        sub = np.asarray(fast_maxvol(v[:, :r]))
+        np.testing.assert_array_equal(full[:r], sub)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_volume_beats_random(seed):
+    """MaxVol's selected submatrix volume should beat a random selection
+    (in expectation; we allow equality and compare against the median of
+    several random draws to avoid flakiness)."""
+    v = _rand(64, 8, seed)
+    p = np.asarray(fast_maxvol(v))
+    lv = log_volume(v, p, 8)
+    rng = np.random.RandomState(seed ^ 0xABCDEF)
+    rand_lvs = [
+        log_volume(v, rng.permutation(64)[:8], 8) for _ in range(11)
+    ]
+    assert lv >= np.median(rand_lvs)
+
+
+def test_first_index_is_max_abs_of_first_column():
+    v = _rand(40, 5, 99)
+    p = np.asarray(fast_maxvol(v))
+    assert p[0] == np.argmax(np.abs(v[:, 0]))
+
+
+def test_duplicate_rows_still_unique_selection():
+    rng = np.random.RandomState(5)
+    base = rng.randn(4, 6).astype(np.float32)
+    v = np.vstack([base] * 8)  # 32 rows, only 4 distinct
+    p = np.asarray(fast_maxvol(v))
+    assert len(set(p.tolist())) == 6  # mask keeps selection unique
+
+
+def test_rank_deficient_matrix():
+    rng = np.random.RandomState(6)
+    col = rng.randn(24, 1).astype(np.float32)
+    v = np.hstack([col, 2 * col, -col, 0.5 * col])  # rank 1
+    p = np.asarray(fast_maxvol(v))
+    assert len(set(p.tolist())) == 4
+
+
+def test_r_greater_than_k_raises():
+    with pytest.raises(ValueError):
+        fast_maxvol(np.zeros((3, 5), np.float32))
+
+
+def test_identity_like_matrix():
+    """On a permuted identity the selection must find the nonzero rows."""
+    v = np.zeros((16, 4), np.float32)
+    rows = [11, 2, 7, 14]
+    for j, i in enumerate(rows):
+        v[i, j] = 1.0 + j
+    p = np.asarray(fast_maxvol(v))
+    np.testing.assert_array_equal(p, rows)

@@ -1,0 +1,189 @@
+"""L2 model tests: shapes for every config, gradient exactness, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, grad_embed_dim
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    k, d, c = cfg["k"], cfg["d"], cfg["c"]
+    x = jnp.asarray(rng.randn(k, d).astype(np.float32))
+    y = rng.randint(0, c, size=k)
+    y1h = jnp.asarray(np.eye(c, dtype=np.float32)[y])
+    return x, y1h
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = CONFIGS["iris"]
+    params = model.init_params(cfg["d"], cfg["h"], cfg["c"], seed=1)
+    x, y1h = _batch(cfg, seed=2)
+    return cfg, params, x, y1h
+
+
+# ---------------------------------------------------------------------------
+# Shapes (abstract eval — fast for every config)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_artifact_shapes(name):
+    cfg = CONFIGS[name]
+    k, rmax, e, c = cfg["k"], cfg["rmax"], grad_embed_dim(cfg), cfg["c"]
+    for art, fn, specs in model.lowerable(cfg):
+        out = jax.eval_shape(fn, *specs)
+        if art == "embed":
+            v, g, losses, preds = out
+            assert v.shape == (k, rmax) and g.shape == (k, e)
+            assert losses.shape == (k,) and preds.shape == (k,)
+        elif art == "select":
+            p, d, gnorm, align = out
+            assert p.shape == (rmax,) and p.dtype == jnp.int32
+            assert d.shape == (rmax,)
+            assert gnorm.shape == () and align.shape == ()
+        elif art.startswith("train_step_b"):
+            b = int(art.split("_b")[1])
+            assert b in cfg["buckets"]
+            assert len(out) == 9  # 4 params + 4 velocities + loss
+            assert out[-1].shape == ()
+        elif art == "eval_step":
+            loss, correct = out
+            assert loss.shape == () and correct.shape == (k,)
+            assert correct.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Gradient sketch exactness: the sketch IS the per-sample (b2, b1) gradient
+# ---------------------------------------------------------------------------
+
+def test_grad_sketch_is_exact_bias_gradient(small):
+    cfg, params, x, y1h = small
+    sketch = model.grad_sketch(params, x, y1h)
+    c, h = cfg["c"], cfg["h"]
+
+    def loss_one(p, xi, yi):
+        return model.per_sample_losses(p, xi[None], yi[None])[0]
+
+    grads = jax.vmap(lambda xi, yi: jax.grad(loss_one)(params, xi, yi))(x, y1h)
+    np.testing.assert_allclose(sketch[:, :c], grads.b2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sketch[:, c:], grads.b1, rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_loss_grad_matches_subset_mean(small):
+    """Masked-subset trick: weights 1/R on subset S == mean loss over S."""
+    cfg, params, x, y1h = small
+    k = cfg["k"]
+    subset = np.array([3, 17, 42, 99])
+    w = np.zeros(k, np.float32)
+    w[subset] = 1.0 / len(subset)
+    full = model.weighted_loss(params, x, y1h, jnp.asarray(w))
+    direct = jnp.mean(model.per_sample_losses(
+        params, x[subset], y1h[subset]))
+    np.testing.assert_allclose(full, direct, rtol=1e-5)
+
+    gfull = jax.grad(model.weighted_loss)(params, x, y1h, jnp.asarray(w))
+    gdirect = jax.grad(
+        lambda p: jnp.mean(model.per_sample_losses(p, x[subset], y1h[subset]))
+    )(params)
+    for a, b in zip(gfull, gdirect):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Subspace features
+# ---------------------------------------------------------------------------
+
+def test_subspace_features_orthonormal():
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+    v = model.subspace_features(x, 8)
+    gram = np.asarray(v.T @ v)
+    np.testing.assert_allclose(gram, np.eye(8), atol=1e-4)
+
+
+def test_subspace_features_capture_dominant_subspace():
+    """V must align with the true top left-singular subspace of Xc."""
+    rng = np.random.RandomState(8)
+    # Low-rank + noise: U (64×4) S V (4×32)
+    u = rng.randn(64, 4)
+    s = np.diag([50.0, 30.0, 20.0, 10.0])
+    vt = rng.randn(4, 32)
+    x = u @ s @ vt + 0.01 * rng.randn(64, 32)
+    x = jnp.asarray(x.astype(np.float32))
+    v = model.subspace_features(x, 4)
+    xc = np.asarray(x) - np.asarray(x).mean(0)
+    u_true, _, _ = np.linalg.svd(xc, full_matrices=False)
+    u4 = u_true[:, :4]
+    # Principal-angle energy: ‖U4ᵀ V‖_F² ≈ 4 when subspaces coincide.
+    energy = np.linalg.norm(u4.T @ np.asarray(v)) ** 2
+    assert energy > 3.9
+
+
+def test_subspace_features_importance_ordered():
+    rng = np.random.RandomState(9)
+    u = rng.randn(96, 6)
+    s = np.diag([100, 60, 30, 10, 4, 1.0])
+    vt = rng.randn(6, 48)
+    x = jnp.asarray((u @ s @ vt).astype(np.float32))
+    v = model.subspace_features(x, 6)
+    xc = np.asarray(x) - np.asarray(x).mean(0)
+    # Rayleigh quotient per feature column should be (roughly) decreasing.
+    energies = [float(np.linalg.norm(xc.T @ np.asarray(v)[:, j]))
+                for j in range(6)]
+    assert all(energies[i] >= energies[i + 1] * 0.9 for i in range(5)), energies
+
+
+def test_mgs_reproduces_column_space():
+    rng = np.random.RandomState(10)
+    b = jnp.asarray(rng.randn(40, 6).astype(np.float32))
+    q, norms = model.mgs(b)
+    qn = np.asarray(q)
+    np.testing.assert_allclose(qn.T @ qn, np.eye(6), atol=1e-4)
+    # Q spans col(B): projecting B onto Q loses nothing.
+    bn = np.asarray(b)
+    np.testing.assert_allclose(qn @ (qn.T @ bn), bn, rtol=1e-3, atol=1e-3)
+    assert float(norms[0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+def test_train_step_descends(small):
+    cfg, params, x, y1h = small
+    k = cfg["k"]
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    vel = tuple(jnp.zeros_like(t) for t in params)
+    cur, curv = params, vel
+    losses = []
+    for _ in range(30):
+        out = model.train_step(*cur, *curv, x, y1h, w,
+                               jnp.float32(0.5), jnp.float32(0.9))
+        cur, curv, loss = out[:4], out[4:8], out[8]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_select_outputs_consistent(small):
+    cfg, params, x, y1h = small
+    p, d, gnorm, align = model.select(*params, x, y1h, rmax=cfg["rmax"])
+    p = np.asarray(p)
+    assert len(set(p.tolist())) == cfg["rmax"]
+    dn = np.asarray(d)
+    assert np.all(np.diff(dn) <= 1e-5)
+    assert float(gnorm) > 0
+    assert -1.0 - 1e-5 <= float(align) <= 1.0 + 1e-5
+
+
+def test_eval_step_counts(small):
+    cfg, params, x, y1h = small
+    loss, correct = model.eval_step(*params, x, y1h)
+    logits, _, _ = model.forward(params, x)
+    want = (np.argmax(np.asarray(logits), -1)
+            == np.argmax(np.asarray(y1h), -1)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(correct), want)
+    assert float(loss) > 0

@@ -1,0 +1,97 @@
+"""L1 kernel tests: prefix projection errors vs the SVD oracle + invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prefix_projection_errors
+from compile.kernels.ref import prefix_projection_ref
+
+
+def _case(e, r, seed, dtype=np.float32):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(e, r).astype(dtype), rng.randn(e).astype(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(e=st.integers(2, 64), r=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_matches_reference(e, r, seed):
+    g, gbar = _case(e, r, seed)
+    got = np.asarray(prefix_projection_errors(g, gbar))
+    want = prefix_projection_ref(g, gbar)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dtypes(dtype):
+    g, gbar = _case(24, 6, 3, dtype)
+    got = np.asarray(prefix_projection_errors(g, gbar))
+    np.testing.assert_allclose(got, prefix_projection_ref(g, gbar),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(e=st.integers(4, 48), r=st.integers(2, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_monotone_nonincreasing_and_bounded(e, r, seed):
+    g, gbar = _case(e, r, seed)
+    d = np.asarray(prefix_projection_errors(g, gbar))
+    assert np.all(d >= -1e-6) and np.all(d <= 1.0 + 1e-6)
+    assert np.all(np.diff(d) <= 1e-5), "adding a basis vector cannot hurt"
+
+
+def test_gbar_in_span_gives_zero_error():
+    rng = np.random.RandomState(11)
+    g = rng.randn(20, 5).astype(np.float32)
+    gbar = (g @ rng.randn(5)).astype(np.float32)
+    d = np.asarray(prefix_projection_errors(g, gbar))
+    assert d[-1] < 1e-5
+
+
+def test_orthogonal_gbar_gives_full_error():
+    """ḡ orthogonal to every selected gradient → d_r = 1 for all r."""
+    g = np.zeros((6, 3), np.float32)
+    g[:3, 0] = [1, 0, 0]
+    g[:3, 1] = [0, 1, 0]
+    g[:3, 2] = [1, 1, 0]
+    gbar = np.array([0, 0, 0, 0, 0, 1], np.float32)
+    d = np.asarray(prefix_projection_errors(g, gbar))
+    np.testing.assert_allclose(d, 1.0, atol=1e-6)
+
+
+def test_zero_gbar_is_finite():
+    g, _ = _case(16, 4, 2)
+    d = np.asarray(prefix_projection_errors(g, np.zeros(16, np.float32)))
+    assert np.all(np.isfinite(d))
+
+
+def test_duplicate_columns_no_double_count():
+    """A repeated column must not decrease the error twice."""
+    rng = np.random.RandomState(13)
+    col = rng.randn(12).astype(np.float32)
+    g = np.stack([col, col, col], axis=1)
+    gbar = rng.randn(12).astype(np.float32)
+    d = np.asarray(prefix_projection_errors(g, gbar))
+    np.testing.assert_allclose(d, d[0], atol=1e-5)
+    np.testing.assert_allclose(
+        d, prefix_projection_ref(g, gbar), rtol=2e-3, atol=2e-4)
+
+
+def test_lemma1_consistency():
+    """Lemma 1: ‖ḡ − Q Qᵀ ḡ‖² == ‖ḡ‖² · d_r (normalised error)."""
+    rng = np.random.RandomState(17)
+    g = rng.randn(30, 6).astype(np.float64)
+    gbar = rng.randn(30).astype(np.float64)
+    d = np.asarray(prefix_projection_errors(g, gbar))
+    q, _, _ = np.linalg.svd(g, full_matrices=False)
+    resid = gbar - q @ (q.T @ gbar)
+    lhs = np.dot(resid, resid)
+    rhs = np.dot(gbar, gbar) * d[-1]
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-6)
+
+
+def test_bad_gbar_shape_raises():
+    g, _ = _case(10, 3, 0)
+    with pytest.raises(ValueError):
+        prefix_projection_errors(g, np.zeros(11, np.float32))

@@ -1,0 +1,245 @@
+//! Figure harnesses: Fig 2 (alignment / rank / class distribution),
+//! Fig 3 (exponential gain fits), Fig 4 (extractor + sampler ablation),
+//! Fig 5 (loss landscape).
+
+use anyhow::{Context, Result};
+
+use crate::config::Args;
+use crate::eval::fit::fit_gain_curve;
+use crate::eval::report::{save_result, Table};
+use crate::runtime::{default_dir, Engine};
+use crate::train::{self, landscape, TrainConfig};
+
+/// Fig 2: run GRAFT with adaptive rank and dump the alignment telemetry —
+/// per-batch cos heatmap CSV, epoch trend, class histogram.
+pub fn fig2(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+    let cfg = TrainConfig {
+        dataset: args.get_or("dataset", "cifar10"),
+        method: "graft".into(),
+        fraction: args.f64_or("fraction", 0.25)?,
+        epochs: args.usize_or("epochs", 30)?,
+        refresh_epochs: args.usize_or("refresh-epochs", 3)?,
+        adaptive_rank: true,
+        epsilon: args.f64_or("epsilon", 0.1)?,
+        ..args.train_config()?
+    };
+    let out = train::run(&mut engine, &cfg)?;
+    let (res, align) = (out.result, out.alignment);
+    println!("{}", res.summary_row());
+    let (mu, sigma) = align.mean_std();
+    println!(
+        "Fig 2 stats: mu={mu:.3} sigma={sigma:.3} (paper: mu=0.72 sigma=0.15), \
+         frac(cos>0.5)={:.2}, corr(align,rank)={:.3}",
+        align.frac_above(0.5),
+        align.align_rank_correlation()
+    );
+    save_result("fig2_alignment_heatmap.csv", &align.to_csv())?;
+    // Epoch trend (Fig 2b).
+    let mut trend = String::from("epoch,mean_cos,mean_rank\n");
+    for (e, c, r) in align.epoch_trend() {
+        trend.push_str(&format!("{e},{c:.4},{r:.2}\n"));
+    }
+    save_result("fig2_epoch_trend.csv", &trend)?;
+    // Class distribution (Fig 2c).
+    let mut hist = String::from("epoch,class,count\n");
+    for (e, counts) in &align.class_counts {
+        for (c, n) in counts.iter().enumerate() {
+            hist.push_str(&format!("{e},{c},{n}\n"));
+        }
+    }
+    save_result("fig2_class_distribution.csv", &hist)?;
+    println!("wrote results/fig2_*.csv");
+    Ok(())
+}
+
+/// Fig 3: fit E(x) = E₀ + (H−E₀)(1−e^{−λx/x_max}) to the sweep results —
+/// Φ_acc(CO₂) and Ψ(f) per method — and report (E₀, H, λ, R²).
+pub fn fig3(args: &Args) -> Result<()> {
+    let datasets = args.list_or("datasets", &["cifar10"]);
+    let mut table = Table::new(
+        "Fig 3 — exponential gain fits",
+        &["dataset", "method", "curve", "E0", "H", "lambda", "R2"],
+    );
+    let mut csv = vec!["dataset,method,curve,e0,h,lambda,r2".to_string()];
+    for dataset in &datasets {
+        let path = format!("results/sweep_{dataset}.csv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("{path} missing — run `graft sweep --dataset {dataset}` first"))?;
+        // Parse sweep CSV.
+        let mut rows: Vec<(String, f64, f64, f64)> = Vec::new(); // method, fraction, co2, acc
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() < 4 {
+                continue;
+            }
+            rows.push((f[0].into(), f[1].parse()?, f[2].parse()?, f[3].parse()?));
+        }
+        let full_acc = rows
+            .iter()
+            .find(|r| r.0 == "full")
+            .map(|r| r.3)
+            .unwrap_or_else(|| rows.iter().map(|r| r.3).fold(0.0, f64::max));
+        let mut methods: Vec<String> = rows.iter().map(|r| r.0.clone()).collect();
+        methods.sort();
+        methods.dedup();
+        for m in methods.iter().filter(|m| m.as_str() != "full") {
+            let pts: Vec<&(String, f64, f64, f64)> = rows.iter().filter(|r| &r.0 == m).collect();
+            if pts.len() < 3 {
+                continue;
+            }
+            // Φ_acc vs CO₂ and Ψ vs fraction.
+            for (curve, xs, ys) in [
+                (
+                    "phi_acc_vs_co2",
+                    pts.iter().map(|p| p.2).collect::<Vec<_>>(),
+                    pts.iter().map(|p| p.3 / full_acc).collect::<Vec<_>>(),
+                ),
+                (
+                    "psi_vs_fraction",
+                    pts.iter().map(|p| p.1).collect::<Vec<_>>(),
+                    pts.iter().map(|p| p.3 / full_acc).collect::<Vec<_>>(),
+                ),
+            ] {
+                if let Some(fit) = fit_gain_curve(&xs, &ys) {
+                    table.row(vec![
+                        dataset.clone(),
+                        m.clone(),
+                        curve.into(),
+                        format!("{:.3}", fit.e0),
+                        format!("{:.3}", fit.h),
+                        format!("{:.2}", fit.lambda),
+                        format!("{:.3}", fit.r2),
+                    ]);
+                    csv.push(format!(
+                        "{dataset},{m},{curve},{:.4},{:.4},{:.3},{:.4}",
+                        fit.e0, fit.h, fit.lambda, fit.r2
+                    ));
+                }
+            }
+        }
+    }
+    let rendered = table.render();
+    println!("{rendered}");
+    save_result("fig3_gain_fits.csv", &(csv.join("\n") + "\n"))?;
+    save_result("fig3_gain_fits.txt", &rendered)?;
+    Ok(())
+}
+
+/// Fig 4: (left) GRAFT accuracy with SVD vs AE vs ICA features @25%;
+/// (right) FastMaxVol vs CrossMaxVol sampler convergence curves.
+pub fn fig4(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+    let dataset = args.get_or("dataset", "cifar10");
+    let epochs = args.usize_or("epochs", 20)?;
+    let seeds: Vec<u64> = args
+        .list_or("seeds", &["42", "43", "44"])
+        .iter()
+        .map(|s| s.parse::<u64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+
+    // Left: feature-extractor ablation.
+    let mut left = String::from("extractor,seed,epoch,test_acc\n");
+    let mut summary = Table::new(
+        "Fig 4 (left) — extractor ablation, GRAFT @25%",
+        &["extractor", "final acc (mean ± std over seeds)"],
+    );
+    for ext in ["svd", "ae", "ica"] {
+        let mut finals = Vec::new();
+        for &seed in &seeds {
+            let cfg = TrainConfig {
+                dataset: dataset.clone(),
+                method: "graft".into(),
+                fraction: 0.25,
+                epochs,
+                extractor: Some(ext.to_string()),
+                seed,
+                ..args.train_config()?
+            };
+            let res = train::run(&mut engine, &cfg)?.result;
+            eprintln!("  [{ext} seed {seed}] {}", res.summary_row());
+            for p in &res.curve {
+                left.push_str(&format!("{ext},{seed},{},{:.4}\n", p.epoch, p.test_acc));
+            }
+            finals.push(res.final_acc);
+        }
+        let mean = finals.iter().sum::<f64>() / finals.len() as f64;
+        let std = (finals.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+            / finals.len() as f64)
+            .sqrt();
+        summary.row(vec![ext.to_uppercase(), format!("{:.2} ± {:.2}", mean * 100.0, std * 100.0)]);
+    }
+    save_result("fig4_extractors.csv", &left)?;
+
+    // Right: sampler convergence (Fast MaxVol vs CrossMaxVol selectors).
+    let mut right = String::from("sampler,seed,epoch,test_acc\n");
+    let mut summary2 = Table::new(
+        "Fig 4 (right) — sampler convergence @25%",
+        &["sampler", "final acc (mean ± std over seeds)"],
+    );
+    for sampler in ["maxvol", "cross-maxvol"] {
+        let mut finals = Vec::new();
+        for &seed in &seeds {
+            let cfg = TrainConfig {
+                dataset: dataset.clone(),
+                method: sampler.to_string(),
+                fraction: 0.25,
+                epochs,
+                seed,
+                ..args.train_config()?
+            };
+            let res = train::run(&mut engine, &cfg)?.result;
+            eprintln!("  [{sampler} seed {seed}] {}", res.summary_row());
+            for p in &res.curve {
+                right.push_str(&format!("{sampler},{seed},{},{:.4}\n", p.epoch, p.test_acc));
+            }
+            finals.push(res.final_acc);
+        }
+        let mean = finals.iter().sum::<f64>() / finals.len() as f64;
+        let std = (finals.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+            / finals.len() as f64)
+            .sqrt();
+        summary2.row(vec![sampler.into(), format!("{:.2} ± {:.2}", mean * 100.0, std * 100.0)]);
+    }
+    save_result("fig4_samplers.csv", &right)?;
+    let rendered = format!("{}\n{}", summary.render(), summary2.render());
+    println!("{rendered}");
+    save_result("fig4_summary.txt", &rendered)?;
+    Ok(())
+}
+
+/// Fig 5: loss-landscape grids around the full-data minimiser and the
+/// GRAFT-subset minimiser.
+pub fn fig5(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+    let dataset = args.get_or("dataset", "cifar10");
+    let epochs = args.usize_or("epochs", 20)?;
+    let half = args.usize_or("half-points", 8)?;
+    let radius = args.f64_or("radius", 1.0)? as f32;
+    let spec = engine.spec(&dataset)?.clone();
+    let ds = train::load_dataset(&dataset)?;
+    let (_, test) = ds.split(0.8, 42 ^ 0x5917);
+
+    let mut summary = Table::new("Fig 5 — loss landscape sharpness", &["trained with", "center loss", "sharpness"]);
+    for method in ["full", "graft"] {
+        let cfg = TrainConfig {
+            dataset: dataset.clone(),
+            method: method.into(),
+            fraction: 0.25,
+            epochs,
+            ..args.train_config()?
+        };
+        let out = train::run(&mut engine, &cfg)?;
+        eprintln!("  [{method}] {}", out.result.summary_row());
+        let params = out.state.params;
+        let grid = landscape::scan(&mut engine, &dataset, &spec, &params, &test, half, radius, 0xF1657)?;
+        let sharp = landscape::sharpness(&grid);
+        let center = grid[half][half];
+        summary.row(vec![method.into(), format!("{center:.4}"), format!("{sharp:.4}")]);
+        save_result(&format!("fig5_landscape_{method}.csv"), &landscape::grid_csv(&grid, radius))?;
+    }
+    let rendered = summary.render();
+    println!("{rendered}");
+    save_result("fig5_summary.txt", &rendered)?;
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! CLI subcommand implementations — one per paper table/figure family
+//! (see DESIGN.md §4 for the experiment index).
+
+pub mod figures;
+pub mod sweep;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::config::Args;
+use crate::eval::report::save_result;
+use crate::runtime::{default_dir, Engine};
+use crate::train;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "info" => info(),
+        "train" => train_cmd(args),
+        "sweep" => sweep::run(args),
+        "fig2" => figures::fig2(args),
+        "fig3" => figures::fig3(args),
+        "fig4" => figures::fig4(args),
+        "fig5" => figures::fig5(args),
+        "table2" => tables::table2(args),
+        "table3" => tables::table3(args),
+        "table4" => tables::table4(args),
+        "table5" => tables::table5(args),
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "graft — GRAFT reproduction CLI (see DESIGN.md for the experiment map)
+
+USAGE: graft <command> [--key value …]
+
+COMMANDS
+  info                      list artifact configs
+  train                     one training run
+                            --dataset D --method M --fraction F --epochs N
+                            [--adaptive-rank] [--epsilon E] [--seed S]
+  sweep                     Tables 8-14 grid: methods × fractions
+                            --dataset D [--methods a,b,…] [--fractions …]
+  fig2                      alignment heatmap / rank trend / class hist
+  fig3                      exponential gain fits from sweep CSVs
+  fig4                      extractor ablation + maxvol convergence
+  fig5                      loss-landscape scan (full vs GRAFT)
+  table2                    BERT/IMDB warm-vs-cold scenario
+  table3                    feature-extraction accuracy/time ablation
+  table4                    FastMaxVol vs CrossMaxVol on Iris
+  table5                    Fast MaxVol channel pruning
+
+Results land in ./results as CSV + ASCII tables."
+    );
+}
+
+fn info() -> Result<()> {
+    let engine = Engine::new(default_dir())?;
+    println!("artifacts: {}", engine.manifest().dir.display());
+    for (name, spec) in &engine.manifest().configs {
+        println!(
+            "  {name:<14} d={:<4} c={:<4} h={:<4} k={:<4} rmax={:<3} e={:<4} buckets={:?}",
+            spec.d, spec.c, spec.h, spec.k, spec.rmax, spec.e, spec.buckets
+        );
+    }
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let cfg = args.train_config()?;
+    let mut engine = Engine::new(default_dir())?;
+    let out = train::run(&mut engine, &cfg)?;
+    let (result, align) = (out.result, out.alignment);
+    println!("{}", result.summary_row());
+    let (mu, sigma) = align.mean_std();
+    if !align.samples.is_empty() {
+        println!(
+            "alignment: mu={mu:.3} sigma={sigma:.3} frac(cos>0.5)={:.2} corr(align,rank)={:.3} mean_rank={:.1}",
+            align.frac_above(0.5),
+            align.align_rank_correlation(),
+            result.mean_rank,
+        );
+    }
+    let tag = format!("train_{}_{}_f{:.2}", result.dataset, result.method, result.fraction);
+    let path = save_result(&format!("{tag}.curve.csv"), &result.curve_csv())?;
+    println!("curve -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! `graft sweep` — regenerates the Tables 8-14 family: a methods ×
+//! fractions grid on one dataset, reporting CO₂ (kg) and accuracy per
+//! cell exactly in the paper's layout.
+
+use anyhow::Result;
+
+use crate::config::Args;
+use crate::eval::report::{save_result, Table};
+use crate::runtime::{default_dir, Engine};
+use crate::train::{self, TrainConfig};
+
+pub const DEFAULT_METHODS: &[&str] =
+    &["full", "graft", "graft-warm", "glister", "craig", "gradmatch", "drop"];
+pub const DEFAULT_FRACTIONS: &[&str] = &["0.05", "0.15", "0.25", "0.35"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "cifar10");
+    let methods = args.list_or("methods", DEFAULT_METHODS);
+    let fractions: Vec<f64> = args
+        .list_or("fractions", DEFAULT_FRACTIONS)
+        .iter()
+        .map(|s| s.parse::<f64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    let base = args.train_config()?;
+    let mut engine = Engine::new(default_dir())?;
+
+    let mut headers: Vec<String> = vec!["Method".into()];
+    for f in &fractions {
+        headers.push(format!("CO2@{f:.2}"));
+        headers.push(format!("Acc@{f:.2}"));
+    }
+    let mut table = Table::new(
+        &format!("{dataset}: Training Methods Comparison (paper Tables 8-14)"),
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut csv_rows = vec!["method,fraction,co2_kg,acc,energy_kwh,steps,wall_secs,mean_rank".to_string()];
+    for method in &methods {
+        let mut cells = vec![method.clone()];
+        for &fraction in &fractions {
+            let cfg = TrainConfig {
+                dataset: dataset.clone(),
+                method: method.clone(),
+                fraction,
+                ..base.clone()
+            };
+            let res = train::run(&mut engine, &cfg)?.result;
+            eprintln!("  {}", res.summary_row());
+            cells.push(format!("{:.2e}", res.co2_kg));
+            cells.push(format!("{:.2}", res.final_acc * 100.0));
+            csv_rows.push(format!(
+                "{},{},{:.6},{:.4},{:.6},{},{:.2},{:.1}",
+                method, fraction, res.co2_kg, res.final_acc, res.energy_kwh,
+                res.steps, res.wall_secs, res.mean_rank
+            ));
+            // Full training is fraction-independent; reuse the first cell.
+            if method == "full" {
+                for _ in 1..fractions.len() {
+                    cells.push(cells[1].clone());
+                    cells.push(cells[2].clone());
+                }
+                break;
+            }
+        }
+        table.row(cells);
+    }
+
+    let rendered = table.render();
+    println!("{rendered}");
+    let csv = csv_rows.join("\n") + "\n";
+    // --tag distinguishes variant sweeps (e.g. Table 14's random comparison)
+    // so they don't clobber the main per-dataset results.
+    let tag = args.opt("tag").map(|t| format!("_{t}")).unwrap_or_default();
+    let p1 = save_result(&format!("sweep_{dataset}{tag}.csv"), &csv)?;
+    let p2 = save_result(&format!("sweep_{dataset}{tag}.txt"), &rendered)?;
+    println!("wrote {} and {}", p1.display(), p2.display());
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! Table harnesses: Table 2 (BERT/IMDB), Table 3 (feature extractors),
+//! Table 4 (FastMaxVol vs CrossMaxVol on Iris), Table 5 (channel pruning).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Args;
+use crate::data::iris::iris;
+use crate::eval::report::{save_result, Table};
+use crate::features::{AutoencoderFeatures, FeatureExtractor, IcaFeatures, SvdFeatures};
+use crate::linalg::{lstsq, subspace_similarity_normalised, Mat};
+use crate::pruning;
+use crate::rng::Rng;
+use crate::runtime::{default_dir, Engine, TrainState};
+use crate::selection::cross_maxvol::CrossMaxVol;
+use crate::selection::maxvol::fast_maxvol;
+use crate::train::{self, TrainConfig};
+
+/// Table 2: BERT on IMDB — Full vs GRAFT vs GRAFT-Warm at 10% / 35%.
+pub fn table2(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+    let epochs = args.usize_or("epochs", 30)?;
+    let mut t = Table::new(
+        "Table 2 — CO2 Emissions (kg) and Accuracy (%) for (synthetic) BERT/IMDB",
+        &["Method", "Emiss (kg)", "Top-1 Acc (%)"],
+    );
+    let mut csv = vec!["method,fraction,co2_kg,acc".to_string()];
+    let runs: &[(&str, &str, f64)] = &[
+        ("Full (Baseline)", "full", 1.0),
+        ("GRAFT (10%)", "graft", 0.10),
+        ("GRAFT Warm (10%)", "graft-warm", 0.10),
+        ("GRAFT (35%)", "graft", 0.35),
+        ("GRAFT Warm (35%)", "graft-warm", 0.35),
+    ];
+    for &(label, method, fraction) in runs {
+        let cfg = TrainConfig {
+            dataset: "imdb".into(),
+            method: method.into(),
+            fraction,
+            epochs,
+            refresh_epochs: 10, // paper: selection every 10 epochs
+            lr0: 0.05,          // constant-ish fine-tuning regime
+            warm_epochs: 3,
+            seed: args.u64_or("seed", 42)?,
+            ..TrainConfig::default()
+        };
+        let res = train::run(&mut engine, &cfg)?.result;
+        eprintln!("  {}", res.summary_row());
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2e}", res.co2_kg),
+            format!("{:.2}", res.final_acc * 100.0),
+        ]);
+        csv.push(format!("{method},{fraction},{:.6},{:.4}", res.co2_kg, res.final_acc));
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    save_result("table2_imdb.csv", &(csv.join("\n") + "\n"))?;
+    save_result("table2_imdb.txt", &rendered)?;
+    Ok(())
+}
+
+/// Table 3: feature-extractor accuracy (logistic probe) and time/batch.
+pub fn table3(args: &Args) -> Result<()> {
+    let trials = args.usize_or("trials", 5)?;
+    let ds = train::load_dataset("cifar10")?;
+    let k = 400; // probe batch (paper: 200; doubled to cut probe variance)
+    let r = 64;
+    // Probe on the TOP-16 ordered features: a linear probe over the full
+    // feature set is invariant to the (invertible) rotation between SVD
+    // and ICA spans; the paper's differences come from how well each
+    // extractor *orders* relevance, which the truncated probe measures.
+    let probe_cols: Vec<usize> = (0..16).collect();
+    let extractors: Vec<Box<dyn FeatureExtractor>> = vec![
+        Box::new(SvdFeatures),
+        Box::new(AutoencoderFeatures::default()),
+        Box::new(IcaFeatures::default()),
+    ];
+    let mut t = Table::new(
+        "Table 3 — Feature extraction performance (mean ± std)",
+        &["Method", "Acc (%)", "Time (s/batch)"],
+    );
+    let mut csv = vec!["method,trial,acc,time_s".to_string()];
+    for e in &extractors {
+        let mut accs = Vec::new();
+        let mut times = Vec::new();
+        for trial in 0..trials {
+            let mut rng = Rng::new(42 + trial as u64);
+            // Probe protocol: extract features on a batch, fit a linear
+            // probe on 80%, test on 20% (the paper's logistic-probe proxy).
+            let rows = rng.choose(ds.n, k);
+            let batch = Mat::from_fn(k, ds.d, |i, j| ds.row(rows[i])[j] as f64);
+            let t0 = Instant::now();
+            let feats = e.extract(&batch, r).take_cols(&probe_cols);
+            let dt = t0.elapsed().as_secs_f64();
+            let ntr = (k as f64 * 0.8) as usize;
+            // One-vs-rest least-squares probe.
+            let ftr = feats.take_rows(&(0..ntr).collect::<Vec<_>>());
+            let mut correct = 0usize;
+            let mut scores = vec![vec![0.0f64; k - ntr]; ds.classes];
+            for cls in 0..ds.classes {
+                let targets: Vec<f64> = (0..ntr)
+                    .map(|i| if ds.y[rows[i]] as usize == cls { 1.0 } else { -1.0 })
+                    .collect();
+                let w = lstsq(&ftr, &targets);
+                for i in ntr..k {
+                    scores[cls][i - ntr] = crate::linalg::dot(feats.row(i), &w);
+                }
+            }
+            for i in 0..(k - ntr) {
+                let pred = (0..ds.classes)
+                    .max_by(|&a, &b| scores[a][i].partial_cmp(&scores[b][i]).unwrap())
+                    .unwrap();
+                if pred == ds.y[rows[ntr + i]] as usize {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / (k - ntr) as f64;
+            accs.push(acc);
+            times.push(dt);
+            csv.push(format!("{},{},{:.4},{:.5}", e.name(), trial, acc, dt));
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let std = |v: &[f64]| {
+            let m = mean(v);
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        t.row(vec![
+            e.name().to_uppercase(),
+            format!("{:.2} ± {:.2}", mean(&accs) * 100.0, std(&accs) * 100.0),
+            format!("{:.4} ± {:.4}", mean(&times), std(&times)),
+        ]);
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    save_result("table3_features.csv", &(csv.join("\n") + "\n"))?;
+    save_result("table3_features.txt", &rendered)?;
+    Ok(())
+}
+
+/// Table 4: FastMaxVol vs CrossMaxVol on Iris — subspace similarity to the
+/// optimal (SVD) subspace + wall-clock per selection.
+pub fn table4(args: &Args) -> Result<()> {
+    let reps = args.usize_or("reps", 200)?;
+    let ds = iris();
+    // r = 3: with r = d = 4 ANY independent selection spans all of R⁴ and
+    // every method scores similarity 1.0 — the paper's 0.625-vs-0.594 gap
+    // only exists on a proper subspace.
+    let r = 3;
+    let x = Mat::from_fn(ds.n, ds.d, |i, j| ds.row(i)[j] as f64);
+    // Ordered feature matrix (SVD features — paper's extractor).
+    let feats = SvdFeatures.extract(&x, r);
+    // Fast MaxVol.
+    let t0 = Instant::now();
+    let mut p_fast = Vec::new();
+    for _ in 0..reps {
+        p_fast = fast_maxvol(&feats, r);
+    }
+    let fast_time = t0.elapsed().as_secs_f64() / reps as f64;
+    // CrossMaxVol over the raw matrix (as teneva operates on X itself).
+    let cm = CrossMaxVol::default();
+    let t0 = Instant::now();
+    let mut p_cross = Vec::new();
+    for _ in 0..reps {
+        (p_cross, _) = cm.select_rows(&x, r);
+    }
+    let cross_time = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let sim = |rows: &[usize]| {
+        let sel = x.take_rows(rows).transpose(); // d×r: span of selected samples
+        let opt = {
+            let d = crate::linalg::svd(&x);
+            let idx: Vec<usize> = (0..r).collect();
+            d.v.take_cols(&idx)
+        };
+        subspace_similarity_normalised(&sel, &opt)
+    };
+    let (s_fast, s_cross) = (sim(&p_fast), sim(&p_cross));
+
+    let mut t = Table::new(
+        "Table 4 — Similarity & Speed (Iris)",
+        &["Method", "Similarity", "Time (s)"],
+    );
+    t.row(vec!["Fast MaxVol".into(), format!("{s_fast:.4}"), format!("{fast_time:.6}")]);
+    t.row(vec!["CrossMaxVol".into(), format!("{s_cross:.4}"), format!("{cross_time:.6}")]);
+    let rendered = t.render();
+    println!("{rendered}");
+    println!("speedup: {:.1}x (paper: 84.6x)", cross_time / fast_time.max(1e-12));
+    save_result(
+        "table4_maxvol.csv",
+        &format!(
+            "method,similarity,time_s\nfast_maxvol,{s_fast:.6},{fast_time:.8}\ncross_maxvol,{s_cross:.6},{cross_time:.8}\n"
+        ),
+    )?;
+    save_result("table4_maxvol.txt", &rendered)?;
+    Ok(())
+}
+
+/// Table 5: Fast MaxVol channel pruning — params, accuracy, GFLOPs,
+/// inference time, before vs after pruning 50% of hidden channels.
+pub fn table5(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(default_dir())?;
+    let dataset = args.get_or("dataset", "cifar10");
+    let epochs = args.usize_or("epochs", 20)?;
+    // 1. Train a full model.
+    let cfg = TrainConfig {
+        dataset: dataset.clone(),
+        method: "full".into(),
+        epochs,
+        ..TrainConfig::default()
+    };
+    let spec = engine.spec(&dataset)?.clone();
+    engine.warmup(&dataset)?;
+    let ds = train::load_dataset(&dataset)?;
+    let (trainset, test) = ds.split(0.8, cfg.seed ^ 0x5917);
+    // Train directly (rather than via train::run) so we keep the final
+    // parameter state for pruning.
+    let mut state = TrainState::init(&spec, cfg.seed);
+    {
+        let mut b = crate::data::loader::Batcher::new(&trainset, spec.k, cfg.seed ^ 0x3A31);
+        let steps = epochs * (trainset.n / spec.k);
+        let sched = crate::train::Schedule::Cosine { lr0: cfg.lr0, lr_min: cfg.lr0 / 100.0, total_steps: steps };
+        for s in 0..steps {
+            let rows: Vec<usize> = b.next_batch().to_vec();
+            let (x, y) = (trainset.gather(&rows), trainset.one_hot(&rows));
+            let w = vec![1.0 / spec.k as f32; spec.k];
+            engine.train_step(&dataset, spec.k, &mut state, &x, &y, &w, sched.at(s) as f32, 0.9)?;
+        }
+    }
+
+    // 2. Collect hidden activations on a probe batch (via CPU forward,
+    //    identical math to the artifact) and prune 50% of channels.
+    let probe_rows: Vec<usize> = (0..spec.k.min(trainset.n)).collect();
+    let xprobe = trainset.gather(&probe_rows);
+    let acts = hidden_activations(&state.params, spec.d, spec.h, &xprobe);
+    let keep = spec.h / 2;
+    let kept = pruning::select_channels(&acts, keep);
+    let pruned = pruning::prune_params(&state.params, &spec, &kept);
+
+    // 3. Accuracy + timing before/after on the test split (CPU inference).
+    let xt = test.gather(&(0..test.n).collect::<Vec<_>>());
+    let yt: Vec<usize> = test.y.iter().map(|&y| y as usize).collect();
+    let time_and_acc = |p: &crate::runtime::ModelParams| {
+        let t0 = Instant::now();
+        let preds = pruning::forward_pruned(p, spec.d, &xt);
+        let dt = t0.elapsed().as_secs_f64();
+        let acc = preds.iter().zip(&yt).filter(|(a, b)| a == b).count() as f64 / yt.len() as f64;
+        (acc, dt)
+    };
+    let (acc_base, t_base) = time_and_acc(&state.params);
+    let (acc_pruned, t_pruned) = time_and_acc(&pruned.params);
+
+    let mut t = Table::new(
+        "Table 5 — Fast MaxVol channel pruning (50% channels)",
+        &["Method", "Params (M)", "Accuracy (%)", "MFLOPs/sample", "Inference Time (s)"],
+    );
+    t.row(vec![
+        "Baseline".into(),
+        format!("{:.4}", pruned.params_before as f64 / 1e6),
+        format!("{:.2}", acc_base * 100.0),
+        format!("{:.4}", pruned.flops_before / 1e6),
+        format!("{t_base:.4}"),
+    ]);
+    t.row(vec![
+        "Fast MaxVol".into(),
+        format!("{:.4}", pruned.params_after as f64 / 1e6),
+        format!("{:.2}", acc_pruned * 100.0),
+        format!("{:.4}", pruned.flops_after / 1e6),
+        format!("{t_pruned:.4}"),
+    ]);
+    let rendered = t.render();
+    println!("{rendered}");
+    save_result(
+        "table5_pruning.csv",
+        &format!(
+            "method,params,acc,flops_per_sample,time_s\nbaseline,{},{:.4},{},{:.5}\nfast_maxvol,{},{:.4},{},{:.5}\n",
+            pruned.params_before, acc_base, pruned.flops_before, t_base,
+            pruned.params_after, acc_pruned, pruned.flops_after, t_pruned
+        ),
+    )?;
+    save_result("table5_pruning.txt", &rendered)?;
+    Ok(())
+}
+
+/// CPU hidden-layer activations (K×H) for channel pruning.
+pub fn hidden_activations(p: &crate::runtime::ModelParams, d: usize, h: usize, x: &[f32]) -> Mat {
+    let n = x.len() / d;
+    let mut out = Mat::zeros(n, h);
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        for j in 0..h {
+            let mut a = p.b1[j] as f64;
+            for (t, &xv) in row.iter().enumerate() {
+                a += xv as f64 * p.w1[t * h + j] as f64;
+            }
+            out[(i, j)] = a.max(0.0);
+        }
+    }
+    out
+}

@@ -1,0 +1,182 @@
+//! Config system: a tiny dependency-free flag parser (`--key value` /
+//! `--flag`) plus optional `key = value` config files, merged with
+//! defaults.  Every CLI subcommand and example builds its run
+//! configuration through this module so behaviour is uniform.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::TrainConfig;
+
+/// Parsed command line: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first positional = subcommand, then `--key v` /
+    /// `--flag` pairs.  `--config FILE` merges `key = value` lines first
+    /// (explicit flags win).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key.to_string(), it.next().unwrap());
+                }
+                _ => flags.push(key.to_string()),
+            }
+        }
+        let mut args = Args { command, opts, flags };
+        if let Some(path) = args.opt("config") {
+            let merged = Self::parse_file(&path)?;
+            for (k, v) in merged {
+                args.opts.entry(k).or_insert(v);
+            }
+        }
+        Ok(args)
+    }
+
+    fn parse_file(path: &str) -> Result<BTreeMap<String, String>> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut out = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected key = value", ln + 1))?;
+            out.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.opts.get(key).cloned()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Build a [`TrainConfig`] from the parsed options.
+    pub fn train_config(&self) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            dataset: self.get_or("dataset", &d.dataset),
+            method: self.get_or("method", &d.method),
+            fraction: self.f64_or("fraction", d.fraction)?,
+            epochs: self.usize_or("epochs", d.epochs)?,
+            refresh_epochs: self.usize_or("refresh-epochs", d.refresh_epochs)?,
+            lr0: self.f64_or("lr", d.lr0)?,
+            momentum: self.f64_or("momentum", d.momentum)?,
+            epsilon: self.f64_or("epsilon", d.epsilon)?,
+            warm_epochs: self.usize_or("warm-epochs", d.warm_epochs)?,
+            adaptive_rank: self.flag("adaptive-rank"),
+            extractor: self.opt("extractor"),
+            seed: self.u64_or("seed", d.seed)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = parse("train --dataset cifar10 --fraction 0.25 --adaptive-rank");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.opt("dataset").as_deref(), Some("cifar10"));
+        assert!(a.flag("adaptive-rank"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn train_config_defaults_and_overrides() {
+        let a = parse("train --method gradmatch --epochs 7");
+        let c = a.train_config().unwrap();
+        assert_eq!(c.method, "gradmatch");
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.dataset, "cifar10");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("sweep --methods graft,random, --x 1");
+        assert_eq!(a.list_or("methods", &[]), vec!["graft", "random"]);
+        assert_eq!(a.list_or("absent", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("train --epochs abc");
+        assert!(a.train_config().is_err());
+    }
+
+    #[test]
+    fn config_file_merge() {
+        let dir = std::env::temp_dir().join("graft_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(&path, "dataset = imdb\nepochs = 11 # comment\n").unwrap();
+        let a = parse(&format!("train --config {} --epochs 3", path.display()));
+        let c = a.train_config().unwrap();
+        assert_eq!(c.dataset, "imdb"); // from file
+        assert_eq!(c.epochs, 3); // CLI wins
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+    }
+}

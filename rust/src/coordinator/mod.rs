@@ -1,0 +1,13 @@
+//! Streaming coordinator: the data-pipeline layer that feeds the PJRT
+//! engine.  Batch assembly (row gather + one-hot encode) runs on a
+//! producer thread and hands prepared buffers to the engine thread over a
+//! bounded channel — backpressure keeps memory flat, and the engine never
+//! waits on host-side encoding (the L3 hot-path optimisation in §Perf).
+
+pub mod pipeline;
+pub mod scheduler;
+pub mod state;
+
+pub use pipeline::{BatchProducer, PreparedBatch};
+pub use scheduler::RefreshScheduler;
+pub use state::SubsetState;

@@ -1,0 +1,83 @@
+//! Refresh scheduling (the "every S iterations" of Algorithm 1), expressed
+//! in training steps with an epoch-aligned option.
+
+/// Decides at which steps the subset must be re-selected.
+#[derive(Debug, Clone)]
+pub struct RefreshScheduler {
+    /// Refresh period in steps (S).
+    period: usize,
+    /// Step of the last refresh (None before the first).
+    last: Option<usize>,
+}
+
+impl RefreshScheduler {
+    pub fn every_steps(period: usize) -> RefreshScheduler {
+        RefreshScheduler { period: period.max(1), last: None }
+    }
+
+    /// Period expressed in epochs over an active set of `steps_per_epoch`.
+    pub fn every_epochs(epochs: usize, steps_per_epoch: usize) -> RefreshScheduler {
+        Self::every_steps(epochs.max(1) * steps_per_epoch.max(1))
+    }
+
+    /// True when a refresh is due at `step` (always true at step 0).
+    pub fn due(&self, step: usize) -> bool {
+        match self.last {
+            None => true,
+            Some(l) => step >= l + self.period,
+        }
+    }
+
+    /// Record that a refresh happened at `step`.
+    pub fn mark(&mut self, step: usize) {
+        self.last = Some(step);
+    }
+
+    pub fn period(&self) -> usize {
+        self.period
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_always_due() {
+        let s = RefreshScheduler::every_steps(30);
+        assert!(s.due(0));
+        assert!(s.due(17));
+    }
+
+    #[test]
+    fn period_honoured() {
+        let mut s = RefreshScheduler::every_steps(30);
+        s.mark(0);
+        assert!(!s.due(1));
+        assert!(!s.due(29));
+        assert!(s.due(30));
+        s.mark(30);
+        assert!(!s.due(59));
+        assert!(s.due(60));
+    }
+
+    #[test]
+    fn epoch_constructor() {
+        let s = RefreshScheduler::every_epochs(5, 20);
+        assert_eq!(s.period(), 100);
+    }
+
+    #[test]
+    fn exact_refresh_count_over_run() {
+        // Invariant: refreshes over T steps == ceil(T / S).
+        let mut s = RefreshScheduler::every_steps(25);
+        let mut refreshes = 0;
+        for step in 0..251 {
+            if s.due(step) {
+                s.mark(step);
+                refreshes += 1;
+            }
+        }
+        assert_eq!(refreshes, 11); // steps 0,25,…,250
+    }
+}

@@ -1,0 +1,84 @@
+//! Subset cache S^t (Algorithm 1): the active training rows between
+//! refreshes, with provenance for invariant checking.
+
+/// The active subset S^t plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct SubsetState {
+    /// Global row ids of the active subset (unique).
+    active: Vec<usize>,
+    /// Epoch at which this subset was selected.
+    pub selected_at_epoch: usize,
+    /// Generation counter (number of refreshes so far).
+    pub generation: usize,
+}
+
+impl SubsetState {
+    /// Start with the full dataset active (before the first refresh).
+    pub fn full(n: usize) -> SubsetState {
+        SubsetState { active: (0..n).collect(), selected_at_epoch: 0, generation: 0 }
+    }
+
+    /// Install a fresh selection; deduplicates and validates.
+    pub fn refresh(&mut self, mut rows: Vec<usize>, epoch: usize, n: usize) {
+        rows.sort_unstable();
+        rows.dedup();
+        assert!(rows.iter().all(|&r| r < n), "subset row out of range");
+        assert!(!rows.is_empty(), "empty subset");
+        self.active = rows;
+        self.selected_at_epoch = epoch;
+        self.generation += 1;
+    }
+
+    pub fn rows(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Fraction of the dataset currently active.
+    pub fn fraction(&self, n: usize) -> f64 {
+        self.active.len() as f64 / n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_start() {
+        let s = SubsetState::full(10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.generation, 0);
+    }
+
+    #[test]
+    fn refresh_dedups_and_counts() {
+        let mut s = SubsetState::full(100);
+        s.refresh(vec![5, 3, 5, 7, 3], 2, 100);
+        assert_eq!(s.rows(), &[3, 5, 7]);
+        assert_eq!(s.generation, 1);
+        assert_eq!(s.selected_at_epoch, 2);
+        assert!((s.fraction(100) - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        let mut s = SubsetState::full(10);
+        s.refresh(vec![11], 0, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty() {
+        let mut s = SubsetState::full(10);
+        s.refresh(vec![], 0, 10);
+    }
+}

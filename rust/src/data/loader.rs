@@ -1,0 +1,124 @@
+//! Mini-batch loader: seeded shuffling, fixed batch size K (matching the
+//! AOT artifact shapes), epoch accounting.  The last partial batch of an
+//! epoch is dropped (standard practice; the artifacts need exactly K rows).
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Deterministic epoch-based batcher over row indices.
+pub struct Batcher {
+    n: usize,
+    k: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(dataset: &Dataset, k: usize, seed: u64) -> Self {
+        assert!(k <= dataset.n, "batch {} > dataset {}", k, dataset.n);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..dataset.n).collect();
+        rng.shuffle(&mut order);
+        Batcher { n: dataset.n, k, order, cursor: 0, epoch: 0, rng }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.k
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.k
+    }
+
+    /// Next batch of K row indices; reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.k > self.n {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let b = &self.order[self.cursor..self.cursor + self.k];
+        self.cursor += self.k;
+        b
+    }
+
+    /// Iterate the test set in fixed-size windows, padding the tail by
+    /// wrapping (callers subtract the overlap from counts via `valid`).
+    pub fn eval_windows(n: usize, k: usize) -> Vec<(Vec<usize>, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let valid = k.min(n - i);
+            let mut idx: Vec<usize> = (i..i + valid).collect();
+            while idx.len() < k {
+                idx.push(idx.len() % n); // wrap-pad
+            }
+            out.push((idx, valid));
+            i += k;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new("t", vec![0.0; n * 2], vec![0; n], 2, 1)
+    }
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let d = ds(100);
+        let mut b = Batcher::new(&d, 32, 1);
+        let mut seen = Vec::new();
+        for _ in 0..b.batches_per_epoch() {
+            seen.extend_from_slice(b.next_batch());
+        }
+        let mut s = seen.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), seen.len()); // no repeats within an epoch
+        assert_eq!(seen.len(), 96); // 3 full batches of 32
+    }
+
+    #[test]
+    fn epoch_increments_and_reshuffles() {
+        let d = ds(64);
+        let mut b = Batcher::new(&d, 32, 2);
+        let first: Vec<usize> = b.next_batch().to_vec();
+        b.next_batch();
+        assert_eq!(b.epoch(), 0);
+        let third: Vec<usize> = b.next_batch().to_vec();
+        assert_eq!(b.epoch(), 1);
+        assert_ne!(first, third); // reshuffled (w.h.p.)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = ds(50);
+        let mut a = Batcher::new(&d, 16, 3);
+        let mut b = Batcher::new(&d, 16, 3);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    fn eval_windows_cover_all() {
+        let ws = Batcher::eval_windows(10, 4);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[2].1, 2); // last window has 2 valid rows
+        let covered: usize = ws.iter().map(|(_, v)| v).sum();
+        assert_eq!(covered, 10);
+        assert!(ws.iter().all(|(idx, _)| idx.len() == 4));
+    }
+}

@@ -1,0 +1,160 @@
+//! Dataset substrate: in-memory datasets, synthetic families standing in
+//! for the paper's benchmarks (DESIGN.md §2), and the mini-batch loader.
+
+pub mod corpus;
+pub mod iris;
+pub mod loader;
+pub mod synth;
+
+pub use loader::Batcher;
+pub use synth::{synth_dataset, SynthSpec};
+
+/// An in-memory classification dataset: row-major f32 features + labels.
+/// f32 because this is the exact layout fed to the PJRT executables.
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// n × d, row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Vec<f32>, y: Vec<i32>, d: usize, classes: usize) -> Self {
+        assert_eq!(x.len() % d, 0);
+        let n = x.len() / d;
+        assert_eq!(y.len(), n);
+        debug_assert!(y.iter().all(|&c| (c as usize) < classes));
+        Dataset { name: name.into(), x, y, n, d, classes }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// One-hot encode labels for a set of rows (k × classes, row-major).
+    pub fn one_hot(&self, rows: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0; rows.len() * self.classes];
+        for (k, &i) in rows.iter().enumerate() {
+            out[k * self.classes + self.y[i] as usize] = 1.0;
+        }
+        out
+    }
+
+    /// Gather feature rows (k × d, row-major).
+    pub fn gather(&self, rows: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(rows.len() * self.d);
+        for &i in rows {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Deterministic train/test split by fraction (stratified per class so
+    /// small classes survive the split).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); self.classes];
+        for i in 0..self.n {
+            per_class[self.y[i] as usize].push(i);
+        }
+        let (mut tr, mut te) = (Vec::new(), Vec::new());
+        for idxs in per_class.iter_mut() {
+            rng.shuffle(idxs);
+            let ntr = ((idxs.len() as f64) * train_frac).round() as usize;
+            tr.extend_from_slice(&idxs[..ntr]);
+            te.extend_from_slice(&idxs[ntr..]);
+        }
+        rng.shuffle(&mut tr);
+        rng.shuffle(&mut te);
+        (self.subset("train", &tr), self.subset("test", &te))
+    }
+
+    pub fn subset(&self, tag: &str, rows: &[usize]) -> Dataset {
+        Dataset::new(
+            &format!("{}-{}", self.name, tag),
+            self.gather(rows),
+            rows.iter().map(|&i| self.y[i]).collect(),
+            self.d,
+            self.classes,
+        )
+    }
+
+    /// Z-score every feature column in place (mean 0, std 1).
+    pub fn standardize(&mut self) {
+        for j in 0..self.d {
+            let mut mean = 0.0f64;
+            for i in 0..self.n {
+                mean += self.x[i * self.d + j] as f64;
+            }
+            mean /= self.n.max(1) as f64;
+            let mut var = 0.0f64;
+            for i in 0..self.n {
+                let v = self.x[i * self.d + j] as f64 - mean;
+                var += v * v;
+            }
+            let std = (var / self.n.max(1) as f64).sqrt().max(1e-6);
+            for i in 0..self.n {
+                let v = &mut self.x[i * self.d + j];
+                *v = ((*v as f64 - mean) / std) as f32;
+            }
+        }
+    }
+
+    /// Per-class sample counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0; self.classes];
+        for &y in &self.y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = (0..20).map(|i| i as f32).collect();
+        let y = vec![0, 1, 0, 1, 0, 1, 0, 1, 0, 1];
+        Dataset::new("tiny", x, y, 2, 2)
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let d = tiny();
+        let oh = d.one_hot(&[0, 1]);
+        assert_eq!(oh, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let d = tiny();
+        assert_eq!(d.gather(&[2, 0]), vec![4.0, 5.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = tiny();
+        let (tr, te) = d.split(0.8, 1);
+        assert_eq!(tr.n + te.n, d.n);
+        assert_eq!(tr.d, 2);
+        // Stratified: both classes in train.
+        assert!(tr.class_counts().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = tiny();
+        let (a, _) = d.split(0.5, 7);
+        let (b, _) = d.split(0.5, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,282 @@
+//! Synthetic dataset family standing in for the paper's image benchmarks.
+//!
+//! Each class c lives on its own low-rank affine subspace: a class mean
+//! μ_c plus a per-class basis B_c ∈ R^{d×r_intra} with Gaussian loadings,
+//! plus isotropic noise and a fraction of near-duplicate samples.  This
+//! gives the two properties subset selection dynamics depend on
+//! (DESIGN.md §2): dominant low-rank structure for the feature extractor
+//! to find, and intra-class redundancy for MaxVol to exploit — a diverse
+//! R-subset genuinely carries most of the batch's information.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Specification of one synthetic classification dataset.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// Intra-class subspace rank.
+    pub intra_rank: usize,
+    /// Sub-clusters (modes) per class: classes are multi-modal mosaics, so
+    /// small fractions under-cover the modes and accuracy genuinely rises
+    /// with data — the sample-complexity axis of Fig 3 / Tables 8-14.
+    pub modes: usize,
+    /// Class-mean separation (signal strength).
+    pub separation: f64,
+    /// Isotropic noise σ.
+    pub noise: f64,
+    /// Fraction of samples that are near-duplicates of another sample in
+    /// the same class (redundancy the sampler can prune "for free").
+    pub redundancy: f64,
+    /// Fraction of labels flipped uniformly (annotation noise — keeps the
+    /// task from being linearly saturated and differentiates selectors).
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+/// Catalogue matching `python/compile/configs.py` shapes. The n values are
+/// laptop-scale stand-ins for the real datasets (DESIGN.md §2); class
+/// counts match the originals.
+pub fn spec(name: &str) -> Option<SynthSpec> {
+    let s = match name {
+        "cifar10" => SynthSpec {
+            name: "cifar10", n: 12_800, d: 256, classes: 10, intra_rank: 8, modes: 32,
+            separation: 1.0, noise: 1.0, redundancy: 0.3, label_noise: 0.01, seed: 0xC1FA_0010,
+        },
+        "cifar100" => SynthSpec {
+            name: "cifar100", n: 12_800, d: 256, classes: 100, intra_rank: 4, modes: 8,
+            separation: 0.9, noise: 1.0, redundancy: 0.25, label_noise: 0.02, seed: 0xC1FA_0100,
+        },
+        "fashionmnist" => SynthSpec {
+            name: "fashionmnist", n: 12_800, d: 196, classes: 10, intra_rank: 6, modes: 24,
+            separation: 1.15, noise: 1.0, redundancy: 0.35, label_noise: 0.01, seed: 0xFA50_0010,
+        },
+        "tinyimagenet" => SynthSpec {
+            name: "tinyimagenet", n: 12_800, d: 256, classes: 200, intra_rank: 3, modes: 5,
+            separation: 0.82, noise: 1.0, redundancy: 0.2, label_noise: 0.02, seed: 0x7191_0200,
+        },
+        "caltech256" => SynthSpec {
+            name: "caltech256", n: 10_280, d: 256, classes: 257, intra_rank: 3, modes: 4,
+            separation: 0.85, noise: 1.0, redundancy: 0.2, label_noise: 0.02, seed: 0xCA17_0257,
+        },
+        "dermamnist" => SynthSpec {
+            name: "dermamnist", n: 7_000, d: 147, classes: 7, intra_rank: 5, modes: 26,
+            separation: 0.9, noise: 1.0, redundancy: 0.3, label_noise: 0.02, seed: 0xDE3A_0007,
+        },
+        _ => return None,
+    };
+    Some(s)
+}
+
+pub fn synth_dataset(spec: &SynthSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let d = spec.d;
+    // Class means on a random sphere of radius `separation`.
+    let sqrt_d = (d as f64).sqrt();
+    // Mode means: each class is a mosaic of `modes` sub-clusters.  Modes
+    // of *different* classes are interleaved at the same scale, so the
+    // decision boundary is locally fine-grained: a training set must cover
+    // most modes before accuracy saturates.
+    let mode_scale = spec.separation * sqrt_d / 2.0;
+    let mut mode_means: Vec<Vec<Vec<f64>>> = Vec::with_capacity(spec.classes);
+    for _ in 0..spec.classes {
+        let mut ms = Vec::with_capacity(spec.modes);
+        for _ in 0..spec.modes.max(1) {
+            let mut m = rng.normals(d);
+            let n = crate::linalg::norm2(&m);
+            let scale = mode_scale / n.max(1e-12) * (1.0 + rng.uniform());
+            for v in &mut m {
+                *v *= scale;
+            }
+            ms.push(m);
+        }
+        mode_means.push(ms);
+    }
+    // Per-class bases: direction r carries energy ∝ 1/(r+1) with the
+    // leading direction comparable to the noise — enough low-rank
+    // structure for the extractor to find without swamping the class
+    // signal.
+    let mut bases: Vec<Vec<Vec<f64>>> = Vec::with_capacity(spec.classes);
+    for _ in 0..spec.classes {
+        let mut b = Vec::with_capacity(spec.intra_rank);
+        for r in 0..spec.intra_rank {
+            let mut v = rng.normals(d);
+            let n = crate::linalg::norm2(&v);
+            let scale = 1.2 * sqrt_d / (n.max(1e-12) * (r as f64 + 1.0));
+            for x in &mut v {
+                *x *= scale;
+            }
+            b.push(v);
+        }
+        bases.push(b);
+    }
+
+    let per_class = spec.n / spec.classes;
+    let n = per_class * spec.classes;
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0i32; n];
+    let mut idx = 0usize;
+    for c in 0..spec.classes {
+        let mut class_rows: Vec<usize> = Vec::new();
+        for _k in 0..per_class {
+            let dup = !class_rows.is_empty() && rng.uniform() < spec.redundancy;
+            let mut row = vec![0.0f64; d];
+            if dup {
+                let src = class_rows[rng.below(class_rows.len())];
+                for t in 0..d {
+                    row[t] = x[src * d + t] as f64 + 0.05 * spec.noise * rng.normal();
+                }
+            } else {
+                let mode = rng.below(spec.modes.max(1));
+                row.copy_from_slice(&mode_means[c][mode]);
+                for b in &bases[c] {
+                    let load = rng.normal();
+                    for t in 0..d {
+                        row[t] += load * b[t];
+                    }
+                }
+                for t in 0..d {
+                    row[t] += 0.6 * spec.noise * rng.normal();
+                }
+            }
+            for t in 0..d {
+                x[idx * d + t] = row[t] as f32;
+            }
+            y[idx] = c as i32;
+            class_rows.push(idx);
+            idx += 1;
+        }
+    }
+    // Normalise features globally to zero mean / unit variance per dim
+    // (what image pipelines do), then shuffle rows.
+    normalise_cols(&mut x, n, d);
+    let perm = rng.permutation(n);
+    let mut xs = vec![0.0f32; n * d];
+    let mut ys = vec![0i32; n];
+    for (new, &old) in perm.iter().enumerate() {
+        xs[new * d..(new + 1) * d].copy_from_slice(&x[old * d..(old + 1) * d]);
+        ys[new] = y[old];
+    }
+    if spec.label_noise > 0.0 {
+        for yv in ys.iter_mut() {
+            if rng.uniform() < spec.label_noise {
+                *yv = rng.below(spec.classes) as i32;
+            }
+        }
+    }
+    Dataset::new(spec.name, xs, ys, d, spec.classes)
+}
+
+fn normalise_cols(x: &mut [f32], n: usize, d: usize) {
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += x[i * d + j] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let v = x[i * d + j] as f64 - mean;
+            var += v * v;
+        }
+        let std = (var / n as f64).sqrt().max(1e-6);
+        for i in 0..n {
+            x[i * d + j] = ((x[i * d + j] as f64 - mean) / std) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SynthSpec {
+        SynthSpec {
+            name: "test", n: 400, d: 32, classes: 4, intra_rank: 3, modes: 2,
+            separation: 2.0, noise: 1.0, redundancy: 0.3, label_noise: 0.0, seed: 99,
+        }
+    }
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = synth_dataset(&small_spec());
+        assert_eq!(ds.n, 400);
+        assert_eq!(ds.d, 32);
+        let counts = ds.class_counts();
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = synth_dataset(&small_spec());
+        let b = synth_dataset(&small_spec());
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn normalised() {
+        let ds = synth_dataset(&small_spec());
+        // Column 0 mean ≈ 0, std ≈ 1.
+        let mut mean = 0.0;
+        for i in 0..ds.n {
+            mean += ds.row(i)[0] as f64;
+        }
+        mean /= ds.n as f64;
+        assert!(mean.abs() < 1e-4);
+    }
+
+    #[test]
+    fn classes_separable_by_centroid() {
+        // Nearest-centroid accuracy must beat chance by a wide margin —
+        // the signal the selector is supposed to preserve.
+        let ds = synth_dataset(&small_spec());
+        let (tr, te) = ds.split(0.8, 1);
+        let d = ds.d;
+        let mut cents = vec![vec![0.0f64; d]; ds.classes];
+        let counts = tr.class_counts();
+        for i in 0..tr.n {
+            let c = tr.y[i] as usize;
+            for (t, &v) in tr.row(i).iter().enumerate() {
+                cents[c][t] += v as f64;
+            }
+        }
+        for (c, cent) in cents.iter_mut().enumerate() {
+            for v in cent.iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..te.n {
+            let row = te.row(i);
+            let mut best = (f64::MAX, 0usize);
+            for (c, cent) in cents.iter().enumerate() {
+                let dist: f64 = row
+                    .iter()
+                    .zip(cent)
+                    .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == te.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.n as f64;
+        assert!(acc > 0.6, "nearest-centroid acc {acc}");
+    }
+
+    #[test]
+    fn catalogue_entries_resolve() {
+        for name in ["cifar10", "cifar100", "fashionmnist", "tinyimagenet", "caltech256", "dermamnist"] {
+            let s = spec(name).unwrap();
+            assert_eq!(s.name, name);
+        }
+        assert!(spec("nope").is_none());
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation substrate: curve fitting for Fig 3 and report rendering for
+//! every table harness.
+
+pub mod fit;
+pub mod report;
+
+pub use fit::{fit_gain_curve, GainFit};
+pub use report::{save_result, Table};

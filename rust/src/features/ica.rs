@@ -1,0 +1,178 @@
+//! FastICA feature extractor (Hyvärinen fixed-point iteration, tanh
+//! nonlinearity, symmetric decorrelation) — the "ICA" row of Table 3.
+//!
+//! Components are ordered by non-Gaussianity (negentropy proxy) so the
+//! leftmost column is the most relevant, matching the extractor contract.
+
+use super::FeatureExtractor;
+use crate::linalg::{dot, svd, Mat};
+use crate::rng::Rng;
+
+pub struct IcaFeatures {
+    pub max_iters: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for IcaFeatures {
+    fn default() -> Self {
+        IcaFeatures { max_iters: 60, tol: 1e-5, seed: 0x1CA }
+    }
+}
+
+impl FeatureExtractor for IcaFeatures {
+    fn name(&self) -> &'static str {
+        "ica"
+    }
+
+    fn extract(&self, batch: &Mat, r: usize) -> Mat {
+        let k = batch.rows();
+        let mut xc = batch.clone();
+        xc.center_cols();
+        // Whiten to the top-r PCA subspace: Z = U_r (K×r), unit variance.
+        let d = svd(&xc);
+        let r = r.min(d.s.len()).max(1);
+        let mut z = Mat::zeros(k, r);
+        for j in 0..r {
+            let col = d.u.col(j);
+            let scale = (k as f64).sqrt(); // unit-variance whitening
+            for i in 0..k {
+                z[(i, j)] = col[i] * scale;
+            }
+        }
+        // Symmetric FastICA on Zᵀ (components in the whitened space).
+        let mut rng = Rng::new(self.seed);
+        let mut w = Mat::from_fn(r, r, |_, _| rng.normal());
+        sym_decorrelate(&mut w);
+        for _ in 0..self.max_iters {
+            let prev = w.clone();
+            // For each component i: w ← E[z g(wᵀz)] − E[g'(wᵀz)] w
+            let mut neww = Mat::zeros(r, r);
+            for ci in 0..r {
+                let wi = w.row(ci).to_vec();
+                let mut ez_g = vec![0.0; r];
+                let mut eg_prime = 0.0;
+                for s in 0..k {
+                    let zs = z.row(s);
+                    let u = dot(&wi, zs);
+                    let g = u.tanh();
+                    let gp = 1.0 - g * g;
+                    eg_prime += gp;
+                    for t in 0..r {
+                        ez_g[t] += zs[t] * g;
+                    }
+                }
+                let inv = 1.0 / k as f64;
+                for t in 0..r {
+                    neww[(ci, t)] = ez_g[t] * inv - eg_prime * inv * wi[t];
+                }
+            }
+            sym_decorrelate(&mut neww);
+            // Convergence: |diag(W Wprevᵀ)| → 1.
+            let mut delta = 0.0f64;
+            for i in 0..r {
+                let d = dot(neww.row(i), prev.row(i)).abs();
+                delta = delta.max((1.0 - d).abs());
+            }
+            w = neww;
+            if delta < self.tol {
+                break;
+            }
+        }
+        // Sources S = Z Wᵀ (K×r); order by the data energy each source
+        // explains (Rel(j) of §3.1 — the extractor contract requires
+        // importance-ordered columns; negentropy alone does not give an
+        // energy ordering because whitened sources all have unit variance).
+        let mut s = z.matmul(&w.transpose());
+        let mut scores: Vec<(f64, usize)> = (0..r)
+            .map(|j| {
+                let cj = s.col(j);
+                let n = crate::linalg::norm2(&cj).max(1e-12);
+                let dir: Vec<f64> = cj.iter().map(|x| x / n).collect();
+                let proj = xc.tmatvec(&dir);
+                (-dot(&proj, &proj), j)
+            })
+            .collect();
+        scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let order: Vec<usize> = scores.iter().map(|&(_, j)| j).collect();
+        s = s.take_cols(&order);
+        s
+    }
+}
+
+/// Symmetric decorrelation: W ← (W Wᵀ)^{-1/2} W.
+fn sym_decorrelate(w: &mut Mat) {
+    let g = w.matmul(&w.transpose());
+    let d = svd(&g);
+    // (W Wᵀ)^{-1/2} = U diag(1/√s) Uᵀ (g symmetric PSD → U≈V).
+    let n = g.rows();
+    let mut inv_sqrt = Mat::zeros(n, n);
+    for j in 0..n {
+        let s = d.s[j].max(1e-12);
+        let col = d.u.col(j);
+        for i in 0..n {
+            for t in 0..n {
+                inv_sqrt[(i, t)] += col[i] * col[t] / s.sqrt();
+            }
+        }
+    }
+    *w = inv_sqrt.matmul(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::testsupport::{check_extractor, structured_batch};
+
+    #[test]
+    fn contract() {
+        check_extractor(&IcaFeatures::default());
+    }
+
+    #[test]
+    fn separates_independent_sources() {
+        // Mix two clearly non-Gaussian independent sources; ICA should
+        // recover components highly correlated with the originals.
+        let mut rng = Rng::new(11);
+        let k = 400;
+        let s1: Vec<f64> = (0..k).map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 }).collect();
+        let s2: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+        let mut x = Mat::zeros(k, 2);
+        for i in 0..k {
+            x[(i, 0)] = 0.7 * s1[i] + 0.3 * s2[i];
+            x[(i, 1)] = 0.4 * s1[i] - 0.6 * s2[i];
+        }
+        let v = IcaFeatures::default().extract(&x, 2);
+        let corr = |a: &[f64], b: &[f64]| {
+            let na = crate::linalg::norm2(a);
+            let nb = crate::linalg::norm2(b);
+            (dot(a, b) / (na * nb)).abs()
+        };
+        let c0 = v.col(0);
+        let c1 = v.col(1);
+        let best_s1 = corr(&c0, &s1).max(corr(&c1, &s1));
+        assert!(best_s1 > 0.9, "source-1 recovery {best_s1}");
+    }
+
+    #[test]
+    fn decorrelated_outputs() {
+        let x = structured_batch(60, 20, 4, 12);
+        let v = IcaFeatures::default().extract(&x, 4);
+        // Components should be (nearly) uncorrelated.
+        let mut vc = v.clone();
+        vc.center_cols();
+        let g = vc.gram();
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    let denom = (g[(i, i)] * g[(j, j)]).sqrt().max(1e-12);
+                    assert!(
+                        (g[(i, j)] / denom).abs() < 0.2,
+                        "corr[{i},{j}] = {}",
+                        g[(i, j)] / denom
+                    );
+                }
+            }
+        }
+    }
+}

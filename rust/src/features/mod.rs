@@ -1,0 +1,88 @@
+//! Feature extraction f: R^{K×M} → R^{K×R} (paper §3.1 Step 1).
+//!
+//! Columns of the returned matrix are ordered by descending relevance
+//! (Rel(1) ≥ … ≥ Rel(R)) — the contract the Fast MaxVol sampler relies on.
+//! Four instantiations, matching the paper's ablation (Table 3 / Fig 4):
+//! SVD, PCA, FastICA, and a shallow autoencoder.
+
+pub mod ae;
+pub mod ica;
+pub mod pca;
+pub mod svd;
+
+use crate::linalg::Mat;
+
+/// A batch feature extractor. Implementations must return a K×R matrix
+/// with importance-ordered columns.
+pub trait FeatureExtractor: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Extract R ordered features from the K×M batch.
+    fn extract(&self, batch: &Mat, r: usize) -> Mat;
+}
+
+pub use ae::AutoencoderFeatures;
+pub use ica::IcaFeatures;
+pub use pca::PcaFeatures;
+pub use svd::SvdFeatures;
+
+/// Construct an extractor by name (CLI / config entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn FeatureExtractor>> {
+    match name {
+        "svd" => Some(Box::new(SvdFeatures::default())),
+        "pca" => Some(Box::new(PcaFeatures::default())),
+        "ica" => Some(Box::new(IcaFeatures::default())),
+        "ae" => Some(Box::new(AutoencoderFeatures::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Low-rank-plus-noise batch with a known dominant subspace.
+    pub fn structured_batch(k: usize, m: usize, rank: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let u = Mat::from_fn(k, rank, |_, _| rng.normal());
+        let mut s = Mat::zeros(rank, rank);
+        for i in 0..rank {
+            s[(i, i)] = 10.0 / (i + 1) as f64;
+        }
+        let v = Mat::from_fn(rank, m, |_, _| rng.normal());
+        let mut x = u.matmul(&s).matmul(&v);
+        for i in 0..k {
+            for j in 0..m {
+                x[(i, j)] += 0.05 * rng.normal();
+            }
+        }
+        x
+    }
+
+    /// Shared contract checks for any extractor.
+    pub fn check_extractor(e: &dyn FeatureExtractor) {
+        let x = structured_batch(48, 24, 4, 7);
+        let v = e.extract(&x, 6);
+        assert_eq!((v.rows(), v.cols()), (48, 6), "{}", e.name());
+        assert!(v.data().iter().all(|x| x.is_finite()), "{}", e.name());
+        // Ordered relevance: leading column explains at least as much of
+        // the (centered) batch as the trailing one.
+        let mut xc = x.clone();
+        xc.center_cols();
+        let energy = |j: usize| {
+            let col = v.col(j);
+            let n = crate::linalg::norm2(&col);
+            if n < 1e-12 {
+                return 0.0;
+            }
+            let cn: Vec<f64> = col.iter().map(|c| c / n).collect();
+            let proj = xc.tmatvec(&cn);
+            crate::linalg::dot(&proj, &proj)
+        };
+        assert!(
+            energy(0) >= energy(5) * 0.8,
+            "{}: first column should dominate",
+            e.name()
+        );
+    }
+}

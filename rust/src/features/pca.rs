@@ -1,0 +1,66 @@
+//! PCA feature extractor: scores of the top-R principal components of the
+//! centered batch (eigendecomposition of the covariance via the batch SVD;
+//! identical subspace to `SvdFeatures` but variance-scaled scores — kept
+//! separate because the paper's supplement lists PCA as its own method).
+
+use super::FeatureExtractor;
+use crate::linalg::{svd, Mat};
+
+#[derive(Default)]
+pub struct PcaFeatures;
+
+impl FeatureExtractor for PcaFeatures {
+    fn name(&self) -> &'static str {
+        "pca"
+    }
+
+    fn extract(&self, batch: &Mat, r: usize) -> Mat {
+        let mut xc = batch.clone();
+        xc.center_cols();
+        let d = svd(&xc);
+        let r = r.min(d.s.len());
+        // Scores: U_R Σ_R (projection of samples onto the PCs).
+        let mut out = Mat::zeros(batch.rows(), r);
+        for j in 0..r {
+            let col = d.u.col(j);
+            for i in 0..batch.rows() {
+                out[(i, j)] = col[i] * d.s[j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::testsupport::{check_extractor, structured_batch};
+
+    #[test]
+    fn contract() {
+        check_extractor(&PcaFeatures);
+    }
+
+    #[test]
+    fn column_variances_descend() {
+        let x = structured_batch(50, 25, 4, 3);
+        let v = PcaFeatures.extract(&x, 4);
+        let var = |j: usize| {
+            let c = v.col(j);
+            let m: f64 = c.iter().sum::<f64>() / c.len() as f64;
+            c.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        };
+        for j in 0..3 {
+            assert!(var(j) >= var(j + 1) - 1e-9, "{} vs {}", var(j), var(j + 1));
+        }
+    }
+
+    #[test]
+    fn same_subspace_as_svd() {
+        use crate::linalg::subspace_similarity;
+        let x = structured_batch(40, 18, 3, 4);
+        let a = PcaFeatures.extract(&x, 3);
+        let b = super::super::svd::SvdFeatures.extract(&x, 3);
+        assert!((subspace_similarity(&a, &b) - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,75 @@
+//! SVD feature extractor: V = U_R, the top-R left singular vectors of the
+//! centered batch — the paper's best-performing extractor (Table 3,
+//! 90.3% vs 86.7% AE / 80.8% ICA on CIFAR-10 @25%).
+
+use super::FeatureExtractor;
+use crate::linalg::{orth, svd, Mat};
+use crate::rng::Rng;
+
+#[derive(Default)]
+pub struct SvdFeatures;
+
+impl FeatureExtractor for SvdFeatures {
+    fn name(&self) -> &'static str {
+        "svd"
+    }
+
+    fn extract(&self, batch: &Mat, r: usize) -> Mat {
+        let mut xc = batch.clone();
+        xc.center_cols();
+        let r = r.min(xc.rows()).min(xc.cols());
+        // §Perf L3: truncated randomized SVD (HMT 2011, q=2 power
+        // iterations) — O(K·M·r) instead of full one-sided Jacobi's
+        // O(K·min(K,M)²·sweeps).  Falls back to exact Jacobi when r is
+        // most of the spectrum (randomized gains vanish there).
+        if r * 3 >= xc.cols().min(xc.rows()) {
+            let d = svd(&xc);
+            let idx: Vec<usize> = (0..r).collect();
+            return d.u.take_cols(&idx);
+        }
+        let mut rng = Rng::new(0x5D);
+        let p = (r + 8).min(xc.cols()); // oversampling
+        let omega = Mat::from_fn(xc.cols(), p, |_, _| rng.normal());
+        let mut q = orth(&xc.matmul(&omega));
+        for _ in 0..2 {
+            q = orth(&xc.transpose().matmul(&q));
+            q = orth(&xc.matmul(&q));
+        }
+        // Project: B = Qᵀ Xc (p×M), small exact SVD, U = Q·U_B.
+        let b = q.transpose().matmul(&xc);
+        let d = svd(&b);
+        let idx: Vec<usize> = (0..r).collect();
+        q.matmul(&d.u.take_cols(&idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::testsupport::{check_extractor, structured_batch};
+
+    #[test]
+    fn contract() {
+        check_extractor(&SvdFeatures);
+    }
+
+    #[test]
+    fn captures_dominant_subspace() {
+        let x = structured_batch(40, 20, 3, 1);
+        let v = SvdFeatures.extract(&x, 3);
+        // Reconstruction through V (left projector) retains most energy.
+        let mut xc = x.clone();
+        xc.center_cols();
+        let proj = v.matmul(&v.transpose()).matmul(&xc);
+        let retained = proj.frob_norm() / xc.frob_norm();
+        assert!(retained > 0.98, "{retained}");
+    }
+
+    #[test]
+    fn orthonormal_columns() {
+        let x = structured_batch(30, 15, 5, 2);
+        let v = SvdFeatures.extract(&x, 5);
+        let g = v.gram();
+        assert!(g.sub(&Mat::eye(5)).max_abs() < 1e-8);
+    }
+}

@@ -1,0 +1,154 @@
+//! Gradient-alignment telemetry (paper Fig 2): per-batch cosine between
+//! the batch-mean gradient and (a) the selected-subset mean, (b) the
+//! epoch-level mean; rank trajectory; class-distribution histogram.
+
+/// One alignment observation (one batch at one refresh).
+#[derive(Debug, Clone, Copy)]
+pub struct AlignmentSample {
+    pub epoch: usize,
+    pub batch: usize,
+    /// cos(ḡ_batch, mean selected sketch).
+    pub cos: f64,
+    /// Chosen rank R*.
+    pub rank: usize,
+    /// Projection error at R*.
+    pub error: f64,
+}
+
+/// Accumulates Fig-2 style statistics over a run.
+#[derive(Debug, Default, Clone)]
+pub struct AlignmentStats {
+    pub samples: Vec<AlignmentSample>,
+    /// Per-class selected-sample counts over time: (epoch, class) → count.
+    pub class_counts: Vec<(usize, Vec<usize>)>,
+}
+
+impl AlignmentStats {
+    pub fn record(&mut self, s: AlignmentSample) {
+        self.samples.push(s);
+    }
+
+    pub fn record_class_histogram(&mut self, epoch: usize, counts: Vec<usize>) {
+        self.class_counts.push((epoch, counts));
+    }
+
+    /// Mean / std of alignment (paper reports μ = 0.72, σ = 0.15).
+    pub fn mean_std(&self) -> (f64, f64) {
+        if self.samples.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.samples.len() as f64;
+        let mean = self.samples.iter().map(|s| s.cos).sum::<f64>() / n;
+        let var = self.samples.iter().map(|s| (s.cos - mean).powi(2)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+
+    /// Fraction of samples with cos > threshold (paper: > 0.5 "majority").
+    pub fn frac_above(&self, thr: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|s| s.cos > thr).count() as f64 / self.samples.len() as f64
+    }
+
+    /// Per-epoch mean (cos, rank): the Fig 2b trend series.
+    pub fn epoch_trend(&self) -> Vec<(usize, f64, f64)> {
+        let mut acc: std::collections::BTreeMap<usize, (f64, f64, usize)> = Default::default();
+        for s in &self.samples {
+            let e = acc.entry(s.epoch).or_insert((0.0, 0.0, 0));
+            e.0 += s.cos;
+            e.1 += s.rank as f64;
+            e.2 += 1;
+        }
+        acc.into_iter()
+            .map(|(ep, (c, r, n))| (ep, c / n as f64, r / n as f64))
+            .collect()
+    }
+
+    /// Pearson correlation between alignment and rank — the paper's
+    /// "strong correlation between high alignment and rank reduction"
+    /// claim (expected negative).
+    pub fn align_rank_correlation(&self) -> f64 {
+        let n = self.samples.len() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let mc = self.samples.iter().map(|s| s.cos).sum::<f64>() / n;
+        let mr = self.samples.iter().map(|s| s.rank as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut dc = 0.0;
+        let mut dr = 0.0;
+        for s in &self.samples {
+            let a = s.cos - mc;
+            let b = s.rank as f64 - mr;
+            num += a * b;
+            dc += a * a;
+            dr += b * b;
+        }
+        if dc <= 0.0 || dr <= 0.0 {
+            0.0
+        } else {
+            num / (dc * dr).sqrt()
+        }
+    }
+
+    /// CSV dump (heatmap source for Fig 2a).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("epoch,batch,cos,rank,error\n");
+        for s in &self.samples {
+            out.push_str(&format!("{},{},{:.6},{},{:.6}\n", s.epoch, s.batch, s.cos, s.rank, s.error));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(cos_rank: &[(f64, usize)]) -> AlignmentStats {
+        let mut st = AlignmentStats::default();
+        for (i, &(c, r)) in cos_rank.iter().enumerate() {
+            st.record(AlignmentSample { epoch: i / 2, batch: i % 2, cos: c, rank: r, error: 0.1 });
+        }
+        st
+    }
+
+    #[test]
+    fn mean_std() {
+        let st = stats_with(&[(0.5, 4), (0.7, 4), (0.9, 4)]);
+        let (m, s) = st.mean_std();
+        assert!((m - 0.7).abs() < 1e-12);
+        // var = ((0.2)² + 0 + (0.2)²)/3 → σ = √(0.08/3)
+        assert!((s - (0.08f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frac_above() {
+        let st = stats_with(&[(0.4, 4), (0.6, 4), (0.8, 4), (0.9, 4)]);
+        assert!((st.frac_above(0.5) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_align_rank_correlation_detected() {
+        let st = stats_with(&[(0.2, 16), (0.4, 12), (0.6, 8), (0.8, 4)]);
+        assert!(st.align_rank_correlation() < -0.95);
+    }
+
+    #[test]
+    fn epoch_trend_groups() {
+        let st = stats_with(&[(0.5, 8), (0.7, 6), (0.8, 4), (1.0, 2)]);
+        let trend = st.epoch_trend();
+        assert_eq!(trend.len(), 2);
+        assert!((trend[0].1 - 0.6).abs() < 1e-12);
+        assert!((trend[1].2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let st = stats_with(&[(0.5, 8)]);
+        let csv = st.to_csv();
+        assert!(csv.starts_with("epoch,batch,cos"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,171 @@
+//! Dynamic rank adjustment (paper §3.2, Alg. 1): pick the smallest rank
+//! whose projection error meets the ε threshold, under a running budget
+//! that keeps the *average* subset size at the requested data fraction.
+//!
+//! Corollary 1: keeping ‖ḡ − P_R ḡ‖² ≤ ε at every refresh preserves
+//! convergence; the budget controller trades ε violations against the
+//! emission target when the two conflict (logged via [`RankDecision`]).
+
+/// Outcome of one rank choice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankDecision {
+    /// Chosen subset size R*.
+    pub rank: usize,
+    /// Projection error at R*.
+    pub error: f64,
+    /// True when the ε constraint was met within budget.
+    pub satisfied: bool,
+}
+
+/// Pure rank choice: smallest r ∈ [r_min, r_max] with d_r ≤ ε, else the
+/// error-minimising r (= r_max since d is non-increasing).
+pub fn choose_rank(errors: &[f64], epsilon: f64, r_min: usize, r_max: usize) -> RankDecision {
+    let r_max = r_max.min(errors.len()).max(1);
+    let r_min = r_min.clamp(1, r_max);
+    for r in r_min..=r_max {
+        if errors[r - 1] <= epsilon {
+            return RankDecision { rank: r, error: errors[r - 1], satisfied: true };
+        }
+    }
+    RankDecision { rank: r_max, error: errors[r_max - 1], satisfied: false }
+}
+
+/// Stateful policy: ε-threshold choice with a running budget controller.
+///
+/// `budget_frac` is the target mean subset fraction (R*/K averaged over
+/// refreshes).  The controller widens the admissible window when the run
+/// is under budget (letting hard batches take more samples) and narrows it
+/// when over budget — mirroring the paper's observation (Fig 2b) that high
+/// alignment lets lower ranks through while rare low-alignment batches are
+/// absorbed by the dynamic adjustment.
+#[derive(Debug, Clone)]
+pub struct BudgetedRankPolicy {
+    pub epsilon: f64,
+    /// Target mean fraction of the batch (0 < f ≤ 1); 1.0 = unconstrained.
+    pub budget_frac: f64,
+    /// When true, `GraftSelector` pads selections to the exact budget
+    /// (used by the fixed-fraction comparison harness).
+    pub strict_budget: bool,
+    used: f64,
+    batches: f64,
+}
+
+impl BudgetedRankPolicy {
+    /// Adaptive mode: ε criterion + budget averaging.
+    pub fn adaptive(epsilon: f64, budget_frac: f64) -> Self {
+        BudgetedRankPolicy {
+            epsilon,
+            budget_frac: budget_frac.clamp(1e-3, 1.0),
+            strict_budget: false,
+            used: 0.0,
+            batches: 0.0,
+        }
+    }
+
+    /// Strict mode: always return exactly the requested budget (baseline-
+    /// comparable); ε is still recorded in the decision.
+    pub fn strict(epsilon: f64) -> Self {
+        BudgetedRankPolicy {
+            epsilon,
+            budget_frac: 1.0,
+            strict_budget: true,
+            used: 0.0,
+            batches: 0.0,
+        }
+    }
+
+    /// Mean subset size chosen so far (for the emission accounting tests).
+    pub fn mean_rank(&self) -> f64 {
+        if self.batches == 0.0 {
+            0.0
+        } else {
+            self.used / self.batches
+        }
+    }
+
+    /// Choose R* for one batch. `r_budget` = f·K target; `rmax` = kernel depth.
+    pub fn choose(&mut self, errors: &[f64], r_budget: usize, rmax: usize) -> RankDecision {
+        let rmax = rmax.min(errors.len()).max(1);
+        let target = r_budget.clamp(1, rmax);
+        let decision = if self.strict_budget {
+            let r = target;
+            RankDecision { rank: r, error: errors[r - 1], satisfied: errors[r - 1] <= self.epsilon }
+        } else {
+            // Window around the target: under budget → allow up to 2×
+            // target; over budget → squeeze toward half the target.
+            let mean = self.mean_rank();
+            let over = self.batches > 0.0 && mean > target as f64;
+            let (lo, hi) = if over {
+                (1, target)
+            } else {
+                (1, (2 * target).min(rmax))
+            };
+            choose_rank(errors, self.epsilon, lo, hi)
+        };
+        self.used += decision.rank as f64;
+        self.batches += 1.0;
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_rank_smallest_satisfying() {
+        let errors = [0.9, 0.5, 0.04, 0.01];
+        let d = choose_rank(&errors, 0.05, 1, 4);
+        assert_eq!(d.rank, 3);
+        assert!(d.satisfied);
+        assert!((d.error - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn choose_rank_falls_back_to_max() {
+        let errors = [0.9, 0.5, 0.4, 0.3];
+        let d = choose_rank(&errors, 0.05, 1, 4);
+        assert_eq!(d.rank, 4);
+        assert!(!d.satisfied);
+    }
+
+    #[test]
+    fn choose_rank_respects_window() {
+        let errors = [0.01, 0.01, 0.01, 0.01];
+        let d = choose_rank(&errors, 0.05, 2, 3);
+        assert_eq!(d.rank, 2);
+    }
+
+    #[test]
+    fn budget_controller_averages_to_target() {
+        // Errors never satisfied → policy would always take hi; the budget
+        // squeeze must pull the mean back toward the target.
+        let mut p = BudgetedRankPolicy::adaptive(1e-9, 0.25);
+        let errors = vec![1.0; 16];
+        for _ in 0..50 {
+            p.choose(&errors, 4, 16);
+        }
+        let mean = p.mean_rank();
+        assert!(mean <= 6.5, "mean rank {mean} should hover near target 4");
+    }
+
+    #[test]
+    fn strict_mode_exact() {
+        let mut p = BudgetedRankPolicy::strict(0.05);
+        let errors = vec![0.5; 16];
+        let d = p.choose(&errors, 7, 16);
+        assert_eq!(d.rank, 7);
+        assert!(!d.satisfied);
+    }
+
+    #[test]
+    fn aligned_batches_use_fewer_samples() {
+        // Fig 2b: when alignment is high (errors drop fast) R* is small.
+        let mut p = BudgetedRankPolicy::adaptive(0.05, 0.5);
+        let fast_drop: Vec<f64> = (0..16).map(|r| 0.8f64.powi(r as i32 + 1) * 0.1).collect();
+        let slow_drop: Vec<f64> = (0..16).map(|r| 1.0 - (r as f64 + 1.0) / 20.0).collect();
+        let d_fast = p.choose(&fast_drop, 8, 16);
+        let d_slow = p.choose(&slow_drop, 8, 16);
+        assert!(d_fast.rank < d_slow.rank);
+    }
+}

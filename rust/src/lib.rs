@@ -1,0 +1,21 @@
+//! GRAFT — Gradient-Aware Fast MaxVol Technique for Dynamic Data Sampling.
+//!
+//! Reproduction of Jha et al. (2025) as a three-layer Rust + JAX + Pallas
+//! system: this crate is the Layer-3 coordinator (streaming training
+//! orchestrator, selection methods, evaluation harness); Layers 1-2 are
+//! AOT-compiled to HLO artifacts by `python/compile` and executed here
+//! through the PJRT C API (`runtime`).
+
+pub mod cmd;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod features;
+pub mod linalg;
+pub mod pruning;
+pub mod rng;
+pub mod runtime;
+pub mod graft;
+pub mod selection;
+pub mod train;

@@ -1,0 +1,94 @@
+//! Principal angles between subspaces — Table 4's "subspace similarity"
+//! metric: sim(V₁, V₂) = Σᵢ cos²(θᵢ), computed from the singular values of
+//! Q₁ᵀ Q₂ (Björck-Golub).
+
+use super::mat::Mat;
+use super::qr::orth;
+use super::svd::svd;
+
+/// Cosines of the principal angles between col(A) and col(B), descending.
+pub fn principal_angle_cosines(a: &Mat, b: &Mat) -> Vec<f64> {
+    let qa = orth(a);
+    let qb = orth(b);
+    if qa.cols() == 0 || qb.cols() == 0 {
+        return Vec::new();
+    }
+    let m = qa.transpose().matmul(&qb);
+    svd(&m).s.into_iter().map(|s| s.clamp(0.0, 1.0)).collect()
+}
+
+/// Table 4 similarity: Σᵢ cos²(θᵢ), normalised by k = min(dim A, dim B)
+/// when `normalise` (the paper reports the raw sum on equal-rank bases).
+pub fn subspace_similarity(a: &Mat, b: &Mat) -> f64 {
+    principal_angle_cosines(a, b).iter().map(|c| c * c).sum()
+}
+
+/// Normalised variant in [0, 1]: sum of cos² over min rank.
+pub fn subspace_similarity_normalised(a: &Mat, b: &Mat) -> f64 {
+    let cs = principal_angle_cosines(a, b);
+    if cs.is_empty() {
+        return 0.0;
+    }
+    cs.iter().map(|c| c * c).sum::<f64>() / cs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn identical_subspaces() {
+        let a = randmat(20, 4, 1);
+        // Same span, different basis.
+        let mix = randmat(4, 4, 2);
+        let b = a.matmul(&mix);
+        let sim = subspace_similarity(&a, &b);
+        assert!((sim - 4.0).abs() < 1e-8, "{sim}");
+    }
+
+    #[test]
+    fn orthogonal_subspaces() {
+        let mut a = Mat::zeros(6, 2);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        let mut b = Mat::zeros(6, 2);
+        b[(2, 0)] = 1.0;
+        b[(3, 1)] = 1.0;
+        assert!(subspace_similarity(&a, &b) < 1e-12);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        let mut a = Mat::zeros(6, 2);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        let mut b = Mat::zeros(6, 2);
+        b[(0, 0)] = 1.0; // shares e₀
+        b[(3, 1)] = 1.0;
+        let sim = subspace_similarity(&a, &b);
+        assert!((sim - 1.0).abs() < 1e-10, "{sim}");
+    }
+
+    #[test]
+    fn normalised_bounds() {
+        let a = randmat(30, 5, 3);
+        let b = randmat(30, 5, 4);
+        let s = subspace_similarity_normalised(&a, &b);
+        assert!((0.0..=1.0 + 1e-12).contains(&s));
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = randmat(25, 3, 5);
+        let b = randmat(25, 4, 6);
+        let s1 = subspace_similarity(&a, &b);
+        let s2 = subspace_similarity(&b, &a);
+        assert!((s1 - s2).abs() < 1e-9);
+    }
+}

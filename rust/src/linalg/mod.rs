@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate (LAPACK-free; see DESIGN.md §1).
+
+pub mod angles;
+pub mod mat;
+pub mod qr;
+pub mod solve;
+pub mod svd;
+
+pub use angles::{principal_angle_cosines, subspace_similarity, subspace_similarity_normalised};
+pub use mat::{axpy, dot, norm2, normalize, Mat};
+pub use qr::{orth, project_onto_colspace, qr, Qr};
+pub use solve::{cholesky, cholesky_solve, det, lstsq, lu_solve, pinv};
+pub use svd::{spectral_norm, svd, truncated_u, Svd};

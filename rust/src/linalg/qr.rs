@@ -1,0 +1,123 @@
+//! Thin QR via two-pass modified Gram-Schmidt — mirrors the L2/L1 MGS so
+//! Rust-side baselines and the AOT kernels share semantics (including the
+//! relative dependence threshold for rank-deficient inputs).
+
+use super::mat::{dot, Mat};
+
+/// Result of a rank-revealing thin QR: `a ≈ q · r`, `q` has orthonormal
+/// (or zero, where dependent) columns, `rank` counts the nonzero ones.
+pub struct Qr {
+    pub q: Mat,
+    pub r: Mat,
+    pub rank: usize,
+}
+
+const REL_TOL: f64 = 1e-10;
+
+/// Two-pass MGS QR. Dependent columns become zero columns of Q (and zero
+/// rows of R beyond the diagonal), matching the L1 projection kernel.
+pub fn qr(a: &Mat) -> Qr {
+    let (m, n) = (a.rows(), a.cols());
+    let mut q = a.clone();
+    let mut r = Mat::zeros(n, n);
+    let mut rank = 0;
+    for j in 0..n {
+        let mut v = q.col(j);
+        let nrm0 = dot(&v, &v).sqrt();
+        for _pass in 0..2 {
+            for i in 0..j {
+                let qi = q.col(i);
+                let proj = dot(&qi, &v);
+                // Accumulate into R only on the first pass target; the
+                // re-orthogonalisation correction still belongs to r[i][j].
+                r[(i, j)] += proj;
+                for t in 0..m {
+                    v[t] -= proj * qi[t];
+                }
+            }
+        }
+        let nrm = dot(&v, &v).sqrt();
+        if nrm <= REL_TOL * nrm0.max(1e-300) || nrm0 == 0.0 {
+            r[(j, j)] = 0.0;
+            q.set_col(j, &vec![0.0; m]);
+        } else {
+            r[(j, j)] = nrm;
+            let inv = 1.0 / nrm;
+            let vn: Vec<f64> = v.iter().map(|x| x * inv).collect();
+            q.set_col(j, &vn);
+            rank += 1;
+        }
+    }
+    Qr { q, r, rank }
+}
+
+/// Orthonormal basis of col(A) with exactly `rank` columns (zeros dropped).
+pub fn orth(a: &Mat) -> Mat {
+    let d = qr(a);
+    let keep: Vec<usize> = (0..d.q.cols()).filter(|&j| d.r[(j, j)] != 0.0).collect();
+    d.q.take_cols(&keep)
+}
+
+/// Projection of vector `g` onto col(A): returns (projection, residual norm²).
+pub fn project_onto_colspace(a: &Mat, g: &[f64]) -> (Vec<f64>, f64) {
+    let q = orth(a);
+    let coeffs = q.tmatvec(g);
+    let proj = q.matvec(&coeffs);
+    let res: f64 = g.iter().zip(&proj).map(|(x, p)| (x - p) * (x - p)).sum();
+    (proj, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let a = randmat(20, 6, 1);
+        let d = qr(&a);
+        let rec = d.q.matmul(&d.r);
+        assert!(rec.sub(&a).max_abs() < 1e-10);
+        assert_eq!(d.rank, 6);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = randmat(15, 5, 2);
+        let d = qr(&a);
+        let gram = d.q.gram();
+        assert!(gram.sub(&Mat::eye(5)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_detected() {
+        let mut rng = Rng::new(3);
+        let col: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let a = Mat::from_fn(12, 4, |i, j| col[i] * (j as f64 + 1.0));
+        let d = qr(&a);
+        assert_eq!(d.rank, 1);
+        let o = orth(&a);
+        assert_eq!(o.cols(), 1);
+    }
+
+    #[test]
+    fn projection_residual() {
+        let a = randmat(30, 4, 4);
+        // g in the column space => zero residual.
+        let coef = vec![1.0, -2.0, 0.5, 3.0];
+        let g = a.matvec(&coef);
+        let (_, res) = project_onto_colspace(&a, &g);
+        assert!(res < 1e-18 * g.iter().map(|x| x * x).sum::<f64>().max(1.0));
+        // random g => residual <= |g|^2 and > 0 (30 > 4 dims).
+        let mut rng = Rng::new(5);
+        let g2: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let (_, res2) = project_onto_colspace(&a, &g2);
+        let n2: f64 = g2.iter().map(|x| x * x).sum();
+        assert!(res2 > 0.0 && res2 < n2);
+    }
+}

@@ -1,0 +1,248 @@
+//! Direct solvers: Cholesky (SPD), LU with partial pivoting, least squares
+//! and pseudo-inverse — everything the baselines (GradMatch OMP, GLISTER
+//! taylor steps, curve fitting) need, LAPACK-free.
+
+use super::mat::Mat;
+use super::svd::svd;
+
+/// Cholesky factor L (lower) of an SPD matrix; returns None if not PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward) then Lᵀ x = y (backward).
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b via LU with partial pivoting; None if singular.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    assert_eq!(n, b.len());
+    let mut m = a.clone();
+    let mut x: Vec<f64> = b.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        let (mut pmax, mut vmax) = (k, m[(piv[k], k)].abs());
+        for i in (k + 1)..n {
+            let v = m[(piv[i], k)].abs();
+            if v > vmax {
+                pmax = i;
+                vmax = v;
+            }
+        }
+        if vmax < 1e-300 {
+            return None;
+        }
+        piv.swap(k, pmax);
+        let pk = piv[k];
+        for i in (k + 1)..n {
+            let pi = piv[i];
+            let f = m[(pi, k)] / m[(pk, k)];
+            m[(pi, k)] = f;
+            for j in (k + 1)..n {
+                let v = m[(pk, j)];
+                m[(pi, j)] -= f * v;
+            }
+            x[pi] -= f * x[pk];
+        }
+    }
+    let mut out = vec![0.0; n];
+    for k in (0..n).rev() {
+        let pk = piv[k];
+        let mut s = x[pk];
+        for j in (k + 1)..n {
+            s -= m[(pk, j)] * out[j];
+        }
+        out[k] = s / m[(pk, k)];
+    }
+    Some(out)
+}
+
+/// Minimum-norm least squares via SVD: x = V Σ⁺ Uᵀ b.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let d = svd(a);
+    let cutoff = d.s.first().copied().unwrap_or(0.0) * 1e-12;
+    let utb = d.u.tmatvec(b);
+    let coef: Vec<f64> = utb
+        .iter()
+        .zip(&d.s)
+        .map(|(&c, &s)| if s > cutoff { c / s } else { 0.0 })
+        .collect();
+    d.v.matvec(&coef)
+}
+
+/// Moore-Penrose pseudo-inverse via SVD.
+pub fn pinv(a: &Mat) -> Mat {
+    let d = svd(a);
+    let cutoff = d.s.first().copied().unwrap_or(0.0) * 1e-12;
+    let k = d.s.len();
+    let mut vs = d.v.clone();
+    for j in 0..k {
+        let inv = if d.s[j] > cutoff { 1.0 / d.s[j] } else { 0.0 };
+        let col: Vec<f64> = vs.col(j).iter().map(|x| x * inv).collect();
+        vs.set_col(j, &col);
+    }
+    vs.matmul(&d.u.transpose())
+}
+
+/// Determinant via LU (for small matrices — MaxVol volume checks).
+pub fn det(a: &Mat) -> f64 {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut m = a.clone();
+    let mut sign = 1.0;
+    let mut d = 1.0;
+    for k in 0..n {
+        let mut pmax = k;
+        for i in (k + 1)..n {
+            if m[(i, k)].abs() > m[(pmax, k)].abs() {
+                pmax = i;
+            }
+        }
+        if m[(pmax, k)].abs() < 1e-300 {
+            return 0.0;
+        }
+        if pmax != k {
+            for j in 0..n {
+                let t = m[(k, j)];
+                m[(k, j)] = m[(pmax, j)];
+                m[(pmax, j)] = t;
+            }
+            sign = -sign;
+        }
+        d *= m[(k, k)];
+        for i in (k + 1)..n {
+            let f = m[(i, k)] / m[(k, k)];
+            for j in k..n {
+                let v = m[(k, j)];
+                m[(i, j)] -= f * v;
+            }
+        }
+    }
+    sign * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn cholesky_solve_spd() {
+        let a = randmat(8, 5, 1);
+        let spd = a.gram(); // 5x5 SPD (w.h.p.)
+        let l = cholesky(&spd).expect("PD");
+        let xtrue: Vec<f64> = (0..5).map(|i| i as f64 - 2.0).collect();
+        let b = spd.matvec(&xtrue);
+        let x = cholesky_solve(&l, &b);
+        for (a, b) in x.iter().zip(&xtrue) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn lu_solve_random() {
+        let a = randmat(7, 7, 2);
+        let xtrue: Vec<f64> = (0..7).map(|i| (i as f64).sin()).collect();
+        let b = a.matvec(&xtrue);
+        let x = lu_solve(&a, &b).unwrap();
+        for (g, w) in x.iter().zip(&xtrue) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lu_singular_none() {
+        let a = Mat::from_fn(3, 3, |i, _| i as f64); // rank 1
+        assert!(lu_solve(&a, &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_overdetermined() {
+        let a = randmat(20, 4, 3);
+        let xtrue = vec![1.0, -0.5, 2.0, 0.25];
+        let b = a.matvec(&xtrue);
+        let x = lstsq(&a, &b);
+        for (g, w) in x.iter().zip(&xtrue) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn pinv_properties() {
+        let a = randmat(6, 4, 4);
+        let p = pinv(&a);
+        // A A⁺ A = A
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.sub(&a).max_abs() < 1e-9);
+        // A⁺ A A⁺ = A⁺
+        let pap = p.matmul(&a).matmul(&p);
+        assert!(pap.sub(&p).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn det_known() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
+        assert!((det(&a) - 2.0).abs() < 1e-12);
+        assert!((det(&Mat::eye(5)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_product_rule() {
+        let a = randmat(4, 4, 5);
+        let b = randmat(4, 4, 6);
+        let lhs = det(&a.matmul(&b));
+        let rhs = det(&a) * det(&b);
+        assert!((lhs - rhs).abs() < 1e-8 * rhs.abs().max(1.0));
+    }
+}

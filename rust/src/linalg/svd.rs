@@ -1,0 +1,208 @@
+//! Thin SVD via one-sided Jacobi rotations (Hestenes method).
+//!
+//! No LAPACK anywhere in the stack (DESIGN.md §1), so the Rust-side feature
+//! extractors and principal-angle computations use this implementation.
+//! One-sided Jacobi is simple, numerically robust, and plenty fast at the
+//! K×R scales GRAFT touches (≤ a few hundred columns).
+
+use super::mat::{dot, Mat};
+
+pub struct Svd {
+    /// Left singular vectors, m×k (k = min(m, n)), importance-ordered.
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors, n×k (columns).
+    pub v: Mat,
+}
+
+/// Thin SVD of `a` (m×n). Works for any aspect ratio (transposes internally
+/// so the Jacobi sweep runs on the short side).
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows() < a.cols() {
+        // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    one_sided_jacobi(a)
+}
+
+fn one_sided_jacobi(a: &Mat) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    // Work on columns of W = A; rotate pairs until all are orthogonal.
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let wp = w.col(p);
+                let wq = w.col(q);
+                let alpha = dot(&wp, &wp);
+                let beta = dot(&wq, &wq);
+                let gamma = dot(&wp, &wq);
+                if alpha * beta <= 0.0 {
+                    continue;
+                }
+                let denom = (alpha * beta).sqrt();
+                if denom <= 0.0 {
+                    continue;
+                }
+                off = off.max((gamma / denom).abs());
+                if gamma.abs() <= eps * denom {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) off-diagonal of WᵀW.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wip = w[(i, p)];
+                    let wiq = w[(i, q)];
+                    w[(i, p)] = c * wip - s * wiq;
+                    w[(i, q)] = s * wip + c * wiq;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+    }
+    // Extract singular values = column norms; U = W / s.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|j| dot(&w.col(j), &w.col(j)).sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vv = Mat::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        let nrm = norms[j];
+        s.push(nrm);
+        if nrm > 1e-300 {
+            let col: Vec<f64> = w.col(j).iter().map(|x| x / nrm).collect();
+            u.set_col(jj, &col);
+        }
+        vv.set_col(jj, &v.col(j));
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Truncated SVD features: top-r left singular vectors scaled or not.
+pub fn truncated_u(a: &Mat, r: usize) -> Mat {
+    let d = svd(a);
+    let idx: Vec<usize> = (0..r.min(d.u.cols())).collect();
+    d.u.take_cols(&idx)
+}
+
+/// Spectral norm (largest singular value) via a few power iterations —
+/// cheaper than a full SVD when only σ₁ is needed.
+pub fn spectral_norm(a: &Mat, iters: usize, seed: u64) -> f64 {
+    use crate::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut x: Vec<f64> = (0..a.cols()).map(|_| rng.normal()).collect();
+    let mut sigma = 0.0;
+    for _ in 0..iters.max(1) {
+        let y = a.matvec(&x);
+        let mut z = a.tmatvec(&y);
+        let n = super::mat::normalize(&mut z);
+        sigma = n.sqrt();
+        x = z;
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn reconstruct(d: &Svd) -> Mat {
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for j in 0..k {
+            let col: Vec<f64> = us.col(j).iter().map(|x| x * d.s[j]).collect();
+            us.set_col(j, &col);
+        }
+        us.matmul(&d.v.transpose())
+    }
+
+    #[test]
+    fn svd_reconstructs_tall() {
+        let a = randmat(12, 5, 1);
+        let d = svd(&a);
+        assert!(reconstruct(&d).sub(&a).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn svd_reconstructs_wide() {
+        let a = randmat(4, 9, 2);
+        let d = svd(&a);
+        assert!(reconstruct(&d).sub(&a).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let a = randmat(10, 6, 3);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let a = randmat(11, 5, 4);
+        let d = svd(&a);
+        assert!(d.u.gram().sub(&Mat::eye(5)).max_abs() < 1e-10);
+        assert!(d.v.gram().sub(&Mat::eye(5)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (4 - i) as f64 } else { 0.0 });
+        let d = svd(&a);
+        for (i, &s) in d.s.iter().enumerate() {
+            assert!((s - (4 - i) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        let a = randmat(8, 8, 5);
+        let d = svd(&a);
+        let f2: f64 = d.s.iter().map(|s| s * s).sum();
+        assert!((f2.sqrt() - a.frob_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_norm_close_to_s1() {
+        let a = randmat(20, 10, 6);
+        let d = svd(&a);
+        let sn = spectral_norm(&a, 50, 7);
+        assert!((sn - d.s[0]).abs() / d.s[0] < 1e-6);
+    }
+
+    #[test]
+    fn low_rank_matrix() {
+        let u = randmat(16, 2, 8);
+        let v = randmat(2, 10, 9);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-9 * d.s[0]);
+    }
+}

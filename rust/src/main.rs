@@ -1,0 +1,10 @@
+//! GRAFT CLI — the Layer-3 entrypoint.  See `graft help` / DESIGN.md §4
+//! for the experiment map (every paper table and figure has a command).
+
+use graft::cmd;
+use graft::config::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    cmd::dispatch(&args)
+}

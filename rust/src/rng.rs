@@ -1,0 +1,181 @@
+//! Deterministic RNG substrate (no external `rand` crate in the vendored
+//! dependency closure): SplitMix64 core + Box-Muller normals + Fisher-Yates.
+//!
+//! Every experiment in this repo is seeded through this module, so sweeps
+//! and tables are bit-reproducible across runs.
+
+/// SplitMix64 — tiny, statistically solid for simulation workloads, and
+/// splittable (`fork`) so parallel workers get independent streams.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second normal from Box-Muller.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    /// Derive an independent stream (used by worker threads / per-batch
+    /// selection so reordering work never changes the numbers).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free multiply-shift; bias < 2^-64, irrelevant here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let (mut u1, u2) = (self.uniform(), self.uniform());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample k distinct indices from 0..n (k ≤ n), order random.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose({k}) from {n}");
+        // Partial Fisher-Yates over an index table.
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_uniformity() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(4);
+        let p = r.permutation(57);
+        let mut seen = vec![false; 57];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Rng::new(5);
+        for _ in 0..50 {
+            let k = r.below(20) + 1;
+            let sel = r.choose(100, k);
+            assert_eq!(sel.len(), k);
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k);
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(6);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Flat key-value format (one `config` line per dataset
+//! family) so no JSON dependency is needed on the Rust side.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Static shape information for one dataset config's artifact family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigSpec {
+    pub name: String,
+    /// Input feature dimension.
+    pub d: usize,
+    /// Number of classes.
+    pub c: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Batch size K.
+    pub k: usize,
+    /// Fast MaxVol depth / max candidate rank.
+    pub rmax: usize,
+    /// Gradient-sketch dimension E = H + C.
+    pub e: usize,
+    /// Padded train_step bucket sizes (ascending; last == k).
+    pub buckets: Vec<usize>,
+    /// Artifact names available for this config.
+    pub artifacts: Vec<String>,
+}
+
+impl ConfigSpec {
+    /// Smallest bucket that fits a subset of size `r`.
+    pub fn bucket_for(&self, r: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= r)
+    }
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        match lines.next() {
+            Some("version 1") => {}
+            other => bail!("unsupported manifest header: {other:?}"),
+        }
+        let mut configs = BTreeMap::new();
+        for line in lines {
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.first() != Some(&"config") || fields.len() < 2 || fields.len() % 2 != 0 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            let name = fields[1].to_string();
+            let mut kv = BTreeMap::new();
+            for pair in fields[2..].chunks(2) {
+                kv.insert(pair[0], pair[1]);
+            }
+            let get = |key: &str| -> Result<&str> {
+                kv.get(key).copied().with_context(|| format!("manifest {name}: missing {key}"))
+            };
+            let num = |key: &str| -> Result<usize> {
+                get(key)?.parse::<usize>().with_context(|| format!("manifest {name}: bad {key}"))
+            };
+            let buckets: Vec<usize> = get("buckets")?
+                .split(',')
+                .map(|s| s.parse::<usize>().map_err(Into::into))
+                .collect::<Result<_>>()?;
+            let spec = ConfigSpec {
+                name: name.clone(),
+                d: num("d")?,
+                c: num("c")?,
+                h: num("h")?,
+                k: num("k")?,
+                rmax: num("rmax")?,
+                e: num("e")?,
+                buckets,
+                artifacts: get("artifacts")?.split(',').map(String::from).collect(),
+            };
+            if spec.buckets.last() != Some(&spec.k) {
+                bail!("manifest {name}: largest bucket must equal k");
+            }
+            configs.insert(name, spec);
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigSpec> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest ({:?})", self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Path of one HLO artifact.
+    pub fn hlo_path(&self, config: &str, artifact: &str) -> PathBuf {
+        self.dir.join(config).join(format!("{artifact}.hlo.txt"))
+    }
+
+    pub fn golden_path(&self, config: &str) -> PathBuf {
+        self.dir.join(config).join("golden.bin")
+    }
+}
+
+/// Default artifacts directory: `$GRAFT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("GRAFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "version 1\n\
+config iris d 4 c 3 h 16 k 120 rmax 4 e 19 buckets 2,4,8,120 artifacts embed,select,eval_step\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let c = m.config("iris").unwrap();
+        assert_eq!(c.d, 4);
+        assert_eq!(c.buckets, vec![2, 4, 8, 120]);
+        assert_eq!(c.artifacts.len(), 3);
+        assert_eq!(m.hlo_path("iris", "select"), PathBuf::from("/tmp/a/iris/select.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_for_rounds_up() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let c = m.config("iris").unwrap();
+        assert_eq!(c.bucket_for(1), Some(2));
+        assert_eq!(c.bucket_for(5), Some(8));
+        assert_eq!(c.bucket_for(120), Some(120));
+        assert_eq!(c.bucket_for(121), None);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("version 9\n", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_bucket_mismatch() {
+        let bad = "version 1\nconfig x d 1 c 1 h 1 k 10 rmax 1 e 2 buckets 2,4 artifacts embed\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(m.config("nope").is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Typed execution layer over the PJRT client: model state, batch tensors,
+//! and wrappers for the four artifact kinds (embed / select / train_step /
+//! eval_step).  This is the ONLY place that touches `xla::Literal`s — the
+//! rest of the crate works with plain slices and `linalg::Mat`.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::ConfigSpec;
+use crate::linalg::Mat;
+
+/// MLP parameters (host-side master copy, f32 row-major).
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub w1: Vec<f32>, // d×h
+    pub b1: Vec<f32>, // h
+    pub w2: Vec<f32>, // h×c
+    pub b2: Vec<f32>, // c
+}
+
+impl ModelParams {
+    /// He-initialised parameters, matching `model.init_params` layout.
+    pub fn init(spec: &ConfigSpec, seed: u64) -> ModelParams {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let s1 = (2.0 / spec.d as f64).sqrt();
+        let s2 = (2.0 / spec.h as f64).sqrt();
+        ModelParams {
+            w1: (0..spec.d * spec.h).map(|_| (rng.normal() * s1) as f32).collect(),
+            b1: vec![0.0; spec.h],
+            w2: (0..spec.h * spec.c).map(|_| (rng.normal() * s2) as f32).collect(),
+            b2: vec![0.0; spec.c],
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+    }
+
+    fn validate(&self, spec: &ConfigSpec) -> Result<()> {
+        if self.w1.len() != spec.d * spec.h
+            || self.b1.len() != spec.h
+            || self.w2.len() != spec.h * spec.c
+            || self.b2.len() != spec.c
+        {
+            bail!("params do not match config '{}'", spec.name);
+        }
+        Ok(())
+    }
+}
+
+/// Parameters + momentum buffers — the full optimiser state.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: ModelParams,
+    pub velocity: ModelParams,
+}
+
+impl TrainState {
+    pub fn init(spec: &ConfigSpec, seed: u64) -> TrainState {
+        let params = ModelParams::init(spec, seed);
+        let velocity = ModelParams {
+            w1: vec![0.0; params.w1.len()],
+            b1: vec![0.0; params.b1.len()],
+            w2: vec![0.0; params.w2.len()],
+            b2: vec![0.0; params.b2.len()],
+        };
+        TrainState { params, velocity }
+    }
+}
+
+/// Output of the `embed` artifact for one batch.
+pub struct EmbedOut {
+    /// K×Rmax importance-ordered feature matrix.
+    pub features: Mat,
+    /// K×E per-sample gradient sketches.
+    pub grads: Mat,
+    /// Per-sample losses.
+    pub losses: Vec<f64>,
+    /// Predicted classes.
+    pub preds: Vec<i32>,
+}
+
+/// Output of the `select` artifact for one batch.
+#[derive(Debug, Clone)]
+pub struct SelectOut {
+    /// Prefix-nested Fast MaxVol indices (batch-local), length Rmax.
+    pub indices: Vec<usize>,
+    /// Normalised projection error per prefix rank, length Rmax.
+    pub errors: Vec<f64>,
+    /// ‖ḡ‖₂ of the batch-mean gradient sketch.
+    pub gnorm: f64,
+    /// cos(ḡ, mean selected sketch) — Fig 2 alignment signal.
+    pub align: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub(super) fn lit_mat(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    if data.len() != rows * cols {
+        bail!("literal shape mismatch: {} != {rows}x{cols}", data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+pub(super) fn lit_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+pub(super) fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub(super) fn param_literals(p: &ModelParams, spec: &ConfigSpec) -> Result<Vec<xla::Literal>> {
+    p.validate(spec)?;
+    Ok(vec![
+        lit_mat(&p.w1, spec.d, spec.h)?,
+        lit_vec(&p.b1),
+        lit_mat(&p.w2, spec.h, spec.c)?,
+        lit_vec(&p.b2),
+    ])
+}
+
+pub(super) fn f32s(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().context("literal -> f32 vec")
+}
+
+pub(super) fn i32s(l: &xla::Literal) -> Result<Vec<i32>> {
+    l.to_vec::<i32>().context("literal -> i32 vec")
+}
+
+/// Turn a K×C one-hot + K×D batch into literals for an artifact call.
+pub(super) fn batch_literals(
+    x: &[f32],
+    y1h: &[f32],
+    rows: usize,
+    spec: &ConfigSpec,
+) -> Result<(xla::Literal, xla::Literal)> {
+    Ok((lit_mat(x, rows, spec.d)?, lit_mat(y1h, rows, spec.c)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ConfigSpec {
+        ConfigSpec {
+            name: "t".into(),
+            d: 4,
+            c: 3,
+            h: 2,
+            k: 8,
+            rmax: 4,
+            e: 5,
+            buckets: vec![2, 8],
+            artifacts: vec![],
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let s = spec();
+        let st = TrainState::init(&s, 1);
+        assert_eq!(st.params.w1.len(), 8);
+        assert_eq!(st.params.num_params(), 8 + 2 + 6 + 3);
+        assert!(st.velocity.w1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let s = spec();
+        let mut p = ModelParams::init(&s, 2);
+        p.b2.push(0.0);
+        assert!(p.validate(&s).is_err());
+    }
+
+    #[test]
+    fn lit_mat_checks_shape() {
+        assert!(lit_mat(&[0.0; 6], 2, 3).is_ok());
+        assert!(lit_mat(&[0.0; 5], 2, 3).is_err());
+    }
+}

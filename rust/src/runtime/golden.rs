@@ -1,0 +1,141 @@
+//! Reader for `artifacts/<config>/golden.bin` — deterministic inputs and
+//! JAX-computed outputs used by the cross-language integration tests
+//! (see python/compile/golden.py for the format).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor from a golden file.
+#[derive(Debug, Clone)]
+pub enum GoldenTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl GoldenTensor {
+    pub fn f32(&self) -> Result<&[f32]> {
+        match self {
+            GoldenTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32(&self) -> Result<&[i32]> {
+        match self {
+            GoldenTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            GoldenTensor::F32 { shape, .. } | GoldenTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+}
+
+/// All records of one golden file, keyed by name (e.g. "select.p").
+pub struct Golden(pub BTreeMap<String, GoldenTensor>);
+
+impl Golden {
+    pub fn load(path: impl AsRef<Path>) -> Result<Golden> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Golden> {
+        let mut cur = std::io::Cursor::new(bytes);
+        let mut out = BTreeMap::new();
+        loop {
+            let mut head = [0u8; 4];
+            match cur.read_exact(&mut head) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                Err(e) => return Err(e.into()),
+            }
+            let nlen = u32::from_le_bytes(head) as usize;
+            let mut name = vec![0u8; nlen];
+            cur.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut meta = [0u8; 5];
+            cur.read_exact(&mut meta)?;
+            let code = meta[0];
+            let ndim = u32::from_le_bytes(meta[1..5].try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut d = [0u8; 4];
+                cur.read_exact(&mut d)?;
+                shape.push(u32::from_le_bytes(d) as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; n * 4];
+            cur.read_exact(&mut raw)?;
+            let tensor = match code {
+                0 => GoldenTensor::F32 {
+                    shape,
+                    data: raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                },
+                1 => GoldenTensor::I32 {
+                    shape,
+                    data: raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                },
+                other => bail!("unknown dtype code {other} for {name}"),
+            };
+            out.insert(name, tensor);
+        }
+        Ok(Golden(out))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&GoldenTensor> {
+        self.0.get(name).with_context(|| format!("golden record '{name}' missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(name: &str, code: u8, shape: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(code);
+        out.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let mut buf = Vec::new();
+        buf.extend(record("a", 0, &[2], &[1f32.to_le_bytes(), 2f32.to_le_bytes()].concat()));
+        buf.extend(record("b", 1, &[], &7i32.to_le_bytes()));
+        let g = Golden::parse(&buf).unwrap();
+        assert_eq!(g.get("a").unwrap().f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(g.get("b").unwrap().i32().unwrap(), &[7]);
+        assert_eq!(g.get("b").unwrap().shape(), &[] as &[usize]);
+        assert!(g.get("c").is_err());
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let mut buf = record("a", 0, &[4], &[0u8; 16]);
+        buf.truncate(buf.len() - 4);
+        assert!(Golden::parse(&buf).is_err());
+    }
+}

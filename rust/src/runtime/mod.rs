@@ -1,0 +1,241 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the CPU PJRT client.  Python is never on this
+//! path — the engine is self-contained once `artifacts/` exists.
+//!
+//! Executable lifecycle: compiled lazily on first use, cached for the
+//! engine's lifetime (compilation is the expensive part; execution is the
+//! per-step hot path).
+
+pub mod artifacts;
+pub mod exec;
+pub mod golden;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use artifacts::{default_dir, ConfigSpec, Manifest};
+pub use exec::{EmbedOut, ModelParams, SelectOut, TrainState};
+pub use golden::{Golden, GoldenTensor};
+
+use crate::linalg::Mat;
+use exec::{batch_literals, f32s, i32s, lit_scalar, lit_vec, param_literals};
+
+/// Cumulative execution statistics (feeds the energy model + §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub exec_secs: f64,
+    /// Executions per artifact name.
+    pub per_artifact: HashMap<String, (usize, f64)>,
+}
+
+/// The PJRT engine: one CPU client + a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (see [`default_dir`]).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, config: &str) -> Result<&ConfigSpec> {
+        self.manifest.config(config)
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Compile (or fetch from cache) one artifact executable.
+    fn executable(&mut self, config: &str, artifact: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (config.to_string(), artifact.to_string());
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.hlo_path(config, artifact);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.stats.compiles += 1;
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Pre-compile every artifact a run will need (keeps compile time out
+    /// of the measured training loop).
+    pub fn warmup(&mut self, config: &str) -> Result<()> {
+        let arts = self.spec(config)?.artifacts.clone();
+        for a in arts {
+            self.executable(config, &a)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one artifact: inputs are literals, output is the untupled
+    /// result literal list (our artifacts always return tuples).
+    fn run(&mut self, config: &str, artifact: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // Compile first (mutable borrow), then fetch for execution.
+        self.executable(config, artifact)?;
+        let key = (config.to_string(), artifact.to_string());
+        let exe = &self.cache[&key];
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {config}/{artifact}"))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        self.stats.exec_secs += dt;
+        let entry = self.stats.per_artifact.entry(format!("{config}/{artifact}")).or_insert((0, 0.0));
+        entry.0 += 1;
+        entry.1 += dt;
+        Ok(lit.to_tuple()?)
+    }
+
+    // -----------------------------------------------------------------
+    // Typed artifact wrappers
+    // -----------------------------------------------------------------
+
+    /// `embed`: batch → (features K×Rmax, grad sketches K×E, losses, preds).
+    pub fn embed(
+        &mut self,
+        config: &str,
+        params: &ModelParams,
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<EmbedOut> {
+        let spec = self.spec(config)?.clone();
+        let (xl, yl) = batch_literals(x, y1h, spec.k, &spec)?;
+        let mut inputs = param_literals(params, &spec)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        let out = self.run(config, "embed", &inputs)?;
+        anyhow::ensure!(out.len() == 4, "embed returned {} outputs", out.len());
+        let v = f32s(&out[0])?;
+        let g = f32s(&out[1])?;
+        let losses = f32s(&out[2])?;
+        let preds = i32s(&out[3])?;
+        Ok(EmbedOut {
+            features: Mat::from_f32(spec.k, spec.rmax, &v),
+            grads: Mat::from_f32(spec.k, spec.e, &g),
+            losses: losses.into_iter().map(|x| x as f64).collect(),
+            preds,
+        })
+    }
+
+    /// `select`: batch → GRAFT Stage-1 outputs (Fast MaxVol indices +
+    /// prefix projection errors) — the L1 Pallas kernels run inside this.
+    pub fn select(
+        &mut self,
+        config: &str,
+        params: &ModelParams,
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<SelectOut> {
+        let spec = self.spec(config)?.clone();
+        let (xl, yl) = batch_literals(x, y1h, spec.k, &spec)?;
+        let mut inputs = param_literals(params, &spec)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        let out = self.run(config, "select", &inputs)?;
+        anyhow::ensure!(out.len() == 4, "select returned {} outputs", out.len());
+        let p = i32s(&out[0])?;
+        let d = f32s(&out[1])?;
+        let gnorm = f32s(&out[2])?[0] as f64;
+        let align = f32s(&out[3])?[0] as f64;
+        Ok(SelectOut {
+            indices: p.into_iter().map(|i| i as usize).collect(),
+            errors: d.into_iter().map(|x| x as f64).collect(),
+            gnorm,
+            align,
+        })
+    }
+
+    /// `train_step_b{bucket}`: one SGD+momentum step on a padded subset.
+    /// Returns the loss; the state is updated in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        config: &str,
+        bucket: usize,
+        state: &mut TrainState,
+        x: &[f32],
+        y1h: &[f32],
+        weights: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<f64> {
+        let spec = self.spec(config)?.clone();
+        anyhow::ensure!(spec.buckets.contains(&bucket), "bucket {bucket} not in {:?}", spec.buckets);
+        anyhow::ensure!(weights.len() == bucket, "weights len {} != bucket {bucket}", weights.len());
+        let (xl, yl) = batch_literals(x, y1h, bucket, &spec)?;
+        let mut inputs = param_literals(&state.params, &spec)?;
+        inputs.extend(param_literals(&state.velocity, &spec)?);
+        inputs.push(xl);
+        inputs.push(yl);
+        inputs.push(lit_vec(weights));
+        inputs.push(lit_scalar(lr));
+        inputs.push(lit_scalar(momentum));
+        let artifact = format!("train_step_b{bucket}");
+        let out = self.run(config, &artifact, &inputs)?;
+        anyhow::ensure!(out.len() == 9, "train_step returned {} outputs", out.len());
+        state.params.w1 = f32s(&out[0])?;
+        state.params.b1 = f32s(&out[1])?;
+        state.params.w2 = f32s(&out[2])?;
+        state.params.b2 = f32s(&out[3])?;
+        state.velocity.w1 = f32s(&out[4])?;
+        state.velocity.b1 = f32s(&out[5])?;
+        state.velocity.w2 = f32s(&out[6])?;
+        state.velocity.b2 = f32s(&out[7])?;
+        Ok(f32s(&out[8])?[0] as f64)
+    }
+
+    /// `eval_step`: one evaluation window → (mean loss, per-row correct).
+    /// Correctness is per row so callers can mask wrap-padded tails.
+    pub fn eval_step(
+        &mut self,
+        config: &str,
+        params: &ModelParams,
+        x: &[f32],
+        y1h: &[f32],
+    ) -> Result<(f64, Vec<i32>)> {
+        let spec = self.spec(config)?.clone();
+        let (xl, yl) = batch_literals(x, y1h, spec.k, &spec)?;
+        let mut inputs = param_literals(params, &spec)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        let out = self.run(config, "eval_step", &inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        let loss = f32s(&out[0])?[0] as f64;
+        let correct = i32s(&out[1])?;
+        Ok((loss, correct))
+    }
+
+    /// Load the golden record for a config (integration tests).
+    pub fn golden(&self, config: &str) -> Result<Golden> {
+        Golden::load(self.manifest.golden_path(config))
+    }
+}

@@ -1,0 +1,173 @@
+//! BADGE baseline (Ash et al. 2020): diverse + uncertain selection via
+//! k-means++ seeding on per-sample gradient embeddings.  The gradient
+//! norm encodes uncertainty and the k-means++ distance rule enforces
+//! diversity — the exact construction of the paper's related work (§2).
+
+use super::{BatchView, Selector};
+use crate::rng::Rng;
+
+pub struct Badge {
+    rng: Rng,
+}
+
+impl Badge {
+    pub fn new(seed: u64) -> Self {
+        Badge { rng: Rng::new(seed) }
+    }
+}
+
+impl Selector for Badge {
+    fn name(&self) -> &'static str {
+        "badge"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        let r = r.min(k);
+        let g = view.grads;
+        // First centre: largest gradient norm (most uncertain).
+        let norm2 = |i: usize| crate::linalg::dot(g.row(i), g.row(i));
+        let first = (0..k)
+            .max_by(|&a, &b| norm2(a).partial_cmp(&norm2(b)).unwrap())
+            .unwrap_or(0);
+        let mut out = vec![first];
+        let mut taken = vec![false; k];
+        taken[first] = true;
+        // Squared distance to nearest selected centre.
+        let dist = |i: usize, c: usize, g: &crate::linalg::Mat| {
+            let (a, b) = (g.row(i), g.row(c));
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        };
+        let mut d2: Vec<f64> = (0..k).map(|i| dist(i, first, g)).collect();
+        while out.len() < r {
+            // k-means++ rule: sample ∝ D².  Deterministic given the seed.
+            let total: f64 = (0..k).filter(|&i| !taken[i]).map(|i| d2[i]).sum();
+            let pick = if total <= 1e-18 {
+                // Degenerate (all identical): first untaken index.
+                (0..k).find(|&i| !taken[i]).unwrap()
+            } else {
+                let mut u = self.rng.uniform() * total;
+                let mut chosen = usize::MAX;
+                for i in 0..k {
+                    if taken[i] {
+                        continue;
+                    }
+                    if u < d2[i] {
+                        chosen = i;
+                        break;
+                    }
+                    u -= d2[i];
+                }
+                if chosen == usize::MAX {
+                    (0..k).rev().find(|&i| !taken[i]).unwrap()
+                } else {
+                    chosen
+                }
+            };
+            taken[pick] = true;
+            out.push(pick);
+            for i in 0..k {
+                if !taken[i] {
+                    d2[i] = d2[i].min(dist(i, pick, g));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::selection::BatchView;
+
+    fn view_over<'a>(
+        g: &'a Mat,
+        feats: &'a Mat,
+        losses: &'a [f64],
+        labels: &'a [i32],
+        ids: &'a [usize],
+    ) -> BatchView<'a> {
+        BatchView {
+            features: feats,
+            grads: g,
+            losses,
+            labels,
+            preds: labels,
+            classes: 2,
+            row_ids: ids,
+        }
+    }
+
+    #[test]
+    fn contract_basics() {
+        let mut rng = crate::rng::Rng::new(1);
+        let g = Mat::from_fn(40, 8, |_, _| rng.normal());
+        let feats = Mat::zeros(40, 2);
+        let losses = vec![0.0; 40];
+        let labels = vec![0i32; 40];
+        let ids: Vec<usize> = (0..40).collect();
+        let view = view_over(&g, &feats, &losses, &labels, &ids);
+        for r in [1usize, 5, 20] {
+            let sel = Badge::new(7).select(&view, r);
+            assert_eq!(sel.len(), r);
+            let mut s = sel;
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), r);
+        }
+    }
+
+    #[test]
+    fn first_pick_is_max_norm() {
+        let mut g = Mat::zeros(10, 3);
+        for i in 0..10 {
+            g[(i, 0)] = i as f64;
+        }
+        let feats = Mat::zeros(10, 2);
+        let losses = vec![0.0; 10];
+        let labels = vec![0i32; 10];
+        let ids: Vec<usize> = (0..10).collect();
+        let view = view_over(&g, &feats, &losses, &labels, &ids);
+        let sel = Badge::new(2).select(&view, 3);
+        assert_eq!(sel[0], 9);
+    }
+
+    #[test]
+    fn spans_clusters() {
+        // Two far-apart gradient clusters: both must be represented.
+        let mut g = Mat::zeros(20, 2);
+        for i in 0..20 {
+            if i < 10 {
+                g[(i, 0)] = 100.0 + i as f64 * 0.01;
+            } else {
+                g[(i, 1)] = 100.0 + i as f64 * 0.01;
+            }
+        }
+        let feats = Mat::zeros(20, 2);
+        let losses = vec![0.0; 20];
+        let labels = vec![0i32; 20];
+        let ids: Vec<usize> = (0..20).collect();
+        let view = view_over(&g, &feats, &losses, &labels, &ids);
+        let sel = Badge::new(3).select(&view, 2);
+        let c0 = sel.iter().filter(|&&i| i < 10).count();
+        assert_eq!(c0, 1, "one pick per cluster: {sel:?}");
+    }
+
+    #[test]
+    fn degenerate_identical_gradients() {
+        let g = Mat::from_fn(12, 4, |_, _| 1.0);
+        let feats = Mat::zeros(12, 2);
+        let losses = vec![0.0; 12];
+        let labels = vec![0i32; 12];
+        let ids: Vec<usize> = (0..12).collect();
+        let view = view_over(&g, &feats, &losses, &labels, &ids);
+        let sel = Badge::new(4).select(&view, 5);
+        assert_eq!(sel.len(), 5);
+        let mut s = sel;
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+    }
+}

@@ -1,0 +1,120 @@
+//! CrossMaxVol baseline — the Cross-2D skeleton method (Tyrtyshnikov 2000)
+//! the paper compares against in Table 4 / Fig 4 (right): alternate MaxVol
+//! sweeps over rows given the current columns and over columns given the
+//! current rows, until the selections stabilise.
+//!
+//! As the paper notes (§3), the concurrent row/column search is (a) more
+//! expensive per iteration and (b) sensitive to initialisation — both
+//! properties our benchmark reproduces.
+
+use super::{BatchView, Selector};
+use crate::linalg::Mat;
+use crate::selection::maxvol::fast_maxvol;
+
+pub struct CrossMaxVol {
+    pub max_sweeps: usize,
+}
+
+impl Default for CrossMaxVol {
+    fn default() -> Self {
+        CrossMaxVol { max_sweeps: 20 }
+    }
+}
+
+impl CrossMaxVol {
+    /// Select `r` rows (and internally r columns) of `a` by alternating
+    /// row/column MaxVol. Returns (rows, sweeps executed).
+    pub fn select_rows(&self, a: &Mat, r: usize) -> (Vec<usize>, usize) {
+        let (k, m) = (a.rows(), a.cols());
+        let r = r.min(k).min(m);
+        // Init: first r columns (the paper notes initialisation sensitivity;
+        // this deterministic choice mirrors teneva's default).
+        let mut cols: Vec<usize> = (0..r).collect();
+        let mut rows: Vec<usize> = Vec::new();
+        let mut sweeps = 0;
+        for _ in 0..self.max_sweeps {
+            sweeps += 1;
+            // Rows maximising volume within the selected columns.
+            let sub = a.take_cols(&cols);
+            let new_rows = fast_maxvol(&sub, r);
+            // Columns maximising volume within the selected rows.
+            let subr = a.take_rows(&new_rows).transpose(); // m×r
+            let new_cols = fast_maxvol(&subr, r);
+            let converged = new_rows == rows && new_cols == cols;
+            rows = new_rows;
+            cols = new_cols;
+            if converged {
+                break;
+            }
+        }
+        (rows, sweeps)
+    }
+}
+
+impl Selector for CrossMaxVol {
+    fn name(&self) -> &'static str {
+        "cross-maxvol"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let width = view.features.cols().min(r);
+        let (mut rows, _) = self.select_rows(view.features, width);
+        if rows.len() < r {
+            let mut taken = vec![false; view.k()];
+            for &i in &rows {
+                taken[i] = true;
+            }
+            let mut rest: Vec<usize> = (0..view.k()).filter(|&i| !taken[i]).collect();
+            rest.sort_by(|&a, &b| view.losses[b].partial_cmp(&view.losses[a]).unwrap());
+            rows.extend(rest.into_iter().take(r - rows.len()));
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::selection::testsupport::check_selector;
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(CrossMaxVol::default()));
+    }
+
+    #[test]
+    fn converges_on_random_input() {
+        let mut rng = Rng::new(31);
+        let a = Mat::from_fn(60, 20, |_, _| rng.normal());
+        let cm = CrossMaxVol::default();
+        let (rows, sweeps) = cm.select_rows(&a, 6);
+        assert_eq!(rows.len(), 6);
+        assert!(sweeps <= 20);
+        let mut s = rows.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn selects_informative_rows_on_structured_input() {
+        // Rows 0..4 carry all the energy; CrossMaxVol must find them.
+        let mut rng = Rng::new(32);
+        let mut a = Mat::zeros(40, 10);
+        for i in 0..4 {
+            for j in 0..10 {
+                a[(i, j)] = 10.0 * rng.normal();
+            }
+        }
+        for i in 4..40 {
+            for j in 0..10 {
+                a[(i, j)] = 0.01 * rng.normal();
+            }
+        }
+        let (rows, _) = CrossMaxVol::default().select_rows(&a, 4);
+        let mut r = rows;
+        r.sort_unstable();
+        assert_eq!(r, vec![0, 1, 2, 3]);
+    }
+}

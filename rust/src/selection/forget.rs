@@ -1,0 +1,106 @@
+//! Forget-score pre-selection (Toneva et al. 2018): count per-sample
+//! "forgetting events" (correct → incorrect transitions) across selection
+//! rounds; prefer the most-forgotten (hardest) samples.  Stateful: the
+//! coordinator feeds every batch through `observe` implicitly via
+//! `select`, keyed by global row ids.
+
+use std::collections::HashMap;
+
+use super::{BatchView, Selector};
+
+#[derive(Default)]
+pub struct Forget {
+    /// row id → (was_correct_last_time, forget_count, seen_count)
+    history: HashMap<usize, (bool, u32, u32)>,
+}
+
+impl Forget {
+    pub fn forget_count(&self, row: usize) -> u32 {
+        self.history.get(&row).map(|&(_, f, _)| f).unwrap_or(0)
+    }
+}
+
+impl Selector for Forget {
+    fn name(&self) -> &'static str {
+        "forget"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        // Update forgetting statistics.
+        for i in 0..k {
+            let id = view.row_ids[i];
+            let correct = view.preds[i] == view.labels[i];
+            let entry = self.history.entry(id).or_insert((correct, 0, 0));
+            if entry.0 && !correct {
+                entry.1 += 1; // forgetting event
+            }
+            entry.0 = correct;
+            entry.2 += 1;
+        }
+        // Rank: most forgotten first; tie-break on loss (harder first),
+        // then index for determinism.
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| {
+            let fa = self.forget_count(view.row_ids[a]);
+            let fb = self.forget_count(view.row_ids[b]);
+            fb.cmp(&fa)
+                .then(view.losses[b].partial_cmp(&view.losses[a]).unwrap())
+                .then(a.cmp(&b))
+        });
+        idx.truncate(r.min(k));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::selection::BatchView;
+
+    fn view_with_preds<'a>(
+        feats: &'a Mat,
+        grads: &'a Mat,
+        losses: &'a [f64],
+        labels: &'a [i32],
+        preds: &'a [i32],
+        ids: &'a [usize],
+    ) -> BatchView<'a> {
+        BatchView { features: feats, grads, losses, labels, preds, classes: 2, row_ids: ids }
+    }
+
+    #[test]
+    fn counts_forgetting_events() {
+        let k = 4;
+        let feats = Mat::zeros(k, 2);
+        let grads = Mat::zeros(k, 2);
+        let losses = vec![0.1, 0.2, 0.3, 0.4];
+        let labels = vec![1, 1, 1, 1];
+        let ids: Vec<usize> = vec![10, 11, 12, 13];
+        let mut f = Forget::default();
+
+        // Round 1: all correct.
+        let preds = vec![1, 1, 1, 1];
+        f.select(&view_with_preds(&feats, &grads, &losses, &labels, &preds, &ids), 2);
+        // Round 2: row 11 forgotten.
+        let preds = vec![1, 0, 1, 1];
+        let sel = f.select(&view_with_preds(&feats, &grads, &losses, &labels, &preds, &ids), 1);
+        assert_eq!(f.forget_count(11), 1);
+        assert_eq!(sel, vec![1]); // most-forgotten row selected first
+    }
+
+    #[test]
+    fn tie_breaks_on_loss() {
+        let k = 3;
+        let feats = Mat::zeros(k, 2);
+        let grads = Mat::zeros(k, 2);
+        let losses = vec![0.1, 0.9, 0.5];
+        let labels = vec![0, 0, 0];
+        let preds = vec![0, 0, 0];
+        let ids: Vec<usize> = vec![0, 1, 2];
+        let mut f = Forget::default();
+        let sel = f.select(&view_with_preds(&feats, &grads, &losses, &labels, &preds, &ids), 2);
+        assert_eq!(sel, vec![1, 2]); // no forgetting yet → by loss desc
+    }
+}

@@ -1,0 +1,159 @@
+//! GradMatch baseline (Killamsetty et al. 2021): pick a subset whose
+//! gradient combination matches the full-batch mean gradient, via greedy
+//! Orthogonal Matching Pursuit on the per-sample gradient sketches —
+//! exactly the mechanism GRAFT's §1 contrasts itself against ("explicit
+//! comparisons of gradient vectors").
+
+use super::{BatchView, Selector};
+use crate::linalg::{dot, norm2, Mat};
+
+pub struct GradMatch {
+    /// Residual tolerance for early stop (the budget r still rules).
+    pub tol: f64,
+}
+
+impl Default for GradMatch {
+    fn default() -> Self {
+        GradMatch { tol: 1e-8 }
+    }
+}
+
+impl Selector for GradMatch {
+    fn name(&self) -> &'static str {
+        "gradmatch"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        let r = r.min(k);
+        let g = view.grads; // K×E
+        let e = g.cols();
+        // Target: mean gradient.
+        let mut target = vec![0.0f64; e];
+        for i in 0..k {
+            for (t, &v) in g.row(i).iter().enumerate() {
+                target[t] += v;
+            }
+        }
+        let inv = 1.0 / k as f64;
+        for t in target.iter_mut() {
+            *t *= inv;
+        }
+
+        // OMP with an incrementally orthonormalised dictionary (MGS), so
+        // each step is O(K·E) for scoring + O(|S|·E) for the basis update.
+        let mut residual = target.clone();
+        let mut taken = vec![false; k];
+        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(r);
+        let mut out = Vec::with_capacity(r);
+        for _ in 0..r {
+            // Highest |correlation| with the residual (normalised atoms).
+            let (mut best, mut bestval) = (usize::MAX, -1.0f64);
+            for i in 0..k {
+                if taken[i] {
+                    continue;
+                }
+                let row = g.row(i);
+                let n = norm2(row);
+                let c = if n > 1e-12 { dot(row, &residual).abs() / n } else { 0.0 };
+                if c > bestval {
+                    best = i;
+                    bestval = c;
+                }
+            }
+            taken[best] = true;
+            out.push(best);
+            // Orthonormalise the new atom against the basis, then deflate
+            // the residual (OMP re-projection onto the selected span).
+            let mut atom = g.row(best).to_vec();
+            for b in &basis {
+                let p = dot(b, &atom);
+                for (a, &bb) in atom.iter_mut().zip(b) {
+                    *a -= p * bb;
+                }
+            }
+            let n = norm2(&atom);
+            if n > 1e-10 {
+                for a in atom.iter_mut() {
+                    *a /= n;
+                }
+                let p = dot(&atom, &residual);
+                for (rv, &av) in residual.iter_mut().zip(&atom) {
+                    *rv -= p * av;
+                }
+                basis.push(atom);
+            }
+            if norm2(&residual) < self.tol {
+                // Fill the remaining budget with unselected max-norm rows
+                // (the CORDS implementation pads similarly).
+                break;
+            }
+        }
+        if out.len() < r {
+            let mut rest: Vec<usize> = (0..k).filter(|&i| !taken[i]).collect();
+            rest.sort_by(|&a, &b| {
+                norm2(g.row(b)).partial_cmp(&norm2(g.row(a))).unwrap()
+            });
+            out.extend(rest.into_iter().take(r - out.len()));
+        }
+        out
+    }
+}
+
+/// Residual gradient error ‖ḡ − proj_span(S) ḡ‖₂ — the quantity GradMatch
+/// minimises; exposed for tests and the Table 1 complexity bench.
+pub fn residual_error(g: &Mat, subset: &[usize]) -> f64 {
+    let k = g.rows();
+    let e = g.cols();
+    let mut target = vec![0.0f64; e];
+    for i in 0..k {
+        for (t, &v) in g.row(i).iter().enumerate() {
+            target[t] += v;
+        }
+    }
+    for t in target.iter_mut() {
+        *t /= k as f64;
+    }
+    let sub = g.take_rows(subset).transpose(); // E×|S|
+    let (_, res) = crate::linalg::project_onto_colspace(&sub, &target);
+    res.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testsupport::{check_selector, random_view};
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(GradMatch::default()));
+    }
+
+    #[test]
+    fn residual_decreases_with_budget() {
+        let owned = random_view(48, 6, 10, 3, 7);
+        let view = owned.view();
+        let mut gm = GradMatch::default();
+        let mut prev = f64::MAX;
+        for r in [2usize, 4, 8, 16] {
+            let sel = gm.select(&view, r);
+            let err = residual_error(&owned.grads, &sel);
+            assert!(err <= prev + 1e-9, "r={r}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn beats_random_at_matching() {
+        let owned = random_view(64, 6, 12, 4, 8);
+        let view = owned.view();
+        let sel = GradMatch::default().select(&view, 6);
+        let err_gm = residual_error(&owned.grads, &sel);
+        let mut rng = crate::rng::Rng::new(9);
+        let mut errs: Vec<f64> = (0..15)
+            .map(|_| residual_error(&owned.grads, &rng.choose(64, 6)))
+            .collect();
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(err_gm <= errs[7], "gm {err_gm} vs random median {}", errs[7]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Fast MaxVol row selection (paper §3.1) — the Rust twin of the L1 Pallas
+//! kernel, used (a) for selection on non-AOT data paths, (b) for the
+//! Table 4 speed benchmark, and (c) for channel pruning.
+//!
+//! Also contains the *conventional* MaxVol (Goreinov et al. 2010) swap
+//! iteration, which the CrossMaxVol baseline builds on.
+
+use super::{BatchView, Selector};
+use crate::linalg::{lu_solve, Mat};
+
+/// Greedy Fast MaxVol: selects `r` rows of the K×R matrix `v` (r ≤ R ≤ K)
+/// with one rank-1 elimination per step — O(K·R·r) total, O(KR²) at r = R.
+/// The returned sequence is prefix-nested.
+pub fn fast_maxvol(v: &Mat, r: usize) -> Vec<usize> {
+    let (k, rcols) = (v.rows(), v.cols());
+    assert!(r <= rcols && r <= k, "need r <= min(K={k}, R={rcols}), got {r}");
+    // Working copy, row-major K×R; selected mask keeps selections unique
+    // even on rank-deficient inputs (matches the Pallas kernel).
+    let mut w = v.clone();
+    let mut taken = vec![false; k];
+    let mut p = Vec::with_capacity(r);
+    for j in 0..r {
+        // argmax |w[:, j]| over untaken rows.
+        let (mut best, mut bestval) = (usize::MAX, -1.0f64);
+        for i in 0..k {
+            if taken[i] {
+                continue;
+            }
+            let a = w[(i, j)].abs();
+            if a > bestval {
+                best = i;
+                bestval = a;
+            }
+        }
+        let piv = w[(best, j)];
+        let safe = if piv.abs() < 1e-300 {
+            if piv >= 0.0 { 1e-300 } else { -1e-300 }
+        } else {
+            piv
+        };
+        taken[best] = true;
+        p.push(best);
+        if j + 1 == r {
+            break;
+        }
+        // Rank-1 elimination on the remaining columns:
+        //   w[:, l] -= col_j * w[best, l] / piv   for l > j
+        let prow: Vec<f64> = (j + 1..rcols).map(|l| w[(best, l)] / safe).collect();
+        for i in 0..k {
+            let ci = w[(i, j)];
+            if ci == 0.0 {
+                continue;
+            }
+            let row = w.row_mut(i);
+            for (t, l) in (j + 1..rcols).enumerate() {
+                row[l] -= ci * prow[t];
+            }
+        }
+    }
+    p
+}
+
+/// Conventional MaxVol (Goreinov et al.): start from some r rows, swap a
+/// row in whenever an interpolation-matrix entry exceeds `tau`, until
+/// convergence.  Returns (rows, swap count).
+pub fn conventional_maxvol(v: &Mat, r: usize, tau: f64, max_iters: usize) -> (Vec<usize>, usize) {
+    let k = v.rows();
+    assert!(r <= v.cols() && r <= k);
+    let cols: Vec<usize> = (0..r).collect();
+    let vr = v.take_cols(&cols); // K×r
+    // Initialise with the greedy selection (any non-singular start works).
+    let mut rows = fast_maxvol(&vr, r);
+    let mut swaps = 0;
+    for _ in 0..max_iters {
+        let sub = vr.take_rows(&rows); // r×r
+        // Invert sub once (r solves): row c of sub^{-1} is the solution of
+        // subᵀ x = e_c.
+        let mut inv = Mat::zeros(r, r);
+        let subt = sub.transpose();
+        let mut singular = false;
+        for c in 0..r {
+            let mut e = vec![0.0; r];
+            e[c] = 1.0;
+            match lu_solve(&subt, &e) {
+                Some(x) => {
+                    for i in 0..r {
+                        inv[(c, i)] = x[i];
+                    }
+                }
+                None => {
+                    singular = true;
+                    break;
+                }
+            }
+        }
+        if singular {
+            break;
+        }
+        // Interpolation matrix B = Vr · sub^{-1} (B[rows, :] = I).
+        let b = vr.matmul(&inv);
+        // Find max |B[i][j]|.
+        let (mut bi, mut bj, mut bv) = (0usize, 0usize, 0.0f64);
+        for i in 0..k {
+            for j in 0..r {
+                let a = b[(i, j)].abs();
+                if a > bv {
+                    bi = i;
+                    bj = j;
+                    bv = a;
+                }
+            }
+        }
+        if bv <= tau {
+            break;
+        }
+        rows[bj] = bi;
+        swaps += 1;
+    }
+    (rows, swaps)
+}
+
+/// [`Selector`] wrapper over [`fast_maxvol`] on the batch feature matrix.
+/// For r beyond the feature width the remainder is filled with the
+/// highest-residual-loss rows (keeps the contract |S| = r for any budget).
+pub struct FastMaxVol;
+
+impl Selector for FastMaxVol {
+    fn name(&self) -> &'static str {
+        "maxvol"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let width = view.features.cols().min(r);
+        let mut p = fast_maxvol(view.features, width);
+        if p.len() < r {
+            // Budget exceeds feature rank: top-up with highest-loss rows.
+            let mut taken = vec![false; view.k()];
+            for &i in &p {
+                taken[i] = true;
+            }
+            let mut rest: Vec<usize> = (0..view.k()).filter(|&i| !taken[i]).collect();
+            rest.sort_by(|&a, &b| view.losses[b].partial_cmp(&view.losses[a]).unwrap());
+            p.extend(rest.into_iter().take(r - p.len()));
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::det;
+    use crate::rng::Rng;
+    use crate::selection::testsupport::{check_selector, random_view};
+
+    fn randmat(k: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(k, r, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(FastMaxVol));
+    }
+
+    #[test]
+    fn prefix_nested() {
+        let v = randmat(64, 12, 1);
+        let full = fast_maxvol(&v, 12);
+        for r in [1, 4, 8] {
+            assert_eq!(full[..r], fast_maxvol(&v, r)[..]);
+        }
+    }
+
+    #[test]
+    fn first_pick_max_abs() {
+        let v = randmat(40, 5, 2);
+        let p = fast_maxvol(&v, 5);
+        let col = v.col(0);
+        let want = (0..40).max_by(|&a, &b| col[a].abs().partial_cmp(&col[b].abs()).unwrap()).unwrap();
+        assert_eq!(p[0], want);
+    }
+
+    #[test]
+    fn volume_beats_random_median() {
+        let v = randmat(64, 8, 3);
+        let p = fast_maxvol(&v, 8);
+        let vol = det(&v.take_rows(&p)).abs();
+        let mut rng = Rng::new(4);
+        let mut rand_vols: Vec<f64> = (0..21)
+            .map(|_| det(&v.take_rows(&rng.choose(64, 8))).abs())
+            .collect();
+        rand_vols.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(vol >= rand_vols[10], "maxvol {vol} vs median {}", rand_vols[10]);
+    }
+
+    #[test]
+    fn unique_on_duplicate_rows() {
+        let mut rng = Rng::new(5);
+        let base = Mat::from_fn(4, 6, |_, _| rng.normal());
+        let v = Mat::from_fn(32, 6, |i, j| base[(i % 4, j)]);
+        let p = fast_maxvol(&v, 6);
+        let mut s = p.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn matches_pallas_reference_semantics() {
+        // Same algorithm as python/compile/kernels/fast_maxvol.py: verify
+        // on a fixed case against the residual-solve formulation.
+        let v = randmat(32, 8, 6);
+        let p = fast_maxvol(&v, 8);
+        // Step-by-step residual recomputation (independent path).
+        let mut sel: Vec<usize> = Vec::new();
+        for j in 0..8 {
+            let col = v.col(j);
+            let resid: Vec<f64> = if sel.is_empty() {
+                col.clone()
+            } else {
+                let sub = v.take_rows(&sel).take_cols(&(0..j).collect::<Vec<_>>());
+                let rhs: Vec<f64> = sel.iter().map(|&i| v[(i, j)]).collect();
+                let coef = crate::linalg::lstsq(&sub, &rhs);
+                let vj = v.take_cols(&(0..j).collect::<Vec<_>>());
+                let pred = vj.matvec(&coef);
+                col.iter().zip(&pred).map(|(c, p)| c - p).collect()
+            };
+            let mut best = (0usize, -1.0f64);
+            for (i, &x) in resid.iter().enumerate() {
+                if !sel.contains(&i) && x.abs() > best.1 {
+                    best = (i, x.abs());
+                }
+            }
+            sel.push(best.0);
+        }
+        assert_eq!(p, sel);
+    }
+
+    #[test]
+    fn conventional_maxvol_dominance() {
+        // After convergence every interpolation entry ≤ tau.
+        let v = randmat(48, 6, 7);
+        let (rows, _swaps) = conventional_maxvol(&v, 6, 1.01, 100);
+        let cols: Vec<usize> = (0..6).collect();
+        let vr = v.take_cols(&cols);
+        let sub = vr.take_rows(&rows);
+        let b = vr.matmul(&crate::linalg::pinv(&sub));
+        assert!(b.max_abs() <= 1.02, "max |B| = {}", b.max_abs());
+    }
+
+    #[test]
+    fn conventional_improves_or_equals_greedy_volume() {
+        let v = randmat(48, 6, 8);
+        let cols: Vec<usize> = (0..6).collect();
+        let vr = v.take_cols(&cols);
+        let greedy = fast_maxvol(&vr, 6);
+        let (conv, _) = conventional_maxvol(&v, 6, 1.0, 200);
+        let vol_g = det(&vr.take_rows(&greedy)).abs();
+        let vol_c = det(&vr.take_rows(&conv)).abs();
+        assert!(vol_c >= vol_g * 0.999, "conv {vol_c} < greedy {vol_g}");
+    }
+
+    #[test]
+    fn budget_beyond_feature_rank_tops_up() {
+        let owned = random_view(32, 4, 8, 2, 9);
+        let sel = FastMaxVol.select(&owned.view(), 12);
+        assert_eq!(sel.len(), 12);
+        let mut s = sel;
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 12);
+    }
+}

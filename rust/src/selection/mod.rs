@@ -1,0 +1,140 @@
+//! Subset-selection methods: GRAFT's Fast MaxVol plus every baseline the
+//! paper compares against (Table 1 / §4): Random, CRAIG, GradMatch,
+//! GLISTER, DRoP, CrossMaxVol, and the pre-selection scores EL2N / Forget.
+//!
+//! All methods consume the same [`BatchView`] — per-batch feature matrix,
+//! gradient sketches, losses, labels — which the coordinator obtains from
+//! the AOT `embed` artifact (or Rust-side extractors for non-AOT data).
+
+pub mod badge;
+pub mod craig;
+pub mod cross_maxvol;
+pub mod drop_;
+pub mod el2n;
+pub mod forget;
+pub mod glister;
+pub mod gradmatch;
+pub mod maxvol;
+pub mod moderate;
+pub mod random;
+
+use crate::linalg::Mat;
+
+/// Everything a selector may look at for one mini-batch.
+pub struct BatchView<'a> {
+    /// K×R importance-ordered feature matrix (V = f(X)).
+    pub features: &'a Mat,
+    /// K×E per-sample gradient sketches.
+    pub grads: &'a Mat,
+    /// Per-sample losses.
+    pub losses: &'a [f64],
+    /// Ground-truth labels.
+    pub labels: &'a [i32],
+    /// Current model predictions.
+    pub preds: &'a [i32],
+    /// Number of classes.
+    pub classes: usize,
+    /// Global dataset row ids of the batch rows (for stateful methods).
+    pub row_ids: &'a [usize],
+}
+
+impl<'a> BatchView<'a> {
+    pub fn k(&self) -> usize {
+        self.features.rows()
+    }
+}
+
+/// A batch-subset selector. `r` is the requested subset size; the returned
+/// indices are batch-local (0..K), unique, and |result| == r.
+pub trait Selector: Send {
+    fn name(&self) -> &'static str;
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize>;
+}
+
+/// Construct a selector by name (CLI / config entry point).
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Selector>> {
+    Some(match name {
+        "maxvol" | "fast-maxvol" => Box::new(maxvol::FastMaxVol),
+        "cross-maxvol" => Box::new(cross_maxvol::CrossMaxVol::default()),
+        "random" => Box::new(random::RandomSelector::new(seed)),
+        "craig" => Box::new(craig::Craig),
+        "gradmatch" => Box::new(gradmatch::GradMatch::default()),
+        "glister" => Box::new(glister::Glister::default()),
+        "drop" => Box::new(drop_::Drop::new(seed)),
+        "el2n" => Box::new(el2n::El2n),
+        "badge" => Box::new(badge::Badge::new(seed)),
+        "moderate" => Box::new(moderate::Moderate),
+        "forget" => Box::new(forget::Forget::default()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use super::*;
+    use crate::rng::Rng;
+
+    pub struct Owned {
+        pub features: Mat,
+        pub grads: Mat,
+        pub losses: Vec<f64>,
+        pub labels: Vec<i32>,
+        pub preds: Vec<i32>,
+        pub classes: usize,
+        pub row_ids: Vec<usize>,
+    }
+
+    impl Owned {
+        pub fn view(&self) -> BatchView<'_> {
+            BatchView {
+                features: &self.features,
+                grads: &self.grads,
+                losses: &self.losses,
+                labels: &self.labels,
+                preds: &self.preds,
+                classes: self.classes,
+                row_ids: &self.row_ids,
+            }
+        }
+    }
+
+    /// Random batch view with class structure.
+    pub fn random_view(k: usize, r: usize, e: usize, classes: usize, seed: u64) -> Owned {
+        let mut rng = Rng::new(seed);
+        let features = Mat::from_fn(k, r, |_, _| rng.normal());
+        let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+        let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+        let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+        let preds: Vec<i32> = labels
+            .iter()
+            .map(|&y| if rng.uniform() < 0.7 { y } else { rng.below(classes) as i32 })
+            .collect();
+        Owned {
+            features,
+            grads,
+            losses,
+            labels,
+            preds,
+            classes,
+            row_ids: (0..k).collect(),
+        }
+    }
+
+    /// Contract every selector must satisfy: right size, unique, in range,
+    /// deterministic given identical state.
+    pub fn check_selector(mk: impl Fn() -> Box<dyn Selector>) {
+        let owned = random_view(64, 8, 16, 4, 42);
+        for r in [1usize, 4, 8, 32] {
+            let sel = mk().select(&owned.view(), r);
+            assert_eq!(sel.len(), r, "size for r={r}");
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), r, "uniqueness for r={r}");
+            assert!(s.iter().all(|&i| i < 64), "range for r={r}");
+        }
+        let a = mk().select(&owned.view(), 8);
+        let b = mk().select(&owned.view(), 8);
+        assert_eq!(a, b, "determinism");
+    }
+}

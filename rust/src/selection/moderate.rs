@@ -1,0 +1,113 @@
+//! Moderate-coreset baseline (Xia et al. 2023, paper §2): keep samples of
+//! *intermediate* difficulty — those whose distance to their class centroid
+//! (in gradient-sketch space) sits closest to the per-class median.
+//! Rationale: extremes are either redundant (too easy) or noisy/outliers
+//! (too hard); the middle band balances learnability and information.
+
+use super::{BatchView, Selector};
+
+pub struct Moderate;
+
+impl Selector for Moderate {
+    fn name(&self) -> &'static str {
+        "moderate"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let k = view.k();
+        let r = r.min(k);
+        let g = view.grads;
+        let e = g.cols();
+        let c = view.classes;
+        // Class centroids in sketch space.
+        let mut centroids = vec![vec![0.0f64; e]; c];
+        let mut counts = vec![0usize; c];
+        for i in 0..k {
+            let y = view.labels[i] as usize;
+            counts[y] += 1;
+            for (t, &v) in g.row(i).iter().enumerate() {
+                centroids[y][t] += v;
+            }
+        }
+        for (cls, cent) in centroids.iter_mut().enumerate() {
+            let inv = 1.0 / counts[cls].max(1) as f64;
+            for v in cent.iter_mut() {
+                *v *= inv;
+            }
+        }
+        // Distance to own centroid.
+        let dist: Vec<f64> = (0..k)
+            .map(|i| {
+                let cent = &centroids[view.labels[i] as usize];
+                g.row(i)
+                    .iter()
+                    .zip(cent)
+                    .map(|(&a, &b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        // Per-class median distance.
+        let mut med = vec![0.0f64; c];
+        for cls in 0..c {
+            let mut ds: Vec<f64> = (0..k)
+                .filter(|&i| view.labels[i] as usize == cls)
+                .map(|i| dist[i])
+                .collect();
+            if ds.is_empty() {
+                continue;
+            }
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            med[cls] = ds[ds.len() / 2];
+        }
+        // Rank by |dist − class median| ascending (most moderate first).
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| {
+            let da = (dist[a] - med[view.labels[a] as usize]).abs();
+            let db = (dist[b] - med[view.labels[b] as usize]).abs();
+            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(r);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::selection::testsupport::check_selector;
+    use crate::selection::BatchView;
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(Moderate));
+    }
+
+    #[test]
+    fn prefers_median_band() {
+        // One class on a 1-D sketch: values 0..9; the median-distance
+        // samples (neither centroid-huggers nor outliers) come first.
+        let k = 10;
+        let g = Mat::from_fn(k, 1, |i, _| i as f64);
+        let feats = Mat::zeros(k, 2);
+        let losses = vec![0.0; k];
+        let labels = vec![0i32; k];
+        let ids: Vec<usize> = (0..k).collect();
+        let view = BatchView {
+            features: &feats,
+            grads: &g,
+            losses: &losses,
+            labels: &labels,
+            preds: &labels,
+            classes: 1,
+            row_ids: &ids,
+        };
+        let sel = Moderate.select(&view, 2);
+        // centroid = 4.5, distances |i-4.5| ∈ {4.5,3.5,…}; median dist = 2.5
+        // → the most "moderate" rows are i=2 and i=7 (dist 2.5 exactly).
+        let mut s = sel;
+        s.sort_unstable();
+        assert_eq!(s, vec![2, 7]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Random subset baseline (Table 14): uniform sampling without replacement,
+//! re-drawn at every selection refresh.
+
+use super::{BatchView, Selector};
+use crate::rng::Rng;
+
+pub struct RandomSelector {
+    rng: Rng,
+}
+
+impl RandomSelector {
+    pub fn new(seed: u64) -> Self {
+        RandomSelector { rng: Rng::new(seed) }
+    }
+}
+
+impl Selector for RandomSelector {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        self.rng.choose(view.k(), r.min(view.k()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testsupport::random_view;
+
+    #[test]
+    fn contract_except_determinism() {
+        // Random is stateful by design; check size/uniqueness/range only.
+        let owned = random_view(64, 8, 16, 4, 1);
+        let mut s = RandomSelector::new(7);
+        for r in [1usize, 8, 32] {
+            let sel = s.select(&owned.view(), r);
+            assert_eq!(sel.len(), r);
+            let mut u = sel.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), r);
+        }
+    }
+
+    #[test]
+    fn seeded_reproducible() {
+        let owned = random_view(64, 8, 16, 4, 2);
+        let a = RandomSelector::new(3).select(&owned.view(), 8);
+        let b = RandomSelector::new(3).select(&owned.view(), 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn successive_draws_differ() {
+        let owned = random_view(64, 8, 16, 4, 3);
+        let mut s = RandomSelector::new(4);
+        let a = s.select(&owned.view(), 8);
+        let b = s.select(&owned.view(), 8);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,148 @@
+//! Loss-landscape scan (paper Fig 5 / Li et al. 2018): evaluate the loss
+//! on a 2-D grid θ + α·δ₁ + β·δ₂ with filter-normalised random directions,
+//! comparing GRAFT-trained vs full-data-trained minima.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+use crate::runtime::{ConfigSpec, Engine, ModelParams};
+
+/// A random direction in parameter space, filter-normalised per tensor
+/// (each direction tensor rescaled to the norm of the corresponding
+/// parameter tensor — the Li et al. convention).
+pub struct Direction {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+fn norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+impl Direction {
+    pub fn random(params: &ModelParams, seed: u64) -> Direction {
+        let mut rng = Rng::new(seed);
+        let gen = |like: &[f32], rng: &mut Rng| -> Vec<f32> {
+            let mut d: Vec<f32> = (0..like.len()).map(|_| rng.normal() as f32).collect();
+            let (nd, np) = (norm(&d), norm(like));
+            let scale = if nd > 1e-12 { (np / nd.max(1e-12)) as f32 } else { 0.0 };
+            for x in d.iter_mut() {
+                *x *= scale;
+            }
+            d
+        };
+        Direction {
+            w1: gen(&params.w1, &mut rng),
+            b1: gen(&params.b1, &mut rng),
+            w2: gen(&params.w2, &mut rng),
+            b2: gen(&params.b2, &mut rng),
+        }
+    }
+}
+
+fn displaced(p: &ModelParams, d1: &Direction, d2: &Direction, a: f32, b: f32) -> ModelParams {
+    let comb = |p: &[f32], x: &[f32], y: &[f32]| -> Vec<f32> {
+        p.iter().zip(x).zip(y).map(|((&p, &x), &y)| p + a * x + b * y).collect()
+    };
+    ModelParams {
+        w1: comb(&p.w1, &d1.w1, &d2.w1),
+        b1: comb(&p.b1, &d1.b1, &d2.b1),
+        w2: comb(&p.w2, &d1.w2, &d2.w2),
+        b2: comb(&p.b2, &d1.b2, &d2.b2),
+    }
+}
+
+/// Scan the loss surface on a (2·half+1)² grid over [−radius, radius]².
+/// Returns the row-major grid of mean losses over the probe batch.
+#[allow(clippy::too_many_arguments)]
+pub fn scan(
+    engine: &mut Engine,
+    config: &str,
+    spec: &ConfigSpec,
+    params: &ModelParams,
+    probe: &Dataset,
+    half_points: usize,
+    radius: f32,
+    seed: u64,
+) -> Result<Vec<Vec<f64>>> {
+    let d1 = Direction::random(params, seed);
+    let d2 = Direction::random(params, seed ^ 0xD1EC7102);
+    let mut idx: Vec<usize> = (0..spec.k.min(probe.n)).collect();
+    while idx.len() < spec.k {
+        idx.push(idx.len() % probe.n);
+    }
+    let (x, y) = (probe.gather(&idx), probe.one_hot(&idx));
+    let n = 2 * half_points + 1;
+    let mut grid = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        let a = radius * ((i as f32) - half_points as f32) / half_points.max(1) as f32;
+        for j in 0..n {
+            let b = radius * ((j as f32) - half_points as f32) / half_points.max(1) as f32;
+            let p = displaced(params, &d1, &d2, a, b);
+            let (loss, _) = engine.eval_step(config, &p, &x, &y)?;
+            grid[i][j] = loss;
+        }
+    }
+    Ok(grid)
+}
+
+/// Sharpness proxy: mean loss increase one radius away from the center.
+pub fn sharpness(grid: &[Vec<f64>]) -> f64 {
+    let n = grid.len();
+    let c = n / 2;
+    let center = grid[c][c];
+    let edges = [grid[0][c], grid[n - 1][c], grid[c][0], grid[c][n - 1]];
+    edges.iter().map(|e| e - center).sum::<f64>() / 4.0
+}
+
+/// CSV dump of the grid (alpha, beta, loss) for contour plotting.
+pub fn grid_csv(grid: &[Vec<f64>], radius: f32) -> String {
+    let n = grid.len();
+    let h = (n / 2) as f32;
+    let mut out = String::from("alpha,beta,loss\n");
+    for (i, row) in grid.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            let a = radius * ((i as f32) - h) / h.max(1.0);
+            let b = radius * ((j as f32) - h) / h.max(1.0);
+            out.push_str(&format!("{a:.4},{b:.4},{v:.6}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_is_filter_normalised() {
+        let p = ModelParams { w1: vec![1.0; 64], b1: vec![0.5; 8], w2: vec![2.0; 16], b2: vec![0.0; 2] };
+        let d = Direction::random(&p, 1);
+        assert!((norm(&d.w1) - norm(&p.w1)).abs() / norm(&p.w1) < 1e-5);
+        assert!((norm(&d.w2) - norm(&p.w2)).abs() / norm(&p.w2) < 1e-5);
+        assert!(norm(&d.b2) < 1e-6); // zero-norm tensor → zero direction
+    }
+
+    #[test]
+    fn sharpness_of_bowl() {
+        let n = 5;
+        let mut grid = vec![vec![0.0; n]; n];
+        for (i, row) in grid.iter_mut().enumerate() {
+            for (j, v) in row.iter_mut().enumerate() {
+                let a = i as f64 - 2.0;
+                let b = j as f64 - 2.0;
+                *v = a * a + b * b;
+            }
+        }
+        assert!((sharpness(&grid) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_csv_rows() {
+        let grid = vec![vec![0.0; 3]; 3];
+        assert_eq!(grid_csv(&grid, 1.0).lines().count(), 10);
+    }
+}

@@ -1,0 +1,112 @@
+//! Training telemetry: loss/accuracy curves and run summaries, with CSV
+//! output for the figure harnesses.
+
+/// One point on the training curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    pub co2_kg: f64,
+    pub wall_secs: f64,
+}
+
+/// Aggregated outcome of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub method: String,
+    pub dataset: String,
+    pub fraction: f64,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub co2_kg: f64,
+    pub energy_kwh: f64,
+    pub wall_secs: f64,
+    pub steps: usize,
+    pub curve: Vec<CurvePoint>,
+    /// Mean selected subset size per refresh (GRAFT telemetry).
+    pub mean_rank: f64,
+}
+
+impl RunResult {
+    pub fn curve_csv(&self) -> String {
+        let mut out = String::from("step,epoch,train_loss,test_acc,co2_kg,wall_secs\n");
+        for p in &self.curve {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.4},{:.6},{:.3}\n",
+                p.step, p.epoch, p.train_loss, p.test_acc, p.co2_kg, p.wall_secs
+            ));
+        }
+        out
+    }
+
+    pub fn summary_row(&self) -> String {
+        format!(
+            "{:<12} {:<14} f={:<5.2} acc={:<7.4} co2={:<9.6}kg kwh={:<9.6} steps={}",
+            self.method, self.dataset, self.fraction, self.final_acc, self.co2_kg,
+            self.energy_kwh, self.steps
+        )
+    }
+}
+
+/// Simple moving-average loss tracker for stable logging.
+#[derive(Debug, Default, Clone)]
+pub struct LossTracker {
+    window: Vec<f64>,
+    cap: usize,
+}
+
+impl LossTracker {
+    pub fn new(cap: usize) -> Self {
+        LossTracker { window: Vec::new(), cap: cap.max(1) }
+    }
+
+    pub fn push(&mut self, loss: f64) {
+        if self.window.len() == self.cap {
+            self.window.remove(0);
+        }
+        self.window.push(loss);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            f64::NAN
+        } else {
+            self.window.iter().sum::<f64>() / self.window.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_tracker_window() {
+        let mut t = LossTracker::new(3);
+        for l in [1.0, 2.0, 3.0, 4.0] {
+            t.push(l);
+        }
+        assert!((t.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let r = RunResult {
+            method: "graft".into(),
+            dataset: "cifar10".into(),
+            fraction: 0.25,
+            final_acc: 0.88,
+            best_acc: 0.89,
+            co2_kg: 0.065,
+            energy_kwh: 0.18,
+            wall_secs: 12.0,
+            steps: 100,
+            curve: vec![CurvePoint { step: 1, epoch: 0, train_loss: 2.0, test_acc: 0.1, co2_kg: 0.0, wall_secs: 0.1 }],
+            mean_rank: 31.5,
+        };
+        assert_eq!(r.curve_csv().lines().count(), 2);
+        assert!(r.summary_row().contains("graft"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Training layer: orchestrator (Algorithm 1), LR schedules, energy/CO₂
+//! accounting, telemetry, and the loss-landscape scan of Fig 5.
+
+pub mod energy;
+pub mod landscape;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use energy::{EnergyMeter, FlopModel, GRID_INTENSITY};
+pub use metrics::{CurvePoint, RunResult};
+pub use schedule::Schedule;
+pub use trainer::{evaluate, load_dataset, run, TrainConfig, TrainOutput};

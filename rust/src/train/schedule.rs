@@ -1,0 +1,55 @@
+//! Learning-rate schedules — the paper uses SGD + CosineAnnealing for all
+//! image benchmarks and a constant rate for BERT fine-tuning.
+
+/// Learning-rate schedule over total training steps.
+#[derive(Debug, Clone, Copy)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    /// η_t = η_min + ½(η₀ − η_min)(1 + cos(π t / T)).
+    Cosine { lr0: f64, lr_min: f64, total_steps: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Cosine { lr0, lr_min, total_steps } => {
+                let t = (step.min(total_steps)) as f64 / total_steps.max(1) as f64;
+                lr_min + 0.5 * (lr0 - lr_min) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = Schedule::Cosine { lr0: 0.1, lr_min: 0.001, total_steps: 100 };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(100) - 0.001).abs() < 1e-12);
+        assert!((s.at(50) - (0.001 + 0.0495)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing() {
+        let s = Schedule::Cosine { lr0: 0.1, lr_min: 0.0, total_steps: 40 };
+        for t in 0..40 {
+            assert!(s.at(t + 1) <= s.at(t) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 5e-5 };
+        assert_eq!(s.at(0), s.at(1_000_000));
+    }
+
+    #[test]
+    fn clamps_beyond_total() {
+        let s = Schedule::Cosine { lr0: 1.0, lr_min: 0.1, total_steps: 10 };
+        assert!((s.at(50) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Cross-language integration tests: execute every artifact kind through
+//! the PJRT runtime with the golden inputs and compare against the outputs
+//! JAX computed at build time.  This validates the entire AOT bridge —
+//! HLO-text round-trip, shape contracts, and numerics — for every config.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) if
+//! the artifacts directory is missing so `cargo test` works pre-build.
+
+use graft::runtime::{default_dir, Engine, Golden, ModelParams, TrainState};
+
+fn engine() -> Option<Engine> {
+    match Engine::new(default_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP golden tests: {err:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn params_from_golden(g: &Golden) -> ModelParams {
+    ModelParams {
+        w1: g.get("in.w1").unwrap().f32().unwrap().to_vec(),
+        b1: g.get("in.b1").unwrap().f32().unwrap().to_vec(),
+        w2: g.get("in.w2").unwrap().f32().unwrap().to_vec(),
+        b2: g.get("in.b2").unwrap().f32().unwrap().to_vec(),
+    }
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    let mut worst = 0.0f32;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let diff = (g - w).abs();
+        worst = worst.max(diff - tol);
+        assert!(
+            diff <= tol,
+            "{name}[{i}]: got {g}, want {w} (diff {diff} > tol {tol})"
+        );
+    }
+    let _ = worst;
+}
+
+/// Small configs exercised exhaustively; big ones get one smoke config to
+/// keep test time in check (shape logic is identical across configs).
+const CONFIGS: &[&str] = &["iris", "imdb", "cifar10"];
+
+#[test]
+fn golden_select_matches_jax() {
+    let Some(mut eng) = engine() else { return };
+    for cfg in CONFIGS {
+        let g = eng.golden(cfg).unwrap();
+        let params = params_from_golden(&g);
+        let x = g.get("in.x").unwrap().f32().unwrap().to_vec();
+        let y = g.get("in.y1h").unwrap().f32().unwrap().to_vec();
+        let out = eng.select(cfg, &params, &x, &y).unwrap();
+
+        let want_p: Vec<usize> = g.get("select.p").unwrap().i32().unwrap().iter().map(|&i| i as usize).collect();
+        assert_eq!(out.indices, want_p, "{cfg}: maxvol indices");
+        let want_d = g.get("select.d").unwrap().f32().unwrap();
+        let got_d: Vec<f32> = out.errors.iter().map(|&x| x as f32).collect();
+        assert_close(&format!("{cfg}: select.d"), &got_d, want_d, 2e-4, 2e-3);
+        let want_gnorm = g.get("select.gnorm").unwrap().scalar_f32().unwrap();
+        assert!((out.gnorm as f32 - want_gnorm).abs() < 1e-4 + 1e-3 * want_gnorm.abs());
+        let want_align = g.get("select.align").unwrap().scalar_f32().unwrap();
+        assert!((out.align as f32 - want_align).abs() < 2e-3, "{cfg}: align");
+    }
+}
+
+#[test]
+fn golden_embed_matches_jax() {
+    let Some(mut eng) = engine() else { return };
+    for cfg in CONFIGS {
+        let g = eng.golden(cfg).unwrap();
+        let params = params_from_golden(&g);
+        let x = g.get("in.x").unwrap().f32().unwrap().to_vec();
+        let y = g.get("in.y1h").unwrap().f32().unwrap().to_vec();
+        let out = eng.embed(cfg, &params, &x, &y).unwrap();
+
+        let want_v = g.get("embed.v").unwrap().f32().unwrap();
+        assert_close(&format!("{cfg}: embed.v"), &out.features.to_f32(), want_v, 5e-4, 5e-3);
+        let want_g = g.get("embed.g").unwrap().f32().unwrap();
+        assert_close(&format!("{cfg}: embed.g"), &out.grads.to_f32(), want_g, 1e-5, 1e-4);
+        let want_losses = g.get("embed.losses").unwrap().f32().unwrap();
+        let got_losses: Vec<f32> = out.losses.iter().map(|&x| x as f32).collect();
+        assert_close(&format!("{cfg}: embed.losses"), &got_losses, want_losses, 1e-5, 1e-4);
+        let want_preds = g.get("embed.preds").unwrap().i32().unwrap();
+        assert_eq!(out.preds, want_preds, "{cfg}: preds");
+    }
+}
+
+#[test]
+fn golden_train_step_matches_jax() {
+    let Some(mut eng) = engine() else { return };
+    for cfg in CONFIGS {
+        let g = eng.golden(cfg).unwrap();
+        let params = params_from_golden(&g);
+        let velocity = ModelParams {
+            w1: vec![0.0; params.w1.len()],
+            b1: vec![0.0; params.b1.len()],
+            w2: vec![0.0; params.w2.len()],
+            b2: vec![0.0; params.b2.len()],
+        };
+        let mut state = TrainState { params, velocity };
+        let bucket = g.get("train.bucket").unwrap().i32().unwrap()[0] as usize;
+        let spec = eng.spec(cfg).unwrap().clone();
+        let x = g.get("in.x").unwrap().f32().unwrap()[..bucket * spec.d].to_vec();
+        let y = g.get("in.y1h").unwrap().f32().unwrap()[..bucket * spec.c].to_vec();
+        let w = vec![1.0f32 / bucket as f32; bucket];
+        let loss = eng.train_step(cfg, bucket, &mut state, &x, &y, &w, 0.05, 0.9).unwrap();
+
+        let want_loss = g.get("train.loss").unwrap().scalar_f32().unwrap();
+        assert!((loss as f32 - want_loss).abs() < 1e-4 + 1e-4 * want_loss.abs(), "{cfg}: loss {loss} vs {want_loss}");
+        for (name, got) in [
+            ("train.w1", &state.params.w1),
+            ("train.b1", &state.params.b1),
+            ("train.w2", &state.params.w2),
+            ("train.b2", &state.params.b2),
+            ("train.v1", &state.velocity.w1),
+            ("train.v2", &state.velocity.b1),
+            ("train.v3", &state.velocity.w2),
+            ("train.v4", &state.velocity.b2),
+        ] {
+            let want = g.get(name).unwrap().f32().unwrap();
+            assert_close(&format!("{cfg}: {name}"), got, want, 1e-5, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn golden_eval_matches_jax() {
+    let Some(mut eng) = engine() else { return };
+    for cfg in CONFIGS {
+        let g = eng.golden(cfg).unwrap();
+        let params = params_from_golden(&g);
+        let x = g.get("in.x").unwrap().f32().unwrap().to_vec();
+        let y = g.get("in.y1h").unwrap().f32().unwrap().to_vec();
+        let (loss, correct) = eng.eval_step(cfg, &params, &x, &y).unwrap();
+        let want_loss = g.get("eval.loss").unwrap().scalar_f32().unwrap();
+        let want_correct = g.get("eval.correct").unwrap().i32().unwrap();
+        assert!((loss as f32 - want_loss).abs() < 1e-4 + 1e-4 * want_loss.abs());
+        assert_eq!(correct, want_correct, "{cfg}: per-sample correctness");
+    }
+}
+
+#[test]
+fn select_errors_monotone_for_all_configs() {
+    let Some(mut eng) = engine() else { return };
+    let names: Vec<String> = eng.manifest().configs.keys().cloned().collect();
+    for cfg in names {
+        let g = eng.golden(&cfg).unwrap();
+        let d = g.get("select.d").unwrap().f32().unwrap();
+        for w in d.windows(2) {
+            assert!(w[1] <= w[0] + 1e-5, "{cfg}: projection errors must be non-increasing");
+        }
+        let p = g.get("select.p").unwrap().i32().unwrap();
+        let mut s: Vec<i32> = p.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), p.len(), "{cfg}: unique maxvol indices");
+    }
+}

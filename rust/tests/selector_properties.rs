@@ -1,0 +1,199 @@
+//! Property sweeps over ALL selection methods (a dependency-free stand-in
+//! for proptest): many seeded random batch shapes × every selector,
+//! asserting the selection contract (size, uniqueness, range, determinism
+//! under fixed state) plus method-specific invariants.
+
+use graft::graft::{BudgetedRankPolicy, GraftSelector};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::{by_name, BatchView, Selector};
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    classes: usize,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+/// Random batch with occasional adversarial structure (duplicates, zero
+/// rows, constant gradients) controlled by the seed.
+fn random_batch(seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    let k = 8 + rng.below(120);
+    let r = 1 + rng.below(12.min(k));
+    let e = 2 + rng.below(24);
+    let classes = 2 + rng.below(6);
+    let mut features = Mat::from_fn(k, r, |_, _| rng.normal());
+    let mut grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    // Adversarial decorations.
+    match seed % 5 {
+        1 => {
+            // Duplicate half the rows.
+            for i in 0..k / 2 {
+                let src = i;
+                let dst = k / 2 + i;
+                for j in 0..r {
+                    features[(dst, j)] = features[(src, j)];
+                }
+                for j in 0..e {
+                    grads[(dst, j)] = grads[(src, j)];
+                }
+            }
+        }
+        2 => {
+            // Zero out a block of rows.
+            for i in 0..k / 3 {
+                for j in 0..r {
+                    features[(i, j)] = 0.0;
+                }
+            }
+        }
+        3 => {
+            // Constant gradients (zero variance).
+            for i in 0..k {
+                for j in 0..e {
+                    grads[(i, j)] = 1.0;
+                }
+            }
+        }
+        _ => {}
+    }
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 3.0).collect();
+    let labels: Vec<i32> = (0..k).map(|_| rng.below(classes) as i32).collect();
+    let preds: Vec<i32> = labels
+        .iter()
+        .map(|&y| if rng.uniform() < 0.75 { y } else { rng.below(classes) as i32 })
+        .collect();
+    Owned { features, grads, losses, labels, preds, classes, row_ids: (0..k).collect() }
+}
+
+const METHODS: &[&str] = &[
+    "maxvol", "cross-maxvol", "random", "craig", "gradmatch", "glister", "drop", "el2n", "forget",
+];
+
+fn check_contract(name: &str, sel: &mut dyn Selector, owned: &Owned, r: usize, seed: u64) {
+    let k = owned.features.rows();
+    let out = sel.select(&owned.view(), r);
+    let want = r.min(k);
+    assert_eq!(out.len(), want, "{name} seed {seed}: size (k={k}, r={r})");
+    let mut s = out.clone();
+    s.sort_unstable();
+    s.dedup();
+    assert_eq!(s.len(), want, "{name} seed {seed}: uniqueness");
+    assert!(s.iter().all(|&i| i < k), "{name} seed {seed}: range");
+}
+
+#[test]
+fn all_selectors_satisfy_contract_on_100_random_batches() {
+    for seed in 0..100u64 {
+        let owned = random_batch(seed);
+        let k = owned.features.rows();
+        let mut rng = Rng::new(seed ^ 0xABC);
+        let r = 1 + rng.below(k);
+        for m in METHODS {
+            let mut sel = by_name(m, seed).unwrap();
+            check_contract(m, sel.as_mut(), &owned, r, seed);
+        }
+    }
+}
+
+#[test]
+fn graft_selector_contract_on_random_batches() {
+    for seed in 0..60u64 {
+        let owned = random_batch(seed);
+        let k = owned.features.rows();
+        let mut rng = Rng::new(seed ^ 0xDEF);
+        let r = 1 + rng.below(k);
+        let mut g = GraftSelector::new(BudgetedRankPolicy::strict(0.1));
+        check_contract("graft", &mut g, &owned, r, seed);
+        // Adaptive never exceeds the feature width.
+        let mut ga = GraftSelector::new(BudgetedRankPolicy::adaptive(0.1, 0.5));
+        let out = ga.select(&owned.view(), r);
+        assert!(out.len() <= owned.features.cols().max(r));
+        let mut s = out;
+        s.sort_unstable();
+        s.dedup();
+        assert!(s.iter().all(|&i| i < k));
+    }
+}
+
+#[test]
+fn deterministic_methods_are_deterministic() {
+    for seed in [3u64, 17, 41] {
+        let owned = random_batch(seed);
+        for m in METHODS.iter().filter(|&&m| m != "random") {
+            let a = by_name(m, 9).unwrap().select(&owned.view(), 6);
+            let b = by_name(m, 9).unwrap().select(&owned.view(), 6);
+            assert_eq!(a, b, "{m} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn maxvol_volume_dominates_random_across_seeds() {
+    // Statistical invariant: over many seeds, MaxVol's selected volume
+    // beats the random median in at least 90% of cases.
+    let mut wins = 0;
+    let total = 40;
+    for seed in 0..total as u64 {
+        let mut rng = Rng::new(seed ^ 0x70_1d);
+        let k = 32 + rng.below(64);
+        let r = 4 + rng.below(4);
+        let v = Mat::from_fn(k, r, |_, _| rng.normal());
+        let p = graft::selection::maxvol::fast_maxvol(&v, r);
+        let vol = graft::linalg::det(&v.take_rows(&p)).abs();
+        let mut rand_vols: Vec<f64> = (0..9)
+            .map(|_| graft::linalg::det(&v.take_rows(&rng.choose(k, r))).abs())
+            .collect();
+        rand_vols.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if vol >= rand_vols[4] {
+            wins += 1;
+        }
+    }
+    assert!(wins * 10 >= total * 9, "maxvol won only {wins}/{total}");
+}
+
+#[test]
+fn class_coverage_of_stratified_methods() {
+    // DRoP must touch every class present when the budget allows.
+    for seed in 0..20u64 {
+        let owned = random_batch(seed * 7 + 4);
+        let k = owned.features.rows();
+        let classes = owned.classes;
+        if k < classes * 3 {
+            continue;
+        }
+        let mut sel = by_name("drop", seed).unwrap();
+        let out = sel.select(&owned.view(), classes * 2);
+        let mut seen = vec![false; classes];
+        for &i in &out {
+            seen[owned.labels[i] as usize] = true;
+        }
+        let present: Vec<usize> = (0..classes)
+            .filter(|&c| owned.labels.iter().any(|&y| y as usize == c))
+            .collect();
+        let covered = present.iter().filter(|&&c| seen[c]).count();
+        assert!(
+            covered * 3 >= present.len() * 2,
+            "drop seed {seed}: covered {covered}/{} classes",
+            present.len()
+        );
+    }
+}
