@@ -1,7 +1,11 @@
 //! Minimal benchmarking harness (criterion is not in the vendored dep
 //! closure): warmup + timed repetitions with mean / stddev / min, printed
-//! as aligned rows.  Used by every `cargo bench` target.
+//! as aligned rows, plus a machine-readable JSON sink so successive PRs
+//! can track hot-path regressions (`BENCH_pr1.json` at the repo root; see
+//! `scripts/bench.sh`).
+#![allow(dead_code)]
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Time `f` with warmups, returning (mean_s, std_s, min_s) over `reps`.
@@ -42,4 +46,106 @@ pub fn fmt(secs: f64) -> String {
 /// Prevent the optimiser from discarding a value.
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+// ---------------------------------------------------------------------------
+// JSON sink (schema graft-bench-v1, one record per line)
+// ---------------------------------------------------------------------------
+
+/// One timed operation, in nanoseconds.
+pub struct BenchRecord {
+    /// Bench binary name (records from a re-run replace same-name rows).
+    pub bench: String,
+    /// Operation label, e.g. "fast_maxvol".
+    pub op: String,
+    /// Shape string, e.g. "K=2048,R=64".
+    pub shape: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"op\":\"{}\",\"shape\":\"{}\",\"mean_ns\":{:.1},\"std_ns\":{:.1},\"min_ns\":{:.1}}}",
+            self.bench, self.op, self.shape, self.mean_ns, self.std_ns, self.min_ns
+        )
+    }
+}
+
+/// Collects records for one bench run and merges them into the shared JSON
+/// file on [`JsonSink::write`].
+pub struct JsonSink {
+    bench: &'static str,
+    records: Vec<BenchRecord>,
+}
+
+impl JsonSink {
+    pub fn new(bench: &'static str) -> JsonSink {
+        JsonSink { bench, records: Vec::new() }
+    }
+
+    /// Record one timed op; `(mean, std, min)` in seconds as returned by
+    /// [`time_it`].
+    pub fn record(&mut self, op: &str, shape: &str, timing: (f64, f64, f64)) {
+        let (mean, std, min) = timing;
+        self.records.push(BenchRecord {
+            bench: self.bench.to_string(),
+            op: op.to_string(),
+            shape: shape.to_string(),
+            mean_ns: mean * 1e9,
+            std_ns: std * 1e9,
+            min_ns: min * 1e9,
+        });
+    }
+
+    /// Merge into the shared JSON file: existing records from *other*
+    /// benches are preserved, rows from this bench are replaced.  Record
+    /// extraction locates each `"bench"` key and takes the enclosing
+    /// `{…}` object, compacted (whitespace stripped — record fields never
+    /// contain spaces), so minified and pretty-printed files both survive
+    /// the round-trip.  Concurrent bench runs still race on the
+    /// read-modify-write (scripts/bench.sh runs them sequentially).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = default_json_path();
+        let mut lines: Vec<String> = Vec::new();
+        let own_tag = format!("\"bench\":\"{}\"", self.bench);
+        if let Ok(existing) = std::fs::read_to_string(&path) {
+            // Records never contain nested braces (all fields are plain
+            // bench/op/shape strings + numbers), so an object's extent is
+            // the brace pair around each `"bench"` key.
+            let mut rest = existing.as_str();
+            while let Some(key) = rest.find("\"bench\"") {
+                let Some(open) = rest[..key].rfind('{') else {
+                    rest = &rest[key + 7..];
+                    continue;
+                };
+                let Some(close) = rest[key..].find('}') else { break };
+                let compact: String = rest[open..key + close + 1]
+                    .chars()
+                    .filter(|c| !c.is_whitespace())
+                    .collect();
+                if !compact.contains(&own_tag) {
+                    lines.push(compact);
+                }
+                rest = &rest[key + close + 1..];
+            }
+        }
+        lines.extend(self.records.iter().map(BenchRecord::to_json));
+        let mut body = String::from("{\"schema\":\"graft-bench-v1\",\"records\":[\n");
+        body.push_str(&lines.join(",\n"));
+        body.push_str("\n]}\n");
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+/// Output path for the shared bench JSON: `$GRAFT_BENCH_JSON` if set, else
+/// `BENCH_pr1.json` at the repo root (one level above the crate manifest).
+pub fn default_json_path() -> PathBuf {
+    match std::env::var("GRAFT_BENCH_JSON") {
+        Ok(p) => PathBuf::from(p),
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr1.json"),
+    }
 }

@@ -1,17 +1,19 @@
 //! Runtime hot-path bench: per-artifact PJRT execution latency for every
 //! artifact kind (embed / select / train buckets / eval) on the cifar10
 //! config — the numbers behind the §Perf L3 accounting and the end-to-end
-//! step-time budget of Tables 8-14.
+//! step-time budget of Tables 8-14.  Rows land in `BENCH_pr1.json` next to
+//! the table4 kernel rows.
 //!
 //! Requires `make artifacts`.  Run: `cargo bench --bench runtime_hotpath`
 
 mod bench_util;
 
-use bench_util::{report, time_it};
+use bench_util::{report, time_it, JsonSink};
 use graft::rng::Rng;
 use graft::runtime::{default_dir, Engine, TrainState};
 
 fn main() -> anyhow::Result<()> {
+    let mut sink = JsonSink::new("runtime_hotpath");
     let mut engine = match Engine::new(default_dir()) {
         Ok(e) => e,
         Err(e) => {
@@ -32,33 +34,38 @@ fn main() -> anyhow::Result<()> {
     let mut state = TrainState::init(&spec, 42);
 
     println!("== runtime hot path (config {config}: K={}, D={}, Rmax={}) ==\n", spec.k, spec.d, spec.rmax);
+    let shape = format!("K={},D={},Rmax={}", spec.k, spec.d, spec.rmax);
 
     let params = state.params.clone();
-    let (m, s, mn) = time_it(3, 20, || {
+    let t = time_it(3, 20, || {
         engine.embed(config, &params, &x, &y).unwrap();
     });
-    report("embed (features+sketches)", m, s, mn);
+    report("embed (features+sketches)", t.0, t.1, t.2);
+    sink.record("embed", &shape, t);
 
-    let (m, s, mn) = time_it(3, 20, || {
+    let t = time_it(3, 20, || {
         engine.select(config, &params, &x, &y).unwrap();
     });
-    report("select (L1 Pallas maxvol+proj)", m, s, mn);
+    report("select (L1 Pallas maxvol+proj)", t.0, t.1, t.2);
+    sink.record("select", &shape, t);
 
-    let (m, s, mn) = time_it(3, 20, || {
+    let t = time_it(3, 20, || {
         engine.eval_step(config, &params, &x, &y).unwrap();
     });
-    report("eval_step", m, s, mn);
+    report("eval_step", t.0, t.1, t.2);
+    sink.record("eval_step", &shape, t);
 
     for &bucket in &spec.buckets.clone() {
         let xb = x[..bucket * spec.d].to_vec();
         let yb = y[..bucket * spec.c].to_vec();
         let w = vec![1.0 / bucket as f32; bucket];
-        let (m, s, mn) = time_it(3, 20, || {
+        let t = time_it(3, 20, || {
             engine
                 .train_step(config, bucket, &mut state, &xb, &yb, &w, 0.01, 0.9)
                 .unwrap();
         });
-        report(&format!("train_step bucket={bucket}"), m, s, mn);
+        report(&format!("train_step bucket={bucket}"), t.0, t.1, t.2);
+        sink.record("train_step", &format!("bucket={bucket}"), t);
     }
 
     let st = engine.stats();
@@ -66,5 +73,9 @@ fn main() -> anyhow::Result<()> {
         "\nengine: {} compiles ({:.2}s), {} executions ({:.2}s total)",
         st.compiles, st.compile_secs, st.executions, st.exec_secs
     );
+    match sink.write() {
+        Ok(path) => println!("bench JSON → {}", path.display()),
+        Err(e) => eprintln!("WARN could not write bench JSON: {e}"),
+    }
     Ok(())
 }

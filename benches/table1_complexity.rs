@@ -8,9 +8,9 @@
 mod bench_util;
 
 use bench_util::{black_box, report, time_it};
-use graft::linalg::Mat;
+use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
-use graft::selection::{by_name, BatchView};
+use graft::selection::{by_name, BatchView, Selector};
 
 fn make_view(k: usize, r: usize, e: usize, classes: usize, seed: u64) -> Owned {
     let mut rng = Rng::new(seed);
@@ -54,6 +54,9 @@ fn main() {
     let methods = [
         "maxvol", "cross-maxvol", "random", "craig", "gradmatch", "glister", "drop", "el2n",
     ];
+    // One workspace + output buffer, as the trainer's refresh loop uses.
+    let mut ws = Workspace::new();
+    let mut out: Vec<usize> = Vec::new();
     // K scaling (R fixed): GRAFT-family should be ~linear, CRAIG ~quadratic.
     println!("\n-- scaling in K (R = 16, E = 64) --");
     for &k in &[64usize, 128, 256, 512] {
@@ -62,7 +65,8 @@ fn main() {
             let mut sel = by_name(m, 1).unwrap();
             let r = 16.min(k);
             let (mean, std, min) = time_it(2, 8, || {
-                black_box(sel.select(&owned.view(), r));
+                sel.select_into(&owned.view(), r, &mut ws, &mut out);
+                black_box(out.len());
             });
             report(&format!("{m:<14} K={k:<5}"), mean, std, min);
         }
@@ -75,7 +79,8 @@ fn main() {
         for m in ["maxvol", "gradmatch", "craig"] {
             let mut sel = by_name(m, 1).unwrap();
             let (mean, std, min) = time_it(2, 8, || {
-                black_box(sel.select(&owned.view(), r));
+                sel.select_into(&owned.view(), r, &mut ws, &mut out);
+                black_box(out.len());
             });
             report(&format!("{m:<14} R={r:<5}"), mean, std, min);
         }

@@ -1,42 +1,51 @@
 //! Table 4 bench: Fast MaxVol vs CrossMaxVol selection latency on Iris
 //! (the paper reports 0.000539 s vs 0.045594 s — an 84.6× speedup) plus
-//! the subspace-similarity metric.
+//! the subspace-similarity metric, and the PR 1 hot-path regression rows
+//! (workspace fast_maxvol vs the pre-PR reference, blocked vs naive
+//! matmul/gram) written to `BENCH_pr1.json`.
 //!
-//! Run: `cargo bench --bench table4_maxvol`
+//! Run: `cargo bench --bench table4_maxvol` (or `scripts/bench.sh`)
 
 mod bench_util;
 
-use bench_util::{black_box, report, time_it};
+use bench_util::{black_box, report, time_it, JsonSink};
 use graft::data::iris::iris;
 use graft::features::{FeatureExtractor, SvdFeatures};
-use graft::linalg::{subspace_similarity_normalised, svd, Mat};
+use graft::linalg::{subspace_similarity_normalised, svd, Mat, Workspace};
 use graft::selection::cross_maxvol::CrossMaxVol;
-use graft::selection::maxvol::{conventional_maxvol, fast_maxvol};
+use graft::selection::maxvol::{
+    conventional_maxvol, conventional_maxvol_reference, fast_maxvol, fast_maxvol_reference,
+    fast_maxvol_with,
+};
 
 fn main() {
+    let mut sink = JsonSink::new("table4_maxvol");
     let ds = iris();
     let r = 3; // r = d would be degenerate: any independent 4 rows span R^4
     let x = Mat::from_fn(ds.n, ds.d, |i, j| ds.row(i)[j] as f64);
     let feats = SvdFeatures.extract(&x, r);
 
     println!("== Table 4: Fast MaxVol vs CrossMaxVol (Iris, R = {r}) ==\n");
-    let (mean_f, std_f, min_f) = time_it(10, 200, || {
+    let t_fast = time_it(10, 200, || {
         black_box(fast_maxvol(&feats, r));
     });
-    report("fast_maxvol (ours)", mean_f, std_f, min_f);
+    report("fast_maxvol (ours)", t_fast.0, t_fast.1, t_fast.2);
+    sink.record("fast_maxvol", "iris:K=150,R=3", t_fast);
 
     let cm = CrossMaxVol::default();
-    let (mean_c, std_c, min_c) = time_it(5, 100, || {
+    let t_cross = time_it(5, 100, || {
         black_box(cm.select_rows(&x, r));
     });
-    report("cross_maxvol (Cross-2D baseline)", mean_c, std_c, min_c);
+    report("cross_maxvol (Cross-2D baseline)", t_cross.0, t_cross.1, t_cross.2);
+    sink.record("cross_maxvol", "iris:K=150,R=3", t_cross);
 
-    let (mean_v, std_v, min_v) = time_it(5, 50, || {
+    let t_conv = time_it(5, 50, || {
         black_box(conventional_maxvol(&feats, r, 1.01, 100));
     });
-    report("conventional_maxvol (Goreinov swap)", mean_v, std_v, min_v);
+    report("conventional_maxvol (Sherman-Morrison)", t_conv.0, t_conv.1, t_conv.2);
+    sink.record("conventional_maxvol", "iris:K=150,R=3", t_conv);
 
-    println!("\nspeedup fast vs cross: {:.1}x  (paper: 84.6x)", mean_c / mean_f);
+    println!("\nspeedup fast vs cross: {:.1}x  (paper: 84.6x)", t_cross.0 / t_fast.0);
 
     // Similarity metric (paper: 0.6250 vs 0.5938).
     let p_fast = fast_maxvol(&feats, r);
@@ -53,12 +62,67 @@ fn main() {
         sim(&p_cross)
     );
 
-    // Larger-scale sanity: K = 2048, R = 64 (one CIFAR-like batch).
+    // ---- batch-scale selection (K = 2048, R = 64): the PR 1 headline ----
     println!("\n-- batch-scale selection (K = 2048, R = 64) --");
     let mut rng = graft::rng::Rng::new(9);
     let big = Mat::from_fn(2048, 64, |_, _| rng.normal());
-    let (mean_b, std_b, min_b) = time_it(2, 10, || {
-        black_box(fast_maxvol(&big, 64));
+    let mut ws = Workspace::new();
+    let mut out: Vec<usize> = Vec::with_capacity(64);
+    let t_ws = time_it(3, 20, || {
+        fast_maxvol_with(&big, 64, &mut ws, &mut out);
+        black_box(out.len());
     });
-    report("fast_maxvol K=2048 R=64", mean_b, std_b, min_b);
+    report("fast_maxvol K=2048 R=64 (workspace)", t_ws.0, t_ws.1, t_ws.2);
+    sink.record("fast_maxvol", "K=2048,R=64", t_ws);
+
+    let t_ref = time_it(3, 20, || {
+        black_box(fast_maxvol_reference(&big, 64));
+    });
+    report("fast_maxvol K=2048 R=64 (pre-PR ref)", t_ref.0, t_ref.1, t_ref.2);
+    sink.record("fast_maxvol_reference", "K=2048,R=64", t_ref);
+    println!("speedup vs pre-PR reference: {:.2}x", t_ref.0 / t_ws.0);
+
+    // Conventional MaxVol at batch scale: Sherman-Morrison vs re-inversion.
+    let t_sm = time_it(2, 10, || {
+        black_box(conventional_maxvol(&big, 32, 1.01, 100));
+    });
+    report("conventional_maxvol K=2048 r=32 (SM)", t_sm.0, t_sm.1, t_sm.2);
+    sink.record("conventional_maxvol", "K=2048,r=32", t_sm);
+    let t_re = time_it(2, 10, || {
+        black_box(conventional_maxvol_reference(&big, 32, 1.01, 100));
+    });
+    report("conventional_maxvol K=2048 r=32 (ref)", t_re.0, t_re.1, t_re.2);
+    sink.record("conventional_maxvol_reference", "K=2048,r=32", t_re);
+
+    // ---- blocked linalg kernels vs scalar references --------------------
+    println!("\n-- blocked kernels (512x256 · 256x512) --");
+    let a = Mat::from_fn(512, 256, |_, _| rng.normal());
+    let b = Mat::from_fn(256, 512, |_, _| rng.normal());
+    let t_mm = time_it(2, 10, || {
+        black_box(a.matmul(&b).rows());
+    });
+    report("matmul (blocked+threaded)", t_mm.0, t_mm.1, t_mm.2);
+    sink.record("matmul", "512x256x512", t_mm);
+    let t_mn = time_it(2, 10, || {
+        black_box(a.matmul_naive(&b).rows());
+    });
+    report("matmul (pre-PR naive)", t_mn.0, t_mn.1, t_mn.2);
+    sink.record("matmul_naive", "512x256x512", t_mn);
+
+    let g = Mat::from_fn(2048, 128, |_, _| rng.normal());
+    let t_gb = time_it(2, 10, || {
+        black_box(g.gram().rows());
+    });
+    report("gram 2048x128 (blocked+threaded)", t_gb.0, t_gb.1, t_gb.2);
+    sink.record("gram", "2048x128", t_gb);
+    let t_gn = time_it(2, 10, || {
+        black_box(g.gram_naive().rows());
+    });
+    report("gram 2048x128 (pre-PR naive)", t_gn.0, t_gn.1, t_gn.2);
+    sink.record("gram_naive", "2048x128", t_gn);
+
+    match sink.write() {
+        Ok(path) => println!("\nbench JSON → {}", path.display()),
+        Err(e) => eprintln!("\nWARN could not write bench JSON: {e}"),
+    }
 }

@@ -110,7 +110,7 @@ pub fn table3(args: &Args) -> Result<()> {
             }
             for i in 0..(k - ntr) {
                 let pred = (0..ds.classes)
-                    .max_by(|&a, &b| scores[a][i].partial_cmp(&scores[b][i]).unwrap())
+                    .max_by(|&a, &b| scores[a][i].total_cmp(&scores[b][i]))
                     .unwrap();
                 if pred == ds.y[rows[ntr + i]] as usize {
                     correct += 1;

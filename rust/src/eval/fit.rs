@@ -38,7 +38,7 @@ pub fn fit_gain_curve(xs: &[f64], ys: &[f64]) -> Option<GainFit> {
 
     // Initialisation: E₀ = y at smallest x, H = max y, λ = 2.
     let (mut e0, mut h, mut lambda) = {
-        let i_min = (0..n).min_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap())?;
+        let i_min = (0..n).min_by(|&a, &b| xs[a].total_cmp(&xs[b]))?;
         let ymax = ys.iter().cloned().fold(f64::MIN, f64::max);
         (ys[i_min].min(ymax - 1e-6), ymax, 2.0f64)
     };

@@ -69,7 +69,7 @@ impl FeatureExtractor for AutoencoderFeatures {
                 (-c.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>(), j)
             })
             .collect();
-        scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scores.sort_by(|a, b| a.0.total_cmp(&b.0));
         let order: Vec<usize> = scores.iter().map(|&(_, j)| j).collect();
         h.take_cols(&order)
     }

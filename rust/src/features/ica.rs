@@ -93,7 +93,7 @@ impl FeatureExtractor for IcaFeatures {
                 (-dot(&proj, &proj), j)
             })
             .collect();
-        scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scores.sort_by(|a, b| a.0.total_cmp(&b.0));
         let order: Vec<usize> = scores.iter().map(|&(_, j)| j).collect();
         s = s.take_cols(&order);
         s

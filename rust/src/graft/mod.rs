@@ -4,6 +4,13 @@
 //! Stage 1 (feature extraction + Fast MaxVol + prefix errors) runs inside
 //! the AOT `select` artifact (L1/L2); this module is the Stage-2 policy
 //! layer that turns the error curve d_r into a subset size R*.
+//!
+//! The Rust-side selection path ([`GraftSelector::select_into`]) is
+//! allocation-free at steady state: the MaxVol working copy, the selected
+//! gradient columns, ĝ, and the error curve all live in a reusable
+//! [`Workspace`], and the prefix errors come from a fused MGS that
+//! orthonormalises the selected sketches in place (numerically identical
+//! to `qr` + per-column projection, without materialising Q or R).
 
 pub mod alignment;
 pub mod rank;
@@ -11,8 +18,8 @@ pub mod rank;
 pub use alignment::AlignmentStats;
 pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision};
 
-use crate::linalg::{qr, Mat};
-use crate::selection::maxvol::fast_maxvol;
+use crate::linalg::{mat::transpose_into, qr::mgs_column_step, Mat, Workspace};
+use crate::selection::maxvol::fast_maxvol_with;
 use crate::selection::{BatchView, Selector};
 
 /// Pure-Rust GRAFT selection for non-AOT data paths (Iris, ablations):
@@ -33,24 +40,52 @@ impl GraftSelector {
 
 /// Prefix projection errors d_r for r = 1..R over the selected gradient
 /// columns (E×R), mirroring the L1 kernel (Lemma 1 normalised form).
+///
+/// Allocating wrapper over the fused in-place kernel; hot paths fill the
+/// column buffer straight from gradient rows and skip the transpose.
 pub fn prefix_projection_errors(gsel: &Mat, gbar: &[f64]) -> Vec<f64> {
-    let r = gsel.cols();
+    let (e, r) = (gsel.rows(), gsel.cols());
+    let mut ws = Workspace::default();
+    ws.pe_g.resize(e * r, 0.0);
+    transpose_into(e, r, gsel.data(), &mut ws.pe_g);
+    let mut out = Vec::with_capacity(r);
+    prefix_errors_core(&mut ws.pe_g, e, r, gbar, &mut ws.pe_ghat, &mut out);
+    out
+}
+
+/// Fused MGS + projection: orthonormalise the `r` columns (each length
+/// `e`, stored contiguously in `cols`) in place via the shared
+/// [`mgs_column_step`] kernel — the exact two-pass / relative-tolerance
+/// semantics of [`crate::linalg::qr`], by construction — accumulating the
+/// prefix projection errors of ĝ = ḡ/‖ḡ‖ as each column is finalised.
+/// Zero allocations once `ghat` and `out` have capacity.
+fn prefix_errors_core(
+    cols: &mut [f64],
+    e: usize,
+    r: usize,
+    gbar: &[f64],
+    ghat: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    use crate::linalg::dot;
+    out.clear();
     let nrm = crate::linalg::norm2(gbar);
     if nrm < 1e-12 {
-        return vec![0.0; r];
+        out.resize(r, 0.0);
+        return;
     }
-    let ghat: Vec<f64> = gbar.iter().map(|x| x / nrm).collect();
-    let d = qr(gsel);
+    ghat.clear();
+    ghat.extend(gbar.iter().map(|x| x / nrm));
     let mut cum = 0.0;
-    let mut out = Vec::with_capacity(r);
     for j in 0..r {
-        // Zero (dependent) columns contribute nothing.
-        let qj = d.q.col(j);
-        let a = crate::linalg::dot(&qj, &ghat);
+        let (done, rest) = cols.split_at_mut(j * e);
+        let v = &mut rest[..e];
+        // Dependent columns come back zero-filled and contribute nothing.
+        let _ = mgs_column_step(done, e, j, v, |_, _| {});
+        let a = dot(v, ghat);
         cum += a * a;
         out.push((1.0 - cum).max(0.0));
     }
-    out
 }
 
 impl Selector for GraftSelector {
@@ -58,41 +93,50 @@ impl Selector for GraftSelector {
         "graft"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r_budget: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r_budget: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
         let k = view.k();
         let rmax = view.features.cols().min(k);
-        // Stage 1: Fast MaxVol over the ordered features.
-        let p = fast_maxvol(view.features, rmax);
+        // Stage 1: Fast MaxVol over the ordered features.  The pivot order
+        // lives in the workspace (taken out around the nested call).
+        let mut order = std::mem::take(&mut ws.sel_order);
+        fast_maxvol_with(view.features, rmax, ws, &mut order);
         // Prefix errors of ḡ against the selected gradient columns.
         let e = view.grads.cols();
-        let mut gbar = vec![0.0f64; e];
+        ws.pe_gbar.clear();
+        ws.pe_gbar.resize(e, 0.0);
         for i in 0..k {
             for (t, &v) in view.grads.row(i).iter().enumerate() {
-                gbar[t] += v;
+                ws.pe_gbar[t] += v;
             }
         }
-        for v in gbar.iter_mut() {
+        for v in ws.pe_gbar.iter_mut() {
             *v /= k as f64;
         }
-        let gsel = view.grads.take_rows(&p).transpose(); // E×Rmax
-        let errors = prefix_projection_errors(&gsel, &gbar);
+        // Column j of the E×Rmax selected-sketch matrix is gradient row
+        // order[j] — contiguous by construction, no transpose needed.
+        ws.pe_g.clear();
+        for &i in &order {
+            ws.pe_g.extend_from_slice(view.grads.row(i));
+        }
+        prefix_errors_core(&mut ws.pe_g, e, rmax, &ws.pe_gbar, &mut ws.pe_ghat, &mut ws.pe_err);
         // Stage 2: dynamic rank.
-        let decision = self.policy.choose(&errors, r_budget, rmax);
+        let decision = self.policy.choose(&ws.pe_err, r_budget, rmax);
         let rstar = decision.rank;
         self.last = Some(decision);
-        let mut out: Vec<usize> = p[..rstar.min(p.len())].to_vec();
+        out.clear();
+        out.extend_from_slice(&order[..rstar.min(order.len())]);
+        ws.sel_order = order;
         // Honour the requested budget contract (|S| == r_budget) when the
-        // caller insists (comparison harness); top-up by loss otherwise.
-        if out.len() < r_budget.min(k) && self.policy.strict_budget {
-            let mut taken = vec![false; k];
-            for &i in &out {
-                taken[i] = true;
-            }
-            let mut rest: Vec<usize> = (0..k).filter(|&i| !taken[i]).collect();
-            rest.sort_by(|&a, &b| view.losses[b].partial_cmp(&view.losses[a]).unwrap());
-            out.extend(rest.into_iter().take(r_budget.min(k) - out.len()));
+        // caller insists (comparison harness); dynamic mode keeps R*.
+        if self.policy.strict_budget {
+            crate::selection::top_up_by_loss(view, r_budget, ws, out);
         }
-        out
     }
 }
 
@@ -115,6 +159,26 @@ mod tests {
             assert!(w[1] <= w[0] + 1e-12);
         }
         assert!(d.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn prefix_errors_match_qr_reference() {
+        // The fused in-place kernel must agree with the explicit QR path.
+        let mut rng = Rng::new(7);
+        let g = Mat::from_fn(10, 6, |_, _| rng.normal());
+        let gbar: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let fused = prefix_projection_errors(&g, &gbar);
+        // Reference: explicit thin QR, project ĝ column by column.
+        let nrm = crate::linalg::norm2(&gbar);
+        let ghat: Vec<f64> = gbar.iter().map(|x| x / nrm).collect();
+        let d = crate::linalg::qr(&g);
+        let mut cum = 0.0;
+        for (j, &f) in fused.iter().enumerate() {
+            let a = crate::linalg::dot(&d.q.col(j), &ghat);
+            cum += a * a;
+            let want = (1.0 - cum).max(0.0);
+            assert!((f - want).abs() < 1e-12, "col {j}: {f} vs {want}");
+        }
     }
 
     #[test]
@@ -156,5 +220,20 @@ mod tests {
         let sel = s.select(&view, 8);
         assert!(sel.len() <= 4, "low-rank gradients → small subset, got {}", sel.len());
         assert!(s.last.unwrap().error <= 0.05 + 1e-9);
+    }
+
+    #[test]
+    fn workspace_reuse_across_batches() {
+        // Same workspace over several batches must match fresh-workspace
+        // selections exactly.
+        let mut ws = Workspace::default();
+        let mut buf = Vec::new();
+        for seed in 10..14 {
+            let owned = random_view(32, 6, 12, 4, seed);
+            let mut warm = GraftSelector::new(BudgetedRankPolicy::strict(0.05));
+            warm.select_into(&owned.view(), 10, &mut ws, &mut buf);
+            let mut cold = GraftSelector::new(BudgetedRankPolicy::strict(0.05));
+            assert_eq!(buf, cold.select(&owned.view(), 10), "seed {seed}");
+        }
     }
 }

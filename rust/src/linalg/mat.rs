@@ -2,11 +2,39 @@
 //! (baselines, curve fits, feature extractors) builds on.
 //!
 //! Deliberately small: this is not a general tensor library, just the exact
-//! operations the GRAFT pipeline needs, written so the per-step hot loops
-//! (MaxVol rank-1 updates, Gram accumulation) stay allocation-free.
+//! operations the GRAFT pipeline needs.  The throughput-critical kernels
+//! (`matmul`, `gram`, `transpose`, `take_cols`) are register-tiled and
+//! cache-blocked, with a `std::thread::scope` row-panel parallel path above
+//! [`PAR_MIN_FLOPS`]; the naive reference kernels are kept (`matmul_naive`)
+//! for property tests and regression benches.  See `linalg/mod.rs` for the
+//! blocking design notes.
 
 use std::fmt;
-use std::ops::{Index, IndexMut};
+use std::ops::{Index, IndexMut, Range};
+
+// ---------------------------------------------------------------------------
+// Blocking / threading constants (see linalg/mod.rs for the rationale)
+// ---------------------------------------------------------------------------
+
+/// Columns of B streamed per panel: one 512-column f64 strip of an output
+/// row (4 KiB) plus the matching B strip stays L1-resident.
+pub const BLOCK_NC: usize = 512;
+/// Inner-dimension block: a `BLOCK_KC × BLOCK_NC` panel of B (≤ 1 MiB)
+/// stays L2-resident while every A-row pair streams across it.
+pub const BLOCK_KC: usize = 256;
+/// Square tile edge for the blocked transpose (32×32 f64 = two 4 KiB
+/// pages, well under L1).
+pub const BLOCK_TILE: usize = 32;
+/// `m·k·n` fused-op count above which `matmul`/`gram` fan row panels out
+/// across threads; below it the spawn cost dominates any speedup.
+pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// Worker count for the parallel paths: the machine's parallelism, capped
+/// by the row count (each worker needs at least one row) and a fleet-
+/// friendly ceiling of 8.
+fn num_threads(rows: usize) -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8).min(rows.max(1))
+}
 
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -89,8 +117,13 @@ impl Mat {
         }
     }
 
+    /// Blocked transpose: 32×32 tiles keep both the source rows and the
+    /// destination columns cache-resident, killing the strided-write
+    /// penalty of the naive element loop.
     pub fn transpose(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+        let mut out = Mat::zeros(self.cols, self.rows);
+        transpose_into(self.rows, self.cols, &self.data, &mut out.data);
+        out
     }
 
     /// Select rows by index (gather).
@@ -102,14 +135,77 @@ impl Mat {
         out
     }
 
-    /// Select columns by index (gather).
+    /// Select columns by index (gather), row-streamed: each source row is
+    /// touched once and the destination is written sequentially.
     pub fn take_cols(&self, idx: &[usize]) -> Mat {
-        Mat::from_fn(self.rows, idx.len(), |i, j| self[(i, idx[j])])
+        let ncols = idx.len();
+        let mut out = Mat::zeros(self.rows, ncols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = &mut out.data[i * ncols..(i + 1) * ncols];
+            for (d, &j) in dst.iter_mut().zip(idx) {
+                *d = src[j];
+            }
+        }
+        out
     }
 
-    /// C = A · B (ikj loop order — cache-friendly row-major).
+    /// C = A · B through the blocked kernel (see [`Mat::matmul_into`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// C = A · B written into a caller-owned, pre-shaped output — the
+    /// allocation-free entry point.  Register-tiled (two output rows per
+    /// pass), cache-blocked (`BLOCK_KC`/`BLOCK_NC`), and parallel over row
+    /// panels via `std::thread::scope` once `m·k·n ≥ PAR_MIN_FLOPS`.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, other.cols),
+            "matmul_into output must be {}x{}",
+            self.rows, other.cols
+        );
+        out.data.fill(0.0);
+        if self.rows == 0 || self.cols == 0 || other.cols == 0 {
+            return;
+        }
+        let n = other.cols;
+        let flops = self.rows * self.cols * n;
+        // Probe parallelism (a syscall) only once past the size threshold,
+        // so small-matrix loops stay syscall-free.
+        let t = if flops >= PAR_MIN_FLOPS { num_threads(self.rows) } else { 1 };
+        if t > 1 {
+            let rows_per = (self.rows + t - 1) / t;
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+                    let start = ci * rows_per;
+                    let end = start + chunk.len() / n;
+                    let (a, b) = (&*self, other);
+                    s.spawn(move || matmul_panel(a, b, start..end, chunk));
+                }
+            });
+        } else {
+            matmul_panel(self, other, 0..self.rows, &mut out.data);
+        }
+    }
+
+    /// Scalar-reference C = A · B (the pre-blocking ikj loop).  Kept as the
+    /// ground truth for kernel property tests and the before/after
+    /// regression benches.
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
             let arow = self.row(i);
@@ -127,8 +223,50 @@ impl Mat {
         out
     }
 
-    /// AᵀA Gram matrix (symmetric; only one triangle computed then mirrored).
+    /// AᵀA Gram matrix (symmetric; only the upper triangle is accumulated,
+    /// then mirrored).  Row panels go parallel above `PAR_MIN_FLOPS`
+    /// (per-thread partial Grams reduced in thread order — deterministic,
+    /// though the summation grouping differs from the serial path by the
+    /// usual ~1e-15 float-reassociation noise).
     pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        let flops = self.rows * n * n;
+        let t = if flops >= PAR_MIN_FLOPS { num_threads(self.rows) } else { 1 };
+        if t > 1 {
+            let rows_per = (self.rows + t - 1) / t;
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(t);
+                for ti in 0..t {
+                    let start = ti * rows_per;
+                    let end = ((ti + 1) * rows_per).min(self.rows);
+                    if start >= end {
+                        break;
+                    }
+                    let a = &*self;
+                    handles.push(s.spawn(move || {
+                        let mut p = Mat::zeros(n, n);
+                        gram_upper_panel(a, start..end, &mut p.data);
+                        p
+                    }));
+                }
+                for h in handles {
+                    g.add_assign(&h.join().expect("gram worker panicked"));
+                }
+            });
+        } else {
+            gram_upper_panel(self, 0..self.rows, &mut g.data);
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Scalar-reference AᵀA (pre-blocking loop), kept for property tests.
+    pub fn gram_naive(&self) -> Mat {
         let n = self.cols;
         let mut g = Mat::zeros(n, n);
         for r in 0..self.rows {
@@ -230,6 +368,105 @@ impl Mat {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Kernel bodies (free functions so the threaded paths can borrow panels)
+// ---------------------------------------------------------------------------
+
+/// Register-tiled, cache-blocked GEMM panel: `out` is the dense row-major
+/// panel for exactly `rows` of the product (pre-zeroed by the caller).
+/// Two output rows advance together so every streamed B element is used
+/// twice per load; the j/k blocking keeps the active B panel L2-resident.
+/// The k-blocks are visited in ascending order, so for finite inputs the
+/// per-element summation order matches the naive ikj loop exactly.  (The
+/// paired-row zero-skip only elides a k-term when BOTH rows' A-values are
+/// zero, so unlike the naive per-row skip a `0.0 * bv` term can execute —
+/// identical for finite B, but a non-finite B entry paired with a zero
+/// A-value yields NaN here where the naive loop skips it.)
+fn matmul_panel(a: &Mat, b: &Mat, rows: Range<usize>, out: &mut [f64]) {
+    let n = b.cols;
+    let kk = b.rows;
+    let nrows = rows.len();
+    debug_assert_eq!(out.len(), nrows * n);
+    for j0 in (0..n).step_by(BLOCK_NC) {
+        let jend = (j0 + BLOCK_NC).min(n);
+        for k0 in (0..kk).step_by(BLOCK_KC) {
+            let kend = (k0 + BLOCK_KC).min(kk);
+            let mut oi = 0;
+            while oi + 1 < nrows {
+                let i0 = rows.start + oi;
+                let (head, tail) = out.split_at_mut((oi + 1) * n);
+                let r0 = &mut head[oi * n + j0..oi * n + jend];
+                let r1 = &mut tail[j0..jend];
+                let a0 = a.row(i0);
+                let a1 = a.row(i0 + 1);
+                for k in k0..kend {
+                    let (x0, x1) = (a0[k], a1[k]);
+                    if x0 == 0.0 && x1 == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(k)[j0..jend];
+                    for ((o0, o1), &bv) in r0.iter_mut().zip(r1.iter_mut()).zip(brow) {
+                        *o0 += x0 * bv;
+                        *o1 += x1 * bv;
+                    }
+                }
+                oi += 2;
+            }
+            if oi < nrows {
+                let arow = a.row(rows.start + oi);
+                let orow = &mut out[oi * n + j0..oi * n + jend];
+                for k in k0..kend {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(k)[j0..jend];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Upper-triangle Gram accumulation over a row panel of A: `g` is a dense
+/// n×n buffer; only entries `j ≥ i` are touched.  The inner loop runs over
+/// contiguous row suffixes so it vectorises.
+fn gram_upper_panel(a: &Mat, rows: Range<usize>, g: &mut [f64]) {
+    let n = a.cols;
+    for r in rows {
+        let row = a.row(r);
+        for (i, &ri) in row.iter().enumerate() {
+            if ri == 0.0 {
+                continue;
+            }
+            let gi = &mut g[i * n + i..(i + 1) * n];
+            for (gv, &rj) in gi.iter_mut().zip(&row[i..]) {
+                *gv += ri * rj;
+            }
+        }
+    }
+}
+
+/// Tiled out-of-place transpose of a `rows×cols` row-major buffer.
+pub(crate) fn transpose_into(rows: usize, cols: usize, src: &[f64], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for i0 in (0..rows).step_by(BLOCK_TILE) {
+        let iend = (i0 + BLOCK_TILE).min(rows);
+        for j0 in (0..cols).step_by(BLOCK_TILE) {
+            let jend = (j0 + BLOCK_TILE).min(cols);
+            for i in i0..iend {
+                let row = &src[i * cols..(i + 1) * cols];
+                for j in j0..jend {
+                    dst[j * rows + i] = row[j];
+                }
+            }
+        }
+    }
+}
+
 impl Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -326,17 +563,53 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive() {
+        for (m, k, n, seed) in [(5, 7, 3, 1), (33, 17, 65, 2), (2, 600, 2, 3), (1, 1, 1, 4)] {
+            let a = randmat(m, k, seed);
+            let b = randmat(k, n, seed + 100);
+            assert!(
+                a.matmul(&b).sub(&a.matmul_naive(&b)).max_abs() < 1e-12,
+                "blocked != naive at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let a = randmat(6, 5, 5);
+        let b = randmat(5, 4, 6);
+        let mut out = Mat::zeros(6, 4);
+        a.matmul_into(&b, &mut out);
+        assert!(out.sub(&a.matmul_naive(&b)).max_abs() < 1e-12);
+        // Second call overwrites (not accumulates).
+        a.matmul_into(&b, &mut out);
+        assert!(out.sub(&a.matmul_naive(&b)).max_abs() < 1e-12);
+    }
+
+    #[test]
     fn gram_matches_matmul() {
         let a = randmat(9, 4, 5);
         let g = a.gram();
         let g2 = a.transpose().matmul(&a);
         assert!(g.sub(&g2).max_abs() < 1e-10);
+        assert!(g.sub(&a.gram_naive()).max_abs() < 1e-12);
     }
 
     #[test]
     fn transpose_involution() {
         let a = randmat(6, 3, 6);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_tiled_matches_fn() {
+        let a = randmat(70, 41, 12);
+        let t = a.transpose();
+        for i in 0..70 {
+            for j in 0..41 {
+                assert_eq!(t[(j, i)], a[(i, j)]);
+            }
+        }
     }
 
     #[test]
@@ -377,6 +650,16 @@ mod tests {
         let sub = a.take_rows(&[1, 3]).take_cols(&[0, 5]);
         assert_eq!(sub[(0, 0)], a[(1, 0)]);
         assert_eq!(sub[(1, 1)], a[(3, 5)]);
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 0);
+        assert_eq!(a.matmul(&randmat(5, 3, 14)).rows(), 0);
+        assert_eq!(randmat(3, 5, 15).matmul(&b).cols(), 0);
+        assert_eq!(b.gram().rows(), 0);
+        assert_eq!(a.transpose().rows(), 5);
     }
 
     #[test]

@@ -1,13 +1,53 @@
 //! Dense linear-algebra substrate (LAPACK-free; see DESIGN.md §1).
+//!
+//! # Hot-path design (PR 1)
+//!
+//! The per-step GRAFT selection path — `fast_maxvol` → prefix projection
+//! errors → budget top-up — runs once per mini-batch, so it is engineered
+//! around two rules:
+//!
+//! 1. **Zero steady-state allocations.** Every scratch buffer lives in a
+//!    reusable [`Workspace`] arena ([`workspace`]): consumers `clear()` and
+//!    re-fill, so capacity is retained across batches.  The `_with`/`_into`
+//!    variants (`fast_maxvol_with`, `qr_with`, `Selector::select_into` —
+//!    whose GRAFT implementation fuses the prefix-projection-error MGS
+//!    in-place) are the allocation-free entry points; the original
+//!    signatures remain as convenience wrappers.  `tests/alloc_free.rs`
+//!    pins this property with a counting global allocator.
+//!
+//! 2. **Blocked, register-tiled, optionally threaded kernels.**
+//!    `Mat::matmul` streams B in `BLOCK_KC × BLOCK_NC` panels
+//!    (L2-resident) against register-tiled pairs of output rows;
+//!    `Mat::gram` accumulates the upper triangle over contiguous row
+//!    suffixes; `Mat::transpose` moves `BLOCK_TILE`² tiles.  Above
+//!    `PAR_MIN_FLOPS` fused ops, `matmul`/`gram` fan row panels out over
+//!    `std::thread::scope` workers (no thread-pool dependency; scoped
+//!    threads may borrow the operands directly).  Thresholds live in
+//!    [`mat`] as `pub const`s so benches and future tuning PRs can see
+//!    them:
+//!
+//!    | constant         | value   | meaning                              |
+//!    |------------------|---------|--------------------------------------|
+//!    | `BLOCK_NC`       | 512     | B-columns per streamed panel (L1)    |
+//!    | `BLOCK_KC`       | 256     | inner-dim block (B panel in L2)      |
+//!    | `BLOCK_TILE`     | 32      | transpose tile edge                  |
+//!    | `PAR_MIN_FLOPS`  | 2²²     | m·k·n above which panels go parallel |
+//!
+//! The scalar reference kernels (`matmul_naive`, `gram_naive`,
+//! `fast_maxvol_reference`) are kept as ground truth for the property
+//! tests in `tests/linalg_kernels.rs` and the before/after rows in
+//! `BENCH_pr1.json` (see `scripts/bench.sh`).
 
 pub mod angles;
 pub mod mat;
 pub mod qr;
 pub mod solve;
 pub mod svd;
+pub mod workspace;
 
 pub use angles::{principal_angle_cosines, subspace_similarity, subspace_similarity_normalised};
-pub use mat::{axpy, dot, norm2, normalize, Mat};
-pub use qr::{orth, project_onto_colspace, qr, Qr};
+pub use mat::{axpy, dot, norm2, normalize, Mat, BLOCK_KC, BLOCK_NC, BLOCK_TILE, PAR_MIN_FLOPS};
+pub use qr::{orth, project_onto_colspace, qr, qr_with, Qr};
 pub use solve::{cholesky, cholesky_solve, det, lstsq, lu_solve, pinv};
 pub use svd::{spectral_norm, svd, truncated_u, Svd};
+pub use workspace::Workspace;

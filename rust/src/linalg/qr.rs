@@ -1,8 +1,14 @@
 //! Thin QR via two-pass modified Gram-Schmidt — mirrors the L2/L1 MGS so
 //! Rust-side baselines and the AOT kernels share semantics (including the
 //! relative dependence threshold for rank-deficient inputs).
+//!
+//! The factorisation runs on a column-major scratch copy drawn from a
+//! [`Workspace`] ([`qr_with`]): every projection is a contiguous dot /
+//! axpy instead of a strided `Mat::col` gather, and the per-column Vec
+//! allocations of the original implementation are gone.
 
-use super::mat::{dot, Mat};
+use super::mat::{dot, transpose_into, Mat};
+use super::workspace::Workspace;
 
 /// Result of a rank-revealing thin QR: `a ≈ q · r`, `q` has orthonormal
 /// (or zero, where dependent) columns, `rank` counts the nonzero ones.
@@ -12,42 +18,88 @@ pub struct Qr {
     pub rank: usize,
 }
 
-const REL_TOL: f64 = 1e-10;
+/// Columns whose post-orthogonalisation norm falls below `REL_TOL` times
+/// their original norm are treated as dependent (zeroed), matching the L1
+/// projection kernel.
+pub(crate) const REL_TOL: f64 = 1e-10;
+
+/// One column step of two-pass MGS, shared by [`qr_with`] and the fused
+/// prefix-error kernel in `graft`: orthonormalise `v` (length `m`) in
+/// place against the `j` already-final columns stored contiguously in
+/// `done`, reporting every projection coefficient through `proj` (for R
+/// accumulation).  Applies the `REL_TOL` dependence rule: returns
+/// `Some(post_norm)` and leaves `v` unit-norm when independent, returns
+/// `None` and zero-fills `v` when dependent.  Keeping this in one place
+/// guarantees the two consumers can never drift apart numerically.
+pub(crate) fn mgs_column_step(
+    done: &[f64],
+    m: usize,
+    j: usize,
+    v: &mut [f64],
+    mut proj: impl FnMut(usize, f64),
+) -> Option<f64> {
+    debug_assert_eq!(v.len(), m);
+    debug_assert!(done.len() >= j * m);
+    let nrm0 = dot(v, v).sqrt();
+    for _pass in 0..2 {
+        for i in 0..j {
+            let qi = &done[i * m..(i + 1) * m];
+            let p = dot(qi, v);
+            proj(i, p);
+            for (vt, &qt) in v.iter_mut().zip(qi) {
+                *vt -= p * qt;
+            }
+        }
+    }
+    let nrm = dot(v, v).sqrt();
+    if nrm <= REL_TOL * nrm0.max(1e-300) || nrm0 == 0.0 {
+        v.fill(0.0);
+        None
+    } else {
+        let inv = 1.0 / nrm;
+        for vt in v.iter_mut() {
+            *vt *= inv;
+        }
+        Some(nrm)
+    }
+}
 
 /// Two-pass MGS QR. Dependent columns become zero columns of Q (and zero
 /// rows of R beyond the diagonal), matching the L1 projection kernel.
 pub fn qr(a: &Mat) -> Qr {
+    qr_with(a, &mut Workspace::default())
+}
+
+/// [`qr`] drawing its column-major scratch from a caller-owned
+/// [`Workspace`] — steady-state the only allocations are the returned
+/// `q`/`r` matrices themselves.
+pub fn qr_with(a: &Mat, ws: &mut Workspace) -> Qr {
     let (m, n) = (a.rows(), a.cols());
-    let mut q = a.clone();
+    // Column-major working copy: column j occupies cols[j*m..(j+1)*m].
+    let cols = &mut ws.qr_cols;
+    cols.clear();
+    cols.resize(m * n, 0.0);
+    transpose_into(m, n, a.data(), cols);
     let mut r = Mat::zeros(n, n);
     let mut rank = 0;
     for j in 0..n {
-        let mut v = q.col(j);
-        let nrm0 = dot(&v, &v).sqrt();
-        for _pass in 0..2 {
-            for i in 0..j {
-                let qi = q.col(i);
-                let proj = dot(&qi, &v);
-                // Accumulate into R only on the first pass target; the
-                // re-orthogonalisation correction still belongs to r[i][j].
-                r[(i, j)] += proj;
-                for t in 0..m {
-                    v[t] -= proj * qi[t];
-                }
+        // Orthogonalise column j against the already-final columns i < j.
+        // Projection coefficients accumulate into R on both passes; the
+        // second-pass re-orthogonalisation correction still belongs to
+        // r[i][j].
+        let (done, rest) = cols.split_at_mut(j * m);
+        let v = &mut rest[..m];
+        match mgs_column_step(done, m, j, v, |i, p| r[(i, j)] += p) {
+            Some(nrm) => {
+                r[(j, j)] = nrm;
+                rank += 1;
             }
-        }
-        let nrm = dot(&v, &v).sqrt();
-        if nrm <= REL_TOL * nrm0.max(1e-300) || nrm0 == 0.0 {
-            r[(j, j)] = 0.0;
-            q.set_col(j, &vec![0.0; m]);
-        } else {
-            r[(j, j)] = nrm;
-            let inv = 1.0 / nrm;
-            let vn: Vec<f64> = v.iter().map(|x| x * inv).collect();
-            q.set_col(j, &vn);
-            rank += 1;
+            None => r[(j, j)] = 0.0,
         }
     }
+    // cols now holds Qᵀ (n×m row-major) — transpose back into Q.
+    let mut q = Mat::zeros(m, n);
+    transpose_into(n, m, &ws.qr_cols, q.data_mut());
     Qr { q, r, rank }
 }
 
@@ -92,6 +144,16 @@ mod tests {
         let d = qr(&a);
         let gram = d.q.gram();
         assert!(gram.sub(&Mat::eye(5)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn qr_with_reuses_workspace() {
+        let mut ws = Workspace::default();
+        for seed in 0..3 {
+            let a = randmat(12, 4, 100 + seed);
+            let d = qr_with(&a, &mut ws);
+            assert!(d.q.matmul(&d.r).sub(&a).max_abs() < 1e-10);
+        }
     }
 
     #[test]

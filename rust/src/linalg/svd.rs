@@ -80,7 +80,7 @@ fn one_sided_jacobi(a: &Mat) -> Svd {
     // Extract singular values = column norms; U = W / s.
     let mut order: Vec<usize> = (0..n).collect();
     let norms: Vec<f64> = (0..n).map(|j| dot(&w.col(j), &w.col(j)).sqrt()).collect();
-    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    order.sort_by(|&i, &j| norms[j].total_cmp(&norms[i]));
     let mut u = Mat::zeros(m, n);
     let mut s = Vec::with_capacity(n);
     let mut vv = Mat::zeros(n, n);

@@ -1,0 +1,60 @@
+//! Reusable scratch arena for the per-batch selection hot path.
+//!
+//! Every buffer is `clear()`ed and re-`extend`ed / `resize`d by its
+//! consumer, so capacity is retained across calls: after a one-batch
+//! warm-up, `fast_maxvol_with`, the fused prefix-error kernel inside
+//! `GraftSelector::select_into`, `qr_with`, and the `Selector::select_into`
+//! implementations perform **zero heap allocations** (asserted by
+//! `tests/alloc_free.rs` with a counting global allocator).
+//!
+//! Fields are grouped by consumer and crate-private: callers outside the
+//! crate only ever construct a [`Workspace`] and pass it by `&mut`.
+
+/// Scratch arena threaded through the selection hot path.
+///
+/// One `Workspace` per worker thread / coordinator loop; it is `Send` so
+/// the trainer can move it into the producer thread if selection ever
+/// migrates there.
+#[derive(Default)]
+pub struct Workspace {
+    // -- fast_maxvol ------------------------------------------------------
+    /// Working copy of the K×R candidate matrix (row-major).
+    pub(crate) mv_w: Vec<f64>,
+    /// Scaled pivot-row scratch (≤ R).
+    pub(crate) mv_prow: Vec<f64>,
+    /// Selected-row mask (K).
+    pub(crate) mv_taken: Vec<bool>,
+
+    // -- qr_with ----------------------------------------------------------
+    /// Column-major copy of the input (n columns of length m), MGS'd in
+    /// place.
+    pub(crate) qr_cols: Vec<f64>,
+
+    // -- prefix projection errors -----------------------------------------
+    /// Column-major E×R selected-gradient matrix, orthonormalised in place.
+    pub(crate) pe_g: Vec<f64>,
+    /// Normalised batch-mean gradient ĝ (E).
+    pub(crate) pe_ghat: Vec<f64>,
+    /// Batch-mean gradient ḡ (E).
+    pub(crate) pe_gbar: Vec<f64>,
+    /// Prefix errors d_r (R).
+    pub(crate) pe_err: Vec<f64>,
+
+    // -- selector plumbing -------------------------------------------------
+    /// MaxVol pivot order (taken out via `mem::take` around nested calls).
+    pub(crate) sel_order: Vec<usize>,
+    /// Already-selected mask for budget top-up (K).
+    pub(crate) sel_taken: Vec<bool>,
+    /// Unselected candidates for budget top-up (≤ K).
+    pub(crate) sel_rest: Vec<usize>,
+}
+
+impl Workspace {
+    /// Fresh workspace; buffers grow lazily on first use — warm up by
+    /// running one batch through the selection path before a measured
+    /// region (what `tests/alloc_free.rs` and the trainer's first refresh
+    /// window do).
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+}

@@ -41,7 +41,7 @@ pub fn select_channels(acts: &Mat, keep: usize) -> Vec<usize> {
             (-crate::linalg::dot(&col, &col), j)
         })
         .collect();
-    energy.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    energy.sort_by(|a, b| a.0.total_cmp(&b.0));
     let order: Vec<usize> = energy.iter().map(|&(_, j)| j).take(keep).collect();
     let reduced = chan.take_cols(&order);
     let mut kept = fast_maxvol(&reduced, keep);

@@ -4,6 +4,7 @@
 //! diversity — the exact construction of the paper's related work (§2).
 
 use super::{BatchView, Selector};
+use crate::linalg::Workspace;
 use crate::rng::Rng;
 
 pub struct Badge {
@@ -21,16 +22,24 @@ impl Selector for Badge {
         "badge"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let g = view.grads;
         // First centre: largest gradient norm (most uncertain).
         let norm2 = |i: usize| crate::linalg::dot(g.row(i), g.row(i));
         let first = (0..k)
-            .max_by(|&a, &b| norm2(a).partial_cmp(&norm2(b)).unwrap())
+            .max_by(|&a, &b| norm2(a).total_cmp(&norm2(b)))
             .unwrap_or(0);
-        let mut out = vec![first];
+        out.clear();
+        out.push(first);
         let mut taken = vec![false; k];
         taken[first] = true;
         // Squared distance to nearest selected centre.
@@ -72,7 +81,6 @@ impl Selector for Badge {
                 }
             }
         }
-        out
     }
 }
 

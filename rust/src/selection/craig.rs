@@ -4,7 +4,7 @@
 //! is the maximum gradient-sketch similarity to any selected exemplar.
 
 use super::{BatchView, Selector};
-use crate::linalg::dot;
+use crate::linalg::{dot, Workspace};
 
 pub struct Craig;
 
@@ -13,7 +13,14 @@ impl Selector for Craig {
         "craig"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let g = view.grads;
@@ -34,7 +41,7 @@ impl Selector for Craig {
         // Greedy facility location: coverage[j] = max_{i∈S} sim(i, j).
         let mut coverage = vec![0.0f64; k];
         let mut taken = vec![false; k];
-        let mut out = Vec::with_capacity(r);
+        out.clear();
         for _ in 0..r {
             let (mut best, mut bestgain) = (usize::MAX, -1.0f64);
             for cand in 0..k {
@@ -61,7 +68,6 @@ impl Selector for Craig {
                 coverage[j] = coverage[j].max(row[j]);
             }
         }
-        out
     }
 }
 

@@ -8,7 +8,7 @@
 //! properties our benchmark reproduces.
 
 use super::{BatchView, Selector};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 use crate::selection::maxvol::fast_maxvol;
 
 pub struct CrossMaxVol {
@@ -56,19 +56,18 @@ impl Selector for CrossMaxVol {
         "cross-maxvol"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
         let width = view.features.cols().min(r);
-        let (mut rows, _) = self.select_rows(view.features, width);
-        if rows.len() < r {
-            let mut taken = vec![false; view.k()];
-            for &i in &rows {
-                taken[i] = true;
-            }
-            let mut rest: Vec<usize> = (0..view.k()).filter(|&i| !taken[i]).collect();
-            rest.sort_by(|&a, &b| view.losses[b].partial_cmp(&view.losses[a]).unwrap());
-            rows.extend(rest.into_iter().take(r - rows.len()));
-        }
-        rows
+        let (rows, _) = self.select_rows(view.features, width);
+        out.clear();
+        out.extend_from_slice(&rows);
+        super::top_up_by_loss(view, r, ws, out);
     }
 }
 

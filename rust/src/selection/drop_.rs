@@ -5,6 +5,7 @@
 //! emissions but steep accuracy loss at small fractions.
 
 use super::{BatchView, Selector};
+use crate::linalg::Workspace;
 use crate::rng::Rng;
 
 pub struct Drop {
@@ -22,7 +23,14 @@ impl Selector for Drop {
         "drop"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let c = view.classes;
@@ -68,21 +76,20 @@ impl Selector for Drop {
         // the DRoP pruning rule whose low-fraction brittleness the paper's
         // tables exhibit (easy prototypes carry little boundary
         // information, so aggressive pruning underfits).
-        let mut out = Vec::with_capacity(r);
+        out.clear();
         for (cls, &q) in quota.iter().enumerate() {
             if q == 0 {
                 continue;
             }
             let mut m = members[cls].clone();
-            m.sort_by(|&a, &b| {
-                view.losses[a].partial_cmp(&view.losses[b]).unwrap().then(a.cmp(&b))
+            m.sort_unstable_by(|&a, &b| {
+                view.losses[a].total_cmp(&view.losses[b]).then(a.cmp(&b))
             });
             out.extend(m.into_iter().take(q));
         }
         // rng retained for tie-breaking compatibility / future variants.
         let _ = &mut self.rng;
         out.truncate(r);
-        out
     }
 }
 

@@ -4,7 +4,7 @@
 //! and keep the top-r.
 
 use super::{BatchView, Selector};
-use crate::linalg::norm2;
+use crate::linalg::{norm2, Workspace};
 
 pub struct El2n;
 
@@ -13,16 +13,23 @@ impl Selector for El2n {
         "el2n"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
-        let mut idx: Vec<usize> = (0..k).collect();
-        idx.sort_by(|&a, &b| {
+        out.clear();
+        out.extend(0..k);
+        out.sort_unstable_by(|&a, &b| {
             let na = norm2(view.grads.row(a));
             let nb = norm2(view.grads.row(b));
-            nb.partial_cmp(&na).unwrap().then(a.cmp(&b))
+            nb.total_cmp(&na).then(a.cmp(&b))
         });
-        idx.truncate(r.min(k));
-        idx
+        out.truncate(r.min(k));
     }
 }
 

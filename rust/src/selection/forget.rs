@@ -7,6 +7,7 @@
 use std::collections::HashMap;
 
 use super::{BatchView, Selector};
+use crate::linalg::Workspace;
 
 #[derive(Default)]
 pub struct Forget {
@@ -25,7 +26,14 @@ impl Selector for Forget {
         "forget"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         // Update forgetting statistics.
         for i in 0..k {
@@ -40,16 +48,16 @@ impl Selector for Forget {
         }
         // Rank: most forgotten first; tie-break on loss (harder first),
         // then index for determinism.
-        let mut idx: Vec<usize> = (0..k).collect();
-        idx.sort_by(|&a, &b| {
+        out.clear();
+        out.extend(0..k);
+        out.sort_unstable_by(|&a, &b| {
             let fa = self.forget_count(view.row_ids[a]);
             let fb = self.forget_count(view.row_ids[b]);
             fb.cmp(&fa)
-                .then(view.losses[b].partial_cmp(&view.losses[a]).unwrap())
+                .then(view.losses[b].total_cmp(&view.losses[a]))
                 .then(a.cmp(&b))
         });
-        idx.truncate(r.min(k));
-        idx
+        out.truncate(r.min(k));
     }
 }
 

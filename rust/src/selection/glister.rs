@@ -10,7 +10,7 @@
 //! what CORDS' online variant reduces to at batch scope).
 
 use super::{BatchView, Selector};
-use crate::linalg::dot;
+use crate::linalg::{dot, Workspace};
 
 pub struct Glister {
     /// Learning-rate used in the one-step Taylor update.
@@ -28,7 +28,14 @@ impl Selector for Glister {
         "glister"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let g = view.grads;
@@ -47,7 +54,7 @@ impl Selector for Glister {
         // gradient moves by −η H g_i ≈ −η g_i (identity-Hessian approx, as
         // in GLISTER-ONLINE's last-layer variant).
         let mut taken = vec![false; k];
-        let mut out = Vec::with_capacity(r);
+        out.clear();
         let mut cur = gval;
         for _ in 0..r {
             let (mut best, mut bestval) = (usize::MAX, f64::MIN);
@@ -67,7 +74,6 @@ impl Selector for Glister {
                 *c -= self.eta * gi;
             }
         }
-        out
     }
 }
 

@@ -5,7 +5,7 @@
 //! comparisons of gradient vectors").
 
 use super::{BatchView, Selector};
-use crate::linalg::{dot, norm2, Mat};
+use crate::linalg::{dot, norm2, Mat, Workspace};
 
 pub struct GradMatch {
     /// Residual tolerance for early stop (the budget r still rules).
@@ -23,7 +23,14 @@ impl Selector for GradMatch {
         "gradmatch"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let g = view.grads; // K×E
@@ -45,7 +52,7 @@ impl Selector for GradMatch {
         let mut residual = target.clone();
         let mut taken = vec![false; k];
         let mut basis: Vec<Vec<f64>> = Vec::with_capacity(r);
-        let mut out = Vec::with_capacity(r);
+        out.clear();
         for _ in 0..r {
             // Highest |correlation| with the residual (normalised atoms).
             let (mut best, mut bestval) = (usize::MAX, -1.0f64);
@@ -91,12 +98,11 @@ impl Selector for GradMatch {
         }
         if out.len() < r {
             let mut rest: Vec<usize> = (0..k).filter(|&i| !taken[i]).collect();
-            rest.sort_by(|&a, &b| {
-                norm2(g.row(b)).partial_cmp(&norm2(g.row(a))).unwrap()
+            rest.sort_unstable_by(|&a, &b| {
+                norm2(g.row(b)).total_cmp(&norm2(g.row(a))).then(a.cmp(&b))
             });
             out.extend(rest.into_iter().take(r - out.len()));
         }
-        out
     }
 }
 
@@ -153,7 +159,7 @@ mod tests {
         let mut errs: Vec<f64> = (0..15)
             .map(|_| residual_error(&owned.grads, &rng.choose(64, 6)))
             .collect();
-        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        errs.sort_by(f64::total_cmp);
         assert!(err_gm <= errs[7], "gm {err_gm} vs random median {}", errs[7]);
     }
 }

@@ -3,24 +3,104 @@
 //! Table 4 speed benchmark, and (c) for channel pruning.
 //!
 //! Also contains the *conventional* MaxVol (Goreinov et al. 2010) swap
-//! iteration, which the CrossMaxVol baseline builds on.
+//! iteration, which the CrossMaxVol baseline builds on.  Per-swap cost is
+//! O(K·r) via a Sherman–Morrison rank-1 update of the interpolation
+//! matrix; the original full re-inversion is kept as
+//! [`conventional_maxvol_reference`] for tests.
 
 use super::{BatchView, Selector};
-use crate::linalg::{lu_solve, Mat};
+use crate::linalg::{lu_solve, Mat, Workspace};
 
 /// Greedy Fast MaxVol: selects `r` rows of the K×R matrix `v` (r ≤ R ≤ K)
 /// with one rank-1 elimination per step — O(K·R·r) total, O(KR²) at r = R.
 /// The returned sequence is prefix-nested.
+///
+/// Allocating wrapper over [`fast_maxvol_with`].
 pub fn fast_maxvol(v: &Mat, r: usize) -> Vec<usize> {
+    let mut ws = Workspace::default();
+    let mut out = Vec::with_capacity(r);
+    fast_maxvol_with(v, r, &mut ws, &mut out);
+    out
+}
+
+/// [`fast_maxvol`] drawing every scratch buffer (working copy, pivot row,
+/// selection mask) from a caller-owned [`Workspace`]: zero heap
+/// allocations once the workspace and `out` have warmed up.  Pivot choice
+/// and elimination arithmetic are performed in the same order as the
+/// scalar reference, so the result is bit-identical to
+/// [`fast_maxvol_reference`].
+pub fn fast_maxvol_with(v: &Mat, r: usize, ws: &mut Workspace, out: &mut Vec<usize>) {
     let (k, rcols) = (v.rows(), v.cols());
     assert!(r <= rcols && r <= k, "need r <= min(K={k}, R={rcols}), got {r}");
+    out.clear();
     // Working copy, row-major K×R; selected mask keeps selections unique
     // even on rank-deficient inputs (matches the Pallas kernel).
+    let w = &mut ws.mv_w;
+    w.clear();
+    w.extend_from_slice(v.data());
+    let taken = &mut ws.mv_taken;
+    taken.clear();
+    taken.resize(k, false);
+    ws.mv_prow.clear();
+    ws.mv_prow.resize(rcols, 0.0);
+    for j in 0..r {
+        // argmax |w[:, j]| over untaken rows.
+        let (mut best, mut bestval) = (usize::MAX, -1.0f64);
+        for i in 0..k {
+            if taken[i] {
+                continue;
+            }
+            let a = w[i * rcols + j].abs();
+            if a > bestval {
+                best = i;
+                bestval = a;
+            }
+        }
+        let piv = w[best * rcols + j];
+        let safe = if piv.abs() < 1e-300 {
+            if piv >= 0.0 { 1e-300 } else { -1e-300 }
+        } else {
+            piv
+        };
+        taken[best] = true;
+        out.push(best);
+        if j + 1 == r {
+            break;
+        }
+        // Rank-1 elimination on the remaining columns:
+        //   w[:, l] -= col_j * w[best, l] / piv   for l > j
+        let width = rcols - j - 1;
+        {
+            let base = best * rcols;
+            for t in 0..width {
+                ws.mv_prow[t] = w[base + j + 1 + t] / safe;
+            }
+        }
+        let prow = &ws.mv_prow[..width];
+        for i in 0..k {
+            let base = i * rcols;
+            let ci = w[base + j];
+            if ci == 0.0 {
+                continue;
+            }
+            let row = &mut w[base + j + 1..base + rcols];
+            for (x, &p) in row.iter_mut().zip(prow) {
+                *x -= ci * p;
+            }
+        }
+    }
+}
+
+/// The pre-PR scalar implementation (clones its input, allocates per
+/// pivot).  Ground truth for the bit-identical property test and the
+/// "before" rows of the hot-path regression bench.
+pub fn fast_maxvol_reference(v: &Mat, r: usize) -> Vec<usize> {
+    let (k, rcols) = (v.rows(), v.cols());
+    assert!(r <= rcols && r <= k, "need r <= min(K={k}, R={rcols}), got {r}");
     let mut w = v.clone();
     let mut taken = vec![false; k];
     let mut p = Vec::with_capacity(r);
     for j in 0..r {
-        // argmax |w[:, j]| over untaken rows.
         let (mut best, mut bestval) = (usize::MAX, -1.0f64);
         for i in 0..k {
             if taken[i] {
@@ -43,8 +123,6 @@ pub fn fast_maxvol(v: &Mat, r: usize) -> Vec<usize> {
         if j + 1 == r {
             break;
         }
-        // Rank-1 elimination on the remaining columns:
-        //   w[:, l] -= col_j * w[best, l] / piv   for l > j
         let prow: Vec<f64> = (j + 1..rcols).map(|l| w[(best, l)] / safe).collect();
         for i in 0..k {
             let ci = w[(i, j)];
@@ -63,6 +141,17 @@ pub fn fast_maxvol(v: &Mat, r: usize) -> Vec<usize> {
 /// Conventional MaxVol (Goreinov et al.): start from some r rows, swap a
 /// row in whenever an interpolation-matrix entry exceeds `tau`, until
 /// convergence.  Returns (rows, swap count).
+///
+/// The interpolation matrix B = Vr·A⁻¹ (A the selected r×r block) is
+/// built once, then maintained across swaps with the Sherman–Morrison
+/// rank-1 update
+///
+/// ```text
+/// B ← B − B[:, j] ⊗ (B[i*, :] − eⱼ) / B[i*, j]
+/// ```
+///
+/// so each swap costs O(K·r) instead of the O(r·r³ + K·r²) full
+/// re-inversion of [`conventional_maxvol_reference`].
 pub fn conventional_maxvol(v: &Mat, r: usize, tau: f64, max_iters: usize) -> (Vec<usize>, usize) {
     let k = v.rows();
     assert!(r <= v.cols() && r <= k);
@@ -71,10 +160,88 @@ pub fn conventional_maxvol(v: &Mat, r: usize, tau: f64, max_iters: usize) -> (Ve
     // Initialise with the greedy selection (any non-singular start works).
     let mut rows = fast_maxvol(&vr, r);
     let mut swaps = 0;
+    // One-time inverse of the starting block: row c of A⁻¹ solves Aᵀx = e_c.
+    let sub = vr.take_rows(&rows); // r×r
+    let subt = sub.transpose();
+    let mut inv = Mat::zeros(r, r);
+    for c in 0..r {
+        let mut e = vec![0.0; r];
+        e[c] = 1.0;
+        match lu_solve(&subt, &e) {
+            Some(x) => {
+                for i in 0..r {
+                    inv[(c, i)] = x[i];
+                }
+            }
+            None => return (rows, swaps), // singular start: keep greedy rows
+        }
+    }
+    let mut b = vr.matmul(&inv); // K×r with B[rows, :] = I
+    let mut urow = vec![0.0f64; r];
     for _ in 0..max_iters {
-        let sub = vr.take_rows(&rows); // r×r
-        // Invert sub once (r solves): row c of sub^{-1} is the solution of
-        // subᵀ x = e_c.
+        // Find max |B[i][j]|.
+        let (mut bi, mut bj, mut bv) = (0usize, 0usize, 0.0f64);
+        for i in 0..k {
+            for (j, &x) in b.row(i).iter().enumerate() {
+                let a = x.abs();
+                if a > bv {
+                    bi = i;
+                    bj = j;
+                    bv = a;
+                }
+            }
+        }
+        if bv <= tau {
+            break;
+        }
+        let pivot = b[(bi, bj)];
+        if pivot.abs() < 1e-300 {
+            break; // numerically singular swap — matches reference bail-out
+        }
+        // urow = (B[i*, :] − e_bj) / pivot
+        urow.copy_from_slice(b.row(bi));
+        urow[bj] -= 1.0;
+        for t in urow.iter_mut() {
+            *t /= pivot;
+        }
+        for i in 0..k {
+            let ci = b[(i, bj)];
+            if ci == 0.0 {
+                continue;
+            }
+            for (x, &u) in b.row_mut(i).iter_mut().zip(&urow) {
+                *x -= ci * u;
+            }
+        }
+        // Pin the new basis row to the exact identity it converges to,
+        // stopping float drift from accumulating over long swap chains.
+        for x in b.row_mut(bi).iter_mut() {
+            *x = 0.0;
+        }
+        b[(bi, bj)] = 1.0;
+        rows[bj] = bi;
+        swaps += 1;
+    }
+    (rows, swaps)
+}
+
+/// Pre-PR conventional MaxVol: full inverse + K×r interpolation rebuild on
+/// every swap.  Kept as the convergence ground truth for
+/// `tests/linalg_kernels.rs`.
+pub fn conventional_maxvol_reference(
+    v: &Mat,
+    r: usize,
+    tau: f64,
+    max_iters: usize,
+) -> (Vec<usize>, usize) {
+    let k = v.rows();
+    assert!(r <= v.cols() && r <= k);
+    let cols: Vec<usize> = (0..r).collect();
+    let vr = v.take_cols(&cols);
+    let mut rows = fast_maxvol(&vr, r);
+    let mut swaps = 0;
+    for _ in 0..max_iters {
+        let sub = vr.take_rows(&rows);
         let mut inv = Mat::zeros(r, r);
         let subt = sub.transpose();
         let mut singular = false;
@@ -96,9 +263,7 @@ pub fn conventional_maxvol(v: &Mat, r: usize, tau: f64, max_iters: usize) -> (Ve
         if singular {
             break;
         }
-        // Interpolation matrix B = Vr · sub^{-1} (B[rows, :] = I).
         let b = vr.matmul(&inv);
-        // Find max |B[i][j]|.
         let (mut bi, mut bj, mut bv) = (0usize, 0usize, 0.0f64);
         for i in 0..k {
             for j in 0..r {
@@ -129,20 +294,17 @@ impl Selector for FastMaxVol {
         "maxvol"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
         let width = view.features.cols().min(r);
-        let mut p = fast_maxvol(view.features, width);
-        if p.len() < r {
-            // Budget exceeds feature rank: top-up with highest-loss rows.
-            let mut taken = vec![false; view.k()];
-            for &i in &p {
-                taken[i] = true;
-            }
-            let mut rest: Vec<usize> = (0..view.k()).filter(|&i| !taken[i]).collect();
-            rest.sort_by(|&a, &b| view.losses[b].partial_cmp(&view.losses[a]).unwrap());
-            p.extend(rest.into_iter().take(r - p.len()));
-        }
-        p
+        fast_maxvol_with(view.features, width, ws, out);
+        // Budget beyond feature rank: top-up with highest-loss rows.
+        super::top_up_by_loss(view, r, ws, out);
     }
 }
 
@@ -177,8 +339,21 @@ mod tests {
         let v = randmat(40, 5, 2);
         let p = fast_maxvol(&v, 5);
         let col = v.col(0);
-        let want = (0..40).max_by(|&a, &b| col[a].abs().partial_cmp(&col[b].abs()).unwrap()).unwrap();
+        let want = (0..40).max_by(|&a, &b| col[a].abs().total_cmp(&col[b].abs())).unwrap();
         assert_eq!(p[0], want);
+    }
+
+    #[test]
+    fn workspace_reuse_is_stable() {
+        // The same workspace must produce identical selections across
+        // differently-shaped inputs (buffers are re-sized, not assumed).
+        let mut ws = Workspace::default();
+        let mut out = Vec::new();
+        for (k, r, seed) in [(32usize, 8usize, 3u64), (16, 4, 4), (64, 12, 5)] {
+            let v = randmat(k, r, seed);
+            fast_maxvol_with(&v, r, &mut ws, &mut out);
+            assert_eq!(out, fast_maxvol_reference(&v, r), "K={k} R={r}");
+        }
     }
 
     #[test]
@@ -190,7 +365,7 @@ mod tests {
         let mut rand_vols: Vec<f64> = (0..21)
             .map(|_| det(&v.take_rows(&rng.choose(64, 8))).abs())
             .collect();
-        rand_vols.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rand_vols.sort_by(f64::total_cmp);
         assert!(vol >= rand_vols[10], "maxvol {vol} vs median {}", rand_vols[10]);
     }
 

@@ -18,7 +18,7 @@ pub mod maxvol;
 pub mod moderate;
 pub mod random;
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 
 /// Everything a selector may look at for one mini-batch.
 pub struct BatchView<'a> {
@@ -44,11 +44,64 @@ impl<'a> BatchView<'a> {
     }
 }
 
-/// A batch-subset selector. `r` is the requested subset size; the returned
+/// A batch-subset selector. `r` is the requested subset size; the produced
 /// indices are batch-local (0..K), unique, and |result| == r.
+///
+/// [`Selector::select_into`] is the hot-path entry point: scratch comes
+/// from a caller-owned [`Workspace`] and the selection lands in a reused
+/// output buffer, so steady-state selection performs no heap allocations
+/// (exactly zero for the MaxVol/GRAFT paths; baselines may still allocate
+/// internally).  [`Selector::select`] is the allocating convenience
+/// wrapper used by tests and one-shot callers.
 pub trait Selector: Send {
     fn name(&self) -> &'static str;
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize>;
+
+    /// Write the selection for one batch into `out` (cleared first),
+    /// drawing all scratch from `ws`.
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    );
+
+    /// Allocating wrapper over [`Selector::select_into`].
+    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+        let mut ws = Workspace::default();
+        let mut out = Vec::new();
+        self.select_into(view, r, &mut ws, &mut out);
+        out
+    }
+}
+
+/// Pad `out` up to `r.min(k)` indices with the highest-loss unselected
+/// rows — the shared budget top-up rule (NaN-safe via `total_cmp`, index
+/// tie-break for determinism).  Allocation-free: masks and candidate lists
+/// come from `ws`.
+pub(crate) fn top_up_by_loss(
+    view: &BatchView<'_>,
+    r: usize,
+    ws: &mut Workspace,
+    out: &mut Vec<usize>,
+) {
+    let k = view.k();
+    let want = r.min(k);
+    if out.len() >= want {
+        return;
+    }
+    let taken = &mut ws.sel_taken;
+    taken.clear();
+    taken.resize(k, false);
+    for &i in out.iter() {
+        taken[i] = true;
+    }
+    let rest = &mut ws.sel_rest;
+    rest.clear();
+    rest.extend((0..k).filter(|&i| !taken[i]));
+    rest.sort_unstable_by(|&a, &b| view.losses[b].total_cmp(&view.losses[a]).then(a.cmp(&b)));
+    let need = want - out.len();
+    out.extend(rest.iter().copied().take(need));
 }
 
 /// Construct a selector by name (CLI / config entry point).

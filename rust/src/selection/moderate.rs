@@ -5,6 +5,7 @@
 //! (too hard); the middle band balances learnability and information.
 
 use super::{BatchView, Selector};
+use crate::linalg::Workspace;
 
 pub struct Moderate;
 
@@ -13,7 +14,14 @@ impl Selector for Moderate {
         "moderate"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
         let k = view.k();
         let r = r.min(k);
         let g = view.grads;
@@ -57,18 +65,18 @@ impl Selector for Moderate {
             if ds.is_empty() {
                 continue;
             }
-            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ds.sort_unstable_by(f64::total_cmp);
             med[cls] = ds[ds.len() / 2];
         }
         // Rank by |dist − class median| ascending (most moderate first).
-        let mut idx: Vec<usize> = (0..k).collect();
-        idx.sort_by(|&a, &b| {
+        out.clear();
+        out.extend(0..k);
+        out.sort_unstable_by(|&a, &b| {
             let da = (dist[a] - med[view.labels[a] as usize]).abs();
             let db = (dist[b] - med[view.labels[b] as usize]).abs();
-            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+            da.total_cmp(&db).then(a.cmp(&b))
         });
-        idx.truncate(r);
-        idx
+        out.truncate(r);
     }
 }
 

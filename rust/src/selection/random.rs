@@ -2,6 +2,7 @@
 //! re-drawn at every selection refresh.
 
 use super::{BatchView, Selector};
+use crate::linalg::Workspace;
 use crate::rng::Rng;
 
 pub struct RandomSelector {
@@ -19,8 +20,16 @@ impl Selector for RandomSelector {
         "random"
     }
 
-    fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
-        self.rng.choose(view.k(), r.min(view.k()))
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let _ = ws;
+        out.clear();
+        out.extend(self.rng.choose(view.k(), r.min(view.k())));
     }
 }
 

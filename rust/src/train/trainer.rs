@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
 use crate::graft::alignment::AlignmentSample;
 use crate::graft::{AlignmentStats, BudgetedRankPolicy};
+use crate::linalg::Workspace;
 use crate::rng::Rng;
 use crate::runtime::{ConfigSpec, Engine, ModelParams, TrainState};
 use crate::selection::{self, BatchView, Selector};
@@ -177,11 +178,16 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     let mut epoch = 0usize;
     let mut refresh_rng = Rng::new(cfg.seed ^ 0xF5);
     let mut active: Vec<usize> = (0..train.n).collect();
+    // One workspace + selection buffer for the whole run: after the first
+    // refresh window every per-batch selection is allocation-free.
+    let mut ws = Workspace::new();
+    let mut selbuf: Vec<usize> = Vec::new();
     while epoch < cfg.epochs {
         if !is_full {
             active = refresh_subset(
                 engine, cfg, &spec, &train, &state.params, r_budget, &mut baseline,
                 &mut policy, &mut align, &mut meter, &flops, epoch, &mut refresh_rng,
+                &mut ws, &mut selbuf,
             )?;
             if active.is_empty() {
                 bail!("selection produced an empty subset");
@@ -265,6 +271,8 @@ fn refresh_subset(
     flops: &FlopModel,
     epoch: usize,
     rng: &mut Rng,
+    ws: &mut Workspace,
+    selbuf: &mut Vec<usize>,
 ) -> Result<Vec<usize>> {
     let mut active = Vec::new();
     let mut order: Vec<usize> = (0..train.n).collect();
@@ -303,8 +311,8 @@ fn refresh_subset(
             let mut g = crate::graft::GraftSelector::new(
                 crate::graft::BudgetedRankPolicy::strict(cfg.epsilon));
             g.policy.strict_budget = true;
-            let sel = g.select(&view, r_budget);
-            for bi in sel {
+            g.select_into(&view, r_budget, ws, selbuf);
+            for &bi in selbuf.iter() {
                 active.push(rows[bi]);
             }
         } else if cfg.method.starts_with("graft") {
@@ -349,8 +357,11 @@ fn refresh_subset(
                 classes: spec.c,
                 row_ids: rows,
             };
-            let sel = baseline.as_mut().expect("baseline selector").select(&view, r_budget);
-            for bi in sel {
+            baseline
+                .as_mut()
+                .expect("baseline selector")
+                .select_into(&view, r_budget, ws, selbuf);
+            for &bi in selbuf.iter() {
                 active.push(rows[bi]);
             }
         }

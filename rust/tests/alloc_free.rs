@@ -1,0 +1,146 @@
+//! Counting-allocator proof of the PR 1 zero-allocation claim: once the
+//! [`Workspace`] and output buffers have warmed up on one batch, the
+//! steady-state selection loop (`fast_maxvol_with`, `FastMaxVol` and
+//! strict-budget `GraftSelector` via `select_into`) performs no heap
+//! allocations at all.
+//!
+//! A single #[test] keeps the global counter single-writer; the measured
+//! region is retried a few times so an unrelated harness-thread allocation
+//! cannot flake the assertion (a genuine per-call allocation fires on
+//! every attempt and still fails).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use graft::graft::{BudgetedRankPolicy, GraftSelector};
+use graft::linalg::{Mat, Workspace};
+use graft::rng::Rng;
+use graft::selection::maxvol::{fast_maxvol_with, FastMaxVol};
+use graft::selection::{BatchView, Selector};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+/// Run `f` and return the number of allocator calls it triggered,
+/// retrying to shrug off unrelated background allocations.
+fn measured<F: FnMut()>(mut f: F) -> u64 {
+    let mut best = u64::MAX;
+    for _ in 0..3 {
+        let before = allocs();
+        f();
+        let delta = allocs() - before;
+        best = best.min(delta);
+        if best == 0 {
+            break;
+        }
+    }
+    best
+}
+
+struct OwnedView {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    row_ids: Vec<usize>,
+}
+
+impl OwnedView {
+    fn random(k: usize, r: usize, e: usize, seed: u64) -> OwnedView {
+        let mut rng = Rng::new(seed);
+        OwnedView {
+            features: Mat::from_fn(k, r, |_, _| rng.normal()),
+            grads: Mat::from_fn(k, e, |_, _| rng.normal()),
+            losses: (0..k).map(|_| rng.uniform() * 2.0).collect(),
+            labels: (0..k).map(|i| (i % 4) as i32).collect(),
+            preds: (0..k).map(|i| (i % 4) as i32).collect(),
+            row_ids: (0..k).collect(),
+        }
+    }
+
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: 4,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+#[test]
+fn steady_state_selection_is_allocation_free() {
+    let owned = OwnedView::random(256, 16, 24, 7);
+    let mut ws = Workspace::new();
+    let mut out: Vec<usize> = Vec::new();
+
+    // ---- fast_maxvol_with ------------------------------------------------
+    for _ in 0..2 {
+        fast_maxvol_with(&owned.features, 16, &mut ws, &mut out); // warm-up
+    }
+    let d = measured(|| {
+        for _ in 0..10 {
+            fast_maxvol_with(&owned.features, 16, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "fast_maxvol_with allocated {d} times at steady state");
+
+    // ---- FastMaxVol selector with loss top-up ----------------------------
+    let mut sel = FastMaxVol;
+    for _ in 0..2 {
+        sel.select_into(&owned.view(), 32, &mut ws, &mut out); // warm-up (forces top-up)
+    }
+    assert_eq!(out.len(), 32);
+    let d = measured(|| {
+        for _ in 0..10 {
+            sel.select_into(&owned.view(), 32, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "FastMaxVol::select_into allocated {d} times at steady state");
+
+    // ---- strict-budget GraftSelector (full Stage 1 + Stage 2 path) -------
+    let mut g = GraftSelector::new(BudgetedRankPolicy::strict(0.05));
+    for _ in 0..2 {
+        g.select_into(&owned.view(), 48, &mut ws, &mut out); // warm-up
+    }
+    assert_eq!(out.len(), 48);
+    let d = measured(|| {
+        for _ in 0..10 {
+            g.select_into(&owned.view(), 48, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "GraftSelector::select_into allocated {d} times at steady state");
+}

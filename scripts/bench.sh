@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Run the two hot-path benches and collect their rows into BENCH_pr1.json
+# at the repo root (schema graft-bench-v1; see benches/bench_util.rs).
+#
+# Usage: scripts/bench.sh
+# Override the output path with GRAFT_BENCH_JSON=/path/to/file.json.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export GRAFT_BENCH_JSON="${GRAFT_BENCH_JSON:-$PWD/BENCH_pr1.json}"
+
+echo "== building release benches =="
+cargo bench --bench table4_maxvol
+cargo bench --bench runtime_hotpath
+
+echo
+echo "== bench JSON ($GRAFT_BENCH_JSON) =="
+cat "$GRAFT_BENCH_JSON"

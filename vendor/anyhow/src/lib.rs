@@ -1,0 +1,218 @@
+//! Minimal in-tree shim of the `anyhow` API surface this workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Behaviourally faithful where it matters:
+//! - `Error` wraps any `std::error::Error + Send + Sync + 'static` (or a
+//!   plain message) plus a stack of context strings;
+//! - `{e}` displays the outermost context, `{e:#}` the whole chain joined
+//!   with `: ` — matching anyhow's Display/alternate formatting;
+//! - the blanket `From<E>` impl makes `?` work on any std error (which is
+//!   why `Error` itself deliberately does NOT implement `std::error::Error`).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: message / source error + context frames (innermost
+/// first in `frames`, displayed outermost first).
+pub struct Error {
+    /// Context frames, most recently attached last.
+    frames: Vec<String>,
+    /// The root cause, if this error wraps a typed one.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()], source: None }
+    }
+
+    /// Create an error wrapping a typed error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error { frames: Vec::new(), source: Some(Box::new(error)) }
+    }
+
+    /// Attach a context frame (becomes the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.push(context.to_string());
+        self
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause_message(&self) -> String {
+        if let Some(src) = &self.source {
+            src.to_string()
+        } else {
+            self.frames.first().cloned().unwrap_or_default()
+        }
+    }
+
+    /// The chain outermost-first, as anyhow's `chain()` would yield it.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.frames.iter().rev().cloned().collect();
+        if let Some(src) = &self.source {
+            let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(src.as_ref());
+            while let Some(e) = cur {
+                out.push(e.to_string());
+                cur = e.source();
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            // `{:#}` — full chain, colon-joined.
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        match chain.split_first() {
+            Some((head, rest)) if !rest.is_empty() => {
+                writeln!(f, "{head}")?;
+                writeln!(f, "\nCaused by:")?;
+                for (i, c) in rest.iter().enumerate() {
+                    writeln!(f, "    {i}: {c}")?;
+                }
+                Ok(())
+            }
+            Some((head, _)) => write!(f, "{head}"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+/// Marker so `Context` can also be implemented for `Option` without
+/// overlapping the `Result` impl.
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err()
+            .context("loading engine");
+        assert_eq!(format!("{e}"), "loading engine");
+        assert_eq!(format!("{e:#}"), "loading engine: reading manifest: file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing value");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).is_err());
+        assert!(f(11).is_err());
+        let e = anyhow!("plain {}", 3);
+        assert_eq!(format!("{e}"), "plain 3");
+    }
+}

@@ -1,0 +1,239 @@
+//! Offline stub of the PJRT/XLA binding surface `graft::runtime` consumes.
+//!
+//! The real bindings (PJRT C API over a CPU plugin) are not available in
+//! this build environment, so this crate provides the exact types and
+//! signatures the runtime layer compiles against.  [`PjRtClient::cpu`]
+//! returns an error, which every caller in the workspace already handles
+//! by skipping runtime-dependent work (benches, integration tests, and
+//! `Engine::new` callers all degrade gracefully with a "run `make
+//! artifacts`"-style message).
+//!
+//! Host-side [`Literal`] construction and conversion are implemented for
+//! real (they are pure data plumbing and unit-tested in `runtime::exec`);
+//! only device compilation/execution is unavailable.
+
+use std::fmt;
+
+/// Error type for every fallible stub operation.
+#[derive(Debug)]
+pub struct XlaError {
+    message: String,
+}
+
+impl XlaError {
+    fn new(message: impl Into<String>) -> Self {
+        XlaError { message: message.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.message)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types literals can carry. Sealed to the two the runtime uses.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Elements {
+    fn len(&self) -> usize {
+        match self {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Conversion trait tying native Rust types to literal payloads.
+pub trait NativeType: Sized {
+    fn wrap(data: &[Self]) -> Elements;
+    fn unwrap(e: &Elements) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Elements {
+        Elements::F32(data.to_vec())
+    }
+    fn unwrap(e: &Elements) -> Result<Vec<Self>> {
+        match e {
+            Elements::F32(v) => Ok(v.clone()),
+            Elements::I32(_) => Err(XlaError::new("literal holds i32, requested f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Elements {
+        Elements::I32(data.to_vec())
+    }
+    fn unwrap(e: &Elements) -> Result<Vec<Self>> {
+        match e {
+            Elements::I32(v) => Ok(v.clone()),
+            Elements::F32(_) => Err(XlaError::new("literal holds f32, requested i32")),
+        }
+    }
+}
+
+/// A host literal: flat payload + logical dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Elements,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let wrapped = T::wrap(data);
+        let n = wrapped.len() as i64;
+        Literal { data: wrapped, dims: vec![n] }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: Elements::F32(vec![v]), dims: vec![] }
+    }
+
+    /// Reinterpret with new dimensions; errors if the element count differs.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(XlaError::new(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples (no
+    /// execution path), so this only errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::new("stub literals are never tuples"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: retains only the source path).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text file. The stub verifies the file exists so error
+    /// messages stay actionable, then defers failure to compile time.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(XlaError::new(format!("no such HLO file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// Computation wrapper around a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// Device buffer handle returned by execution (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new("PJRT runtime not available in this build"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new("PJRT runtime not available in this build"))
+    }
+}
+
+/// PJRT client. The stub cannot create one: callers see a clean error and
+/// skip runtime-dependent paths.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(
+            "PJRT runtime not available: this workspace was built against the \
+             offline xla stub (vendor/xla); install the real PJRT bindings and \
+             point the `xla` path dependency at them to enable execution",
+        ))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new("PJRT runtime not available in this build"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let l = Literal::vec1(&[0.0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert_eq!(l.reshape(&[3, 2]).unwrap().dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Literal::scalar(2.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+}
