@@ -8,6 +8,15 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+/// True when `GRAFT_BENCH_SMOKE` is set (and not "0"): benches shrink
+/// shapes and repetition counts to CI-smoke sizes.  Smoke runs exist to
+/// validate that every bench still executes and emits schema-conformant
+/// `graft-bench-v1` rows (see `scripts/validate_bench.py`), not to
+/// produce meaningful timings.
+pub fn smoke_mode() -> bool {
+    std::env::var("GRAFT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 /// Time `f` with warmups, returning (mean_s, std_s, min_s) over `reps`.
 pub fn time_it<F: FnMut()>(warmups: usize, reps: usize, mut f: F) -> (f64, f64, f64) {
     for _ in 0..warmups {

@@ -8,12 +8,13 @@
 
 mod bench_util;
 
-use bench_util::{report, time_it, JsonSink};
+use bench_util::{report, smoke_mode, time_it, JsonSink};
 use graft::rng::Rng;
 use graft::runtime::{default_dir, Engine, TrainState};
 
 fn main() -> anyhow::Result<()> {
     let mut sink = JsonSink::new("runtime_hotpath");
+    let (warm, reps) = if smoke_mode() { (1, 2) } else { (3, 20) };
     let mut engine = match Engine::new(default_dir()) {
         Ok(e) => e,
         Err(e) => {
@@ -37,19 +38,19 @@ fn main() -> anyhow::Result<()> {
     let shape = format!("K={},D={},Rmax={}", spec.k, spec.d, spec.rmax);
 
     let params = state.params.clone();
-    let t = time_it(3, 20, || {
+    let t = time_it(warm, reps, || {
         engine.embed(config, &params, &x, &y).unwrap();
     });
     report("embed (features+sketches)", t.0, t.1, t.2);
     sink.record("embed", &shape, t);
 
-    let t = time_it(3, 20, || {
+    let t = time_it(warm, reps, || {
         engine.select(config, &params, &x, &y).unwrap();
     });
     report("select (L1 Pallas maxvol+proj)", t.0, t.1, t.2);
     sink.record("select", &shape, t);
 
-    let t = time_it(3, 20, || {
+    let t = time_it(warm, reps, || {
         engine.eval_step(config, &params, &x, &y).unwrap();
     });
     report("eval_step", t.0, t.1, t.2);
@@ -59,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         let xb = x[..bucket * spec.d].to_vec();
         let yb = y[..bucket * spec.c].to_vec();
         let w = vec![1.0 / bucket as f32; bucket];
-        let t = time_it(3, 20, || {
+        let t = time_it(warm, reps, || {
             engine
                 .train_step(config, bucket, &mut state, &xb, &yb, &w, 0.01, 0.9)
                 .unwrap();

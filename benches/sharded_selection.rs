@@ -1,0 +1,80 @@
+//! Sharded selection bench: single-shot Fast MaxVol selection vs the
+//! `ShardedSelector` fan-out + hierarchical MaxVol merge at shards ∈
+//! {2, 4, 8}, plus the flat-merge reference shape.  Rows land in
+//! `BENCH_pr1.json` (schema `graft-bench-v1`) next to the PR 1 kernel
+//! rows so later scaling PRs can track the fan-out overhead/crossover.
+//!
+//! Run: `cargo bench --bench sharded_selection` (or `scripts/bench.sh`).
+//! `GRAFT_BENCH_SMOKE=1` shrinks shapes/reps to CI-smoke sizes.
+
+mod bench_util;
+
+use bench_util::{report, smoke_mode, time_it, JsonSink};
+use graft::coordinator::{MergePolicy, ShardedSelector};
+use graft::linalg::{Mat, Workspace};
+use graft::rng::Rng;
+use graft::selection::maxvol::FastMaxVol;
+use graft::selection::{BatchView, Selector};
+
+fn main() {
+    let mut sink = JsonSink::new("sharded_selection");
+    let (k, rc, e, r, warm, reps) =
+        if smoke_mode() { (256, 16, 16, 32, 1, 3) } else { (8192, 64, 64, 512, 2, 10) };
+
+    let mut rng = Rng::new(11);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % 10) as i32).collect();
+    let preds = labels.clone();
+    let row_ids: Vec<usize> = (0..k).collect();
+    let view = BatchView {
+        features: &features,
+        grads: &grads,
+        losses: &losses,
+        labels: &labels,
+        preds: &preds,
+        classes: 10,
+        row_ids: &row_ids,
+    };
+    let shape = format!("K={k},R={rc},r={r}");
+    println!("== sharded selection (K={k}, R={rc}, r={r}) ==\n");
+
+    let mut ws = Workspace::new();
+    let mut out: Vec<usize> = Vec::new();
+
+    let mut single = FastMaxVol;
+    let t = time_it(warm, reps, || {
+        single.select_into(&view, r, &mut ws, &mut out);
+    });
+    report("single-shot select (shards=1)", t.0, t.1, t.2);
+    sink.record("select_single", &shape, t);
+    let baseline = out.clone();
+
+    for shards in [2usize, 4, 8] {
+        let mut sel = ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, |_| {
+            Box::new(FastMaxVol)
+        });
+        let t = time_it(warm, reps, || {
+            sel.select_into(&view, r, &mut ws, &mut out);
+        });
+        report(&format!("sharded select (shards={shards}, hierarchical)"), t.0, t.1, t.2);
+        sink.record("select_sharded", &format!("{shape},shards={shards}"), t);
+        assert_eq!(out.len(), baseline.len(), "sharded selection broke the budget contract");
+    }
+
+    // Flat merge at the widest fan-out: the single big second-stage MaxVol
+    // the tournament tree avoids.
+    let mut flat =
+        ShardedSelector::from_factory(8, MergePolicy::Flat, |_| Box::new(FastMaxVol));
+    let t = time_it(warm, reps, || {
+        flat.select_into(&view, r, &mut ws, &mut out);
+    });
+    report("sharded select (shards=8, flat merge)", t.0, t.1, t.2);
+    sink.record("select_sharded_flat", &format!("{shape},shards=8"), t);
+
+    match sink.write() {
+        Ok(path) => println!("\nbench JSON → {}", path.display()),
+        Err(e) => eprintln!("\nWARN could not write bench JSON: {e}"),
+    }
+}

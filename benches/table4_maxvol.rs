@@ -8,7 +8,7 @@
 
 mod bench_util;
 
-use bench_util::{black_box, report, time_it, JsonSink};
+use bench_util::{black_box, report, smoke_mode, time_it, JsonSink};
 use graft::data::iris::iris;
 use graft::features::{FeatureExtractor, SvdFeatures};
 use graft::linalg::{subspace_similarity_normalised, svd, Mat, Workspace};
@@ -20,26 +20,27 @@ use graft::selection::maxvol::{
 
 fn main() {
     let mut sink = JsonSink::new("table4_maxvol");
+    let smoke = smoke_mode();
     let ds = iris();
     let r = 3; // r = d would be degenerate: any independent 4 rows span R^4
     let x = Mat::from_fn(ds.n, ds.d, |i, j| ds.row(i)[j] as f64);
     let feats = SvdFeatures.extract(&x, r);
 
     println!("== Table 4: Fast MaxVol vs CrossMaxVol (Iris, R = {r}) ==\n");
-    let t_fast = time_it(10, 200, || {
+    let t_fast = time_it(10, if smoke { 20 } else { 200 }, || {
         black_box(fast_maxvol(&feats, r));
     });
     report("fast_maxvol (ours)", t_fast.0, t_fast.1, t_fast.2);
     sink.record("fast_maxvol", "iris:K=150,R=3", t_fast);
 
     let cm = CrossMaxVol::default();
-    let t_cross = time_it(5, 100, || {
+    let t_cross = time_it(5, if smoke { 10 } else { 100 }, || {
         black_box(cm.select_rows(&x, r));
     });
     report("cross_maxvol (Cross-2D baseline)", t_cross.0, t_cross.1, t_cross.2);
     sink.record("cross_maxvol", "iris:K=150,R=3", t_cross);
 
-    let t_conv = time_it(5, 50, || {
+    let t_conv = time_it(5, if smoke { 10 } else { 50 }, || {
         black_box(conventional_maxvol(&feats, r, 1.01, 100));
     });
     report("conventional_maxvol (Sherman-Morrison)", t_conv.0, t_conv.1, t_conv.2);
@@ -62,64 +63,72 @@ fn main() {
         sim(&p_cross)
     );
 
-    // ---- batch-scale selection (K = 2048, R = 64): the PR 1 headline ----
-    println!("\n-- batch-scale selection (K = 2048, R = 64) --");
+    // ---- batch-scale selection: the PR 1 headline -----------------------
+    let (bk, br, breps) = if smoke { (256usize, 32usize, 3usize) } else { (2048, 64, 20) };
+    let big_shape = format!("K={bk},R={br}");
+    println!("\n-- batch-scale selection (K = {bk}, R = {br}) --");
     let mut rng = graft::rng::Rng::new(9);
-    let big = Mat::from_fn(2048, 64, |_, _| rng.normal());
+    let big = Mat::from_fn(bk, br, |_, _| rng.normal());
     let mut ws = Workspace::new();
-    let mut out: Vec<usize> = Vec::with_capacity(64);
-    let t_ws = time_it(3, 20, || {
-        fast_maxvol_with(&big, 64, &mut ws, &mut out);
+    let mut out: Vec<usize> = Vec::with_capacity(br);
+    let t_ws = time_it(3, breps, || {
+        fast_maxvol_with(&big, br, &mut ws, &mut out);
         black_box(out.len());
     });
-    report("fast_maxvol K=2048 R=64 (workspace)", t_ws.0, t_ws.1, t_ws.2);
-    sink.record("fast_maxvol", "K=2048,R=64", t_ws);
+    report(&format!("fast_maxvol K={bk} R={br} (workspace)"), t_ws.0, t_ws.1, t_ws.2);
+    sink.record("fast_maxvol", &big_shape, t_ws);
 
-    let t_ref = time_it(3, 20, || {
-        black_box(fast_maxvol_reference(&big, 64));
+    let t_ref = time_it(3, breps, || {
+        black_box(fast_maxvol_reference(&big, br));
     });
-    report("fast_maxvol K=2048 R=64 (pre-PR ref)", t_ref.0, t_ref.1, t_ref.2);
-    sink.record("fast_maxvol_reference", "K=2048,R=64", t_ref);
+    report(&format!("fast_maxvol K={bk} R={br} (pre-PR ref)"), t_ref.0, t_ref.1, t_ref.2);
+    sink.record("fast_maxvol_reference", &big_shape, t_ref);
     println!("speedup vs pre-PR reference: {:.2}x", t_ref.0 / t_ws.0);
 
     // Conventional MaxVol at batch scale: Sherman-Morrison vs re-inversion.
-    let t_sm = time_it(2, 10, || {
-        black_box(conventional_maxvol(&big, 32, 1.01, 100));
+    let cr = br / 2;
+    let conv_shape = format!("K={bk},r={cr}");
+    let t_sm = time_it(2, breps.min(10), || {
+        black_box(conventional_maxvol(&big, cr, 1.01, 100));
     });
-    report("conventional_maxvol K=2048 r=32 (SM)", t_sm.0, t_sm.1, t_sm.2);
-    sink.record("conventional_maxvol", "K=2048,r=32", t_sm);
-    let t_re = time_it(2, 10, || {
-        black_box(conventional_maxvol_reference(&big, 32, 1.01, 100));
+    report(&format!("conventional_maxvol K={bk} r={cr} (SM)"), t_sm.0, t_sm.1, t_sm.2);
+    sink.record("conventional_maxvol", &conv_shape, t_sm);
+    let t_re = time_it(2, breps.min(10), || {
+        black_box(conventional_maxvol_reference(&big, cr, 1.01, 100));
     });
-    report("conventional_maxvol K=2048 r=32 (ref)", t_re.0, t_re.1, t_re.2);
-    sink.record("conventional_maxvol_reference", "K=2048,r=32", t_re);
+    report(&format!("conventional_maxvol K={bk} r={cr} (ref)"), t_re.0, t_re.1, t_re.2);
+    sink.record("conventional_maxvol_reference", &conv_shape, t_re);
 
     // ---- blocked linalg kernels vs scalar references --------------------
-    println!("\n-- blocked kernels (512x256 · 256x512) --");
-    let a = Mat::from_fn(512, 256, |_, _| rng.normal());
-    let b = Mat::from_fn(256, 512, |_, _| rng.normal());
-    let t_mm = time_it(2, 10, || {
+    let (mm, mk, mn) = if smoke { (128usize, 64usize, 128usize) } else { (512, 256, 512) };
+    let mm_shape = format!("{mm}x{mk}x{mn}");
+    println!("\n-- blocked kernels ({mm}x{mk} · {mk}x{mn}) --");
+    let a = Mat::from_fn(mm, mk, |_, _| rng.normal());
+    let b = Mat::from_fn(mk, mn, |_, _| rng.normal());
+    let t_mm = time_it(2, breps.min(10), || {
         black_box(a.matmul(&b).rows());
     });
     report("matmul (blocked+threaded)", t_mm.0, t_mm.1, t_mm.2);
-    sink.record("matmul", "512x256x512", t_mm);
-    let t_mn = time_it(2, 10, || {
+    sink.record("matmul", &mm_shape, t_mm);
+    let t_mn = time_it(2, breps.min(10), || {
         black_box(a.matmul_naive(&b).rows());
     });
     report("matmul (pre-PR naive)", t_mn.0, t_mn.1, t_mn.2);
-    sink.record("matmul_naive", "512x256x512", t_mn);
+    sink.record("matmul_naive", &mm_shape, t_mn);
 
-    let g = Mat::from_fn(2048, 128, |_, _| rng.normal());
-    let t_gb = time_it(2, 10, || {
+    let (gk, gr) = if smoke { (256usize, 64usize) } else { (2048, 128) };
+    let g_shape = format!("{gk}x{gr}");
+    let g = Mat::from_fn(gk, gr, |_, _| rng.normal());
+    let t_gb = time_it(2, breps.min(10), || {
         black_box(g.gram().rows());
     });
-    report("gram 2048x128 (blocked+threaded)", t_gb.0, t_gb.1, t_gb.2);
-    sink.record("gram", "2048x128", t_gb);
-    let t_gn = time_it(2, 10, || {
+    report(&format!("gram {gk}x{gr} (blocked+threaded)"), t_gb.0, t_gb.1, t_gb.2);
+    sink.record("gram", &g_shape, t_gb);
+    let t_gn = time_it(2, breps.min(10), || {
         black_box(g.gram_naive().rows());
     });
-    report("gram 2048x128 (pre-PR naive)", t_gn.0, t_gn.1, t_gn.2);
-    sink.record("gram_naive", "2048x128", t_gn);
+    report(&format!("gram {gk}x{gr} (pre-PR naive)"), t_gn.0, t_gn.1, t_gn.2);
+    sink.record("gram_naive", &g_shape, t_gn);
 
     match sink.write() {
         Ok(path) => println!("\nbench JSON → {}", path.display()),

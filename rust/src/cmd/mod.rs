@@ -43,6 +43,7 @@ COMMANDS
   train                     one training run
                             --dataset D --method M --fraction F --epochs N
                             [--adaptive-rank] [--epsilon E] [--seed S]
+                            [--shards N] [--merge hierarchical|flat]
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]
   fig2                      alignment heatmap / rank trend / class hist

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::MergePolicy;
 use crate::train::TrainConfig;
 
 /// Parsed command line: subcommand + options.
@@ -119,6 +120,12 @@ impl Args {
             warm_epochs: self.usize_or("warm-epochs", d.warm_epochs)?,
             adaptive_rank: self.flag("adaptive-rank"),
             extractor: self.opt("extractor"),
+            shards: self.usize_or("shards", d.shards)?,
+            merge: {
+                let s = self.get_or("merge", d.merge.name());
+                MergePolicy::parse(&s)
+                    .with_context(|| format!("unknown merge policy '{s}' (hierarchical|flat)"))?
+            },
             seed: self.u64_or("seed", d.seed)?,
         })
     }

@@ -1,0 +1,198 @@
+//! Second-stage merge for sharded selection: fold the per-shard winner
+//! lists into one subset whose feature rows still dominate the spanned
+//! subspace, CRAIG-style select-then-merge (Mirzasoleiman et al.) with
+//! MaxVol as the reduction operator.
+//!
+//! The default [`MergePolicy::Hierarchical`] is a tournament tree: winner
+//! lists are folded pairwise, so every second-stage Fast MaxVol sees at
+//! most `2·keep` candidate rows and peak memory stays O(shards · keep)
+//! rather than O(n).  [`MergePolicy::Flat`] runs one MaxVol over the full
+//! concatenation — same result class, larger single reduction — and is
+//! kept as the reference shape for the property tests and the bench.
+
+use crate::linalg::{Mat, Workspace};
+use crate::selection::maxvol::fast_maxvol_with;
+use crate::selection::BatchView;
+
+/// How per-shard winners are folded into the final subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergePolicy {
+    /// Tournament tree: fold winner lists pairwise until one remains.
+    #[default]
+    Hierarchical,
+    /// Single second-stage MaxVol over the concatenation of all winners.
+    Flat,
+}
+
+impl MergePolicy {
+    /// Parse a CLI / config spelling.
+    pub fn parse(s: &str) -> Option<MergePolicy> {
+        match s {
+            "hierarchical" | "tournament" => Some(MergePolicy::Hierarchical),
+            "flat" => Some(MergePolicy::Flat),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MergePolicy::Hierarchical => "hierarchical",
+            MergePolicy::Flat => "flat",
+        }
+    }
+}
+
+/// Reusable scratch for the merge stage (one per `ShardedSelector`): the
+/// candidate union, its gathered feature rows, the MaxVol pivot order,
+/// and the tournament's ping-pong winner lists.  Buffers are cleared and
+/// refilled per merge node, so capacity is retained across refreshes and
+/// steady-state merging performs no heap allocations.
+#[derive(Default)]
+pub struct MergeScratch {
+    /// Candidate union (batch-local row ids), in shard order.
+    union: Vec<usize>,
+    /// Row-gathered candidate features (|union| × R).
+    feat: Vec<f64>,
+    /// MaxVol pivot order over the union (union-local indices).
+    local: Vec<usize>,
+    /// Current-round winner lists (ping side).
+    lists: Vec<Vec<usize>>,
+    /// Next-round winner lists (pong side); swapped with `lists` per round.
+    next: Vec<Vec<usize>>,
+}
+
+/// Fold the per-shard winner lists (disjoint batch-local row ids, one list
+/// per shard in shard order) into at most `keep` rows written to `out`.
+/// Winner lists arrive as an exact-size iterator of slices so callers can
+/// stream them straight out of their worker slots without collecting.
+///
+/// Deterministic: the result is a pure function of `(view, winners, keep,
+/// policy)` — the tournament pairing is fixed by list order, so worker
+/// interleaving during the fan-out stage cannot change it.
+pub fn merge_winners<'a, I>(
+    view: &BatchView<'_>,
+    winners: I,
+    keep: usize,
+    policy: MergePolicy,
+    ws: &mut Workspace,
+    scratch: &mut MergeScratch,
+    out: &mut Vec<usize>,
+) where
+    I: IntoIterator<Item = &'a [usize]>,
+    I::IntoIter: ExactSizeIterator,
+{
+    out.clear();
+    let it = winners.into_iter();
+    let count = it.len();
+    if count == 0 {
+        return;
+    }
+    if count == 1 {
+        for w in it {
+            out.extend_from_slice(w);
+        }
+        out.truncate(keep);
+        return;
+    }
+    // Split the scratch into its disjoint buffers so the tournament can
+    // hold the list arrays while reduce_union fills the union/feat/local
+    // ones.
+    let MergeScratch { union, feat, local, lists, next } = scratch;
+    match policy {
+        MergePolicy::Flat => {
+            union.clear();
+            for w in it {
+                union.extend_from_slice(w);
+            }
+            reduce_union(view, keep, ws, union, feat, local, out);
+        }
+        MergePolicy::Hierarchical => {
+            // Seed round: copy the winner slices into retained buffers.
+            if lists.len() < count {
+                lists.resize_with(count, Vec::new);
+            }
+            for (dst, w) in lists.iter_mut().zip(it) {
+                dst.clear();
+                dst.extend_from_slice(w);
+            }
+            let mut cur = count;
+            while cur > 1 {
+                let folded = cur.div_ceil(2);
+                if next.len() < folded {
+                    next.resize_with(folded, Vec::new);
+                }
+                for pi in 0..folded {
+                    if 2 * pi + 1 == cur {
+                        // Odd list passes through to the next round.
+                        let (a, b) = (&lists[2 * pi], &mut next[pi]);
+                        b.clear();
+                        b.extend_from_slice(a);
+                        continue;
+                    }
+                    union.clear();
+                    union.extend_from_slice(&lists[2 * pi]);
+                    union.extend_from_slice(&lists[2 * pi + 1]);
+                    reduce_union(view, keep, ws, union, feat, local, &mut next[pi]);
+                }
+                std::mem::swap(lists, next);
+                cur = folded;
+            }
+            out.extend_from_slice(&lists[0]);
+        }
+    }
+}
+
+/// One merge node: keep at most `keep` of the candidate rows in `union`
+/// (unique batch-local ids).  Fast MaxVol over the gathered candidate
+/// features picks up to `min(keep, R)` rows; any remaining budget is
+/// topped up with the highest-loss leftover candidates (loss-descending,
+/// id-ascending — the same NaN-safe rule as `selection::top_up_by_loss`,
+/// restricted to the union).  `feat`/`local` are retained scratch from
+/// [`MergeScratch`].
+fn reduce_union(
+    view: &BatchView<'_>,
+    keep: usize,
+    ws: &mut Workspace,
+    union: &[usize],
+    feat: &mut Vec<f64>,
+    local: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    let n = union.len();
+    if n <= keep {
+        out.extend_from_slice(union);
+        return;
+    }
+    let rcols = view.features.cols();
+    feat.clear();
+    for &i in union {
+        feat.extend_from_slice(view.features.row(i));
+    }
+    let width = keep.min(rcols).min(n);
+    let fmat = Mat::from_vec(n, rcols, std::mem::take(feat));
+    fast_maxvol_with(&fmat, width, ws, local);
+    *feat = fmat.into_vec();
+    for &li in local.iter() {
+        out.push(union[li]);
+    }
+    if out.len() >= keep {
+        return;
+    }
+    // keep beyond the feature rank: top up within the union by loss.
+    let taken = &mut ws.sel_taken;
+    taken.clear();
+    taken.resize(n, false);
+    for &li in local.iter() {
+        taken[li] = true;
+    }
+    let rest = &mut ws.sel_rest;
+    rest.clear();
+    rest.extend((0..n).filter(|&li| !taken[li]));
+    rest.sort_unstable_by(|&a, &b| {
+        let (ra, rb) = (union[a], union[b]);
+        view.losses[rb].total_cmp(&view.losses[ra]).then(ra.cmp(&rb))
+    });
+    let need = keep - out.len();
+    out.extend(rest.iter().take(need).map(|&li| union[li]));
+}

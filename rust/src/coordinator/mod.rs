@@ -3,11 +3,22 @@
 //! producer thread and hands prepared buffers to the engine thread over a
 //! bounded channel — backpressure keeps memory flat, and the engine never
 //! waits on host-side encoding (the L3 hot-path optimisation in §Perf).
+//!
+//! Since PR 2 the coordinator also owns the **sharded selection
+//! pipeline**: [`ShardedSelector`] fans a batch across worker shards
+//! ([`shard`]) and folds the per-shard winners with a hierarchical MaxVol
+//! merge ([`merge`]), and [`FanOutProducer`] generalises the single
+//! producer thread to a multi-worker fan-out.  See `README.md` in this
+//! directory for the dataflow and the test matrix that pins it.
 
+pub mod merge;
 pub mod pipeline;
 pub mod scheduler;
+pub mod shard;
 pub mod state;
 
-pub use pipeline::{BatchProducer, PreparedBatch};
+pub use merge::{merge_winners, MergePolicy};
+pub use pipeline::{BatchProducer, FanOutProducer, PreparedBatch};
 pub use scheduler::RefreshScheduler;
+pub use shard::{shard_ranges, shard_ranges_into, ShardedSelector, SHARD_PAR_MIN_K};
 pub use state::SubsetState;

@@ -5,6 +5,15 @@
 //! into a `sync_channel(depth)`.  The consumer (engine thread) pops
 //! prepared batches and runs `train_step` — overlap hides the host-side
 //! encoding latency.  Dropping the producer handle stops the thread.
+//!
+//! [`FanOutProducer`] generalises this to N assembly workers over disjoint
+//! row partitions, zipped back into one deterministic seq-ordered stream.
+//!
+//! Shutdown contract (pinned by the regression tests below): dropping a
+//! producer handle signals stop, drains the channel so a blocked `send`
+//! unblocks, and **joins** every worker thread — no leaked threads or
+//! senders, whether the consumer finished, timed out in
+//! [`BatchProducer::next_timeout`], or dropped the handle mid-stream.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::thread::JoinHandle;
@@ -79,10 +88,117 @@ impl BatchProducer {
 
 impl Drop for BatchProducer {
     fn drop(&mut self) {
+        // Order matters: signal stop *before* draining, so a producer that
+        // unblocks from `send` observes the stop on its next loop
+        // iteration instead of racing ahead and refilling the channel.
         let _ = self.stop.try_send(());
         // Drain so a blocked send unblocks, then join.
         while self.rx.try_recv().is_ok() {}
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Multi-worker fan-out producer: `workers` assembly threads over disjoint
+/// strided row partitions, merged back into one deterministic seq-ordered
+/// stream.  Worker `w` owns rows `{w, w+N, w+2N, …}` of `dataset` and
+/// assembles exactly the batches with `seq ≡ w (mod N)`, so
+/// [`FanOutProducer::next`] round-robins the receivers and the output
+/// order is 0, 1, 2, … with per-worker backpressure of `depth`.
+///
+/// With `workers == 1` the stream is identical to [`BatchProducer`] with
+/// the same arguments (pinned by a test).  Epochs are tracked per worker
+/// over its own partition.
+pub struct FanOutProducer {
+    rxs: Vec<Receiver<PreparedBatch>>,
+    handles: Vec<JoinHandle<()>>,
+    stops: Vec<SyncSender<()>>,
+    next_seq: usize,
+    total: usize,
+}
+
+impl FanOutProducer {
+    /// Spawn `workers` producer threads emitting `total` batches of size
+    /// `bucket` overall.  `workers` is clamped so every partition holds at
+    /// least one full bucket (and never exceeds `total`).
+    pub fn spawn(
+        dataset: Dataset,
+        bucket: usize,
+        total: usize,
+        depth: usize,
+        seed: u64,
+        workers: usize,
+    ) -> FanOutProducer {
+        assert!(bucket <= dataset.n, "bucket {} > dataset {}", bucket, dataset.n);
+        let workers = workers.clamp(1, (dataset.n / bucket).max(1)).min(total.max(1));
+        let mut rxs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        let mut stops = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = sync_channel::<PreparedBatch>(depth.max(1));
+            let (stop_tx, stop_rx) = sync_channel::<()>(1);
+            let part: Vec<usize> = (w..dataset.n).step_by(workers).collect();
+            let sub = dataset.subset("shard", &part);
+            // Worker 0 keeps the base seed so workers == 1 reproduces the
+            // single-producer stream exactly.
+            let wseed = seed ^ (w as u64).wrapping_mul(0xA24BAED4963EE407);
+            let handle = std::thread::spawn(move || {
+                let mut batcher = Batcher::new(&sub, bucket, wseed);
+                let mut seq = w;
+                while seq < total {
+                    if stop_rx.try_recv().is_ok() {
+                        return;
+                    }
+                    let local: Vec<usize> = batcher.next_batch().to_vec();
+                    let batch = PreparedBatch {
+                        x: sub.gather(&local),
+                        y1h: sub.one_hot(&local),
+                        w: vec![1.0 / local.len() as f32; local.len()],
+                        epoch: batcher.epoch(),
+                        rows: local.iter().map(|&i| part[i]).collect(),
+                        seq,
+                    };
+                    if tx.send(batch).is_err() {
+                        return; // consumer dropped
+                    }
+                    seq += workers;
+                }
+            });
+            rxs.push(rx);
+            handles.push(handle);
+            stops.push(stop_tx);
+        }
+        FanOutProducer { rxs, handles, stops, next_seq: 0, total }
+    }
+
+    /// Next prepared batch in global seq order (None when exhausted).
+    pub fn next(&mut self) -> Option<PreparedBatch> {
+        if self.next_seq >= self.total {
+            return None;
+        }
+        let b = self.rxs[self.next_seq % self.rxs.len()].recv().ok()?;
+        debug_assert_eq!(b.seq, self.next_seq, "fan-out stream out of order");
+        self.next_seq += 1;
+        Some(b)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rxs.len()
+    }
+}
+
+impl Drop for FanOutProducer {
+    fn drop(&mut self) {
+        // Same shutdown dance as BatchProducer, once per worker: stop
+        // first, drain to unblock any in-flight send, then join all.
+        for stop in &self.stops {
+            let _ = stop.try_send(());
+        }
+        for rx in &self.rxs {
+            while rx.try_recv().is_ok() {}
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -171,5 +287,117 @@ mod tests {
             std::iter::from_fn(|| p.next()).map(|b| b.rows).collect()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_mid_stream_joins_worker() {
+        // Shutdown audit: consume a few batches of a long stream, then
+        // drop while the producer is blocked on a full channel.  Drop must
+        // signal stop, drain, and join — returning at all is the
+        // assertion (a leaked blocked thread would hang the join).
+        let mut p = BatchProducer::spawn(ds(64, 2, 2), 8, 1_000_000, 2, 11);
+        for _ in 0..3 {
+            assert!(p.next().is_some());
+        }
+        drop(p);
+    }
+
+    #[test]
+    fn next_timeout_expiry_then_drop_is_clean() {
+        // A timed-out consumer must still shut the producer down cleanly:
+        // no leaked sender keeps the worker alive after the handle drops.
+        // The first assembly (100k-row shuffle + 8k-row gather) takes far
+        // longer than the 1ns budget, so the recv reliably times out.
+        let mut p = BatchProducer::spawn(ds(100_000, 4, 2), 8192, 1_000_000, 1, 12);
+        let r = p.next_timeout(Duration::from_nanos(1));
+        assert!(matches!(r, Err(RecvTimeoutError::Timeout)), "got {r:?}");
+        drop(p); // must join, not hang
+    }
+
+    // ---- FanOutProducer ---------------------------------------------------
+
+    #[test]
+    fn fanout_produces_total_in_seq_order() {
+        for workers in [1usize, 2, 3, 4] {
+            let mut p = FanOutProducer::spawn(ds(64, 3, 2), 8, 12, 2, 21, workers);
+            let mut seqs = Vec::new();
+            while let Some(b) = p.next() {
+                assert_eq!(b.rows.len(), 8);
+                assert_eq!(b.x.len(), 8 * 3);
+                seqs.push(b.seq);
+            }
+            assert_eq!(seqs, (0..12).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fanout_batches_match_dataset_content() {
+        let data = ds(60, 4, 3);
+        let mut p = FanOutProducer::spawn(data.clone(), 6, 9, 2, 22, 3);
+        while let Some(b) = p.next() {
+            for (k, &row) in b.rows.iter().enumerate() {
+                assert_eq!(&b.x[k * 4..(k + 1) * 4], data.row(row), "gather mismatch");
+                let cls = data.y[row] as usize;
+                assert_eq!(b.y1h[k * 3 + cls], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_partitions_are_disjoint_within_worker_epoch() {
+        // Each worker walks its own strided partition without repeats
+        // inside an epoch, so one full fan-out epoch covers the dataset.
+        let n = 64;
+        let workers = 4;
+        let mut p = FanOutProducer::spawn(ds(n, 2, 2), 4, 16, 2, 23, workers);
+        let mut seen = Vec::new();
+        while let Some(b) = p.next() {
+            assert_eq!(b.epoch, 0);
+            seen.extend(b.rows);
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n);
+    }
+
+    #[test]
+    fn fanout_single_worker_matches_batch_producer() {
+        let take = |mut f: Box<dyn FnMut() -> Option<PreparedBatch>>| -> Vec<(usize, Vec<usize>)> {
+            std::iter::from_fn(move || f()).map(|b| (b.seq, b.rows)).collect()
+        };
+        let a = {
+            let mut p = BatchProducer::spawn(ds(32, 2, 2), 8, 6, 2, 7);
+            take(Box::new(move || p.next()))
+        };
+        let b = {
+            let mut p = FanOutProducer::spawn(ds(32, 2, 2), 8, 6, 2, 7, 1);
+            take(Box::new(move || p.next()))
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fanout_deterministic_given_seed() {
+        let run = || -> Vec<Vec<usize>> {
+            let mut p = FanOutProducer::spawn(ds(48, 2, 2), 8, 9, 2, 31, 3);
+            std::iter::from_fn(move || p.next()).map(|b| b.rows).collect()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fanout_drop_mid_stream_joins_all_workers() {
+        let mut p = FanOutProducer::spawn(ds(64, 2, 2), 8, 1_000_000, 2, 24, 4);
+        for _ in 0..5 {
+            assert!(p.next().is_some());
+        }
+        drop(p); // must join all four workers, not hang
+    }
+
+    #[test]
+    fn fanout_clamps_workers_to_partition_capacity() {
+        // 32 rows / bucket 16 → at most 2 workers can hold a full bucket.
+        let p = FanOutProducer::spawn(ds(32, 2, 2), 16, 4, 2, 25, 8);
+        assert_eq!(p.workers(), 2);
     }
 }

@@ -68,6 +68,63 @@ mod tests {
     }
 
     #[test]
+    fn period_zero_is_clamped_to_one() {
+        // Period 0 would mean "refresh forever at the same step"; the
+        // constructor clamps it to every-step refresh instead.
+        let mut s = RefreshScheduler::every_steps(0);
+        assert_eq!(s.period(), 1);
+        s.mark(0);
+        assert!(s.due(1));
+    }
+
+    #[test]
+    fn period_one_refreshes_every_step() {
+        let mut s = RefreshScheduler::every_steps(1);
+        for step in 0..10 {
+            assert!(s.due(step), "step {step}");
+            s.mark(step);
+            assert!(!s.due(step), "marked step {step} must not re-trigger");
+        }
+    }
+
+    #[test]
+    fn epoch_constructor_zero_args_clamp() {
+        // Both zero epochs and zero steps-per-epoch degrade to the
+        // smallest legal period instead of a zero period.
+        assert_eq!(RefreshScheduler::every_epochs(0, 0).period(), 1);
+        assert_eq!(RefreshScheduler::every_epochs(0, 20).period(), 20);
+        assert_eq!(RefreshScheduler::every_epochs(3, 0).period(), 3);
+    }
+
+    #[test]
+    fn epoch_boundary_alignment() {
+        // 2 epochs × 5 steps: refreshes land exactly on epoch boundaries
+        // 0, 10, 20, … and nowhere inside an epoch.
+        let mut s = RefreshScheduler::every_epochs(2, 5);
+        let mut hits = Vec::new();
+        for step in 0..31 {
+            if s.due(step) {
+                s.mark(step);
+                hits.push(step);
+            }
+        }
+        assert_eq!(hits, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn skipped_steps_do_not_drift_the_schedule() {
+        // A consumer that polls sparsely (e.g. only on batch boundaries)
+        // still refreshes relative to the last mark, not to wall steps.
+        let mut s = RefreshScheduler::every_steps(10);
+        s.mark(0);
+        assert!(!s.due(9));
+        assert!(s.due(17)); // late poll: still due
+        s.mark(17);
+        assert!(!s.due(26));
+        assert!(s.due(27)); // next window counts from 17
+    }
+
+    #[test]
     fn exact_refresh_count_over_run() {
         // Invariant: refreshes over T steps == ceil(T / S).
         let mut s = RefreshScheduler::every_steps(25);

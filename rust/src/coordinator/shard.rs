@@ -1,0 +1,233 @@
+//! Sharded selection: fan one K-row batch across N worker shards, run the
+//! wrapped [`Selector`] per shard with a shard-private
+//! [`Workspace`], then fold the winners with the hierarchical MaxVol merge
+//! ([`super::merge`]).  This is the Stage-1 scaling substrate the ROADMAP
+//! north star asks for: per-shard work is O(K/N · R · r), the shards run
+//! on scoped threads, and merge memory stays O(N · r).
+//!
+//! Guarantees pinned by `tests/sharded_selection.rs`:
+//!
+//! * `shards == 1` delegates straight to the wrapped selector with the
+//!   caller's workspace — **bit-identical** to the single-shot path.
+//! * Results are deterministic and independent of worker interleaving:
+//!   each shard writes to its own slot and the merge order is fixed, so
+//!   serial and parallel execution produce identical subsets.
+//! * The output keeps the selector contract: unique batch-local ids,
+//!   `|out| == min(r, K)` for budget-honouring inner selectors.
+
+use std::ops::Range;
+
+use crate::linalg::{Mat, Workspace};
+use crate::selection::{BatchView, Selector};
+
+use super::merge::{merge_winners, MergePolicy, MergeScratch};
+
+/// Fan shards out on scoped threads only for batches at least this many
+/// rows; below it spawn overhead dominates the saved work.  Purely a
+/// performance knob: serial and parallel execution are bit-identical
+/// (pinned by tests), so crossing the threshold never changes results.
+pub const SHARD_PAR_MIN_K: usize = 512;
+
+/// Balanced contiguous partition of `0..k` into `min(shards, k)` non-empty
+/// ranges (empty for `k == 0`); the first `k % s` ranges are one row
+/// longer.  Allocating wrapper over [`shard_ranges_into`].
+pub fn shard_ranges(k: usize, shards: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    shard_ranges_into(k, shards, &mut out);
+    out
+}
+
+/// [`shard_ranges`] writing into a retained buffer (cleared first) — the
+/// hot-path variant the [`ShardedSelector`] reuses across calls.
+pub fn shard_ranges_into(k: usize, shards: usize, out: &mut Vec<Range<usize>>) {
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    let s = shards.clamp(1, k);
+    let (base, extra) = (k / s, k % s);
+    let mut start = 0;
+    for i in 0..s {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+}
+
+/// One shard's selector plus all of its private scratch: a [`Workspace`],
+/// reusable feature/gradient gather buffers, and the winner list.  Owning
+/// everything per shard keeps the fan-out free of shared mutable state —
+/// what makes interleaving-independence trivial rather than subtle.
+struct ShardWorker {
+    selector: Box<dyn Selector>,
+    ws: Workspace,
+    feat: Vec<f64>,
+    grad: Vec<f64>,
+    local: Vec<usize>,
+    /// Batch-local winners from the last run.
+    won: Vec<usize>,
+}
+
+impl ShardWorker {
+    fn new(selector: Box<dyn Selector>) -> ShardWorker {
+        ShardWorker {
+            selector,
+            ws: Workspace::new(),
+            feat: Vec::new(),
+            grad: Vec::new(),
+            local: Vec::new(),
+            won: Vec::new(),
+        }
+    }
+
+    /// Select up to `budget` rows from the contiguous row range of `view`
+    /// assigned to this shard; winners land in `self.won` as batch-local
+    /// ids.  The shard feature/gradient blocks are contiguous row slices
+    /// of the batch matrices, so building the shard-local view is two
+    /// memcpys into recycled buffers (`from_vec`/`into_vec` round-trip).
+    fn run(&mut self, view: &BatchView<'_>, range: Range<usize>, budget: usize) {
+        self.won.clear();
+        let len = range.len();
+        if len == 0 {
+            return;
+        }
+        let (rc, ec) = (view.features.cols(), view.grads.cols());
+        let mut fb = std::mem::take(&mut self.feat);
+        fb.clear();
+        fb.extend_from_slice(&view.features.data()[range.start * rc..range.end * rc]);
+        let fmat = Mat::from_vec(len, rc, fb);
+        let mut gb = std::mem::take(&mut self.grad);
+        gb.clear();
+        gb.extend_from_slice(&view.grads.data()[range.start * ec..range.end * ec]);
+        let gmat = Mat::from_vec(len, ec, gb);
+        let shard_view = BatchView {
+            features: &fmat,
+            grads: &gmat,
+            losses: &view.losses[range.clone()],
+            labels: &view.labels[range.clone()],
+            preds: &view.preds[range.clone()],
+            classes: view.classes,
+            row_ids: &view.row_ids[range.clone()],
+        };
+        self.selector.select_into(&shard_view, budget.min(len), &mut self.ws, &mut self.local);
+        self.won.extend(self.local.iter().map(|&i| range.start + i));
+        self.feat = fmat.into_vec();
+        self.grad = gmat.into_vec();
+    }
+}
+
+/// Sharded wrapper around any [`Selector`]: partitions the batch into
+/// contiguous shards, selects per shard in parallel, and merges the
+/// winners with a second-stage MaxVol.  Implements [`Selector`] itself, so
+/// the trainer (and anything else holding a `Box<dyn Selector>`) is
+/// oblivious to the fan-out.
+pub struct ShardedSelector {
+    merge: MergePolicy,
+    parallel: bool,
+    workers: Vec<ShardWorker>,
+    scratch: MergeScratch,
+    /// Retained partition buffer (recomputed per call, capacity reused).
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardedSelector {
+    /// Build with one selector instance per shard; `make(i)` constructs
+    /// shard `i`'s instance (stateful selectors must not be shared across
+    /// shards).  `make(0)` should use the caller's base seed so a
+    /// one-shard wrapper matches the unsharded construction.
+    ///
+    /// Panics if a constructed selector does not opt in via
+    /// [`Selector::shardable`]: the second-stage MaxVol merge only
+    /// preserves the criterion of the MaxVol family, so wrapping anything
+    /// else would silently measure a different method (the trainer routes
+    /// those to single-shot instead — see `build_selector`).
+    pub fn from_factory(
+        shards: usize,
+        merge: MergePolicy,
+        mut make: impl FnMut(usize) -> Box<dyn Selector>,
+    ) -> ShardedSelector {
+        assert!(shards >= 1, "need at least one shard");
+        let workers = (0..shards)
+            .map(|i| {
+                let sel = make(i);
+                assert!(
+                    sel.shardable(),
+                    "selector '{}' is not shardable: the MaxVol merge would not preserve \
+                     its selection criterion",
+                    sel.name()
+                );
+                ShardWorker::new(sel)
+            })
+            .collect();
+        ShardedSelector {
+            merge,
+            parallel: true,
+            workers,
+            scratch: MergeScratch::default(),
+            ranges: Vec::new(),
+        }
+    }
+
+    /// Force shard execution serial (`false`) or allow scoped threads
+    /// (`true`, the default).  Results are identical either way — the
+    /// property tests pin serial == parallel.
+    pub fn with_parallel(mut self, on: bool) -> Self {
+        self.parallel = on;
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Selector for ShardedSelector {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        let k = view.k();
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        if self.workers.len() == 1 {
+            // Single-shot fast path: same selector, same caller workspace,
+            // no partition, no merge — bit-identical to the unsharded call
+            // (pinned by tests/sharded_selection.rs).
+            self.workers[0].selector.select_into(view, r, ws, out);
+            return;
+        }
+        shard_ranges_into(k, self.workers.len(), &mut self.ranges);
+        let live = self.ranges.len();
+        let budget = r.min(k);
+        if self.parallel && k >= SHARD_PAR_MIN_K {
+            std::thread::scope(|scope| {
+                for (w, range) in self.workers[..live].iter_mut().zip(self.ranges.iter().cloned())
+                {
+                    scope.spawn(move || w.run(view, range, budget));
+                }
+            });
+        } else {
+            for (w, range) in self.workers[..live].iter_mut().zip(self.ranges.iter().cloned()) {
+                w.run(view, range, budget);
+            }
+        }
+        merge_winners(
+            view,
+            self.workers[..live].iter().map(|w| w.won.as_slice()),
+            budget,
+            self.merge,
+            ws,
+            &mut self.scratch,
+            out,
+        );
+    }
+}

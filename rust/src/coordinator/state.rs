@@ -14,7 +14,11 @@ pub struct SubsetState {
 
 impl SubsetState {
     /// Start with the full dataset active (before the first refresh).
+    /// `n == 0` is rejected up front: every later `refresh` enforces a
+    /// non-empty subset, so an empty initial state could never be
+    /// maintained — fail at construction instead of first use.
     pub fn full(n: usize) -> SubsetState {
+        assert!(n > 0, "empty dataset");
         SubsetState { active: (0..n).collect(), selected_at_epoch: 0, generation: 0 }
     }
 
@@ -80,5 +84,64 @@ mod tests {
     fn rejects_empty() {
         let mut s = SubsetState::full(10);
         s.refresh(vec![], 0, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_dataset() {
+        let _ = SubsetState::full(0);
+    }
+
+    #[test]
+    fn refresh_sorts_unsorted_rows() {
+        let mut s = SubsetState::full(100);
+        s.refresh(vec![42, 7, 99, 0, 63], 1, 100);
+        assert_eq!(s.rows(), &[0, 7, 42, 63, 99]);
+    }
+
+    #[test]
+    fn refresh_accepts_boundary_row() {
+        // Row n-1 is in range; row n is the first out-of-range id.
+        let mut s = SubsetState::full(10);
+        s.refresh(vec![9], 0, 10);
+        assert_eq!(s.rows(), &[9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_boundary_overflow() {
+        let mut s = SubsetState::full(10);
+        s.refresh(vec![10], 0, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_all_duplicates_of_out_of_range() {
+        // Dedup happens before validation; a duplicated bad row must
+        // still be caught.
+        let mut s = SubsetState::full(5);
+        s.refresh(vec![7, 7, 7], 0, 5);
+    }
+
+    #[test]
+    fn generation_counts_every_refresh() {
+        let mut s = SubsetState::full(20);
+        for g in 1..=5 {
+            s.refresh((0..g).collect(), g, 20);
+            assert_eq!(s.generation, g);
+            assert_eq!(s.len(), g);
+        }
+    }
+
+    #[test]
+    fn shrinking_to_singleton_and_back() {
+        let mut s = SubsetState::full(8);
+        s.refresh(vec![3], 0, 8);
+        assert_eq!(s.rows(), &[3]);
+        assert!(!s.is_empty());
+        assert!((s.fraction(8) - 0.125).abs() < 1e-12);
+        s.refresh((0..8).collect(), 1, 8);
+        assert_eq!(s.len(), 8);
+        assert!((s.fraction(8) - 1.0).abs() < 1e-12);
     }
 }

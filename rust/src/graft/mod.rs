@@ -93,6 +93,13 @@ impl Selector for GraftSelector {
         "graft"
     }
 
+    /// GRAFT's Stage 1 is Fast MaxVol on the ordered features; the sharded
+    /// coordinator's second-stage MaxVol merge preserves that criterion
+    /// over the union of per-shard winners.
+    fn shardable(&self) -> bool {
+        true
+    }
+
     fn select_into(
         &mut self,
         view: &BatchView<'_>,

@@ -96,6 +96,15 @@ impl Mat {
         &mut self.data
     }
 
+    /// Consume the matrix and reclaim its backing buffer (capacity
+    /// preserved) — lets callers that rebuild matrices every call (the
+    /// sharded selection workers) recycle one allocation via
+    /// `from_vec`/`into_vec` round-trips.
+    #[inline]
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]

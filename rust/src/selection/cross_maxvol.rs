@@ -56,6 +56,12 @@ impl Selector for CrossMaxVol {
         "cross-maxvol"
     }
 
+    /// Stateless, volume-based: compatible with the sharded coordinator's
+    /// second-stage MaxVol merge.
+    fn shardable(&self) -> bool {
+        true
+    }
+
     fn select_into(
         &mut self,
         view: &BatchView<'_>,

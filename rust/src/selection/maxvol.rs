@@ -294,6 +294,12 @@ impl Selector for FastMaxVol {
         "maxvol"
     }
 
+    /// Stateless, volume-based: the sharded coordinator's second-stage
+    /// MaxVol merge applies exactly this criterion to the union.
+    fn shardable(&self) -> bool {
+        true
+    }
+
     fn select_into(
         &mut self,
         view: &BatchView<'_>,

@@ -73,6 +73,19 @@ pub trait Selector: Send {
         self.select_into(view, r, &mut ws, &mut out);
         out
     }
+
+    /// Whether this selector may be wrapped by the sharded coordinator
+    /// (`coordinator::shard`), which runs one instance per shard and
+    /// folds the per-shard winners with a second-stage **feature-space
+    /// MaxVol** (`coordinator::merge`).  That reduction preserves the
+    /// criterion of subspace/volume-based selectors, so only those opt
+    /// in (MaxVol, CrossMaxVol, GRAFT).  Defaults to false: for score-
+    /// or RNG-based methods the MaxVol merge would silently rewrite the
+    /// selection criterion, and per-shard instances fragment any
+    /// cross-batch state (e.g. `forget`'s per-row history).
+    fn shardable(&self) -> bool {
+        false
+    }
 }
 
 /// Pad `out` up to `r.min(k)` indices with the highest-loss unselected

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{MergePolicy, ShardedSelector};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
 use crate::graft::alignment::AlignmentSample;
 use crate::graft::{AlignmentStats, BudgetedRankPolicy};
@@ -52,6 +53,19 @@ pub struct TrainConfig {
     /// GRAFT path: replaces the AOT subspace features in the selection
     /// stage (Fig 4 / Table 3 ablation).  None = AOT `select` artifact.
     pub extractor: Option<String>,
+    /// Selection shards for the Rust-side selection paths.  `1` =
+    /// single-shot, bit-identical to the pre-shard pipeline; `>1` fans
+    /// each K-window across worker shards and merges the winners with a
+    /// second-stage MaxVol ([`crate::coordinator::shard`]).  Only
+    /// MaxVol-criterion selectors shard ([`Selector::shardable`]:
+    /// maxvol, cross-maxvol, and the GRAFT extractor path); other
+    /// methods ignore the knob and run single-shot, because the MaxVol
+    /// merge would rewrite their selection criterion.  The AOT `select`
+    /// artifact path is likewise unaffected — its selection runs inside
+    /// the compiled kernel.
+    pub shards: usize,
+    /// How per-shard winners are merged when `shards > 1`.
+    pub merge: MergePolicy,
     pub seed: u64,
 }
 
@@ -69,6 +83,8 @@ impl Default for TrainConfig {
             warm_epochs: 3,
             adaptive_rank: false,
             extractor: None,
+            shards: 1,
+            merge: MergePolicy::Hierarchical,
             seed: 42,
         }
     }
@@ -131,10 +147,7 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     let r_budget = ((cfg.fraction * spec.k as f64).round() as usize).clamp(1, spec.k);
 
     let mut baseline: Option<Box<dyn Selector>> = if !is_full && !is_graft {
-        Some(
-            selection::by_name(&cfg.method, cfg.seed ^ 0xBA5E)
-                .with_context(|| format!("unknown method '{}'", cfg.method))?,
-        )
+        Some(build_selector(&cfg.method, cfg.seed ^ 0xBA5E, cfg.shards, cfg.merge)?)
     } else {
         None
     };
@@ -254,6 +267,41 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     })
 }
 
+/// Construct the (possibly sharded) baseline selector.  `shards <= 1`
+/// builds the plain selector — exactly the pre-shard object, so the
+/// single-shot path stays bit-identical; `shards > 1` wraps one instance
+/// per shard in a [`ShardedSelector`].  Worker 0 keeps the base seed so
+/// stateless methods line up with the single-shot construction.
+/// Only selectors that opt in via [`Selector::shardable`] (the MaxVol
+/// family) are wrapped: for score-/RNG-based methods the second-stage
+/// MaxVol merge would silently rewrite the selection criterion, and
+/// cross-batch state (`forget`) would fragment across shard-private
+/// instances — those run single-shot with a note.
+fn build_selector(
+    method: &str,
+    seed: u64,
+    shards: usize,
+    merge: MergePolicy,
+) -> Result<Box<dyn Selector>> {
+    let single =
+        selection::by_name(method, seed).with_context(|| format!("unknown method '{method}'"))?;
+    if shards <= 1 {
+        return Ok(single);
+    }
+    if !single.shardable() {
+        eprintln!(
+            "note: method '{method}' is not shardable (its criterion or cross-batch state \
+             would not survive the MaxVol merge); selection runs single-shot \
+             (--shards {shards} ignored)"
+        );
+        return Ok(single);
+    }
+    Ok(Box::new(ShardedSelector::from_factory(shards, merge, |si| {
+        let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        selection::by_name(method, wseed).expect("method name validated above")
+    })))
+}
+
 /// Stage 1 of Algorithm 1: scan the training set in K-windows and select a
 /// per-batch subset; returns the aggregated active row set S^t.
 #[allow(clippy::too_many_arguments)]
@@ -277,6 +325,25 @@ fn refresh_subset(
     let mut active = Vec::new();
     let mut order: Vec<usize> = (0..train.n).collect();
     rng.shuffle(&mut order);
+    // Rust-side GRAFT selector for the extractor ablation path, built once
+    // per refresh rather than per window: with shards > 1 it owns N
+    // workspaces plus merge scratch whose buffers must be reused across
+    // windows, not reallocated inside the hot loop.
+    let mut graft_sel: Option<Box<dyn Selector>> =
+        if cfg.method.starts_with("graft") && cfg.extractor.is_some() {
+            let make_graft = || -> Box<dyn Selector> {
+                // strict() pins strict_budget, so |S| == r_budget holds.
+                Box::new(crate::graft::GraftSelector::new(
+                    crate::graft::BudgetedRankPolicy::strict(cfg.epsilon)))
+            };
+            Some(if cfg.shards <= 1 {
+                make_graft()
+            } else {
+                Box::new(ShardedSelector::from_factory(cfg.shards, cfg.merge, |_| make_graft()))
+            })
+        } else {
+            None
+        };
     let windows = (train.n / spec.k).max(1);
     for wi in 0..windows {
         let end = ((wi + 1) * spec.k).min(train.n);
@@ -308,9 +375,7 @@ fn refresh_subset(
                 classes: spec.c,
                 row_ids: rows,
             };
-            let mut g = crate::graft::GraftSelector::new(
-                crate::graft::BudgetedRankPolicy::strict(cfg.epsilon));
-            g.policy.strict_budget = true;
+            let g = graft_sel.as_mut().expect("extractor selector built above");
             g.select_into(&view, r_budget, ws, selbuf);
             for &bi in selbuf.iter() {
                 active.push(rows[bi]);

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Run the two hot-path benches and collect their rows into BENCH_pr1.json
+# Run the hot-path benches and collect their rows into BENCH_pr1.json
 # at the repo root (schema graft-bench-v1; see benches/bench_util.rs).
 #
 # Usage: scripts/bench.sh
 # Override the output path with GRAFT_BENCH_JSON=/path/to/file.json.
+# GRAFT_BENCH_SMOKE=1 shrinks shapes/reps (the CI smoke job uses this).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -12,7 +13,9 @@ export GRAFT_BENCH_JSON="${GRAFT_BENCH_JSON:-$PWD/BENCH_pr1.json}"
 echo "== building release benches =="
 cargo bench --bench table4_maxvol
 cargo bench --bench runtime_hotpath
+cargo bench --bench sharded_selection
 
 echo
 echo "== bench JSON ($GRAFT_BENCH_JSON) =="
 cat "$GRAFT_BENCH_JSON"
+python3 scripts/validate_bench.py "$GRAFT_BENCH_JSON"

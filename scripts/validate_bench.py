@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Validate a graft-bench-v1 JSON file (emitted by benches/bench_util.rs).
+
+Usage: scripts/validate_bench.py [--allow-empty] FILE [FILE ...]
+
+Checks, per file:
+  * top-level object with "schema": "graft-bench-v1" and a "records" list
+  * every record has string "bench"/"op"/"shape" (non-empty) and finite,
+    non-negative "mean_ns"/"std_ns"/"min_ns" numbers with min <= mean
+  * at least one record, unless --allow-empty (the committed placeholder
+    BENCH_pr1.json is empty until scripts/bench.sh runs on a machine with
+    a Rust toolchain)
+
+Exit status 0 when every file passes, 1 otherwise.  Stdlib only.
+"""
+
+import json
+import math
+import sys
+
+SCHEMA = "graft-bench-v1"
+STR_FIELDS = ("bench", "op", "shape")
+NUM_FIELDS = ("mean_ns", "std_ns", "min_ns")
+
+
+def validate(path, allow_empty):
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"unreadable or invalid JSON: {exc}"]
+
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f'schema is {doc.get("schema")!r}, want {SCHEMA!r}')
+    records = doc.get("records")
+    if not isinstance(records, list):
+        return errors + ["'records' is missing or not a list"]
+    if not records and not allow_empty:
+        errors.append("no records (pass --allow-empty for placeholder files)")
+
+    for i, rec in enumerate(records):
+        where = f"records[{i}]"
+        if not isinstance(rec, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for f in STR_FIELDS:
+            v = rec.get(f)
+            if not isinstance(v, str) or not v:
+                errors.append(f"{where}.{f}: want non-empty string, got {v!r}")
+        for f in NUM_FIELDS:
+            v = rec.get(f)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                errors.append(f"{where}.{f}: want number, got {v!r}")
+            elif not math.isfinite(v) or v < 0:
+                errors.append(f"{where}.{f}: want finite >= 0, got {v!r}")
+        mean, mn = rec.get("mean_ns"), rec.get("min_ns")
+        if isinstance(mean, (int, float)) and isinstance(mn, (int, float)):
+            # time_it's min is over the same samples the mean is over.
+            if mn > mean * 1.000001:
+                errors.append(f"{where}: min_ns {mn} > mean_ns {mean}")
+        extra = set(rec) - set(STR_FIELDS) - set(NUM_FIELDS)
+        if extra:
+            errors.append(f"{where}: unknown fields {sorted(extra)}")
+    return errors
+
+
+def main(argv):
+    args = [a for a in argv if a != "--allow-empty"]
+    allow_empty = len(args) != len(argv)
+    if not args:
+        print(__doc__.strip())
+        return 1
+    failed = False
+    for path in args:
+        errs = validate(path, allow_empty)
+        if errs:
+            failed = True
+            print(f"FAIL {path}")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            with open(path, encoding="utf-8") as fh:
+                n = len(json.load(fh).get("records", []))
+            print(f"OK   {path} ({n} records)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
