@@ -1,8 +1,11 @@
 //! Sharded selection bench: single-shot Fast MaxVol selection vs the
 //! `ShardedSelector` fan-out + hierarchical MaxVol merge at shards ∈
-//! {2, 4, 8}, plus the flat-merge reference shape.  Rows land in
-//! `BENCH_pr1.json` (schema `graft-bench-v1`) next to the PR 1 kernel
-//! rows so later scaling PRs can track the fan-out overhead/crossover.
+//! {2, 4, 8}, the flat-merge reference shape, and (PR 3) the persistent
+//! `PooledSelector` worker pool against the per-refresh scoped threads it
+//! replaces (`select_pooled` vs `select_sharded` rows, matched and
+//! oversubscribed worker counts).  Rows land in `BENCH_pr1.json` (schema
+//! `graft-bench-v1`) next to the PR 1 kernel rows so later scaling PRs can
+//! track the fan-out overhead/crossover.
 //!
 //! Run: `cargo bench --bench sharded_selection` (or `scripts/bench.sh`).
 //! `GRAFT_BENCH_SMOKE=1` shrinks shapes/reps to CI-smoke sizes.
@@ -10,7 +13,7 @@
 mod bench_util;
 
 use bench_util::{report, smoke_mode, time_it, JsonSink};
-use graft::coordinator::{MergePolicy, ShardedSelector};
+use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
 use graft::selection::maxvol::FastMaxVol;
@@ -61,6 +64,27 @@ fn main() {
         report(&format!("sharded select (shards={shards}, hierarchical)"), t.0, t.1, t.2);
         sink.record("select_sharded", &format!("{shape},shards={shards}"), t);
         assert_eq!(out.len(), baseline.len(), "sharded selection broke the budget contract");
+    }
+
+    // Persistent pool vs per-refresh scoped threads (PR 3): same shard
+    // counts, workers ∈ {matched, oversubscribed}.  Bit-identity with the
+    // scoped rows is asserted inline, so a silent divergence fails the
+    // bench (and the CI smoke run) rather than polluting the JSON.
+    for (shards, workers) in [(2usize, 2usize), (4, 4), (8, 8), (8, 2)] {
+        let mut sel = PooledSelector::from_factory(shards, workers, MergePolicy::Hierarchical, |_| {
+            Box::new(FastMaxVol)
+        });
+        let t = time_it(warm, reps, || {
+            sel.select_into(&view, r, &mut ws, &mut out);
+        });
+        report(&format!("pooled select (shards={shards}, workers={workers})"), t.0, t.1, t.2);
+        sink.record("select_pooled", &format!("{shape},shards={shards},workers={workers}"), t);
+        let mut scoped_ref = ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, |_| {
+            Box::new(FastMaxVol)
+        });
+        let mut scoped_out: Vec<usize> = Vec::new();
+        scoped_ref.select_into(&view, r, &mut ws, &mut scoped_out);
+        assert_eq!(out, scoped_out, "pool≡scoped bit-identity broke at shards={shards} workers={workers}");
     }
 
     // Flat merge at the widest fan-out: the single big second-stage MaxVol

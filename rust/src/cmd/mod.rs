@@ -44,6 +44,7 @@ COMMANDS
                             --dataset D --method M --fraction F --epochs N
                             [--adaptive-rank] [--epsilon E] [--seed S]
                             [--shards N] [--merge hierarchical|flat]
+                            [--pool-workers N] [--overlap]
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]
   fig2                      alignment heatmap / rank trend / class hist

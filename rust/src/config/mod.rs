@@ -121,6 +121,8 @@ impl Args {
             adaptive_rank: self.flag("adaptive-rank"),
             extractor: self.opt("extractor"),
             shards: self.usize_or("shards", d.shards)?,
+            pool_workers: self.usize_or("pool-workers", d.pool_workers)?,
+            overlap: self.flag("overlap") || d.overlap,
             merge: {
                 let s = self.get_or("merge", d.merge.name());
                 MergePolicy::parse(&s)
@@ -162,6 +164,17 @@ mod tests {
         let a = parse("sweep --methods graft,random, --x 1");
         assert_eq!(a.list_or("methods", &[]), vec!["graft", "random"]);
         assert_eq!(a.list_or("absent", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn pool_flags_parse_and_default_off() {
+        let a = parse("train --pool-workers 4 --overlap");
+        let c = a.train_config().unwrap();
+        assert_eq!(c.pool_workers, 4);
+        assert!(c.overlap);
+        let d = parse("train").train_config().unwrap();
+        assert_eq!(d.pool_workers, 0, "pool off by default (scoped-thread fan-out)");
+        assert!(!d.overlap, "overlap off by default");
     }
 
     #[test]

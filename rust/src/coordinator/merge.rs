@@ -196,3 +196,133 @@ fn reduce_union(
     let need = keep - out.len();
     out.extend(rest.iter().take(need).map(|&li| union[li]));
 }
+
+#[cfg(test)]
+mod tests {
+    //! Degenerate-geometry pins: the PR 2 suite covers well-conditioned
+    //! shapes (shards ≫ r candidates, full-rank features); these lock the
+    //! edges — shards holding fewer than `r` rows, single-candidate winner
+    //! lists, empty lists, and `keep` beyond the feature rank where the
+    //! loss top-up takes over.
+
+    use super::*;
+    use crate::selection::maxvol::fast_maxvol;
+    use crate::selection::testsupport::random_view;
+
+    fn merge(
+        view: &BatchView<'_>,
+        lists: &[Vec<usize>],
+        keep: usize,
+        policy: MergePolicy,
+    ) -> Vec<usize> {
+        let mut ws = Workspace::new();
+        let mut scratch = MergeScratch::default();
+        let mut out = Vec::new();
+        merge_winners(view, lists.iter().map(|l| l.as_slice()), keep, policy, &mut ws, &mut scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn two_shards_below_rank_hier_is_bitwise_flat() {
+        // Each shard holds fewer rows than `keep`, so both winner lists are
+        // exhaustive; with exactly two lists the tournament has a single
+        // fold node — definitionally the same reduction Flat runs, so the
+        // two policies must agree bit for bit.
+        let owned = random_view(24, 8, 4, 2, 901);
+        let lists = vec![(0..12).collect::<Vec<_>>(), (12..24).collect::<Vec<_>>()];
+        for keep in [1usize, 5, 8, 16, 23] {
+            let h = merge(&owned.view(), &lists, keep, MergePolicy::Hierarchical);
+            let f = merge(&owned.view(), &lists, keep, MergePolicy::Flat);
+            assert_eq!(h, f, "keep={keep}");
+            assert_eq!(h.len(), keep.min(24), "size keep={keep}");
+        }
+    }
+
+    #[test]
+    fn keep_covering_all_candidates_passes_through_in_shard_order() {
+        // `keep` at or beyond the candidate count (the rank > k shape):
+        // every node is a passthrough, both policies return the full union
+        // in shard order, no MaxVol runs at all.
+        let owned = random_view(20, 6, 4, 2, 903);
+        let lists: Vec<Vec<usize>> =
+            (0..8).map(|s| (0..20).filter(|i| i % 8 == s).collect()).collect();
+        let all: Vec<usize> = lists.iter().flatten().copied().collect();
+        for keep in [20usize, 25, 100] {
+            for policy in [MergePolicy::Hierarchical, MergePolicy::Flat] {
+                assert_eq!(merge(&owned.view(), &lists, keep, policy), all, "keep={keep} {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_candidate_unions_pick_the_global_winner() {
+        // One winner per shard and keep == 1: every fold compares two
+        // single rows; the tournament champion must equal Flat's global
+        // pick, because Fast MaxVol's first pivot (argmax |first feature
+        // column|) reduces associatively when those magnitudes are
+        // distinct — which generic gaussian features are almost surely.
+        let owned = random_view(16, 5, 4, 2, 905);
+        for shards in [2usize, 3, 5, 8] {
+            let lists: Vec<Vec<usize>> = (0..shards).map(|s| vec![2 * s]).collect();
+            let h = merge(&owned.view(), &lists, 1, MergePolicy::Hierarchical);
+            let f = merge(&owned.view(), &lists, 1, MergePolicy::Flat);
+            assert_eq!(h.len(), 1, "shards={shards}");
+            assert_eq!(h, f, "champion differs, shards={shards}");
+            assert!(lists.iter().any(|l| l[0] == h[0]), "champion from candidates");
+        }
+    }
+
+    #[test]
+    fn empty_winner_lists_are_tolerated() {
+        // A shard can legitimately win nothing (empty range after clamp);
+        // merges must skip it without panicking or emitting phantoms.
+        let owned = random_view(12, 4, 4, 2, 907);
+        let lists = vec![vec![0usize, 1, 2], Vec::new(), vec![7, 8], Vec::new()];
+        for policy in [MergePolicy::Hierarchical, MergePolicy::Flat] {
+            let out = merge(&owned.view(), &lists, 4, policy);
+            assert_eq!(out.len(), 4, "{policy:?}");
+            let mut u = out.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 4, "unique {policy:?}");
+            assert!(out.iter().all(|i| [0usize, 1, 2, 7, 8].contains(i)), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn keep_beyond_feature_rank_tops_up_by_loss() {
+        // R = 3 feature columns but keep = 10: MaxVol can only justify 3
+        // rows; the remaining 7 must be exactly the highest-loss leftover
+        // candidates, loss-descending with ascending-id tie-break.
+        let mut owned = random_view(16, 3, 4, 2, 909);
+        for (i, l) in owned.losses.iter_mut().enumerate() {
+            *l = ((i * 7) % 16) as f64; // distinct, known ordering
+        }
+        let union: Vec<usize> = (0..12).collect();
+        let lists = vec![union[..6].to_vec(), union[6..].to_vec()];
+        let keep = 10;
+        let out = merge(&owned.view(), &lists, keep, MergePolicy::Flat);
+        assert_eq!(out.len(), keep);
+
+        // The MaxVol head: pivots of the gathered 12×3 candidate block.
+        let cand = Mat::from_fn(12, 3, |i, j| owned.features[(union[i], j)]);
+        let picks: Vec<usize> = fast_maxvol(&cand, 3).iter().map(|&li| union[li]).collect();
+        assert_eq!(&out[..picks.len()], &picks[..], "MaxVol head");
+
+        // The tail: highest-loss leftovers in loss-desc / id-asc order.
+        let mut rest: Vec<usize> =
+            union.iter().copied().filter(|i| !picks.contains(i)).collect();
+        rest.sort_by(|&a, &b| owned.losses[b].total_cmp(&owned.losses[a]).then(a.cmp(&b)));
+        assert_eq!(&out[picks.len()..], &rest[..keep - picks.len()], "loss top-up tail");
+    }
+
+    #[test]
+    fn single_list_truncates_to_keep() {
+        let owned = random_view(10, 4, 4, 2, 911);
+        let lists = vec![vec![9usize, 3, 5, 1, 7]];
+        for policy in [MergePolicy::Hierarchical, MergePolicy::Flat] {
+            assert_eq!(merge(&owned.view(), &lists, 3, policy), vec![9, 3, 5], "{policy:?}");
+            assert_eq!(merge(&owned.view(), &lists, 8, policy), lists[0], "{policy:?}");
+        }
+    }
+}

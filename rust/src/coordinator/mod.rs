@@ -8,17 +8,23 @@
 //! pipeline**: [`ShardedSelector`] fans a batch across worker shards
 //! ([`shard`]) and folds the per-shard winners with a hierarchical MaxVol
 //! merge ([`merge`]), and [`FanOutProducer`] generalises the single
-//! producer thread to a multi-worker fan-out.  See `README.md` in this
-//! directory for the dataflow and the test matrix that pins it.
+//! producer thread to a multi-worker fan-out.  PR 3 adds the **persistent
+//! selection worker pool** ([`pool`]): long-lived workers replace the
+//! per-refresh scoped-thread fan-out, and the [`run_windows`] pipelined
+//! refresh overlaps next-window assembly/`embed` with in-flight shard
+//! selection.  See `README.md` in this directory for the dataflow and the
+//! test matrix that pins it.
 
 pub mod merge;
 pub mod pipeline;
+pub mod pool;
 pub mod scheduler;
 pub mod shard;
 pub mod state;
 
 pub use merge::{merge_winners, MergePolicy};
 pub use pipeline::{BatchProducer, FanOutProducer, PreparedBatch};
+pub use pool::{run_windows, PooledSelector, SelectWindow};
 pub use scheduler::RefreshScheduler;
 pub use shard::{shard_ranges, shard_ranges_into, ShardedSelector, SHARD_PAR_MIN_K};
 pub use state::SubsetState;

@@ -17,9 +17,68 @@
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::data::{loader::Batcher, Dataset};
+
+/// How long a `Drop` is willing to wait for a worker thread before logging
+/// and detaching it.  Generous: a healthy worker unblocks within
+/// microseconds of the stop + drain; only a genuinely wedged one (stuck in
+/// a gather, livelocked selector, …) ever reaches the deadline, and
+/// hanging the caller's teardown would be strictly worse than leaking the
+/// thread until process exit.
+const TEARDOWN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Core of every guarded teardown join: run `poll` (e.g. a channel drain
+/// that unblocks a worker's `send`), check `is_finished`, and repeat until
+/// `timeout`; on expiry log to stderr and detach (drop the handle) instead
+/// of hanging the caller.  Returns whether the thread was actually joined.
+fn join_with_deadline(
+    h: JoinHandle<()>,
+    timeout: Duration,
+    who: &str,
+    mut poll: impl FnMut(),
+) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        poll();
+        if h.is_finished() {
+            // Cannot block: the thread already ran to completion.  A
+            // panicked worker still counts as joined — its panic was its
+            // own; teardown's job is only to not leak or hang.
+            let _ = h.join();
+            return true;
+        }
+        if Instant::now() >= deadline {
+            eprintln!(
+                "WARN coordinator teardown: {who} still running after {timeout:?}; \
+                 detaching it instead of hanging shutdown"
+            );
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// [`join_with_deadline`] without a poll step, at a caller-chosen deadline
+/// (the wedged-worker regression test uses a short one).
+pub(crate) fn join_within(h: JoinHandle<()>, timeout: Duration, who: &str) -> bool {
+    join_with_deadline(h, timeout, who, || {})
+}
+
+/// [`join_within`] at the standard teardown deadline.  Shared by the
+/// producer `Drop` impls and the selection pool's shutdown.
+pub(crate) fn join_or_log(h: JoinHandle<()>, who: &str) -> bool {
+    join_within(h, TEARDOWN_TIMEOUT, who)
+}
+
+/// Producer-side teardown step: keep draining `rx` (so a blocked `send`
+/// always unblocks, even if the worker squeezes one more batch in after a
+/// first drain) while waiting for the worker to finish, with the same
+/// timeout-then-log guarantee.
+fn drain_until_joined<T>(rx: &Receiver<T>, h: JoinHandle<()>, who: &str) {
+    join_with_deadline(h, TEARDOWN_TIMEOUT, who, || while rx.try_recv().is_ok() {});
+}
 
 /// A fully assembled training batch, ready for the engine.
 #[derive(Debug, Clone)]
@@ -92,10 +151,11 @@ impl Drop for BatchProducer {
         // unblocks from `send` observes the stop on its next loop
         // iteration instead of racing ahead and refilling the channel.
         let _ = self.stop.try_send(());
-        // Drain so a blocked send unblocks, then join.
-        while self.rx.try_recv().is_ok() {}
+        // Drain so a blocked send unblocks, then join — with the
+        // timeout-then-log guard, so a wedged worker (stuck mid-gather)
+        // can degrade to a logged leak but never hang teardown.
         if let Some(h) = self.handle.take() {
-            let _ = h.join();
+            drain_until_joined(&self.rx, h, "batch producer");
         }
     }
 }
@@ -183,6 +243,23 @@ impl FanOutProducer {
         Some(b)
     }
 
+    /// Timed variant of [`FanOutProducer::next`], mirroring
+    /// [`BatchProducer::next_timeout`].  A `Timeout` does **not** advance
+    /// the stream cursor: the retry polls the same worker again, so the
+    /// zip-merge stays seq-ordered and gap-free no matter how many
+    /// expiries interleave with successes (pinned by
+    /// `tests::fanout_next_timeout_expiry_keeps_order`).  An exhausted
+    /// stream reports `Disconnected`, like a finished single producer.
+    pub fn next_timeout(&mut self, d: Duration) -> Result<PreparedBatch, RecvTimeoutError> {
+        if self.next_seq >= self.total {
+            return Err(RecvTimeoutError::Disconnected);
+        }
+        let b = self.rxs[self.next_seq % self.rxs.len()].recv_timeout(d)?;
+        debug_assert_eq!(b.seq, self.next_seq, "fan-out stream out of order");
+        self.next_seq += 1;
+        Ok(b)
+    }
+
     pub fn workers(&self) -> usize {
         self.rxs.len()
     }
@@ -191,15 +268,14 @@ impl FanOutProducer {
 impl Drop for FanOutProducer {
     fn drop(&mut self) {
         // Same shutdown dance as BatchProducer, once per worker: stop
-        // first, drain to unblock any in-flight send, then join all.
+        // first, then drain-while-joining each worker under the
+        // timeout-then-log guard (one wedged worker must not hang the
+        // teardown of the others — or of the caller).
         for stop in &self.stops {
             let _ = stop.try_send(());
         }
-        for rx in &self.rxs {
-            while rx.try_recv().is_ok() {}
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for (w, (h, rx)) in self.handles.drain(..).zip(self.rxs.iter()).enumerate() {
+            drain_until_joined(rx, h, &format!("fan-out producer {w}"));
         }
     }
 }
@@ -399,5 +475,71 @@ mod tests {
         // 32 rows / bucket 16 → at most 2 workers can hold a full bucket.
         let p = FanOutProducer::spawn(ds(32, 2, 2), 16, 4, 2, 25, 8);
         assert_eq!(p.workers(), 2);
+    }
+
+    #[test]
+    fn fanout_more_workers_than_batches_clamps_and_stays_gap_free() {
+        // 8 requested workers but only 3 batches: the clamp must cap the
+        // fan-out at 3 so no worker starts with an empty job set, and the
+        // zip-merge must still deliver exactly seq 0, 1, 2.
+        let mut p = FanOutProducer::spawn(ds(64, 2, 2), 4, 3, 2, 26, 8);
+        assert_eq!(p.workers(), 3);
+        let seqs: Vec<usize> = std::iter::from_fn(|| p.next()).map(|b| b.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fanout_zero_batch_epoch_is_empty_and_clean() {
+        // total == 0: every worker exits immediately, next() reports
+        // exhaustion without blocking, next_timeout reports Disconnected
+        // (not Timeout — there is nothing to wait for), and drop joins.
+        let mut p = FanOutProducer::spawn(ds(16, 2, 2), 4, 0, 2, 27, 3);
+        assert!(p.next().is_none());
+        assert!(matches!(
+            p.next_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Disconnected)
+        ));
+        drop(p); // must join, not hang
+    }
+
+    #[test]
+    fn fanout_next_timeout_expiry_keeps_order() {
+        // Assembly of 100k-row shuffles + 8k-row gathers is far slower
+        // than a 10µs budget, so early polls reliably time out.  Expired
+        // polls must not advance the cursor: retrying until every batch
+        // arrives must yield the exact gap-free seq order 0..total.
+        let total = 6;
+        let mut p = FanOutProducer::spawn(ds(100_000, 4, 2), 8192, total, 1, 28, 2);
+        let mut timeouts = 0usize;
+        let mut seqs = Vec::new();
+        while seqs.len() < total {
+            match p.next_timeout(Duration::from_micros(10)) {
+                Ok(b) => seqs.push(b.seq),
+                Err(RecvTimeoutError::Timeout) => timeouts += 1,
+                Err(RecvTimeoutError::Disconnected) => panic!("stream died early"),
+            }
+        }
+        assert_eq!(seqs, (0..total).collect::<Vec<_>>());
+        assert!(matches!(
+            p.next_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Disconnected)
+        ));
+        // Not asserted > 0 strictly for robustness on slow CI, but on any
+        // real machine the first poll expires; log for humans.
+        eprintln!("fanout_next_timeout_expiry_keeps_order: {timeouts} timeouts interleaved");
+    }
+
+    #[test]
+    fn wedged_worker_join_times_out_and_detaches() {
+        // Shutdown-hygiene regression: a worker that never finishes must
+        // cost teardown the deadline at most, then get logged + detached —
+        // never an indefinite hang (the pre-PR-3 `h.join()` behaviour).
+        let wedged = std::thread::spawn(|| std::thread::sleep(Duration::from_secs(60)));
+        let t0 = Instant::now();
+        assert!(!join_within(wedged, Duration::from_millis(50), "test sleeper"));
+        assert!(t0.elapsed() < Duration::from_secs(5), "timed join took {:?}", t0.elapsed());
+        // And a healthy (even already-finished) worker joins normally.
+        let quick = std::thread::spawn(|| {});
+        assert!(join_within(quick, TEARDOWN_TIMEOUT, "quick worker"));
     }
 }

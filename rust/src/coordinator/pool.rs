@@ -1,0 +1,508 @@
+//! Persistent selection worker pool: long-lived workers that replace the
+//! per-refresh `std::thread::scope` fan-out of [`super::ShardedSelector`],
+//! plus the async submit/finish API the trainer uses to overlap next-window
+//! assembly (`gather` + `embed` + extractor) with in-flight shard selection.
+//!
+//! Architecture (see `README.md` in this directory for the full diagram):
+//!
+//! * [`SelectionPool`] spawns `workers` threads at construction.  Worker
+//!   `w` owns the selector instances for shards `s ≡ w (mod workers)`, one
+//!   pinned [`Workspace`], and recycled feature/gradient gather buffers.
+//!   Jobs arrive over a per-worker bounded channel; results return over one
+//!   shared bounded channel, tagged with the submission epoch so a late
+//!   result from an abandoned epoch can never corrupt a newer one.
+//! * [`PooledSelector`] wraps a pool with a [`MergePolicy`] and implements
+//!   [`Selector`], so the trainer picks it up through the ordinary
+//!   `Box<dyn Selector>` plumbing.  [`PooledSelector::begin`] submits the
+//!   shard jobs and returns a [`Pending`] guard; [`Pending::finish`] blocks
+//!   for the results and runs the hierarchical merge.  Between the two the
+//!   caller is free to assemble the next window — that gap is the overlap.
+//! * [`run_windows`] is the pipelined refresh loop: `assemble(w+1)` runs on
+//!   the coordinator thread while the workers select window `w`.
+//!
+//! Guarantees pinned by `tests/selection_pool.rs`:
+//!
+//! * **Bit-identity**: pooled execution at any worker count produces
+//!   exactly the subset of the scoped-thread and serial [`ShardedSelector`]
+//!   paths — both run the same [`run_shard`] kernel per shard and the same
+//!   deterministic merge, so worker count and job interleaving are
+//!   structurally invisible.
+//! * **Containment**: a panicking selector is caught on the worker, the
+//!   worker thread survives, the panic resurfaces on the caller in
+//!   [`Pending::finish`], and the pool stays usable.
+//! * **Clean shutdown**: dropping the pool (or calling
+//!   [`PooledSelector::shutdown`] — idempotent) closes the job channels,
+//!   joins every worker with the shared timeout-then-log helper, and never
+//!   deadlocks, even mid-epoch after a drop of a [`Pending`] guard.
+//!
+//! Steady-state refreshes are allocation-free (extended `alloc_free.rs`):
+//! gather buffers live on the workers, winner buffers round-trip through
+//! the job/result messages by move, and `sync_channel` slots are
+//! preallocated at construction.
+//!
+//! # Safety model
+//!
+//! Jobs carry a raw pointer to the caller's [`BatchView`] so workers can
+//! read the batch without copying it through the channel.  Soundness rests
+//! on one invariant, enforced structurally by [`Pending`]: **every
+//! submitted job is accounted for (result received, or its worker proven
+//! dead) before the borrow of the view ends.**  `Pending` holds the view
+//! borrow and drains outstanding results both in [`Pending::finish`] and in
+//! its `Drop` (covering early returns and unwinding callers), so the
+//! pointee provably outlives every worker-side dereference.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use crate::linalg::{Mat, Workspace};
+use crate::selection::{BatchView, Selector};
+
+use super::merge::{merge_winners, MergePolicy, MergeScratch};
+use super::pipeline::join_or_log;
+use super::shard::{run_shard, shard_ranges_into};
+
+/// Raw pointer to a caller-owned [`BatchView`], sendable to a worker.
+///
+/// The lifetime is erased at the channel boundary and re-conjured on the
+/// worker; see the module-level safety model for why the pointee is always
+/// alive when [`ViewPtr::get`] runs.
+#[derive(Clone, Copy)]
+struct ViewPtr(*const ());
+
+// SAFETY: the pointee is only dereferenced while the submitting `Pending`
+// guard holds the view borrow (it drains all outstanding jobs before the
+// borrow ends), and `BatchView`'s fields are all `Sync` shared references.
+unsafe impl Send for ViewPtr {}
+
+impl ViewPtr {
+    fn new(view: &BatchView<'_>) -> ViewPtr {
+        ViewPtr(view as *const BatchView<'_> as *const ())
+    }
+
+    /// SAFETY: caller must guarantee the pointed-to view (and everything it
+    /// borrows) is alive for all of `'a`.  `BatchView`'s layout does not
+    /// depend on its lifetime parameter, so the cast is representationally
+    /// sound; the liveness obligation is discharged by the `Pending` drain
+    /// protocol.
+    unsafe fn get<'a>(&self) -> &'a BatchView<'a> {
+        &*(self.0 as *const BatchView<'a>)
+    }
+}
+
+/// One shard job, fed to a worker over its channel.  `winners` is the
+/// coordinator-owned result buffer, moved in empty and moved back filled
+/// through [`Done`] — the recycling that keeps steady state allocation-free.
+struct Job {
+    view: ViewPtr,
+    shard: usize,
+    range: Range<usize>,
+    budget: usize,
+    epoch: u64,
+    winners: Vec<usize>,
+}
+
+/// One shard result.  `epoch` lets the coordinator discard results from an
+/// abandoned epoch while still recycling their buffers.
+struct Done {
+    shard: usize,
+    epoch: u64,
+    winners: Vec<usize>,
+    panicked: bool,
+}
+
+/// Persistent pool of selection workers (one pinned [`Workspace`] and
+/// recycled gather buffers each), fed shard jobs over bounded channels.
+///
+/// The pool is deliberately dumb: it knows nothing about merging.  It is
+/// always driven through [`PooledSelector`], which owns the partition and
+/// the merge stage.
+pub struct SelectionPool {
+    /// Per-worker job senders; worker `w` serves shards `s ≡ w (mod W)`.
+    txs: Vec<SyncSender<Job>>,
+    done_rx: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+    /// Retained winner buffers, one per shard, taken at submit and
+    /// returned by the drain.
+    bufs: Vec<Vec<usize>>,
+    shards: usize,
+    epoch: u64,
+}
+
+impl SelectionPool {
+    /// Spawn `workers` threads serving `shards` selector instances;
+    /// `make(s)` constructs shard `s`'s instance exactly as
+    /// [`super::ShardedSelector::from_factory`] would, so the two paths
+    /// hold identical selectors.  `workers` is clamped to `1..=shards`.
+    fn from_factory(
+        shards: usize,
+        workers: usize,
+        mut make: impl FnMut(usize) -> Box<dyn Selector>,
+    ) -> SelectionPool {
+        assert!(shards >= 1, "need at least one shard");
+        let workers = workers.clamp(1, shards);
+        // Deal selector instances to their owning workers: worker w gets
+        // shards w, w+W, w+2W, … (local index s / W).
+        let mut per_worker: Vec<Vec<Box<dyn Selector>>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for s in 0..shards {
+            per_worker[s % workers].push(make(s));
+        }
+        let (done_tx, done_rx) = sync_channel::<Done>(shards);
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        let job_depth = shards.div_ceil(workers);
+        for sels in per_worker {
+            let (tx, rx) = sync_channel::<Job>(job_depth);
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || worker_loop(rx, done, sels, workers)));
+            txs.push(tx);
+        }
+        SelectionPool {
+            txs,
+            done_rx,
+            handles,
+            bufs: (0..shards).map(|_| Vec::new()).collect(),
+            shards,
+            epoch: 0,
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.txs.len().max(1)
+    }
+
+    /// Close the job channels and join every worker.  Idempotent: a second
+    /// call (or the `Drop` after an explicit call) is a no-op.  A wedged
+    /// worker cannot hang teardown — joins go through the shared
+    /// timeout-then-log helper.
+    fn shutdown(&mut self) {
+        // Dropping the senders disconnects the job channels; workers exit
+        // their recv loop.  The done channel has capacity for every shard,
+        // so an in-flight worker can always deliver its last result and
+        // reach the disconnect — no send can block shutdown.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            join_or_log(h, "selection pool worker");
+        }
+    }
+}
+
+impl Drop for SelectionPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Body of one pool worker: receive shard jobs until the channel closes,
+/// run each through the shared [`run_shard`] kernel with this worker's
+/// pinned workspace and recycled gather buffers, and send the (epoch-
+/// tagged) winners back.  A panicking selector is caught here so the
+/// worker — and the pool — survive it; the coordinator resurfaces it.
+fn worker_loop(
+    rx: Receiver<Job>,
+    done: SyncSender<Done>,
+    mut selectors: Vec<Box<dyn Selector>>,
+    stride: usize,
+) {
+    let mut ws = Workspace::new();
+    let mut feat: Vec<f64> = Vec::new();
+    let mut grad: Vec<f64> = Vec::new();
+    let mut local: Vec<usize> = Vec::new();
+    while let Ok(job) = rx.recv() {
+        let Job { view, shard, range, budget, epoch, mut winners } = job;
+        let sel = selectors[shard / stride].as_mut();
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the submitting `Pending` guard keeps the view (and
+            // all data it borrows) alive until this job's `Done` has been
+            // received — see the module-level safety model.
+            let view = unsafe { view.get() };
+            run_shard(sel, view, range, budget, &mut ws, &mut feat, &mut grad, &mut local, &mut winners);
+        }))
+        .is_err();
+        // The done channel is sized to hold every shard's result, so this
+        // send never blocks; an Err means the coordinator is gone and the
+        // worker can only wind down.
+        if done.send(Done { shard, epoch, winners, panicked }).is_err() {
+            return;
+        }
+    }
+}
+
+/// Pool-backed sharded selector: the persistent-worker replacement for the
+/// scoped-thread [`super::ShardedSelector`] fan-out, with an async
+/// [`PooledSelector::begin`]/[`Pending::finish`] API for the trainer's
+/// assemble ∥ select overlap.  Implements [`Selector`], so the synchronous
+/// path is just `begin(..).finish(..)`.
+pub struct PooledSelector {
+    pool: SelectionPool,
+    merge: MergePolicy,
+    scratch: MergeScratch,
+    /// Retained partition buffer (recomputed per call, capacity reused).
+    ranges: Vec<Range<usize>>,
+}
+
+impl PooledSelector {
+    /// Build with one selector instance per shard on a pool of `workers`
+    /// threads; `make(s)` constructs shard `s`'s instance (worker
+    /// assignment is `s % workers`).  Matches
+    /// [`super::ShardedSelector::from_factory`] instance-for-instance, so
+    /// pooled and scoped execution are bit-identical.
+    ///
+    /// Panics if `shards > 1` and a constructed selector does not opt in
+    /// via [`Selector::shardable`] (the MaxVol merge only preserves the
+    /// MaxVol family's criterion).  A single shard involves no merge, so
+    /// `shards == 1` accepts any selector — that is how non-shardable
+    /// methods still get off-thread selection and the overlap path.
+    pub fn from_factory(
+        shards: usize,
+        workers: usize,
+        merge: MergePolicy,
+        mut make: impl FnMut(usize) -> Box<dyn Selector>,
+    ) -> PooledSelector {
+        let pool = SelectionPool::from_factory(shards, workers, |s| {
+            let sel = make(s);
+            assert!(
+                shards == 1 || sel.shardable(),
+                "selector '{}' is not shardable: the MaxVol merge would not preserve \
+                 its selection criterion",
+                sel.name()
+            );
+            sel
+        });
+        PooledSelector { pool, merge, scratch: MergeScratch::default(), ranges: Vec::new() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Explicitly tear the pool down (also happens on drop; idempotent).
+    pub fn shutdown(&mut self) {
+        self.pool.shutdown();
+    }
+
+    /// Submit the shard jobs for one batch and return the [`Pending`]
+    /// guard.  The caller may do arbitrary work before
+    /// [`Pending::finish`] — that window is the assemble ∥ select overlap.
+    /// The guard mutably borrows `self` and holds the view borrow, so the
+    /// batch data provably outlives the in-flight jobs.
+    pub fn begin<'v>(&mut self, view: &'v BatchView<'v>, r: usize) -> Pending<'_, 'v> {
+        let k = view.k();
+        shard_ranges_into(k, self.pool.shards, &mut self.ranges);
+        let live = self.ranges.len();
+        let budget = r.min(k);
+        self.pool.epoch += 1;
+        let epoch = self.pool.epoch;
+        if self.pool.txs.is_empty() {
+            // Pool already shut down: nothing to submit; `finish` fails
+            // loudly instead of deadlocking (pinned by the post-shutdown
+            // regression in tests/selection_pool.rs).
+            return Pending { sel: self, view, live: 0, budget, epoch, outstanding: 0, panicked: true };
+        }
+        let mut outstanding = 0usize;
+        let mut panicked = false;
+        for (s, range) in self.ranges.iter().cloned().enumerate() {
+            let winners = std::mem::take(&mut self.pool.bufs[s]);
+            let job = Job { view: ViewPtr::new(view), shard: s, range, budget, epoch, winners };
+            // Channels are sized so a live worker always has queue room;
+            // try_send only fails if the worker thread died (disconnect).
+            match self.pool.txs[s % self.pool.txs.len()].try_send(job) {
+                Ok(()) => outstanding += 1,
+                Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
+                    self.pool.bufs[s] = j.winners;
+                    panicked = true;
+                }
+            }
+        }
+        Pending { sel: self, view, live, budget, epoch, outstanding, panicked }
+    }
+}
+
+impl Selector for PooledSelector {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        self.begin(view, r).finish(ws, out);
+    }
+}
+
+/// In-flight selection epoch: proof that shard jobs reference a live view.
+///
+/// Obtained from [`PooledSelector::begin`]; consumed by
+/// [`Pending::finish`], which blocks for the shard results and runs the
+/// merge.  Dropping it without finishing (early return, unwinding caller)
+/// still drains every outstanding job first — the invariant the worker-side
+/// raw view pointer depends on.
+pub struct Pending<'s, 'v> {
+    sel: &'s mut PooledSelector,
+    view: &'v BatchView<'v>,
+    live: usize,
+    budget: usize,
+    epoch: u64,
+    outstanding: usize,
+    panicked: bool,
+}
+
+impl Pending<'_, '_> {
+    /// Block until every job of this epoch is accounted for, recycling
+    /// winner buffers (current-epoch results into their shard slot; stale
+    /// results from an abandoned epoch likewise, without counting them).
+    fn drain(&mut self) {
+        while self.outstanding > 0 {
+            match self.sel.pool.done_rx.recv() {
+                Ok(d) => {
+                    let current = d.epoch == self.epoch;
+                    if d.panicked && current {
+                        self.panicked = true;
+                    }
+                    self.sel.pool.bufs[d.shard] = d.winners;
+                    if current {
+                        self.outstanding -= 1;
+                    }
+                }
+                Err(_) => {
+                    // Every worker (and its done sender) is gone, so no job
+                    // of this epoch can still be running — safe to stop.
+                    self.panicked = true;
+                    self.outstanding = 0;
+                }
+            }
+        }
+    }
+
+    /// Wait for the shard results and fold them with the merge policy into
+    /// `out` (batch-local ids, `|out| == min(r, K)` for budget-honouring
+    /// inner selectors).  Propagates a worker panic to the caller — after
+    /// the drain, so the pool remains consistent and reusable.
+    pub fn finish(mut self, ws: &mut Workspace, out: &mut Vec<usize>) {
+        self.drain();
+        if self.panicked {
+            panic!(
+                "selection pool: a shard worker panicked or was unavailable \
+                 (contained; pool state stays consistent)"
+            );
+        }
+        out.clear();
+        if self.live == 0 {
+            return;
+        }
+        let sel = &mut *self.sel;
+        merge_winners(
+            self.view,
+            sel.pool.bufs[..self.live].iter().map(|b| b.as_slice()),
+            self.budget,
+            sel.merge,
+            ws,
+            &mut sel.scratch,
+            out,
+        );
+    }
+}
+
+impl Drop for Pending<'_, '_> {
+    fn drop(&mut self) {
+        // `finish` drains before it can panic, so reaching here with jobs
+        // outstanding means the guard was dropped without finishing (early
+        // return or an unwinding caller).  Drain now: the raw view pointer
+        // on the workers must not outlive this borrow.
+        self.drain();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined refresh windows (assemble ∥ select)
+// ---------------------------------------------------------------------------
+
+/// One assembled selection window, owned so pool workers can read it while
+/// the coordinator assembles the next one.  Field layout mirrors
+/// [`BatchView`]; `row_ids` carries the global dataset ids the caller maps
+/// the batch-local winners back through.
+pub struct SelectWindow {
+    pub features: Mat,
+    pub grads: Mat,
+    pub losses: Vec<f64>,
+    pub labels: Vec<i32>,
+    pub preds: Vec<i32>,
+    pub classes: usize,
+    pub row_ids: Vec<usize>,
+}
+
+impl SelectWindow {
+    pub fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+/// Drive `count` selection windows through a [`PooledSelector`],
+/// overlapping `assemble(w + 1)` (batch gather / `embed` / extractor —
+/// whatever the closure does) with the in-flight shard selection and merge
+/// of window `w` when `overlap` is true.  With `overlap == false` the loop
+/// is strictly serial — assemble, select, consume — and produces exactly
+/// the same `consume` calls as the pipelined path (pinned by
+/// `tests/selection_pool.rs::overlap_and_serial_paths_agree`), because
+/// window assembly never depends on selection results.
+///
+/// `consume(w, window, winners)` receives the batch-local winner ids for
+/// window `w`; `selbuf` is the retained winner buffer threaded through
+/// every select call.  An `Err` from `assemble` aborts the loop; an
+/// in-flight epoch is drained by the [`Pending`] drop before the error
+/// propagates.
+pub fn run_windows<E>(
+    sel: &mut PooledSelector,
+    budget: usize,
+    overlap: bool,
+    count: usize,
+    ws: &mut Workspace,
+    selbuf: &mut Vec<usize>,
+    mut assemble: impl FnMut(usize) -> Result<SelectWindow, E>,
+    mut consume: impl FnMut(usize, &SelectWindow, &[usize]),
+) -> Result<(), E> {
+    if count == 0 {
+        return Ok(());
+    }
+    if !overlap {
+        for wi in 0..count {
+            let win = assemble(wi)?;
+            sel.select_into(&win.view(), budget, ws, selbuf);
+            consume(wi, &win, selbuf);
+        }
+        return Ok(());
+    }
+    let mut cur = assemble(0)?;
+    for wi in 0..count {
+        let view = cur.view();
+        let pending = sel.begin(&view, budget);
+        // The overlap: workers are selecting window `wi` right now, while
+        // this thread assembles window `wi + 1`.  If assembly fails, the
+        // `pending` drop drains the in-flight epoch before `?` returns.
+        let next = if wi + 1 < count { Some(assemble(wi + 1)?) } else { None };
+        pending.finish(ws, selbuf);
+        consume(wi, &cur, selbuf);
+        if let Some(n) = next {
+            cur = n;
+        }
+    }
+    Ok(())
+}

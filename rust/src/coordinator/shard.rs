@@ -54,6 +54,72 @@ pub fn shard_ranges_into(k: usize, shards: usize, out: &mut Vec<Range<usize>>) {
     }
 }
 
+/// Run one shard job: gather the contiguous row `range` of `view` into the
+/// recycled `feat`/`grad` buffers, run `selector` over the shard-local view
+/// with up to `budget` winners, and write **batch-local** winner ids into
+/// `won` (cleared first).  The shard feature/gradient blocks are contiguous
+/// row slices of the batch matrices, so building the shard-local view is
+/// two memcpys into retained buffers (`from_vec`/`into_vec` round-trip) —
+/// allocation-free once the buffers have warmed up.
+///
+/// This is the single shard-execution kernel shared by the scoped-thread
+/// fan-out ([`ShardedSelector`]) and the persistent worker pool
+/// ([`super::pool::SelectionPool`]): both paths run byte-for-byte the same
+/// gather + select, which is what makes pool ≡ scoped ≡ serial bit-identity
+/// (pinned by `tests/selection_pool.rs`) a structural property rather than
+/// a numerical coincidence.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_shard(
+    selector: &mut dyn Selector,
+    view: &BatchView<'_>,
+    range: Range<usize>,
+    budget: usize,
+    ws: &mut Workspace,
+    feat: &mut Vec<f64>,
+    grad: &mut Vec<f64>,
+    local: &mut Vec<usize>,
+    won: &mut Vec<usize>,
+) {
+    won.clear();
+    let len = range.len();
+    if len == 0 {
+        return;
+    }
+    if len == view.k() {
+        // Full-range job (one shard, or K collapsed into a single range):
+        // the "shard" is the batch itself, so select in place and skip the
+        // gather — same arithmetic on the same rows, zero copies.  This is
+        // what keeps the pool's single-shard hosting of non-shardable
+        // selectors (and the overlap path) copy-free like the inline
+        // single-shot path.
+        selector.select_into(view, budget.min(len), ws, local);
+        won.extend_from_slice(local);
+        return;
+    }
+    let (rc, ec) = (view.features.cols(), view.grads.cols());
+    let mut fb = std::mem::take(feat);
+    fb.clear();
+    fb.extend_from_slice(&view.features.data()[range.start * rc..range.end * rc]);
+    let fmat = Mat::from_vec(len, rc, fb);
+    let mut gb = std::mem::take(grad);
+    gb.clear();
+    gb.extend_from_slice(&view.grads.data()[range.start * ec..range.end * ec]);
+    let gmat = Mat::from_vec(len, ec, gb);
+    let shard_view = BatchView {
+        features: &fmat,
+        grads: &gmat,
+        losses: &view.losses[range.clone()],
+        labels: &view.labels[range.clone()],
+        preds: &view.preds[range.clone()],
+        classes: view.classes,
+        row_ids: &view.row_ids[range.clone()],
+    };
+    selector.select_into(&shard_view, budget.min(len), ws, local);
+    won.extend(local.iter().map(|&i| range.start + i));
+    *feat = fmat.into_vec();
+    *grad = gmat.into_vec();
+}
+
 /// One shard's selector plus all of its private scratch: a [`Workspace`],
 /// reusable feature/gradient gather buffers, and the winner list.  Owning
 /// everything per shard keeps the fan-out free of shared mutable state —
@@ -82,37 +148,19 @@ impl ShardWorker {
 
     /// Select up to `budget` rows from the contiguous row range of `view`
     /// assigned to this shard; winners land in `self.won` as batch-local
-    /// ids.  The shard feature/gradient blocks are contiguous row slices
-    /// of the batch matrices, so building the shard-local view is two
-    /// memcpys into recycled buffers (`from_vec`/`into_vec` round-trip).
+    /// ids.  Delegates to the shared [`run_shard`] kernel.
     fn run(&mut self, view: &BatchView<'_>, range: Range<usize>, budget: usize) {
-        self.won.clear();
-        let len = range.len();
-        if len == 0 {
-            return;
-        }
-        let (rc, ec) = (view.features.cols(), view.grads.cols());
-        let mut fb = std::mem::take(&mut self.feat);
-        fb.clear();
-        fb.extend_from_slice(&view.features.data()[range.start * rc..range.end * rc]);
-        let fmat = Mat::from_vec(len, rc, fb);
-        let mut gb = std::mem::take(&mut self.grad);
-        gb.clear();
-        gb.extend_from_slice(&view.grads.data()[range.start * ec..range.end * ec]);
-        let gmat = Mat::from_vec(len, ec, gb);
-        let shard_view = BatchView {
-            features: &fmat,
-            grads: &gmat,
-            losses: &view.losses[range.clone()],
-            labels: &view.labels[range.clone()],
-            preds: &view.preds[range.clone()],
-            classes: view.classes,
-            row_ids: &view.row_ids[range.clone()],
-        };
-        self.selector.select_into(&shard_view, budget.min(len), &mut self.ws, &mut self.local);
-        self.won.extend(self.local.iter().map(|&i| range.start + i));
-        self.feat = fmat.into_vec();
-        self.grad = gmat.into_vec();
+        run_shard(
+            self.selector.as_mut(),
+            view,
+            range,
+            budget,
+            &mut self.ws,
+            &mut self.feat,
+            &mut self.grad,
+            &mut self.local,
+            &mut self.won,
+        );
     }
 }
 

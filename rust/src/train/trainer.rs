@@ -10,14 +10,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{MergePolicy, ShardedSelector};
+use crate::coordinator::{run_windows, MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
 use crate::graft::alignment::AlignmentSample;
 use crate::graft::{AlignmentStats, BudgetedRankPolicy};
 use crate::linalg::Workspace;
 use crate::rng::Rng;
 use crate::runtime::{ConfigSpec, Engine, ModelParams, TrainState};
-use crate::selection::{self, BatchView, Selector};
+use crate::selection::{self, Selector};
 
 use super::energy::{selection_flops, EnergyMeter, FlopModel};
 use super::metrics::{CurvePoint, LossTracker, RunResult};
@@ -66,6 +66,20 @@ pub struct TrainConfig {
     pub shards: usize,
     /// How per-shard winners are merged when `shards > 1`.
     pub merge: MergePolicy,
+    /// Persistent selection worker pool for the Rust-side selection
+    /// paths.  `0` (the default) keeps the PR 2 behaviour: shard fan-out
+    /// on per-refresh scoped threads.  `>= 1` routes shard jobs through a
+    /// long-lived [`crate::coordinator::pool::SelectionPool`] of that many
+    /// workers instead — results are bit-identical at any worker count
+    /// (pinned by `rust/tests/selection_pool.rs`), refreshes stop paying
+    /// per-refresh thread spawns, and the pool is what `overlap` runs on.
+    pub pool_workers: usize,
+    /// Overlap next-window assembly (`gather` + `embed` + extractor) with
+    /// the in-flight shard selection of the previous window.  Requires
+    /// `pool_workers >= 1` (ignored with a note otherwise).  The training
+    /// trajectory is identical with the flag on or off: window assembly
+    /// never depends on selection results, so only the wall-clock changes.
+    pub overlap: bool,
     pub seed: u64,
 }
 
@@ -85,6 +99,8 @@ impl Default for TrainConfig {
             extractor: None,
             shards: 1,
             merge: MergePolicy::Hierarchical,
+            pool_workers: 0,
+            overlap: false,
             seed: 42,
         }
     }
@@ -146,8 +162,26 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     let is_graft = cfg.method.starts_with("graft");
     let r_budget = ((cfg.fraction * spec.k as f64).round() as usize).clamp(1, spec.k);
 
-    let mut baseline: Option<Box<dyn Selector>> = if !is_full && !is_graft {
-        Some(build_selector(&cfg.method, cfg.seed ^ 0xBA5E, cfg.shards, cfg.merge)?)
+    if cfg.overlap && cfg.pool_workers == 0 {
+        eprintln!("note: --overlap needs a persistent selection pool (--pool-workers >= 1); running serial refreshes");
+    }
+    let mut baseline: Option<SelectorExec> = if !is_full && !is_graft {
+        Some(build_selector(&cfg.method, cfg.seed ^ 0xBA5E, cfg.shards, cfg.pool_workers, cfg.merge)?)
+    } else {
+        None
+    };
+    // Rust-side GRAFT selector for the extractor ablation path, built once
+    // per *run* (not per refresh): with a persistent pool the workers —
+    // and their warmed workspaces/buffers — must live across refreshes,
+    // and even inline the merge scratch is reused run-long.  strict() is
+    // state-independent (rank == target always), so hoisting changes no
+    // selection.
+    let mut graft_sel: Option<SelectorExec> = if is_graft && cfg.extractor.is_some() {
+        let make_graft = |_si: usize| -> Box<dyn Selector> {
+            // strict() pins strict_budget, so |S| == r_budget holds.
+            Box::new(crate::graft::GraftSelector::new(BudgetedRankPolicy::strict(cfg.epsilon)))
+        };
+        Some(wrap_selector(cfg.shards, cfg.pool_workers, cfg.merge, true, make_graft))
     } else {
         None
     };
@@ -199,8 +233,8 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
         if !is_full {
             active = refresh_subset(
                 engine, cfg, &spec, &train, &state.params, r_budget, &mut baseline,
-                &mut policy, &mut align, &mut meter, &flops, epoch, &mut refresh_rng,
-                &mut ws, &mut selbuf,
+                &mut graft_sel, &mut policy, &mut align, &mut meter, &flops, epoch,
+                &mut refresh_rng, &mut ws, &mut selbuf,
             )?;
             if active.is_empty() {
                 bail!("selection produced an empty subset");
@@ -267,43 +301,93 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     })
 }
 
-/// Construct the (possibly sharded) baseline selector.  `shards <= 1`
-/// builds the plain selector — exactly the pre-shard object, so the
-/// single-shot path stays bit-identical; `shards > 1` wraps one instance
-/// per shard in a [`ShardedSelector`].  Worker 0 keeps the base seed so
-/// stateless methods line up with the single-shot construction.
+/// How the Rust-side selection for a refresh executes.  `Sync` covers the
+/// pre-pool shapes — single-shot, or the scoped-thread [`ShardedSelector`]
+/// fan-out; `Pooled` routes shard jobs through the persistent
+/// [`PooledSelector`] worker pool, which is also what the assemble ∥
+/// select `overlap` path runs on.  All three execution shapes are
+/// bit-identical (pinned by `rust/tests/selection_pool.rs`).
+enum SelectorExec {
+    Sync(Box<dyn Selector>),
+    Pooled(Box<PooledSelector>),
+}
+
+/// Wrap a selector factory in the configured execution shape.  `shards`
+/// only applies when the selector family opted in ([`Selector::shardable`]
+/// — the MaxVol criterion survives the merge); `pool_workers >= 1` moves
+/// execution onto the persistent pool (any selector qualifies at one
+/// shard, since a single shard involves no merge).  `make(0)` must use the
+/// caller's base seed so every shape matches the unsharded construction.
+fn wrap_selector(
+    shards: usize,
+    pool_workers: usize,
+    merge: MergePolicy,
+    shardable: bool,
+    mut make: impl FnMut(usize) -> Box<dyn Selector>,
+) -> SelectorExec {
+    let shards = if shardable { shards.max(1) } else { 1 };
+    if pool_workers >= 1 {
+        SelectorExec::Pooled(Box::new(PooledSelector::from_factory(
+            shards,
+            pool_workers,
+            merge,
+            make,
+        )))
+    } else if shards > 1 {
+        SelectorExec::Sync(Box::new(ShardedSelector::from_factory(shards, merge, make)))
+    } else {
+        SelectorExec::Sync(make(0))
+    }
+}
+
+/// Construct the baseline selector in its execution shape.  `shards <= 1`
+/// and no pool builds the plain selector — exactly the pre-shard object,
+/// so the single-shot path stays bit-identical; `shards > 1` wraps one
+/// instance per shard (scoped threads, or the persistent pool when
+/// `pool_workers >= 1`).  Shard 0 keeps the base seed so stateless
+/// methods line up with the single-shot construction.
 /// Only selectors that opt in via [`Selector::shardable`] (the MaxVol
-/// family) are wrapped: for score-/RNG-based methods the second-stage
+/// family) are sharded: for score-/RNG-based methods the second-stage
 /// MaxVol merge would silently rewrite the selection criterion, and
 /// cross-batch state (`forget`) would fragment across shard-private
-/// instances — those run single-shot with a note.
+/// instances — those run single-shot (still pool-hosted when requested,
+/// which keeps them eligible for the overlap path) with a note.
 fn build_selector(
     method: &str,
     seed: u64,
     shards: usize,
+    pool_workers: usize,
     merge: MergePolicy,
-) -> Result<Box<dyn Selector>> {
+) -> Result<SelectorExec> {
     let single =
         selection::by_name(method, seed).with_context(|| format!("unknown method '{method}'"))?;
-    if shards <= 1 {
-        return Ok(single);
-    }
-    if !single.shardable() {
+    let shardable = single.shardable();
+    if shards > 1 && !shardable {
         eprintln!(
             "note: method '{method}' is not shardable (its criterion or cross-batch state \
              would not survive the MaxVol merge); selection runs single-shot \
              (--shards {shards} ignored)"
         );
-        return Ok(single);
     }
-    Ok(Box::new(ShardedSelector::from_factory(shards, merge, |si| {
+    if shards <= 1 && pool_workers == 0 {
+        return Ok(SelectorExec::Sync(single));
+    }
+    Ok(wrap_selector(shards, pool_workers, merge, shardable, |si| {
         let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
         selection::by_name(method, wseed).expect("method name validated above")
-    })))
+    }))
 }
 
 /// Stage 1 of Algorithm 1: scan the training set in K-windows and select a
 /// per-batch subset; returns the aggregated active row set S^t.
+///
+/// The AOT `select` path stays serial against the engine (its selection
+/// runs inside the compiled kernel).  The Rust-side paths — baselines and
+/// the GRAFT extractor ablation — are expressed as assemble/consume
+/// closures over [`SelectWindow`]s: with a persistent pool and `overlap`
+/// on, [`run_windows`] assembles (gather + `embed` + extractor) window
+/// `w + 1` while the pool workers select window `w`; otherwise the loop
+/// runs serially, step-for-step identical to the pre-pool trainer.
 #[allow(clippy::too_many_arguments)]
 fn refresh_subset(
     engine: &mut Engine,
@@ -312,7 +396,8 @@ fn refresh_subset(
     train: &Dataset,
     params: &ModelParams,
     r_budget: usize,
-    baseline: &mut Option<Box<dyn Selector>>,
+    baseline: &mut Option<SelectorExec>,
+    graft_sel: &mut Option<SelectorExec>,
     policy: &mut BudgetedRankPolicy,
     align: &mut AlignmentStats,
     meter: &mut EnergyMeter,
@@ -325,62 +410,17 @@ fn refresh_subset(
     let mut active = Vec::new();
     let mut order: Vec<usize> = (0..train.n).collect();
     rng.shuffle(&mut order);
-    // Rust-side GRAFT selector for the extractor ablation path, built once
-    // per refresh rather than per window: with shards > 1 it owns N
-    // workspaces plus merge scratch whose buffers must be reused across
-    // windows, not reallocated inside the hot loop.
-    let mut graft_sel: Option<Box<dyn Selector>> =
-        if cfg.method.starts_with("graft") && cfg.extractor.is_some() {
-            let make_graft = || -> Box<dyn Selector> {
-                // strict() pins strict_budget, so |S| == r_budget holds.
-                Box::new(crate::graft::GraftSelector::new(
-                    crate::graft::BudgetedRankPolicy::strict(cfg.epsilon)))
-            };
-            Some(if cfg.shards <= 1 {
-                make_graft()
-            } else {
-                Box::new(ShardedSelector::from_factory(cfg.shards, cfg.merge, |_| make_graft()))
-            })
-        } else {
-            None
-        };
-    let windows = (train.n / spec.k).max(1);
-    for wi in 0..windows {
-        let end = ((wi + 1) * spec.k).min(train.n);
-        let rows = &order[wi * spec.k..end];
-        if rows.len() < spec.k {
-            break;
-        }
-        let (x, y) = (train.gather(rows), train.one_hot(rows));
-        if cfg.method.starts_with("graft") && cfg.extractor.is_some() {
-            // Ablation path (Fig 4): embed for gradient sketches, features
-            // from a Rust-side extractor, Rust GraftSelector.
-            let emb = engine.embed(&cfg.dataset, params, &x, &y)?;
-            meter.add_flops(flops.embed_batch);
-            let name = cfg.extractor.as_deref().unwrap();
-            let ext = crate::features::by_name(name)
-                .with_context(|| format!("unknown extractor '{name}'"))?;
-            let xmat = crate::linalg::Mat::from_f32(spec.k, spec.d, &x);
-            // Only r_budget feature columns are consumed by the strict-
-            // budget selection; extracting more would pay quadratic
-            // extractor cost (Jacobi/ICA) for unused directions.
-            let feats = ext.extract(&xmat, r_budget.min(spec.rmax));
-            let labels: Vec<i32> = rows.iter().map(|&i| train.y[i]).collect();
-            let view = BatchView {
-                features: &feats,
-                grads: &emb.grads,
-                losses: &emb.losses,
-                labels: &labels,
-                preds: &emb.preds,
-                classes: spec.c,
-                row_ids: rows,
-            };
-            let g = graft_sel.as_mut().expect("extractor selector built above");
-            g.select_into(&view, r_budget, ws, selbuf);
-            for &bi in selbuf.iter() {
-                active.push(rows[bi]);
-            }
-        } else if cfg.method.starts_with("graft") {
+    // Only full K-windows select; the shuffled tail shorter than K is
+    // skipped, exactly as the pre-pool loop did by breaking early
+    // (`run` ensures train.n >= K, so there is at least one window).
+    let windows = train.n / spec.k;
+    let is_ext = cfg.method.starts_with("graft") && cfg.extractor.is_some();
+    if cfg.method.starts_with("graft") && !is_ext {
+        // AOT `select` artifact path: selection runs inside the compiled
+        // kernel, so there is nothing to shard, pool, or overlap here.
+        for wi in 0..windows {
+            let rows = &order[wi * spec.k..(wi + 1) * spec.k];
+            let (x, y) = (train.gather(rows), train.one_hot(rows));
             let out = engine.select(&cfg.dataset, params, &x, &y)?;
             meter.add_flops(flops.select_batch);
             let decision = policy.choose(&out.errors, r_budget, spec.rmax);
@@ -408,26 +448,65 @@ fn refresh_subset(
                     active.push(rows[bi]);
                 }
             }
+        }
+        return Ok(active);
+    }
+
+    // Rust-side selection (baselines / GRAFT extractor ablation): each
+    // window is assembled into an owned [`SelectWindow`] so the pool
+    // workers can read it while this thread assembles the next one.
+    let assemble = |wi: usize| -> Result<SelectWindow> {
+        let rows = &order[wi * spec.k..(wi + 1) * spec.k];
+        let (x, y) = (train.gather(rows), train.one_hot(rows));
+        let emb = engine.embed(&cfg.dataset, params, &x, &y)?;
+        meter.add_flops(flops.embed_batch);
+        let labels: Vec<i32> = rows.iter().map(|&i| train.y[i]).collect();
+        let (features, grads, losses, preds) = if is_ext {
+            // Ablation path (Fig 4): embed for gradient sketches, features
+            // from a Rust-side extractor, Rust GraftSelector.
+            let name = cfg.extractor.as_deref().unwrap();
+            let ext = crate::features::by_name(name)
+                .with_context(|| format!("unknown extractor '{name}'"))?;
+            let xmat = crate::linalg::Mat::from_f32(spec.k, spec.d, &x);
+            // Only r_budget feature columns are consumed by the strict-
+            // budget selection; extracting more would pay quadratic
+            // extractor cost (Jacobi/ICA) for unused directions.
+            let feats = ext.extract(&xmat, r_budget.min(spec.rmax));
+            (feats, emb.grads, emb.losses, emb.preds)
         } else {
-            let emb = engine.embed(&cfg.dataset, params, &x, &y)?;
-            meter.add_flops(flops.embed_batch);
             meter.add_flops(selection_flops(&cfg.method, spec, r_budget));
-            let labels: Vec<i32> = rows.iter().map(|&i| train.y[i]).collect();
-            let view = BatchView {
-                features: &emb.features,
-                grads: &emb.grads,
-                losses: &emb.losses,
-                labels: &labels,
-                preds: &emb.preds,
-                classes: spec.c,
-                row_ids: rows,
-            };
-            baseline
-                .as_mut()
-                .expect("baseline selector")
-                .select_into(&view, r_budget, ws, selbuf);
-            for &bi in selbuf.iter() {
-                active.push(rows[bi]);
+            (emb.features, emb.grads, emb.losses, emb.preds)
+        };
+        Ok(SelectWindow {
+            features,
+            grads,
+            losses,
+            labels,
+            preds,
+            classes: spec.c,
+            row_ids: rows.to_vec(),
+        })
+    };
+    let consume = |_wi: usize, win: &SelectWindow, winners: &[usize]| {
+        for &bi in winners {
+            active.push(win.row_ids[bi]);
+        }
+    };
+    let exec = if is_ext {
+        graft_sel.as_mut().expect("extractor selector built in run()")
+    } else {
+        baseline.as_mut().expect("baseline selector")
+    };
+    match exec {
+        SelectorExec::Pooled(p) => {
+            run_windows(p, r_budget, cfg.overlap, windows, ws, selbuf, assemble, consume)?;
+        }
+        SelectorExec::Sync(s) => {
+            let (mut assemble, mut consume) = (assemble, consume);
+            for wi in 0..windows {
+                let win = assemble(wi)?;
+                s.select_into(&win.view(), r_budget, ws, selbuf);
+                consume(wi, &win, selbuf);
             }
         }
     }

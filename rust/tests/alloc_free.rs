@@ -12,6 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use graft::coordinator::{MergePolicy, PooledSelector};
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -143,4 +144,24 @@ fn steady_state_selection_is_allocation_free() {
         }
     });
     assert_eq!(d, 0, "GraftSelector::select_into allocated {d} times at steady state");
+
+    // ---- persistent selection pool (PR 3) --------------------------------
+    // The counting allocator is global, so worker-thread allocations count
+    // too: once each worker's workspace/gather buffers and every winner
+    // buffer have warmed up, a pooled refresh must allocate nowhere — the
+    // job/result messages move recycled Vecs through preallocated
+    // `sync_channel` slots, and the merge runs on retained scratch.
+    let mut pooled = PooledSelector::from_factory(4, 2, MergePolicy::Hierarchical, |_| {
+        Box::new(FastMaxVol)
+    });
+    for _ in 0..3 {
+        pooled.select_into(&owned.view(), 32, &mut ws, &mut out); // warm-up (incl. merge top-up)
+    }
+    assert_eq!(out.len(), 32);
+    let d = measured(|| {
+        for _ in 0..10 {
+            pooled.select_into(&owned.view(), 32, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "PooledSelector::select_into allocated {d} times at steady state");
 }

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Validate a graft-bench-v1 JSON file (emitted by benches/bench_util.rs).
 
-Usage: scripts/validate_bench.py [--allow-empty] FILE [FILE ...]
+Usage: scripts/validate_bench.py [--allow-empty] [--require OP ...] FILE [FILE ...]
 
 Checks, per file:
   * top-level object with "schema": "graft-bench-v1" and a "records" list
@@ -10,6 +10,9 @@ Checks, per file:
   * at least one record, unless --allow-empty (the committed placeholder
     BENCH_pr1.json is empty until scripts/bench.sh runs on a machine with
     a Rust toolchain)
+  * every --require OP (repeatable) appears as the "op" of at least one
+    record — how CI pins that a bench family (e.g. the PR 3 "select_pooled"
+    pool rows) cannot silently stop emitting
 
 Exit status 0 when every file passes, 1 otherwise.  Stdlib only.
 """
@@ -23,7 +26,7 @@ STR_FIELDS = ("bench", "op", "shape")
 NUM_FIELDS = ("mean_ns", "std_ns", "min_ns")
 
 
-def validate(path, allow_empty):
+def validate(path, allow_empty, require=()):
     errors = []
     try:
         with open(path, encoding="utf-8") as fh:
@@ -64,18 +67,35 @@ def validate(path, allow_empty):
         extra = set(rec) - set(STR_FIELDS) - set(NUM_FIELDS)
         if extra:
             errors.append(f"{where}: unknown fields {sorted(extra)}")
+    ops = {rec.get("op") for rec in records if isinstance(rec, dict)}
+    for op in require:
+        if op not in ops:
+            errors.append(f"required op {op!r} has no records")
     return errors
 
 
 def main(argv):
-    args = [a for a in argv if a != "--allow-empty"]
-    allow_empty = len(args) != len(argv)
+    allow_empty = False
+    require = []
+    args = []
+    it = iter(argv)
+    for a in it:
+        if a == "--allow-empty":
+            allow_empty = True
+        elif a == "--require":
+            op = next(it, None)
+            if op is None:
+                print("error: --require needs an op name", file=sys.stderr)
+                return 1
+            require.append(op)
+        else:
+            args.append(a)
     if not args:
         print(__doc__.strip())
         return 1
     failed = False
     for path in args:
-        errs = validate(path, allow_empty)
+        errs = validate(path, allow_empty, require)
         if errs:
             failed = True
             print(f"FAIL {path}")
