@@ -14,6 +14,7 @@ mod bench_util;
 
 use bench_util::{report, smoke_mode, time_it, JsonSink};
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
+use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
 use graft::selection::maxvol::FastMaxVol;
@@ -85,6 +86,30 @@ fn main() {
         let mut scoped_out: Vec<usize> = Vec::new();
         scoped_ref.select_into(&view, r, &mut ws, &mut scoped_out);
         assert_eq!(out, scoped_out, "pool≡scoped bit-identity broke at shards={shards} workers={workers}");
+    }
+
+    // Gradient-aware merge (PR 4): GRAFT shard instances + one top-level
+    // rank authority — the fully-GRAFT sharded path, priced against the
+    // feature-only rows above.  A strict authority's rank decision is the
+    // identity, so the subset must equal the feature-only merge bit for
+    // bit; a silent divergence fails the bench (and the CI smoke run).
+    for shards in [2usize, 4, 8] {
+        let mut sel = ShardedSelector::from_factory(shards, MergePolicy::Grad, |_| {
+            Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+        })
+        .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05))));
+        let t = time_it(warm, reps, || {
+            sel.select_into(&view, r, &mut ws, &mut out);
+        });
+        report(&format!("grad-merge select (shards={shards}, graft)"), t.0, t.1, t.2);
+        sink.record("select_sharded_gradmerge", &format!("{shape},shards={shards}"), t);
+        let mut feature_only =
+            ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, |_| {
+                Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+            });
+        let mut fout: Vec<usize> = Vec::new();
+        feature_only.select_into(&view, r, &mut ws, &mut fout);
+        assert_eq!(out, fout, "strict grad-merge ≡ feature-only broke at shards={shards}");
     }
 
     // Flat merge at the widest fan-out: the single big second-stage MaxVol

@@ -43,7 +43,8 @@ COMMANDS
   train                     one training run
                             --dataset D --method M --fraction F --epochs N
                             [--adaptive-rank] [--epsilon E] [--seed S]
-                            [--shards N] [--merge hierarchical|flat]
+                            [--shards N] [--merge hierarchical|flat|grad]
+                            (grad = gradient-aware merge, default for graft)
                             [--pool-workers N] [--overlap]
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]

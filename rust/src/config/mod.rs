@@ -108,9 +108,16 @@ impl Args {
     /// Build a [`TrainConfig`] from the parsed options.
     pub fn train_config(&self) -> Result<TrainConfig> {
         let d = TrainConfig::default();
+        let method = self.get_or("method", &d.method);
+        // `--merge` default is method-aware: GRAFT merges gradient-aware
+        // (that is the paper's criterion — feature-only merging silently
+        // degrades it at shards > 1); every other method keeps the
+        // feature-space hierarchical tournament.  An explicit flag wins.
+        let merge_default =
+            if method.starts_with("graft") { MergePolicy::Grad } else { MergePolicy::Hierarchical };
         Ok(TrainConfig {
             dataset: self.get_or("dataset", &d.dataset),
-            method: self.get_or("method", &d.method),
+            method,
             fraction: self.f64_or("fraction", d.fraction)?,
             epochs: self.usize_or("epochs", d.epochs)?,
             refresh_epochs: self.usize_or("refresh-epochs", d.refresh_epochs)?,
@@ -124,9 +131,10 @@ impl Args {
             pool_workers: self.usize_or("pool-workers", d.pool_workers)?,
             overlap: self.flag("overlap") || d.overlap,
             merge: {
-                let s = self.get_or("merge", d.merge.name());
-                MergePolicy::parse(&s)
-                    .with_context(|| format!("unknown merge policy '{s}' (hierarchical|flat)"))?
+                let s = self.get_or("merge", merge_default.name());
+                MergePolicy::parse(&s).with_context(|| {
+                    format!("unknown merge policy '{s}' (hierarchical|flat|grad)")
+                })?
             },
             seed: self.u64_or("seed", d.seed)?,
         })
@@ -175,6 +183,19 @@ mod tests {
         let d = parse("train").train_config().unwrap();
         assert_eq!(d.pool_workers, 0, "pool off by default (scoped-thread fan-out)");
         assert!(!d.overlap, "overlap off by default");
+    }
+
+    #[test]
+    fn merge_default_is_method_aware() {
+        let g = parse("train").train_config().unwrap();
+        assert_eq!(g.merge, MergePolicy::Grad, "GRAFT defaults to the gradient-aware merge");
+        let m = parse("train --method maxvol").train_config().unwrap();
+        assert_eq!(m.merge, MergePolicy::Hierarchical, "non-GRAFT keeps the feature-only merge");
+        let h = parse("train --merge hierarchical").train_config().unwrap();
+        assert_eq!(h.merge, MergePolicy::Hierarchical, "explicit flag opts GRAFT back out");
+        let gm = parse("train --method maxvol --merge grad").train_config().unwrap();
+        assert_eq!(gm.merge, MergePolicy::Grad, "explicit grad works for any method");
+        assert!(parse("train --merge nope").train_config().is_err());
     }
 
     #[test]

@@ -9,10 +9,25 @@
 //! rather than O(n).  [`MergePolicy::Flat`] runs one MaxVol over the full
 //! concatenation — same result class, larger single reduction — and is
 //! kept as the reference shape for the property tests and the bench.
+//!
+//! [`MergePolicy::Grad`] (the default for the GRAFT selector) restores the
+//! paper's gradient-awareness across the shard boundary: the MaxVol
+//! tournament still fixes the merged pivot order, but then the prefix
+//! projection errors of the **global** batch-mean gradient ĝ are
+//! recomputed over that order (the fused MGS kernel of
+//! `graft::geometry`), and one top-level rank authority applies the
+//! single `BudgetedRankPolicy` decision — global dynamic rank, one budget
+//! accumulator, ε semantics independent of the shard count.  What crosses
+//! the shard → merge boundary is a [`ShardGrads`] per shard: the winner
+//! rows' gradient-sketch columns plus the shard's partial ḡ sum
+//! (O(shards·(r·E + E)) memory; the exact global ḡ is the count-weighted
+//! mean, so no extra pass over the batch is ever taken).
 
+use crate::graft::geometry::prefix_errors_core;
+use crate::graft::RankDecision;
 use crate::linalg::{Mat, Workspace};
 use crate::selection::maxvol::fast_maxvol_with;
-use crate::selection::BatchView;
+use crate::selection::{BatchView, Selector};
 
 /// How per-shard winners are folded into the final subset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -22,6 +37,12 @@ pub enum MergePolicy {
     Hierarchical,
     /// Single second-stage MaxVol over the concatenation of all winners.
     Flat,
+    /// Gradient-aware merge: the hierarchical tournament fixes the merged
+    /// pivot order, then prefix projection errors of the global ĝ over
+    /// that order drive one top-level dynamic-rank decision (the
+    /// coordinator's rank authority).  Default for the GRAFT selector —
+    /// it is what keeps the sharded path on the paper's criterion.
+    Grad,
 }
 
 impl MergePolicy {
@@ -30,6 +51,7 @@ impl MergePolicy {
         match s {
             "hierarchical" | "tournament" => Some(MergePolicy::Hierarchical),
             "flat" => Some(MergePolicy::Flat),
+            "grad" | "gradient" | "grad-aware" => Some(MergePolicy::Grad),
             _ => None,
         }
     }
@@ -38,8 +60,56 @@ impl MergePolicy {
         match self {
             MergePolicy::Hierarchical => "hierarchical",
             MergePolicy::Flat => "flat",
+            MergePolicy::Grad => "grad",
         }
     }
+
+    /// Whether this policy needs the per-shard gradient context
+    /// ([`ShardGrads`]) threaded through the shard jobs.
+    pub fn gradient_aware(self) -> bool {
+        matches!(self, MergePolicy::Grad)
+    }
+
+    /// The tournament shape this policy reduces candidates with
+    /// (`Grad` rides on the hierarchical tree).
+    fn base(self) -> MergePolicy {
+        match self {
+            MergePolicy::Flat => MergePolicy::Flat,
+            _ => MergePolicy::Hierarchical,
+        }
+    }
+}
+
+/// Per-shard gradient context crossing the shard → merge boundary: the
+/// winner rows' gradient-sketch columns and the shard's partial ḡ sum.
+/// This is everything the gradient-aware merge needs — a merge node never
+/// re-reads the shard's rows, which is what keeps the design mergeable
+/// across streams (SAGE-style) and O(shards·(r·E + E)) in memory.
+///
+/// Filled by `shard::run_shard` when the merge policy is gradient-aware;
+/// buffers are recycled across refreshes (steady state allocation-free).
+#[derive(Default)]
+pub struct ShardGrads {
+    /// Winner gradient rows, `|won|·E`, row `j` = winner `j`'s sketch —
+    /// aligned with the shard's winner list.
+    pub cols: Vec<f64>,
+    /// Partial ḡ·count sum over **all** rows of the shard's range (not
+    /// just winners), length E.
+    pub gsum: Vec<f64>,
+    /// Row count of the shard's range.
+    pub count: usize,
+}
+
+/// Borrowed context for one gradient-aware merge: the per-shard
+/// [`ShardGrads`] (aligned with the winner lists) and the coordinator's
+/// rank authority, if any.  With no authority the pivot order and error
+/// curve are still computed the gradient-aware way, but no rank cut is
+/// applied — the result is bitwise the feature-only merge.
+pub struct MergeCtx<'g, 'a> {
+    /// One gradient summary per shard, same order as the winner lists.
+    pub grads: &'g [ShardGrads],
+    /// The single top-level rank decision maker (one per coordinator).
+    pub authority: Option<&'a mut dyn Selector>,
 }
 
 /// Reusable scratch for the merge stage (one per `ShardedSelector`): the
@@ -59,6 +129,14 @@ pub struct MergeScratch {
     lists: Vec<Vec<usize>>,
     /// Next-round winner lists (pong side); swapped with `lists` per round.
     next: Vec<Vec<usize>>,
+    /// Gradient-aware merge: batch-local id → (shard, winner index) map,
+    /// sorted by id for binary search.
+    gmap: Vec<(usize, u32, u32)>,
+    /// Gradient-aware merge: global batch-mean gradient ḡ (E).
+    gbar: Vec<f64>,
+    /// Gradient-aware merge: merged winners' gradient columns (≤ keep·E),
+    /// orthonormalised in place by the fused prefix-error kernel.
+    gcols: Vec<f64>,
 }
 
 /// Fold the per-shard winner lists (disjoint batch-local row ids, one list
@@ -97,8 +175,8 @@ pub fn merge_winners<'a, I>(
     // Split the scratch into its disjoint buffers so the tournament can
     // hold the list arrays while reduce_union fills the union/feat/local
     // ones.
-    let MergeScratch { union, feat, local, lists, next } = scratch;
-    match policy {
+    let MergeScratch { union, feat, local, lists, next, .. } = scratch;
+    match policy.base() {
         MergePolicy::Flat => {
             union.clear();
             for w in it {
@@ -106,7 +184,8 @@ pub fn merge_winners<'a, I>(
             }
             reduce_union(view, keep, ws, union, feat, local, out);
         }
-        MergePolicy::Hierarchical => {
+        // base() collapses Grad onto the hierarchical tournament.
+        MergePolicy::Hierarchical | MergePolicy::Grad => {
             // Seed round: copy the winner slices into retained buffers.
             if lists.len() < count {
                 lists.resize_with(count, Vec::new);
@@ -140,6 +219,101 @@ pub fn merge_winners<'a, I>(
             out.extend_from_slice(&lists[0]);
         }
     }
+}
+
+/// Gradient-aware fold ([`MergePolicy::Grad`]): run the MaxVol tournament
+/// of `base` (`Grad`/`Hierarchical` → tournament tree, `Flat` → one
+/// reduction) to fix the merged pivot order, then recompute the prefix
+/// projection errors of the global ĝ over that order with the fused MGS
+/// kernel (`graft::geometry::prefix_errors_core`) and apply **one**
+/// top-level rank decision through `ctx.authority`'s
+/// [`Selector::post_merge_rank`] hook, truncating `out` to R*.
+///
+/// The global ḡ is the count-weighted mean of the shards' partial sums —
+/// exact, with no pass over the batch — and the winners' gradient columns
+/// are read from the carried [`ShardGrads`], never from `view.grads`, so
+/// the reduction only touches what crossed the shard boundary.
+///
+/// Deterministic like [`merge_winners`]: given the same winner lists,
+/// gradient context, and authority state, the result (and the returned
+/// [`RankDecision`]) is a pure function — the tournament shape only
+/// changes *which* pivot order the one decision is applied to, and with
+/// no authority the result is bitwise the feature-only merge.
+pub fn merge_winners_grad<'a, I>(
+    view: &BatchView<'_>,
+    winners: I,
+    keep: usize,
+    base: MergePolicy,
+    ctx: MergeCtx<'_, '_>,
+    ws: &mut Workspace,
+    scratch: &mut MergeScratch,
+    out: &mut Vec<usize>,
+) -> Option<RankDecision>
+where
+    I: IntoIterator<Item = &'a [usize]>,
+    I::IntoIter: ExactSizeIterator + Clone,
+{
+    let it = winners.into_iter();
+    let count = it.len();
+    debug_assert_eq!(count, ctx.grads.len(), "one ShardGrads per winner list");
+    let e = view.grads.cols();
+    // id → (shard, winner index), sorted by id (ids are disjoint across
+    // shards, so the sort key is unique).
+    scratch.gmap.clear();
+    for (s, w) in it.clone().enumerate() {
+        debug_assert_eq!(
+            ctx.grads.get(s).map(|g| g.cols.len()),
+            Some(w.len() * e),
+            "ShardGrads.cols misaligned with winner list {s}"
+        );
+        for (j, &id) in w.iter().enumerate() {
+            scratch.gmap.push((id, s as u32, j as u32));
+        }
+    }
+    scratch.gmap.sort_unstable_by_key(|&(id, _, _)| id);
+    // Global ḡ: count-weighted mean of the partial sums.
+    let total: usize = ctx.grads.iter().map(|g| g.count).sum();
+    scratch.gbar.clear();
+    scratch.gbar.resize(e, 0.0);
+    for g in ctx.grads {
+        debug_assert!(g.gsum.len() == e || g.count == 0, "partial ḡ sum has wrong width");
+        for (t, &v) in g.gsum.iter().enumerate() {
+            scratch.gbar[t] += v;
+        }
+    }
+    if total > 0 {
+        for v in scratch.gbar.iter_mut() {
+            *v /= total as f64;
+        }
+    }
+    // Stage 1 over the union: the feature-space MaxVol tournament fixes
+    // the merged pivot order (prefix-nested by the final reduction).
+    merge_winners(view, it, keep, base, ws, scratch, out);
+    if out.is_empty() {
+        return None;
+    }
+    // Stage 2, globally: prefix errors of ĝ over the merged order, from
+    // the gradient columns that crossed the shard boundary.
+    scratch.gcols.clear();
+    for &id in out.iter() {
+        let li = scratch
+            .gmap
+            .binary_search_by_key(&id, |&(gid, _, _)| gid)
+            .expect("merged winner must come from a shard winner list");
+        let (_, s, j) = scratch.gmap[li];
+        let at = j as usize * e;
+        scratch.gcols.extend_from_slice(&ctx.grads[s as usize].cols[at..at + e]);
+    }
+    let rmax = out.len();
+    prefix_errors_core(&mut scratch.gcols, e, rmax, &scratch.gbar, &mut ws.pe_ghat, &mut ws.pe_err);
+    let decision = match ctx.authority {
+        Some(authority) => authority.post_merge_rank(&ws.pe_err, keep, rmax),
+        None => None,
+    };
+    if let Some(d) = decision {
+        out.truncate(d.rank.min(rmax));
+    }
+    decision
 }
 
 /// One merge node: keep at most `keep` of the candidate rows in `union`
@@ -314,6 +488,143 @@ mod tests {
             union.iter().copied().filter(|i| !picks.contains(i)).collect();
         rest.sort_by(|&a, &b| owned.losses[b].total_cmp(&owned.losses[a]).then(a.cmp(&b)));
         assert_eq!(&out[picks.len()..], &rest[..keep - picks.len()], "loss top-up tail");
+    }
+
+    // -- gradient-aware fold ------------------------------------------------
+
+    use crate::graft::{BudgetedRankPolicy, GraftSelector};
+    use crate::linalg::Workspace as Ws;
+
+    /// Build the per-shard gradient context a `run_shard` call would have
+    /// produced for these winner lists over these contiguous ranges.
+    fn shard_grads(
+        view: &BatchView<'_>,
+        lists: &[Vec<usize>],
+        ranges: &[std::ops::Range<usize>],
+    ) -> Vec<ShardGrads> {
+        lists
+            .iter()
+            .zip(ranges)
+            .map(|(w, r)| {
+                let mut g = ShardGrads::default();
+                for &id in w {
+                    g.cols.extend_from_slice(view.grads.row(id));
+                }
+                crate::graft::geometry::grad_sum_into(view.grads, r.clone(), &mut g.gsum);
+                g.count = r.len();
+                g
+            })
+            .collect()
+    }
+
+    fn grad_merge(
+        view: &BatchView<'_>,
+        lists: &[Vec<usize>],
+        grads: &[ShardGrads],
+        keep: usize,
+        base: MergePolicy,
+        authority: Option<&mut dyn Selector>,
+    ) -> (Vec<usize>, Option<crate::graft::RankDecision>) {
+        let mut ws = Ws::new();
+        let mut scratch = MergeScratch::default();
+        let mut out = Vec::new();
+        let d = merge_winners_grad(
+            view,
+            lists.iter().map(|l| l.as_slice()),
+            keep,
+            base,
+            MergeCtx { grads, authority },
+            &mut ws,
+            &mut scratch,
+            &mut out,
+        );
+        (out, d)
+    }
+
+    #[test]
+    fn grad_merge_without_authority_is_bitwise_feature_only() {
+        // No rank authority → the gradient context changes nothing about
+        // the winners: pivot order and loss top-up come from the same
+        // tournament, so the result is the feature-only merge, bit for bit.
+        let owned = random_view(32, 6, 8, 4, 915);
+        let lists = vec![(0..10).collect::<Vec<_>>(), (10..22).collect(), (22..32).collect()];
+        let ranges = [0..10usize, 10..22, 22..32];
+        let grads = shard_grads(&owned.view(), &lists, &ranges);
+        for keep in [3usize, 8, 20] {
+            for base in [MergePolicy::Hierarchical, MergePolicy::Flat] {
+                let (out, d) = grad_merge(&owned.view(), &lists, &grads, keep, base, None);
+                assert_eq!(out, merge(&owned.view(), &lists, keep, base), "keep={keep} {base:?}");
+                assert!(d.is_none(), "no authority, no decision");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_merge_strict_authority_keeps_budget_and_counts_once() {
+        let owned = random_view(24, 8, 6, 2, 917);
+        let lists = vec![(0..12).collect::<Vec<_>>(), (12..24).collect()];
+        let ranges = [0..12usize, 12..24];
+        let grads = shard_grads(&owned.view(), &lists, &ranges);
+        let mut auth = GraftSelector::new(BudgetedRankPolicy::strict(0.05));
+        let keep = 8;
+        let (out, d) =
+            grad_merge(&owned.view(), &lists, &grads, keep, MergePolicy::Grad, Some(&mut auth));
+        let d = d.expect("authority decides");
+        assert_eq!(d.rank, keep, "strict policy keeps the exact budget");
+        assert_eq!(out.len(), keep);
+        assert_eq!(out, merge(&owned.view(), &lists, keep, MergePolicy::Hierarchical));
+        let stats = auth.rank_stats().unwrap();
+        assert_eq!(stats.batches, 1.0, "one merge = one budget-accounting entry");
+        assert_eq!(stats.last, Some(d));
+    }
+
+    #[test]
+    fn grad_merge_adaptive_truncates_on_planted_low_rank() {
+        // Gradients confined to a 2-D subspace: the global error curve
+        // collapses after two pivots, so the adaptive authority must cut
+        // the merged subset far below the feature-only budget while
+        // meeting ε — the paper's dynamic-rank behaviour, surviving the
+        // shard boundary.
+        let mut rng = crate::rng::Rng::new(919);
+        let (k, e, keep) = (32usize, 10usize, 8usize);
+        let loadings = Mat::from_fn(k, 2, |_, _| rng.normal());
+        let basis = Mat::from_fn(2, e, |_, _| rng.normal());
+        let grads = loadings.matmul(&basis);
+        let mut owned = random_view(k, 6, e, 4, 921);
+        owned.grads = grads;
+        let lists = vec![(0..16).collect::<Vec<_>>(), (16..32).collect()];
+        let ranges = [0..16usize, 16..32];
+        let sg = shard_grads(&owned.view(), &lists, &ranges);
+        let mut auth = GraftSelector::new(BudgetedRankPolicy::adaptive(0.05, 1.0));
+        let (out, d) =
+            grad_merge(&owned.view(), &lists, &sg, keep, MergePolicy::Grad, Some(&mut auth));
+        let d = d.expect("authority decides");
+        assert!(d.satisfied, "planted low-rank must meet ε");
+        assert!(d.error <= 0.05 + 1e-9, "error {}", d.error);
+        assert_eq!(out.len(), d.rank);
+        assert!(out.len() <= 4, "low-rank gradients → small global R*, got {}", out.len());
+    }
+
+    #[test]
+    fn grad_merge_two_lists_hier_base_is_bitwise_flat_base() {
+        // With two winner lists the tournament has a single fold node —
+        // the same reduction Flat runs — so the grad-aware result
+        // (winners, errors, decision) must agree bitwise across bases.
+        let owned = random_view(20, 5, 7, 2, 923);
+        let lists = vec![(0..10).collect::<Vec<_>>(), (10..20).collect()];
+        let ranges = [0..10usize, 10..20];
+        let grads = shard_grads(&owned.view(), &lists, &ranges);
+        for keep in [2usize, 6, 9] {
+            let mut a1 = GraftSelector::new(BudgetedRankPolicy::adaptive(0.1, 1.0));
+            let mut a2 = GraftSelector::new(BudgetedRankPolicy::adaptive(0.1, 1.0));
+            let (h, dh) = grad_merge(
+                &owned.view(), &lists, &grads, keep, MergePolicy::Hierarchical, Some(&mut a1),
+            );
+            let (f, df) =
+                grad_merge(&owned.view(), &lists, &grads, keep, MergePolicy::Flat, Some(&mut a2));
+            assert_eq!(h, f, "keep={keep}");
+            assert_eq!(dh, df, "keep={keep}");
+        }
     }
 
     #[test]

@@ -12,8 +12,14 @@
 //! selection worker pool** ([`pool`]): long-lived workers replace the
 //! per-refresh scoped-thread fan-out, and the [`run_windows`] pipelined
 //! refresh overlaps next-window assembly/`embed` with in-flight shard
-//! selection.  See `README.md` in this directory for the dataflow and the
-//! test matrix that pins it.
+//! selection.  PR 4 makes the merge **gradient-aware**
+//! ([`MergePolicy::Grad`], the default for GRAFT): each shard ships its
+//! winners' gradient-sketch columns plus its partial ḡ sum
+//! ([`ShardGrads`]), and after the MaxVol tournament one top-level rank
+//! authority applies the single global dynamic-rank decision — the
+//! paper's criterion now survives shard → merge → rank at any
+//! shard/worker count.  See `README.md` in this directory for the
+//! dataflow and the test matrix that pins it.
 
 pub mod merge;
 pub mod pipeline;
@@ -22,7 +28,7 @@ pub mod scheduler;
 pub mod shard;
 pub mod state;
 
-pub use merge::{merge_winners, MergePolicy};
+pub use merge::{merge_winners, merge_winners_grad, MergeCtx, MergePolicy, ShardGrads};
 pub use pipeline::{BatchProducer, FanOutProducer, PreparedBatch};
 pub use pool::{run_windows, PooledSelector, SelectWindow};
 pub use scheduler::RefreshScheduler;

@@ -56,10 +56,13 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 
+use crate::graft::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
 use crate::selection::{BatchView, Selector};
 
-use super::merge::{merge_winners, MergePolicy, MergeScratch};
+use super::merge::{
+    merge_winners, merge_winners_grad, MergeCtx, MergePolicy, MergeScratch, ShardGrads,
+};
 use super::pipeline::join_or_log;
 use super::shard::{run_shard, shard_ranges_into};
 
@@ -93,7 +96,10 @@ impl ViewPtr {
 
 /// One shard job, fed to a worker over its channel.  `winners` is the
 /// coordinator-owned result buffer, moved in empty and moved back filled
-/// through [`Done`] — the recycling that keeps steady state allocation-free.
+/// through [`Done`]; `grads` is the shard's gradient context
+/// ([`ShardGrads`]), filled only when `want_grads` (gradient-aware merge)
+/// and round-tripped by move exactly like the winner buffer — the
+/// recycling that keeps steady state allocation-free.
 struct Job {
     view: ViewPtr,
     shard: usize,
@@ -101,6 +107,8 @@ struct Job {
     budget: usize,
     epoch: u64,
     winners: Vec<usize>,
+    want_grads: bool,
+    grads: ShardGrads,
 }
 
 /// One shard result.  `epoch` lets the coordinator discard results from an
@@ -109,6 +117,7 @@ struct Done {
     shard: usize,
     epoch: u64,
     winners: Vec<usize>,
+    grads: ShardGrads,
     panicked: bool,
 }
 
@@ -126,6 +135,9 @@ pub struct SelectionPool {
     /// Retained winner buffers, one per shard, taken at submit and
     /// returned by the drain.
     bufs: Vec<Vec<usize>>,
+    /// Retained per-shard gradient contexts, round-tripped like `bufs`
+    /// (filled by workers only for gradient-aware merges).
+    gbufs: Vec<ShardGrads>,
     shards: usize,
     epoch: u64,
 }
@@ -164,6 +176,7 @@ impl SelectionPool {
             done_rx,
             handles,
             bufs: (0..shards).map(|_| Vec::new()).collect(),
+            gbufs: (0..shards).map(|_| ShardGrads::default()).collect(),
             shards,
             epoch: 0,
         }
@@ -211,20 +224,31 @@ fn worker_loop(
     let mut grad: Vec<f64> = Vec::new();
     let mut local: Vec<usize> = Vec::new();
     while let Ok(job) = rx.recv() {
-        let Job { view, shard, range, budget, epoch, mut winners } = job;
+        let Job { view, shard, range, budget, epoch, mut winners, want_grads, mut grads } = job;
         let sel = selectors[shard / stride].as_mut();
         let panicked = catch_unwind(AssertUnwindSafe(|| {
             // SAFETY: the submitting `Pending` guard keeps the view (and
             // all data it borrows) alive until this job's `Done` has been
             // received — see the module-level safety model.
             let view = unsafe { view.get() };
-            run_shard(sel, view, range, budget, &mut ws, &mut feat, &mut grad, &mut local, &mut winners);
+            run_shard(
+                sel,
+                view,
+                range,
+                budget,
+                &mut ws,
+                &mut feat,
+                &mut grad,
+                &mut local,
+                &mut winners,
+                want_grads.then_some(&mut grads),
+            );
         }))
         .is_err();
         // The done channel is sized to hold every shard's result, so this
         // send never blocks; an Err means the coordinator is gone and the
         // worker can only wind down.
-        if done.send(Done { shard, epoch, winners, panicked }).is_err() {
+        if done.send(Done { shard, epoch, winners, grads, panicked }).is_err() {
             return;
         }
     }
@@ -238,6 +262,13 @@ fn worker_loop(
 pub struct PooledSelector {
     pool: SelectionPool,
     merge: MergePolicy,
+    /// The single top-level dynamic-rank decision maker for the
+    /// gradient-aware merge — lives on the coordinator (never on a pool
+    /// worker), so there is exactly one budget accumulator at any
+    /// shard/worker count.
+    authority: Option<Box<dyn Selector>>,
+    /// Last gradient-merge decision, for logging.
+    last: Option<RankDecision>,
     scratch: MergeScratch,
     /// Retained partition buffer (recomputed per call, capacity reused).
     ranges: Vec<Range<usize>>,
@@ -271,7 +302,30 @@ impl PooledSelector {
             );
             sel
         });
-        PooledSelector { pool, merge, scratch: MergeScratch::default(), ranges: Vec::new() }
+        PooledSelector {
+            pool,
+            merge,
+            authority: None,
+            last: None,
+            scratch: MergeScratch::default(),
+            ranges: Vec::new(),
+        }
+    }
+
+    /// Install the top-level rank authority for the gradient-aware merge
+    /// ([`MergePolicy::Grad`]) — see
+    /// [`super::ShardedSelector::with_rank_authority`]; pooled and scoped
+    /// execution consult it identically — including being inert at one
+    /// shard — which keeps pool ≡ scoped bit-identity intact under
+    /// `--merge grad`.
+    pub fn with_rank_authority(mut self, authority: Box<dyn Selector>) -> Self {
+        self.authority = Some(authority);
+        self
+    }
+
+    /// Decision of the most recent gradient-aware merge (for logging).
+    pub fn last_rank_decision(&self) -> Option<RankDecision> {
+        self.last
     }
 
     pub fn shards(&self) -> usize {
@@ -305,17 +359,35 @@ impl PooledSelector {
             // regression in tests/selection_pool.rs).
             return Pending { sel: self, view, live: 0, budget, epoch, outstanding: 0, panicked: true };
         }
+        // As in `ShardedSelector`: without a rank authority the grad merge
+        // is bitwise the feature-only merge, so skip the gradient carry.
+        // At one shard the inner selector applies its own policy inline
+        // (bit-identity with the scoped fast path and single-shot), so the
+        // authority is never consulted there either.
+        let want_grads =
+            self.merge.gradient_aware() && self.authority.is_some() && self.pool.shards > 1;
         let mut outstanding = 0usize;
         let mut panicked = false;
         for (s, range) in self.ranges.iter().cloned().enumerate() {
             let winners = std::mem::take(&mut self.pool.bufs[s]);
-            let job = Job { view: ViewPtr::new(view), shard: s, range, budget, epoch, winners };
+            let grads = std::mem::take(&mut self.pool.gbufs[s]);
+            let job = Job {
+                view: ViewPtr::new(view),
+                shard: s,
+                range,
+                budget,
+                epoch,
+                winners,
+                want_grads,
+                grads,
+            };
             // Channels are sized so a live worker always has queue room;
             // try_send only fails if the worker thread died (disconnect).
             match self.pool.txs[s % self.pool.txs.len()].try_send(job) {
                 Ok(()) => outstanding += 1,
                 Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
                     self.pool.bufs[s] = j.winners;
+                    self.pool.gbufs[s] = j.grads;
                     panicked = true;
                 }
             }
@@ -327,6 +399,18 @@ impl PooledSelector {
 impl Selector for PooledSelector {
     fn name(&self) -> &'static str {
         "pooled"
+    }
+
+    /// Accounting of the rank authority.  At one shard the inner selector
+    /// is the decision maker, but it lives on a worker thread and cannot
+    /// be read — `None` (unlike the scoped path, which reads it inline);
+    /// an installed-but-unconsulted authority is never reported.
+    fn rank_stats(&self) -> Option<RankStats> {
+        if self.pool.shards > 1 {
+            self.authority.as_ref().and_then(|a| a.rank_stats())
+        } else {
+            None
+        }
     }
 
     fn select_into(
@@ -370,6 +454,7 @@ impl Pending<'_, '_> {
                         self.panicked = true;
                     }
                     self.sel.pool.bufs[d.shard] = d.winners;
+                    self.sel.pool.gbufs[d.shard] = d.grads;
                     if current {
                         self.outstanding -= 1;
                     }
@@ -401,15 +486,34 @@ impl Pending<'_, '_> {
             return;
         }
         let sel = &mut *self.sel;
-        merge_winners(
-            self.view,
-            sel.pool.bufs[..self.live].iter().map(|b| b.as_slice()),
-            self.budget,
-            sel.merge,
-            ws,
-            &mut sel.scratch,
-            out,
-        );
+        // Must mirror `begin`'s want_grads gate (authority and shard count
+        // cannot change while this guard borrows the selector): gbufs are
+        // only filled when the jobs were asked to carry gradient context.
+        if sel.merge.gradient_aware() && sel.authority.is_some() && sel.pool.shards > 1 {
+            sel.last = merge_winners_grad(
+                self.view,
+                sel.pool.bufs[..self.live].iter().map(|b| b.as_slice()),
+                self.budget,
+                sel.merge,
+                MergeCtx {
+                    grads: &sel.pool.gbufs[..self.live],
+                    authority: sel.authority.as_deref_mut(),
+                },
+                ws,
+                &mut sel.scratch,
+                out,
+            );
+        } else {
+            merge_winners(
+                self.view,
+                sel.pool.bufs[..self.live].iter().map(|b| b.as_slice()),
+                self.budget,
+                sel.merge,
+                ws,
+                &mut sel.scratch,
+                out,
+            );
+        }
     }
 }
 

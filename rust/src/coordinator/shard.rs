@@ -17,10 +17,14 @@
 
 use std::ops::Range;
 
+use crate::graft::geometry::grad_sum_into;
+use crate::graft::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
 use crate::selection::{BatchView, Selector};
 
-use super::merge::{merge_winners, MergePolicy, MergeScratch};
+use super::merge::{
+    merge_winners, merge_winners_grad, MergeCtx, MergePolicy, MergeScratch, ShardGrads,
+};
 
 /// Fan shards out on scoped threads only for batches at least this many
 /// rows; below it spawn overhead dominates the saved work.  Purely a
@@ -62,6 +66,11 @@ pub fn shard_ranges_into(k: usize, shards: usize, out: &mut Vec<Range<usize>>) {
 /// two memcpys into retained buffers (`from_vec`/`into_vec` round-trip) —
 /// allocation-free once the buffers have warmed up.
 ///
+/// When `grads` is `Some` (the gradient-aware merge), the job also fills
+/// the shard's [`ShardGrads`]: the winners' gradient-sketch rows and the
+/// partial ḡ sum over the whole range — the only gradient state that
+/// crosses the shard → merge boundary.
+///
 /// This is the single shard-execution kernel shared by the scoped-thread
 /// fan-out ([`ShardedSelector`]) and the persistent worker pool
 /// ([`super::pool::SelectionPool`]): both paths run byte-for-byte the same
@@ -79,45 +88,56 @@ pub(crate) fn run_shard(
     grad: &mut Vec<f64>,
     local: &mut Vec<usize>,
     won: &mut Vec<usize>,
+    grads: Option<&mut ShardGrads>,
 ) {
     won.clear();
     let len = range.len();
-    if len == 0 {
-        return;
+    if len > 0 {
+        if len == view.k() {
+            // Full-range job (one shard, or K collapsed into a single
+            // range): the "shard" is the batch itself, so select in place
+            // and skip the gather — same arithmetic on the same rows, zero
+            // copies.  This is what keeps the pool's single-shard hosting
+            // of non-shardable selectors (and the overlap path) copy-free
+            // like the inline single-shot path.
+            selector.select_into(view, budget.min(len), ws, local);
+            won.extend_from_slice(local);
+        } else {
+            let (rc, ec) = (view.features.cols(), view.grads.cols());
+            let mut fb = std::mem::take(feat);
+            fb.clear();
+            fb.extend_from_slice(&view.features.data()[range.start * rc..range.end * rc]);
+            let fmat = Mat::from_vec(len, rc, fb);
+            let mut gb = std::mem::take(grad);
+            gb.clear();
+            gb.extend_from_slice(&view.grads.data()[range.start * ec..range.end * ec]);
+            let gmat = Mat::from_vec(len, ec, gb);
+            let shard_view = BatchView {
+                features: &fmat,
+                grads: &gmat,
+                losses: &view.losses[range.clone()],
+                labels: &view.labels[range.clone()],
+                preds: &view.preds[range.clone()],
+                classes: view.classes,
+                row_ids: &view.row_ids[range.clone()],
+            };
+            selector.select_into(&shard_view, budget.min(len), ws, local);
+            won.extend(local.iter().map(|&i| range.start + i));
+            *feat = fmat.into_vec();
+            *grad = gmat.into_vec();
+        }
     }
-    if len == view.k() {
-        // Full-range job (one shard, or K collapsed into a single range):
-        // the "shard" is the batch itself, so select in place and skip the
-        // gather — same arithmetic on the same rows, zero copies.  This is
-        // what keeps the pool's single-shard hosting of non-shardable
-        // selectors (and the overlap path) copy-free like the inline
-        // single-shot path.
-        selector.select_into(view, budget.min(len), ws, local);
-        won.extend_from_slice(local);
-        return;
+    if let Some(g) = grads {
+        // Gradient context for the grad-aware merge: partial ḡ sum over
+        // the whole range (winners or not) + the winners' sketch rows,
+        // all read from the caller's view so both gather paths agree.
+        grad_sum_into(view.grads, range, &mut g.gsum);
+        g.count = len;
+        g.cols.clear();
+        for &id in won.iter() {
+            g.cols.extend_from_slice(view.grads.row(id));
+        }
     }
-    let (rc, ec) = (view.features.cols(), view.grads.cols());
-    let mut fb = std::mem::take(feat);
-    fb.clear();
-    fb.extend_from_slice(&view.features.data()[range.start * rc..range.end * rc]);
-    let fmat = Mat::from_vec(len, rc, fb);
-    let mut gb = std::mem::take(grad);
-    gb.clear();
-    gb.extend_from_slice(&view.grads.data()[range.start * ec..range.end * ec]);
-    let gmat = Mat::from_vec(len, ec, gb);
-    let shard_view = BatchView {
-        features: &fmat,
-        grads: &gmat,
-        losses: &view.losses[range.clone()],
-        labels: &view.labels[range.clone()],
-        preds: &view.preds[range.clone()],
-        classes: view.classes,
-        row_ids: &view.row_ids[range.clone()],
-    };
-    selector.select_into(&shard_view, budget.min(len), ws, local);
-    won.extend(local.iter().map(|&i| range.start + i));
-    *feat = fmat.into_vec();
-    *grad = gmat.into_vec();
 }
 
 /// One shard's selector plus all of its private scratch: a [`Workspace`],
@@ -148,8 +168,15 @@ impl ShardWorker {
 
     /// Select up to `budget` rows from the contiguous row range of `view`
     /// assigned to this shard; winners land in `self.won` as batch-local
-    /// ids.  Delegates to the shared [`run_shard`] kernel.
-    fn run(&mut self, view: &BatchView<'_>, range: Range<usize>, budget: usize) {
+    /// ids (and the gradient context in `grads`, when the merge wants
+    /// it).  Delegates to the shared [`run_shard`] kernel.
+    fn run(
+        &mut self,
+        view: &BatchView<'_>,
+        range: Range<usize>,
+        budget: usize,
+        grads: Option<&mut ShardGrads>,
+    ) {
         run_shard(
             self.selector.as_mut(),
             view,
@@ -160,6 +187,7 @@ impl ShardWorker {
             &mut self.grad,
             &mut self.local,
             &mut self.won,
+            grads,
         );
     }
 }
@@ -173,6 +201,15 @@ pub struct ShardedSelector {
     merge: MergePolicy,
     parallel: bool,
     workers: Vec<ShardWorker>,
+    /// Per-shard gradient context, parallel to `workers`; filled by the
+    /// shard jobs only when the merge policy is gradient-aware.
+    grads: Vec<ShardGrads>,
+    /// The single top-level dynamic-rank decision maker consulted by the
+    /// gradient-aware merge — one per coordinator, so ε/budget accounting
+    /// is shard-count-independent.  `None`: feature-only rank behaviour.
+    authority: Option<Box<dyn Selector>>,
+    /// Last gradient-merge decision, for logging.
+    last: Option<RankDecision>,
     scratch: MergeScratch,
     /// Retained partition buffer (recomputed per call, capacity reused).
     ranges: Vec<Range<usize>>,
@@ -210,6 +247,9 @@ impl ShardedSelector {
         ShardedSelector {
             merge,
             parallel: true,
+            grads: (0..shards).map(|_| ShardGrads::default()).collect(),
+            authority: None,
+            last: None,
             workers,
             scratch: MergeScratch::default(),
             ranges: Vec::new(),
@@ -224,6 +264,23 @@ impl ShardedSelector {
         self
     }
 
+    /// Install the top-level rank authority for the gradient-aware merge
+    /// ([`MergePolicy::Grad`]): the **one** instance whose
+    /// [`Selector::post_merge_rank`] decides the global dynamic rank per
+    /// merged batch — a single `BudgetedRankPolicy` accumulator at any
+    /// shard count, instead of one budget clone per shard.  Inert at one
+    /// shard: that path delegates whole batches to the inner selector,
+    /// which applies its own policy inline (bit-identity with single-shot).
+    pub fn with_rank_authority(mut self, authority: Box<dyn Selector>) -> Self {
+        self.authority = Some(authority);
+        self
+    }
+
+    /// Decision of the most recent gradient-aware merge (for logging).
+    pub fn last_rank_decision(&self) -> Option<RankDecision> {
+        self.last
+    }
+
     pub fn shards(&self) -> usize {
         self.workers.len()
     }
@@ -232,6 +289,18 @@ impl ShardedSelector {
 impl Selector for ShardedSelector {
     fn name(&self) -> &'static str {
         "sharded"
+    }
+
+    /// Accounting of the actual decision maker: at one shard the inner
+    /// selector (that path delegates whole batches, so the inner policy
+    /// *is* the global one — an installed authority is never consulted);
+    /// otherwise the rank authority.
+    fn rank_stats(&self) -> Option<RankStats> {
+        if self.workers.len() == 1 {
+            self.workers[0].selector.rank_stats()
+        } else {
+            self.authority.as_ref().and_then(|a| a.rank_stats())
+        }
     }
 
     fn select_into(
@@ -256,26 +325,54 @@ impl Selector for ShardedSelector {
         shard_ranges_into(k, self.workers.len(), &mut self.ranges);
         let live = self.ranges.len();
         let budget = r.min(k);
+        // Gradient context is only worth carrying when someone will read
+        // it: without a rank authority the grad merge is provably bitwise
+        // the feature-only merge (pinned in merge.rs tests), so skip the
+        // per-shard sketch copies and the stage-2 error recomputation.
+        let want_grads = self.merge.gradient_aware() && self.authority.is_some();
         if self.parallel && k >= SHARD_PAR_MIN_K {
             std::thread::scope(|scope| {
-                for (w, range) in self.workers[..live].iter_mut().zip(self.ranges.iter().cloned())
+                for ((w, g), range) in self.workers[..live]
+                    .iter_mut()
+                    .zip(self.grads[..live].iter_mut())
+                    .zip(self.ranges.iter().cloned())
                 {
-                    scope.spawn(move || w.run(view, range, budget));
+                    scope.spawn(move || w.run(view, range, budget, want_grads.then_some(g)));
                 }
             });
         } else {
-            for (w, range) in self.workers[..live].iter_mut().zip(self.ranges.iter().cloned()) {
-                w.run(view, range, budget);
+            for ((w, g), range) in self.workers[..live]
+                .iter_mut()
+                .zip(self.grads[..live].iter_mut())
+                .zip(self.ranges.iter().cloned())
+            {
+                w.run(view, range, budget, want_grads.then_some(g));
             }
         }
-        merge_winners(
-            view,
-            self.workers[..live].iter().map(|w| w.won.as_slice()),
-            budget,
-            self.merge,
-            ws,
-            &mut self.scratch,
-            out,
-        );
+        if want_grads {
+            self.last = merge_winners_grad(
+                view,
+                self.workers[..live].iter().map(|w| w.won.as_slice()),
+                budget,
+                self.merge,
+                MergeCtx {
+                    grads: &self.grads[..live],
+                    authority: self.authority.as_deref_mut(),
+                },
+                ws,
+                &mut self.scratch,
+                out,
+            );
+        } else {
+            merge_winners(
+                view,
+                self.workers[..live].iter().map(|w| w.won.as_slice()),
+                budget,
+                self.merge,
+                ws,
+                &mut self.scratch,
+                out,
+            );
+        }
     }
 }

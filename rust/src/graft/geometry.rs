@@ -1,0 +1,77 @@
+//! Gradient geometry shared between the single-shot GRAFT selector and
+//! the coordinator's gradient-aware merge (`coordinator::merge`): prefix
+//! projection errors of the batch-mean gradient sketch ḡ against a set of
+//! selected gradient columns (paper §3.2, Lemma 1 normalised form).
+//!
+//! Factored out of `graft/mod.rs` so the sharded/pooled selection path can
+//! recompute the error curve over *merged* winners with the exact fused
+//! MGS kernel the single-shot path uses — the two paths read the same
+//! geometry by construction, not by parallel implementation.
+
+use crate::linalg::{mat::transpose_into, qr::mgs_column_step, Mat, Workspace};
+
+/// Prefix projection errors d_r for r = 1..R over the selected gradient
+/// columns (E×R), mirroring the L1 kernel (Lemma 1 normalised form).
+///
+/// Allocating wrapper over the fused in-place kernel; hot paths fill the
+/// column buffer straight from gradient rows and skip the transpose.
+pub fn prefix_projection_errors(gsel: &Mat, gbar: &[f64]) -> Vec<f64> {
+    let (e, r) = (gsel.rows(), gsel.cols());
+    let mut ws = Workspace::default();
+    ws.pe_g.resize(e * r, 0.0);
+    transpose_into(e, r, gsel.data(), &mut ws.pe_g);
+    let mut out = Vec::with_capacity(r);
+    prefix_errors_core(&mut ws.pe_g, e, r, gbar, &mut ws.pe_ghat, &mut out);
+    out
+}
+
+/// Fused MGS + projection: orthonormalise the `r` columns (each length
+/// `e`, stored contiguously in `cols`) in place via the shared
+/// [`mgs_column_step`] kernel — the exact two-pass / relative-tolerance
+/// semantics of [`crate::linalg::qr`], by construction — accumulating the
+/// prefix projection errors of ĝ = ḡ/‖ḡ‖ as each column is finalised.
+/// Zero allocations once `ghat` and `out` have capacity.
+pub(crate) fn prefix_errors_core(
+    cols: &mut [f64],
+    e: usize,
+    r: usize,
+    gbar: &[f64],
+    ghat: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    use crate::linalg::dot;
+    out.clear();
+    let nrm = crate::linalg::norm2(gbar);
+    if nrm < 1e-12 {
+        out.resize(r, 0.0);
+        return;
+    }
+    ghat.clear();
+    ghat.extend(gbar.iter().map(|x| x / nrm));
+    let mut cum = 0.0;
+    for j in 0..r {
+        let (done, rest) = cols.split_at_mut(j * e);
+        let v = &mut rest[..e];
+        // Dependent columns come back zero-filled and contribute nothing.
+        let _ = mgs_column_step(done, e, j, v, |_, _| {});
+        let a = dot(v, ghat);
+        cum += a * a;
+        out.push((1.0 - cum).max(0.0));
+    }
+}
+
+/// Accumulate the per-row sum of `grads` rows `range` into `out`
+/// (cleared/zeroed first): the shard-local partial ḡ·count sum that
+/// crosses the shard → merge boundary.  The exact global ḡ is the
+/// count-weighted mean of these partial sums — no extra pass over the
+/// batch at merge time.
+pub(crate) fn grad_sum_into(grads: &Mat, range: std::ops::Range<usize>, out: &mut Vec<f64>) {
+    let e = grads.cols();
+    out.clear();
+    out.resize(e, 0.0);
+    for i in range {
+        for (t, &v) in grads.row(i).iter().enumerate() {
+            out[t] += v;
+        }
+    }
+}

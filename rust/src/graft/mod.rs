@@ -13,12 +13,16 @@
 //! to `qr` + per-column projection, without materialising Q or R).
 
 pub mod alignment;
+pub mod geometry;
 pub mod rank;
 
 pub use alignment::AlignmentStats;
-pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision};
+pub use geometry::prefix_projection_errors;
+pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision, RankStats};
 
-use crate::linalg::{mat::transpose_into, qr::mgs_column_step, Mat, Workspace};
+use geometry::{grad_sum_into, prefix_errors_core};
+
+use crate::linalg::Workspace;
 use crate::selection::maxvol::fast_maxvol_with;
 use crate::selection::{BatchView, Selector};
 
@@ -35,56 +39,6 @@ pub struct GraftSelector {
 impl GraftSelector {
     pub fn new(policy: BudgetedRankPolicy) -> Self {
         GraftSelector { policy, last: None }
-    }
-}
-
-/// Prefix projection errors d_r for r = 1..R over the selected gradient
-/// columns (E×R), mirroring the L1 kernel (Lemma 1 normalised form).
-///
-/// Allocating wrapper over the fused in-place kernel; hot paths fill the
-/// column buffer straight from gradient rows and skip the transpose.
-pub fn prefix_projection_errors(gsel: &Mat, gbar: &[f64]) -> Vec<f64> {
-    let (e, r) = (gsel.rows(), gsel.cols());
-    let mut ws = Workspace::default();
-    ws.pe_g.resize(e * r, 0.0);
-    transpose_into(e, r, gsel.data(), &mut ws.pe_g);
-    let mut out = Vec::with_capacity(r);
-    prefix_errors_core(&mut ws.pe_g, e, r, gbar, &mut ws.pe_ghat, &mut out);
-    out
-}
-
-/// Fused MGS + projection: orthonormalise the `r` columns (each length
-/// `e`, stored contiguously in `cols`) in place via the shared
-/// [`mgs_column_step`] kernel — the exact two-pass / relative-tolerance
-/// semantics of [`crate::linalg::qr`], by construction — accumulating the
-/// prefix projection errors of ĝ = ḡ/‖ḡ‖ as each column is finalised.
-/// Zero allocations once `ghat` and `out` have capacity.
-fn prefix_errors_core(
-    cols: &mut [f64],
-    e: usize,
-    r: usize,
-    gbar: &[f64],
-    ghat: &mut Vec<f64>,
-    out: &mut Vec<f64>,
-) {
-    use crate::linalg::dot;
-    out.clear();
-    let nrm = crate::linalg::norm2(gbar);
-    if nrm < 1e-12 {
-        out.resize(r, 0.0);
-        return;
-    }
-    ghat.clear();
-    ghat.extend(gbar.iter().map(|x| x / nrm));
-    let mut cum = 0.0;
-    for j in 0..r {
-        let (done, rest) = cols.split_at_mut(j * e);
-        let v = &mut rest[..e];
-        // Dependent columns come back zero-filled and contribute nothing.
-        let _ = mgs_column_step(done, e, j, v, |_, _| {});
-        let a = dot(v, ghat);
-        cum += a * a;
-        out.push((1.0 - cum).max(0.0));
     }
 }
 
@@ -113,15 +67,10 @@ impl Selector for GraftSelector {
         // lives in the workspace (taken out around the nested call).
         let mut order = std::mem::take(&mut ws.sel_order);
         fast_maxvol_with(view.features, rmax, ws, &mut order);
-        // Prefix errors of ḡ against the selected gradient columns.
+        // Prefix errors of ḡ against the selected gradient columns (same
+        // accumulation kernel the sharded path sums per shard).
         let e = view.grads.cols();
-        ws.pe_gbar.clear();
-        ws.pe_gbar.resize(e, 0.0);
-        for i in 0..k {
-            for (t, &v) in view.grads.row(i).iter().enumerate() {
-                ws.pe_gbar[t] += v;
-            }
-        }
+        grad_sum_into(view.grads, 0..k, &mut ws.pe_gbar);
         for v in ws.pe_gbar.iter_mut() {
             *v /= k as f64;
         }
@@ -145,11 +94,39 @@ impl Selector for GraftSelector {
             crate::selection::top_up_by_loss(view, r_budget, ws, out);
         }
     }
+
+    /// GRAFT's defining Stage 2 moved to the merge boundary: the
+    /// coordinator's gradient-aware merge ([`MergePolicy::Grad`]) hands
+    /// this rank authority the prefix projection errors of the *global* ĝ
+    /// over the merged MaxVol pivot order, and the one policy held here is
+    /// the single budget accumulator for the whole run — ε/budget
+    /// semantics independent of the shard/worker count.
+    ///
+    /// [`MergePolicy::Grad`]: crate::coordinator::MergePolicy::Grad
+    fn post_merge_rank(
+        &mut self,
+        errors: &[f64],
+        r_budget: usize,
+        rmax: usize,
+    ) -> Option<RankDecision> {
+        let decision = self.policy.choose(errors, r_budget, rmax);
+        self.last = Some(decision);
+        Some(decision)
+    }
+
+    fn rank_stats(&self) -> Option<RankStats> {
+        Some(RankStats {
+            mean_rank: self.policy.mean_rank(),
+            batches: self.policy.batches(),
+            last: self.last,
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use crate::rng::Rng;
     use crate::selection::testsupport::random_view;
 

@@ -17,9 +17,21 @@ pub struct RankDecision {
     pub satisfied: bool,
 }
 
+/// The safe degenerate outcome for an empty error curve (a rank-0 kernel
+/// depth or a K = 0 batch): nothing can be selected, so R* = 0 with a
+/// vacuous error.  `satisfied` is false — no curve ever met ε — so callers
+/// that branch on it treat the batch as unconstrained rather than solved.
+impl RankDecision {
+    pub const EMPTY: RankDecision = RankDecision { rank: 0, error: 0.0, satisfied: false };
+}
+
 /// Pure rank choice: smallest r ∈ [r_min, r_max] with d_r ≤ ε, else the
-/// error-minimising r (= r_max since d is non-increasing).
+/// error-minimising r (= r_max since d is non-increasing).  An empty
+/// error curve yields [`RankDecision::EMPTY`] instead of panicking.
 pub fn choose_rank(errors: &[f64], epsilon: f64, r_min: usize, r_max: usize) -> RankDecision {
+    if errors.is_empty() {
+        return RankDecision::EMPTY;
+    }
     let r_max = r_max.min(errors.len()).max(1);
     let r_min = r_min.clamp(1, r_max);
     for r in r_min..=r_max {
@@ -28,6 +40,20 @@ pub fn choose_rank(errors: &[f64], epsilon: f64, r_min: usize, r_max: usize) -> 
         }
     }
     RankDecision { rank: r_max, error: errors[r_max - 1], satisfied: false }
+}
+
+/// Snapshot of a rank policy's accounting, surfaced through
+/// [`crate::selection::Selector::rank_stats`] so the trainer (and the
+/// budget-drift tests) can read the single top-level accumulator without
+/// knowing the concrete selector type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankStats {
+    /// Mean chosen subset size over all decided batches.
+    pub mean_rank: f64,
+    /// Number of batches decided (each refresh window exactly once).
+    pub batches: f64,
+    /// Most recent decision, for logging.
+    pub last: Option<RankDecision>,
 }
 
 /// Stateful policy: ε-threshold choice with a running budget controller.
@@ -83,8 +109,22 @@ impl BudgetedRankPolicy {
         }
     }
 
-    /// Choose R* for one batch. `r_budget` = f·K target; `rmax` = kernel depth.
+    /// Number of batches this policy has decided — the budget-drift pin:
+    /// at any shard/worker count, the one top-level policy must count each
+    /// refreshed batch exactly once (per-shard clones no longer accumulate
+    /// their own private copies of the run budget).
+    pub fn batches(&self) -> f64 {
+        self.batches
+    }
+
+    /// Choose R* for one batch. `r_budget` = f·K target; `rmax` = kernel
+    /// depth.  An empty error curve (rank-0 / K-0 batch) yields
+    /// [`RankDecision::EMPTY`] without entering the budget accounting —
+    /// a degenerate batch is not a refresh.
     pub fn choose(&mut self, errors: &[f64], r_budget: usize, rmax: usize) -> RankDecision {
+        if errors.is_empty() {
+            return RankDecision::EMPTY;
+        }
         let rmax = rmax.min(errors.len()).max(1);
         let target = r_budget.clamp(1, rmax);
         let decision = if self.strict_budget {
@@ -156,6 +196,31 @@ mod tests {
         let d = p.choose(&errors, 7, 16);
         assert_eq!(d.rank, 7);
         assert!(!d.satisfied);
+    }
+
+    #[test]
+    fn empty_error_curve_is_safe_degenerate() {
+        // Regression: a rank-0 kernel depth / K-0 batch used to clamp
+        // r_max to 1 and index errors[0] → panic.  Both entry points must
+        // return the degenerate decision instead.
+        let d = choose_rank(&[], 0.05, 1, 4);
+        assert_eq!(d, RankDecision::EMPTY);
+        assert_eq!(d.rank, 0);
+        assert!(!d.satisfied);
+
+        let mut strict = BudgetedRankPolicy::strict(0.05);
+        assert_eq!(strict.choose(&[], 7, 16), RankDecision::EMPTY);
+        let mut adaptive = BudgetedRankPolicy::adaptive(0.05, 0.5);
+        assert_eq!(adaptive.choose(&[], 7, 16), RankDecision::EMPTY);
+
+        // Degenerate batches stay out of the budget accounting: a later
+        // real batch sees the same window as a fresh policy would.
+        assert_eq!(adaptive.batches(), 0.0);
+        assert_eq!(adaptive.mean_rank(), 0.0);
+        let errors = vec![0.01; 8];
+        let d = adaptive.choose(&errors, 4, 8);
+        assert_eq!(d.rank, 1, "first real batch decided as if no empty batches happened");
+        assert_eq!(adaptive.batches(), 1.0);
     }
 
     #[test]

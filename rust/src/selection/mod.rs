@@ -18,6 +18,7 @@ pub mod maxvol;
 pub mod moderate;
 pub mod random;
 
+use crate::graft::rank::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
 
 /// Everything a selector may look at for one mini-batch.
@@ -85,6 +86,39 @@ pub trait Selector: Send {
     /// cross-batch state (e.g. `forget`'s per-row history).
     fn shardable(&self) -> bool {
         false
+    }
+
+    /// Post-merge dynamic-rank hook for the coordinator's gradient-aware
+    /// merge (`coordinator::merge`, `MergePolicy::Grad`).  After the
+    /// second-stage MaxVol tournament fixes the merged pivot order, the
+    /// coordinator computes the prefix projection errors of the *global*
+    /// batch-mean gradient ĝ over that order and asks its single
+    /// **rank-authority** instance for R*; the merged selection is then
+    /// truncated to the returned rank.  Exactly one authority exists per
+    /// coordinator, so the ε/budget accounting is shard- and worker-count
+    /// independent.
+    ///
+    /// The default `None` keeps the full merged budget — correct for pure
+    /// volume criteria (MaxVol, CrossMaxVol) whose selection has no
+    /// dynamic-rank stage.  GRAFT overrides this with its
+    /// `BudgetedRankPolicy` decision, restoring the paper's criterion on
+    /// the sharded path.
+    fn post_merge_rank(
+        &mut self,
+        errors: &[f64],
+        r_budget: usize,
+        rmax: usize,
+    ) -> Option<RankDecision> {
+        let _ = (errors, r_budget, rmax);
+        None
+    }
+
+    /// Snapshot of this selector's dynamic-rank accounting (`None` for
+    /// methods without one).  For sharded/pooled execution the coordinator
+    /// forwards its rank authority's stats, which is how the trainer reads
+    /// `mean_rank` from one accumulator at any shard/worker count.
+    fn rank_stats(&self) -> Option<RankStats> {
+        None
     }
 }
 

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{run_windows, MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
 use crate::graft::alignment::AlignmentSample;
-use crate::graft::{AlignmentStats, BudgetedRankPolicy};
+use crate::graft::{AlignmentStats, BudgetedRankPolicy, RankStats};
 use crate::linalg::Workspace;
 use crate::rng::Rng;
 use crate::runtime::{ConfigSpec, Engine, ModelParams, TrainState};
@@ -64,7 +64,13 @@ pub struct TrainConfig {
     /// artifact path is likewise unaffected — its selection runs inside
     /// the compiled kernel.
     pub shards: usize,
-    /// How per-shard winners are merged when `shards > 1`.
+    /// How per-shard winners are merged when `shards > 1`:
+    /// `hierarchical`/`flat` reduce by feature-space MaxVol only; `grad`
+    /// additionally recomputes the prefix projection errors of the global
+    /// ḡ over the merged pivot order and applies one coordinator-level
+    /// dynamic-rank decision.  `grad` is the CLI default for GRAFT (it
+    /// restores the paper's criterion on the sharded path) and behaves
+    /// exactly like `hierarchical` for selectors without a rank stage.
     pub merge: MergePolicy,
     /// Persistent selection worker pool for the Rust-side selection
     /// paths.  `0` (the default) keeps the PR 2 behaviour: shard fan-out
@@ -98,7 +104,9 @@ impl Default for TrainConfig {
             adaptive_rank: false,
             extractor: None,
             shards: 1,
-            merge: MergePolicy::Hierarchical,
+            // Matches the CLI's method-aware default: the default method
+            // is "graft", whose sharded path merges gradient-aware.
+            merge: MergePolicy::Grad,
             pool_workers: 0,
             overlap: false,
             seed: 42,
@@ -173,15 +181,42 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     // Rust-side GRAFT selector for the extractor ablation path, built once
     // per *run* (not per refresh): with a persistent pool the workers —
     // and their warmed workspaces/buffers — must live across refreshes,
-    // and even inline the merge scratch is reused run-long.  strict() is
-    // state-independent (rank == target always), so hoisting changes no
-    // selection.
+    // and even inline the merge scratch is reused run-long.  The run's
+    // rank policy is hoisted to the coordinator: at one shard the single
+    // instance applies it inline (bit-identical to single-shot GRAFT); at
+    // shards > 1 under the gradient-aware merge it becomes the
+    // coordinator's rank authority — one global decision and one budget
+    // accumulator per refreshed window, independent of shard/worker count
+    // — while the per-shard instances run strict so each emits its full
+    // MaxVol pivot prefix and the merge union is never starved by a local
+    // rank cut.
     let mut graft_sel: Option<SelectorExec> = if is_graft && cfg.extractor.is_some() {
-        let make_graft = |_si: usize| -> Box<dyn Selector> {
-            // strict() pins strict_budget, so |S| == r_budget holds.
-            Box::new(crate::graft::GraftSelector::new(BudgetedRankPolicy::strict(cfg.epsilon)))
+        let run_policy = || {
+            if cfg.adaptive_rank {
+                BudgetedRankPolicy::adaptive(cfg.epsilon, cfg.fraction)
+            } else {
+                // strict() pins strict_budget, so |S| == r_budget holds.
+                BudgetedRankPolicy::strict(cfg.epsilon)
+            }
         };
-        Some(wrap_selector(cfg.shards, cfg.pool_workers, cfg.merge, true, make_graft))
+        let sharded = cfg.shards > 1;
+        if cfg.adaptive_rank && sharded && !cfg.merge.gradient_aware() {
+            eprintln!(
+                "note: --adaptive-rank at --shards {} needs the gradient-aware merge to \
+                 apply the rank decision (--merge grad, the GRAFT default); this run's \
+                 feature-only merge keeps the full strict budget per refresh",
+                cfg.shards
+            );
+        }
+        let make_graft = |_si: usize| -> Box<dyn Selector> {
+            let policy =
+                if sharded { BudgetedRankPolicy::strict(cfg.epsilon) } else { run_policy() };
+            Box::new(crate::graft::GraftSelector::new(policy))
+        };
+        let authority = (sharded && cfg.merge.gradient_aware()).then(|| {
+            Box::new(crate::graft::GraftSelector::new(run_policy())) as Box<dyn Selector>
+        });
+        Some(wrap_selector(cfg.shards, cfg.pool_workers, cfg.merge, true, authority, make_graft))
     } else {
         None
     };
@@ -294,7 +329,17 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
             wall_secs: t0.elapsed().as_secs_f64(),
             steps: global_step,
             curve,
-            mean_rank: policy.mean_rank(),
+            // Extractor-path runs read the coordinator's single rank
+            // accumulator (the gradient-merge authority, or the one-shard
+            // selector itself); the AOT path keeps its own policy.  Known
+            // gap: a one-shard *pool* hosts its selector on a worker
+            // thread, reports no stats, and falls back to 0.0 like the
+            // pre-PR4 extractor path.
+            mean_rank: graft_sel
+                .as_ref()
+                .and_then(|e| e.rank_stats())
+                .map(|s| s.mean_rank)
+                .unwrap_or_else(|| policy.mean_rank()),
         },
         alignment: align,
         state,
@@ -312,29 +357,50 @@ enum SelectorExec {
     Pooled(Box<PooledSelector>),
 }
 
+impl SelectorExec {
+    /// Dynamic-rank accounting of the wrapped selector: the coordinator's
+    /// single rank authority for sharded/pooled gradient-aware execution,
+    /// or the selector's own policy on the single-shot path.  `None` for
+    /// methods without a rank stage (and for a one-shard pool, whose
+    /// inner selector lives on a worker thread).
+    fn rank_stats(&self) -> Option<RankStats> {
+        match self {
+            SelectorExec::Sync(s) => s.rank_stats(),
+            SelectorExec::Pooled(p) => p.rank_stats(),
+        }
+    }
+}
+
 /// Wrap a selector factory in the configured execution shape.  `shards`
 /// only applies when the selector family opted in ([`Selector::shardable`]
 /// — the MaxVol criterion survives the merge); `pool_workers >= 1` moves
 /// execution onto the persistent pool (any selector qualifies at one
 /// shard, since a single shard involves no merge).  `make(0)` must use the
 /// caller's base seed so every shape matches the unsharded construction.
+/// `authority` is the coordinator-level rank decision maker consulted by
+/// the gradient-aware merge (one per run; ignored by the single-shot
+/// shape, where the inner selector decides inline).
 fn wrap_selector(
     shards: usize,
     pool_workers: usize,
     merge: MergePolicy,
     shardable: bool,
+    authority: Option<Box<dyn Selector>>,
     mut make: impl FnMut(usize) -> Box<dyn Selector>,
 ) -> SelectorExec {
     let shards = if shardable { shards.max(1) } else { 1 };
     if pool_workers >= 1 {
-        SelectorExec::Pooled(Box::new(PooledSelector::from_factory(
-            shards,
-            pool_workers,
-            merge,
-            make,
-        )))
+        let mut pooled = PooledSelector::from_factory(shards, pool_workers, merge, make);
+        if let Some(a) = authority {
+            pooled = pooled.with_rank_authority(a);
+        }
+        SelectorExec::Pooled(Box::new(pooled))
     } else if shards > 1 {
-        SelectorExec::Sync(Box::new(ShardedSelector::from_factory(shards, merge, make)))
+        let mut sharded = ShardedSelector::from_factory(shards, merge, make);
+        if let Some(a) = authority {
+            sharded = sharded.with_rank_authority(a);
+        }
+        SelectorExec::Sync(Box::new(sharded))
     } else {
         SelectorExec::Sync(make(0))
     }
@@ -372,7 +438,7 @@ fn build_selector(
     if shards <= 1 && pool_workers == 0 {
         return Ok(SelectorExec::Sync(single));
     }
-    Ok(wrap_selector(shards, pool_workers, merge, shardable, |si| {
+    Ok(wrap_selector(shards, pool_workers, merge, shardable, None, |si| {
         let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
         selection::by_name(method, wseed).expect("method name validated above")
     }))

@@ -12,7 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use graft::coordinator::{MergePolicy, PooledSelector};
+use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -164,4 +164,39 @@ fn steady_state_selection_is_allocation_free() {
         }
     });
     assert_eq!(d, 0, "PooledSelector::select_into allocated {d} times at steady state");
+
+    // ---- gradient-aware merge (PR 4) --------------------------------------
+    // The grad merge adds per-shard ShardGrads (winner sketch columns +
+    // partial ḡ sums), the id→shard map, the global ḡ, and the merged
+    // error curve — all retained scratch.  Once warmed, a sharded
+    // grad-merge refresh with an adaptive rank authority must allocate
+    // nothing, scoped or pooled.
+    let mut graded = ShardedSelector::from_factory(4, MergePolicy::Grad, |_| {
+        Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+    })
+    .with_parallel(false)
+    .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::adaptive(0.05, 1.0))));
+    for _ in 0..3 {
+        graded.select_into(&owned.view(), 32, &mut ws, &mut out); // warm-up
+    }
+    let d = measured(|| {
+        for _ in 0..10 {
+            graded.select_into(&owned.view(), 32, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "grad-merge ShardedSelector allocated {d} times at steady state");
+
+    let mut graded_pool = PooledSelector::from_factory(4, 2, MergePolicy::Grad, |_| {
+        Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+    })
+    .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::adaptive(0.05, 1.0))));
+    for _ in 0..3 {
+        graded_pool.select_into(&owned.view(), 32, &mut ws, &mut out); // warm-up
+    }
+    let d = measured(|| {
+        for _ in 0..10 {
+            graded_pool.select_into(&owned.view(), 32, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(d, 0, "grad-merge PooledSelector allocated {d} times at steady state");
 }
