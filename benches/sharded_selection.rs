@@ -14,6 +14,7 @@ mod bench_util;
 
 use bench_util::{report, smoke_mode, time_it, JsonSink};
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
+use graft::engine::{EngineBuilder, ExecShape};
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -121,6 +122,93 @@ fn main() {
     });
     report("sharded select (shards=8, flat merge)", t.0, t.1, t.2);
     sink.record("select_sharded_flat", &format!("{shape},shards=8"), t);
+
+    // SelectionEngine facade rows (PR 5): the same shapes driven through
+    // the typed API, priced against the direct-construction rows above.
+    // Bit-identity engine ≡ direct is asserted inline per shape, so a
+    // facade that silently drifts from the coordinator path fails the
+    // bench (and the CI smoke run) rather than polluting the JSON.
+    for shards in [2usize, 4] {
+        let mut eng = EngineBuilder::new()
+            .method("maxvol")
+            .budget(r)
+            .exec(ExecShape::Sharded { shards })
+            .build()
+            .expect("valid engine config");
+        let t = time_it(warm, reps, || {
+            let sel = eng.select(&view);
+            bench_util::black_box(sel.indices.len());
+        });
+        report(&format!("engine select (shards={shards}, facade)"), t.0, t.1, t.2);
+        sink.record("select_engine_sharded", &format!("{shape},shards={shards}"), t);
+        let mut direct = ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, |_| {
+            Box::new(FastMaxVol)
+        });
+        direct.select_into(&view, r, &mut ws, &mut out);
+        assert_eq!(
+            eng.select(&view).indices,
+            &out[..],
+            "engine≡direct bit-identity broke at shards={shards}"
+        );
+    }
+
+    {
+        let (shards, workers) = (4usize, 2usize);
+        let mut eng = EngineBuilder::new()
+            .method("maxvol")
+            .budget(r)
+            .exec(ExecShape::Pooled { shards, workers, overlap: false })
+            .build()
+            .expect("valid engine config");
+        let t = time_it(warm, reps, || {
+            let sel = eng.select(&view);
+            bench_util::black_box(sel.indices.len());
+        });
+        report(&format!("engine select (pooled {shards}x{workers}, facade)"), t.0, t.1, t.2);
+        sink.record(
+            "select_engine_pooled",
+            &format!("{shape},shards={shards},workers={workers}"),
+            t,
+        );
+        let mut direct = PooledSelector::from_factory(shards, workers, MergePolicy::Hierarchical, |_| {
+            Box::new(FastMaxVol)
+        });
+        direct.select_into(&view, r, &mut ws, &mut out);
+        assert_eq!(
+            eng.select(&view).indices,
+            &out[..],
+            "engine≡direct pooled bit-identity broke"
+        );
+    }
+
+    {
+        // Gradient-aware facade row: engine-built GRAFT shards + rank
+        // authority vs the hand-wired construction.
+        let shards = 4usize;
+        let mut eng = EngineBuilder::new()
+            .method("graft")
+            .budget(r)
+            .epsilon(0.05)
+            .exec(ExecShape::Sharded { shards })
+            .build()
+            .expect("valid engine config");
+        let t = time_it(warm, reps, || {
+            let sel = eng.select(&view);
+            bench_util::black_box(sel.indices.len());
+        });
+        report(&format!("engine select (shards={shards}, grad merge, facade)"), t.0, t.1, t.2);
+        sink.record("select_engine_gradmerge", &format!("{shape},shards={shards}"), t);
+        let mut direct = ShardedSelector::from_factory(shards, MergePolicy::Grad, |_| {
+            Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+        })
+        .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05))));
+        direct.select_into(&view, r, &mut ws, &mut out);
+        assert_eq!(
+            eng.select(&view).indices,
+            &out[..],
+            "engine≡direct grad-merge bit-identity broke"
+        );
+    }
 
     match sink.write() {
         Ok(path) => println!("\nbench JSON → {}", path.display()),

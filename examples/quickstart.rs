@@ -1,39 +1,114 @@
-//! Quickstart: train a classifier on the synthetic CIFAR-10 stand-in with
-//! GRAFT subset selection at 25% data, and compare against full-data
-//! training — accuracy, emissions, and steps.
+//! Quickstart: the `SelectionEngine` facade in five minutes.
+//!
+//! Everything here runs offline — no PJRT artifacts required.  The demo
+//! plants a batch whose gradients live in a low-rank subspace, then
+//! drives GRAFT selection through every execution shape (serial, sharded,
+//! pooled + overlap) with the SAME engine API, showing that the
+//! dynamic-rank criterion survives each one.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first)
+//!
+//! For the full paper pipeline (AOT train/select artifacts, energy
+//! accounting, Tables/Figures) see `examples/e2e_train.rs` and the
+//! `graft train` CLI — both sit on the same engine.
 
-use graft::runtime::{default_dir, Engine};
-use graft::train::{self, TrainConfig};
+use graft::coordinator::SelectWindow;
+use graft::engine::{EngineBuilder, ExecShape, RankMode};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+
+/// A K-row batch whose gradient sketches span a planted rank-3 subspace —
+/// the geometry GRAFT's dynamic rank exploits.
+fn planted_window(k: usize, seed: u64) -> SelectWindow {
+    let (rc, e, p) = (16usize, 24usize, 3usize);
+    let mut rng = Rng::new(seed);
+    let loadings = Mat::from_fn(k, p, |_, _| rng.normal());
+    let basis_f = Mat::from_fn(p, rc, |_, _| rng.normal());
+    let basis_g = Mat::from_fn(p, e, |_, _| rng.normal());
+    let mut features = loadings.matmul(&basis_f);
+    let mut grads = loadings.matmul(&basis_g);
+    for v in features.data_mut() {
+        *v += 0.02 * rng.normal();
+    }
+    for v in grads.data_mut() {
+        *v += 0.02 * rng.normal();
+    }
+    let labels: Vec<i32> = (0..k).map(|i| (i % 4) as i32).collect();
+    SelectWindow {
+        features,
+        grads,
+        losses: (0..k).map(|_| rng.uniform() * 2.0).collect(),
+        preds: labels.clone(),
+        labels,
+        classes: 4,
+        row_ids: (0..k).collect(),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    let mut engine = Engine::new(default_dir())?;
+    let k = 256;
+    let win = planted_window(k, 7);
+    let view = win.view();
 
-    let base = TrainConfig {
-        dataset: "cifar10".into(),
-        epochs: 20,
-        ..TrainConfig::default()
-    };
+    // -- 1. Strict budget, serial: take exactly f·K rows per batch -------
+    let mut strict = EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .build()?;
+    let sel = strict.select(&view);
+    println!("strict @ 25%: kept {} of {k} rows (budget {})", sel.indices.len(), sel.budget);
 
-    println!("== full-data baseline ==");
-    let full = train::run(&mut engine, &TrainConfig { method: "full".into(), ..base.clone() })?;
-    println!("  {}", full.result.summary_row());
-
-    println!("== GRAFT @ 25% ==");
-    let graft = train::run(
-        &mut engine,
-        &TrainConfig { method: "graft".into(), fraction: 0.25, ..base.clone() },
-    )?;
-    println!("  {}", graft.result.summary_row());
-    let (mu, sigma) = graft.alignment.mean_std();
-    println!("  gradient alignment: mu={mu:.2} sigma={sigma:.2}");
-
+    // -- 2. Adaptive rank: ε decides, the planted rank-3 geometry shows --
+    let mut adaptive = EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .rank(RankMode::Adaptive { epsilon: 0.05 })
+        .build()?;
+    let sel = adaptive.select(&view);
+    let d = sel.decision.expect("GRAFT reports its rank decision");
     println!(
-        "\nGRAFT kept {:.1}% of the accuracy at {:.0}% of the emissions",
-        100.0 * graft.result.final_acc / full.result.final_acc,
-        100.0 * graft.result.co2_kg / full.result.co2_kg,
+        "adaptive ε=0.05: R* = {} (projection error {:.2e}, satisfied: {}) — \
+         the planted rank-3 subspace needs far fewer than the {} -row budget",
+        d.rank, d.error, d.satisfied, sel.budget
     );
+
+    // -- 3. Same criterion, sharded: the gradient-aware merge + one rank
+    //       authority keep ε/budget semantics fan-out-independent --------
+    let mut sharded = EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .rank(RankMode::Adaptive { epsilon: 0.05 })
+        .exec(ExecShape::Sharded { shards: 4 })
+        .build()?;
+    let sel = sharded.select(&view);
+    let d = sel.decision.expect("the merge's rank authority decides");
+    println!("sharded×4:      R* = {} (error {:.2e}) — same decision shape", d.rank, d.error);
+
+    // -- 4. Streaming session on a persistent pool, overlapping window
+    //       assembly with in-flight selection -----------------------------
+    let mut pooled = EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .exec(ExecShape::Pooled { shards: 4, workers: 2, overlap: true })
+        .build()?;
+    let mut kept = 0usize;
+    pooled.windows::<anyhow::Error, _, _>(
+        8,
+        |wi, _extractor| Ok(planted_window(k, 100 + wi as u64)),
+        |_wi, _window, winners| kept += winners.len(),
+    )?;
+    println!(
+        "pooled 4×2 + overlap: 8 windows streamed, {kept} rows kept \
+         (assembly of window w+1 overlapped selection of window w)"
+    );
+
+    // -- 5. Misconfigurations fail with typed, field-naming errors --------
+    let err = EngineBuilder::new()
+        .overlap(true)
+        .build()
+        .err()
+        .expect("overlap without a pool must be rejected");
+    println!("typed validation: {err} (field = {})", err.field());
+
     Ok(())
 }

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::MergePolicy;
+use crate::engine;
 use crate::train::TrainConfig;
 
 /// Parsed command line: subcommand + options.
@@ -68,8 +69,39 @@ impl Args {
         self.opts.get(key).cloned()
     }
 
+    /// Whether a boolean option is on, treating anything unparseable as
+    /// off.  Prefer [`Args::try_flag`] wherever an error can be
+    /// surfaced — silently ignoring a misspelled boolean is exactly the
+    /// config-file bug this parser used to have.
     pub fn flag(&self, key: &str) -> bool {
-        self.flags.iter().any(|f| f == key)
+        self.try_flag(key).unwrap_or(false)
+    }
+
+    /// Whether a boolean option is on, with strict value parsing.  True
+    /// when the key was given as a bare CLI flag (`--overlap`) or carries
+    /// a truthy value (`true` / `1` / `yes` / `on`, case-insensitive) —
+    /// which is how config files spell booleans (`overlap = true`) and
+    /// how `--overlap true` parses.  Falsy spellings (`false` / `0` /
+    /// `no` / `off`) are off; any other value is an **error naming the
+    /// key**, so a typo like `overlap = bananas` (or `= True` would be,
+    /// were matching case-sensitive) cannot silently disable the
+    /// behaviour.  A bare CLI flag always wins: there is no negation
+    /// syntax, so a truthy file value cannot be overridden — only left
+    /// unset.
+    pub fn try_flag(&self, key: &str) -> Result<bool> {
+        if self.flags.iter().any(|f| f == key) {
+            return Ok(true);
+        }
+        match self.opts.get(key) {
+            None => Ok(false),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                _ => bail!(
+                    "--{key} must be a boolean (true/false, 1/0, yes/no, on/off), got '{v}'"
+                ),
+            },
+        }
     }
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
@@ -109,12 +141,10 @@ impl Args {
     pub fn train_config(&self) -> Result<TrainConfig> {
         let d = TrainConfig::default();
         let method = self.get_or("method", &d.method);
-        // `--merge` default is method-aware: GRAFT merges gradient-aware
-        // (that is the paper's criterion — feature-only merging silently
-        // degrades it at shards > 1); every other method keeps the
-        // feature-space hierarchical tournament.  An explicit flag wins.
-        let merge_default =
-            if method.starts_with("graft") { MergePolicy::Grad } else { MergePolicy::Hierarchical };
+        // `--merge` default is method-aware; the rule lives in ONE place
+        // ([`engine::default_merge`], shared with `EngineBuilder` and
+        // `TrainConfig::default`).  An explicit flag wins.
+        let merge_default = engine::default_merge(&method);
         Ok(TrainConfig {
             dataset: self.get_or("dataset", &d.dataset),
             method,
@@ -125,11 +155,11 @@ impl Args {
             momentum: self.f64_or("momentum", d.momentum)?,
             epsilon: self.f64_or("epsilon", d.epsilon)?,
             warm_epochs: self.usize_or("warm-epochs", d.warm_epochs)?,
-            adaptive_rank: self.flag("adaptive-rank"),
+            adaptive_rank: self.try_flag("adaptive-rank")?,
             extractor: self.opt("extractor"),
             shards: self.usize_or("shards", d.shards)?,
             pool_workers: self.usize_or("pool-workers", d.pool_workers)?,
-            overlap: self.flag("overlap") || d.overlap,
+            overlap: self.try_flag("overlap")? || d.overlap,
             merge: {
                 let s = self.get_or("merge", merge_default.name());
                 MergePolicy::parse(&s).with_context(|| {
@@ -219,5 +249,49 @@ mod tests {
     #[test]
     fn positional_rejected() {
         assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn config_file_booleans_reach_flag_state() {
+        // Regression: `adaptive-rank = true` / `overlap = true` in a
+        // config file used to land in `opts` and be silently ignored by
+        // `flag()` — the run quietly trained without the requested
+        // behaviour.
+        let dir = std::env::temp_dir().join("graft_cfg_bool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(&path, "adaptive-rank = true\noverlap = true\npool-workers = 2\n")
+            .unwrap();
+        let a = parse(&format!("train --config {}", path.display()));
+        let c = a.train_config().unwrap();
+        assert!(c.adaptive_rank, "file 'adaptive-rank = true' must be honoured");
+        assert!(c.overlap, "file 'overlap = true' must be honoured");
+        assert_eq!(c.pool_workers, 2);
+
+        // Falsy spellings stay off; CLI flags still win over file values.
+        std::fs::write(&path, "adaptive-rank = false\noverlap = 0\n").unwrap();
+        let a = parse(&format!("train --config {}", path.display()));
+        let c = a.train_config().unwrap();
+        assert!(!c.adaptive_rank, "falsy file value stays off");
+        assert!(!c.overlap, "falsy file value stays off");
+        let a = parse(&format!("train --overlap --config {}", path.display()));
+        assert!(a.train_config().unwrap().overlap, "bare CLI flag wins over falsy file value");
+
+        // The inline CLI spelling `--overlap true` now also works, and
+        // matching is case-insensitive (TOML/Python habits: `True`, `On`).
+        assert!(parse("train --overlap true").train_config().unwrap().overlap);
+        assert!(!parse("train --overlap false").train_config().unwrap().overlap);
+        std::fs::write(&path, "adaptive-rank = True\noverlap = On\n").unwrap();
+        let c = parse(&format!("train --config {}", path.display())).train_config().unwrap();
+        assert!(c.adaptive_rank && c.overlap, "capitalized spellings are honoured");
+
+        // An unrecognized spelling is an ERROR naming the key, never a
+        // silent off — the failure class this satellite fixed.
+        std::fs::write(&path, "overlap = bananas\n").unwrap();
+        let err = parse(&format!("train --config {}", path.display()))
+            .train_config()
+            .err()
+            .expect("garbage boolean must be rejected");
+        assert!(format!("{err:#}").contains("overlap"), "{err:#}");
     }
 }

@@ -20,6 +20,14 @@
 //! paper's criterion now survives shard → merge → rank at any
 //! shard/worker count.  See `README.md` in this directory for the
 //! dataflow and the test matrix that pins it.
+//!
+//! Since PR 5 application code does not construct these wrappers
+//! directly: [`crate::engine::SelectionEngine`] is the typed facade over
+//! every execution shape here (builder-validated knobs, first-class
+//! `Selection` results, the windows/overlap session).  This module
+//! remains the machinery underneath — its pieces stay public for the
+//! pinning suites and benches that compare the facade against direct
+//! construction.
 
 pub mod merge;
 pub mod pipeline;

@@ -317,13 +317,16 @@ impl PooledSelector {
     /// [`super::ShardedSelector::with_rank_authority`]; pooled and scoped
     /// execution consult it identically — including being inert at one
     /// shard — which keeps pool ≡ scoped bit-identity intact under
-    /// `--merge grad`.
+    /// `--merge grad`.  Facade-internal plumbing (see the scoped twin's
+    /// doc): application code goes through
+    /// [`crate::engine::EngineBuilder`].
     pub fn with_rank_authority(mut self, authority: Box<dyn Selector>) -> Self {
         self.authority = Some(authority);
         self
     }
 
     /// Decision of the most recent gradient-aware merge (for logging).
+    /// Facade-internal; prefer [`crate::engine::Selection::decision`].
     pub fn last_rank_decision(&self) -> Option<RankDecision> {
         self.last
     }
@@ -580,6 +583,25 @@ pub fn run_windows<E>(
     count: usize,
     ws: &mut Workspace,
     selbuf: &mut Vec<usize>,
+    assemble: impl FnMut(usize) -> Result<SelectWindow, E>,
+    consume: impl FnMut(usize, &SelectWindow, &[usize]),
+) -> Result<(), E> {
+    run_windows_with(sel, |_| budget, overlap, count, ws, selbuf, assemble, consume)
+}
+
+/// [`run_windows`] with a per-window budget: `budget_for(K)` is consulted
+/// with each window's row count before its jobs are submitted.  This is
+/// the ONE implementation of the overlap pipeline — [`run_windows`]
+/// (fixed budget) and [`crate::engine::SelectionEngine::windows`]
+/// (fraction-derived budgets) are both thin wrappers, so the subtle
+/// drain-on-error ordering lives in exactly one place.
+pub(crate) fn run_windows_with<E>(
+    sel: &mut PooledSelector,
+    mut budget_for: impl FnMut(usize) -> usize,
+    overlap: bool,
+    count: usize,
+    ws: &mut Workspace,
+    selbuf: &mut Vec<usize>,
     mut assemble: impl FnMut(usize) -> Result<SelectWindow, E>,
     mut consume: impl FnMut(usize, &SelectWindow, &[usize]),
 ) -> Result<(), E> {
@@ -589,6 +611,7 @@ pub fn run_windows<E>(
     if !overlap {
         for wi in 0..count {
             let win = assemble(wi)?;
+            let budget = budget_for(win.view().k());
             sel.select_into(&win.view(), budget, ws, selbuf);
             consume(wi, &win, selbuf);
         }
@@ -597,7 +620,7 @@ pub fn run_windows<E>(
     let mut cur = assemble(0)?;
     for wi in 0..count {
         let view = cur.view();
-        let pending = sel.begin(&view, budget);
+        let pending = sel.begin(&view, budget_for(view.k()));
         // The overlap: workers are selecting window `wi` right now, while
         // this thread assembles window `wi + 1`.  If assembly fails, the
         // `pending` drop drains the in-flight epoch before `?` returns.

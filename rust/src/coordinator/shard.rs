@@ -225,7 +225,8 @@ impl ShardedSelector {
     /// [`Selector::shardable`]: the second-stage MaxVol merge only
     /// preserves the criterion of the MaxVol family, so wrapping anything
     /// else would silently measure a different method (the trainer routes
-    /// those to single-shot instead — see `build_selector`).
+    /// those to single-shot instead — see
+    /// `engine::EngineBuilder::build`).
     pub fn from_factory(
         shards: usize,
         merge: MergePolicy,
@@ -271,12 +272,22 @@ impl ShardedSelector {
     /// shard count, instead of one budget clone per shard.  Inert at one
     /// shard: that path delegates whole batches to the inner selector,
     /// which applies its own policy inline (bit-identity with single-shot).
+    ///
+    /// Facade-internal plumbing: application code gets this wiring from
+    /// [`crate::engine::EngineBuilder`] and reads decisions from
+    /// [`crate::engine::Selection`]; this stays public only for the
+    /// pinning suites and benches that compare the facade against direct
+    /// construction (`scripts/check_facade.sh` rejects other `src/`
+    /// callers).
     pub fn with_rank_authority(mut self, authority: Box<dyn Selector>) -> Self {
         self.authority = Some(authority);
         self
     }
 
     /// Decision of the most recent gradient-aware merge (for logging).
+    /// Facade-internal like
+    /// [`with_rank_authority`](ShardedSelector::with_rank_authority);
+    /// prefer [`crate::engine::Selection::decision`].
     pub fn last_rank_decision(&self) -> Option<RankDecision> {
         self.last
     }

@@ -1,0 +1,593 @@
+//! Typed construction and validation for [`SelectionEngine`].
+//!
+//! Every cross-knob rule that used to be split between the CLI defaults
+//! (`config::Args::train_config`), `TrainConfig::default`, and the
+//! trainer's hand-wiring lives in [`EngineBuilder::build`]: it is the one
+//! place that decides what a valid selection configuration *is*, what the
+//! method-aware defaults are, and which requested shapes fall back (with a
+//! note) instead of erroring.
+
+use crate::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
+use crate::features::{self, FeatureExtractor};
+use crate::graft::{BudgetedRankPolicy, GraftSelector};
+use crate::selection::{self, Selector};
+use crate::train::TrainConfig;
+
+use super::select::{Exec, SelectionEngine};
+
+/// How selection executes, spatially: the typed replacement for the
+/// `shards` / `pool_workers` / `overlap` knob pile.  All shapes are
+/// bit-identical for the same method and seed (pinned by
+/// `tests/engine_api.rs` through the facade, and by the coordinator
+/// suites underneath); they differ only in where the work runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecShape {
+    /// One selector, inline on the calling thread.
+    Serial,
+    /// Fan each batch across `shards` worker shards on per-call scoped
+    /// threads, merging winners with the configured [`MergePolicy`].
+    Sharded {
+        /// Number of selection shards (≥ 1; 1 collapses to [`Serial`]).
+        ///
+        /// [`Serial`]: ExecShape::Serial
+        shards: usize,
+    },
+    /// Route shard jobs through a persistent
+    /// [`SelectionPool`](crate::coordinator::pool::SelectionPool) of
+    /// long-lived workers.  The only shape that can overlap next-window
+    /// assembly with in-flight selection — which is why `overlap` lives
+    /// *inside* this variant: "overlap without a pool" is unrepresentable
+    /// in the typed API (the knob path rejects it with
+    /// [`EngineError::OverlapWithoutPool`]).
+    Pooled {
+        /// Number of selection shards dealt across the workers (≥ 1).
+        shards: usize,
+        /// Pool worker threads (≥ 1; clamped to `shards` at spawn).
+        workers: usize,
+        /// Pipeline `assemble(w + 1)` against the in-flight selection of
+        /// window `w` in [`SelectionEngine::windows`].  Selections are
+        /// identical with the flag on or off; only wall-clock changes.
+        overlap: bool,
+    },
+}
+
+impl ExecShape {
+    /// Resolve the legacy knob triple (`--shards`, `--pool-workers`,
+    /// `--overlap`) into a typed shape.  This is the ONE decision table
+    /// for the knob semantics:
+    ///
+    /// * `overlap` without a pool → [`EngineError::OverlapWithoutPool`]
+    /// * `shards == 0` → [`EngineError::ZeroShards`]
+    /// * `pool_workers >= 1` → [`ExecShape::Pooled`] (any shard count —
+    ///   a one-shard pool hosts the selector off-thread with no merge)
+    /// * `shards > 1` → [`ExecShape::Sharded`]
+    /// * otherwise → [`ExecShape::Serial`]
+    pub fn from_knobs(
+        shards: usize,
+        pool_workers: usize,
+        overlap: bool,
+    ) -> Result<ExecShape, EngineError> {
+        if overlap && pool_workers == 0 {
+            return Err(EngineError::OverlapWithoutPool);
+        }
+        if shards == 0 {
+            return Err(EngineError::ZeroShards);
+        }
+        Ok(if pool_workers >= 1 {
+            ExecShape::Pooled { shards, workers: pool_workers, overlap }
+        } else if shards > 1 {
+            ExecShape::Sharded { shards }
+        } else {
+            ExecShape::Serial
+        })
+    }
+
+    /// Validate a shape built directly (typed path).
+    fn validate(self) -> Result<ExecShape, EngineError> {
+        match self {
+            ExecShape::Sharded { shards: 0 } | ExecShape::Pooled { shards: 0, .. } => {
+                Err(EngineError::ZeroShards)
+            }
+            ExecShape::Pooled { workers: 0, .. } => Err(EngineError::ZeroWorkers),
+            s => Ok(s),
+        }
+    }
+
+    /// Shard count of the shape (1 for serial).
+    pub fn shards(self) -> usize {
+        match self {
+            ExecShape::Serial => 1,
+            ExecShape::Sharded { shards } | ExecShape::Pooled { shards, .. } => shards,
+        }
+    }
+}
+
+/// How the subset size per batch is decided (GRAFT's Stage 2; ignored by
+/// methods without a rank stage).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RankMode {
+    /// Exactly the requested budget every batch (fractions comparable
+    /// across methods — the sweep/comparison harness mode).  The
+    /// builder's [`EngineBuilder::epsilon`] is still recorded in each
+    /// [`RankDecision`](crate::graft::RankDecision) for telemetry.
+    Strict,
+    /// Dynamic rank: the smallest R* whose projection error meets ε,
+    /// under the running fraction budget (paper §3.2, Alg. 1).  On
+    /// sharded/pooled shapes this requires the gradient-aware merge to
+    /// take effect (the builder notes the mismatch otherwise).
+    Adaptive {
+        /// Projection-error threshold ε ∈ (0, 1].
+        epsilon: f64,
+    },
+}
+
+/// A rejected builder configuration.  Every variant names the offending
+/// field — both in the type ([`EngineError::field`]) and in the Display
+/// message — so callers can surface precise errors without string
+/// matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// `method`: not a known selection method.
+    UnknownMethod { method: String },
+    /// `extractor`: not a known feature extractor.
+    UnknownExtractor { extractor: String },
+    /// `merge`: not a known merge policy spelling.
+    UnknownMerge { merge: String },
+    /// `shards`: zero shards requested.
+    ZeroShards,
+    /// `workers`: a pooled shape with zero workers.
+    ZeroWorkers,
+    /// `overlap`: overlap requested without a worker pool.
+    OverlapWithoutPool,
+    /// `epsilon`: ε outside (0, 1] or not finite.
+    EpsilonOutOfRange { epsilon: f64 },
+    /// `fraction`: data fraction outside (0, 1] or not finite.
+    FractionOutOfRange { fraction: f64 },
+    /// `budget`: an explicit per-batch budget of zero rows.
+    ZeroBudget,
+}
+
+impl EngineError {
+    /// Name of the builder field the error is about.
+    pub fn field(&self) -> &'static str {
+        match self {
+            EngineError::UnknownMethod { .. } => "method",
+            EngineError::UnknownExtractor { .. } => "extractor",
+            EngineError::UnknownMerge { .. } => "merge",
+            EngineError::ZeroShards => "shards",
+            EngineError::ZeroWorkers => "workers",
+            EngineError::OverlapWithoutPool => "overlap",
+            EngineError::EpsilonOutOfRange { .. } => "epsilon",
+            EngineError::FractionOutOfRange { .. } => "fraction",
+            EngineError::ZeroBudget => "budget",
+        }
+    }
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnknownMethod { method } => {
+                write!(f, "method: unknown selection method '{method}'")
+            }
+            EngineError::UnknownExtractor { extractor } => {
+                write!(f, "extractor: unknown feature extractor '{extractor}' (svd|pca|ica|ae)")
+            }
+            EngineError::UnknownMerge { merge } => {
+                write!(f, "merge: unknown merge policy '{merge}' (hierarchical|flat|grad)")
+            }
+            EngineError::ZeroShards => write!(f, "shards: must be at least 1"),
+            EngineError::ZeroWorkers => {
+                write!(f, "workers: a pooled shape needs at least 1 worker")
+            }
+            EngineError::OverlapWithoutPool => {
+                write!(f, "overlap: requires a persistent worker pool (ExecShape::Pooled)")
+            }
+            EngineError::EpsilonOutOfRange { epsilon } => {
+                write!(f, "epsilon: {epsilon} outside the valid range (0, 1]")
+            }
+            EngineError::FractionOutOfRange { fraction } => {
+                write!(f, "fraction: {fraction} outside the valid range (0, 1]")
+            }
+            EngineError::ZeroBudget => write!(f, "budget: must be at least 1 row"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// The method-aware merge default, in one place (previously duplicated by
+/// the CLI and `TrainConfig::default`): GRAFT merges gradient-aware —
+/// that is the paper's criterion, and feature-only merging silently
+/// degrades it at `shards > 1` — while every other method keeps the
+/// feature-space hierarchical tournament.
+pub fn default_merge(method: &str) -> MergePolicy {
+    if method.starts_with("graft") {
+        MergePolicy::Grad
+    } else {
+        MergePolicy::Hierarchical
+    }
+}
+
+/// The exact GRAFT method spellings the engine builds a [`GraftSelector`]
+/// for.  Deliberately NOT a `starts_with("graft")` prefix test: a typo
+/// like `graftx` must fail [`EngineBuilder::build`] with
+/// [`EngineError::UnknownMethod`] rather than silently selecting with a
+/// default GRAFT configuration.
+fn is_graft_method(method: &str) -> bool {
+    matches!(method, "graft" | "graft-warm")
+}
+
+/// Where the execution shape comes from: the typed setter or the legacy
+/// knob triple (resolved by [`ExecShape::from_knobs`] at build time).
+#[derive(Debug, Clone)]
+enum ShapeSpec {
+    Knobs { shards: usize, pool_workers: usize, overlap: bool },
+    Typed(ExecShape),
+}
+
+/// Merge policy request: typed, by CLI spelling, or the method-aware
+/// default.
+#[derive(Debug, Clone)]
+enum MergeSpec {
+    Default,
+    Policy(MergePolicy),
+    Named(String),
+}
+
+/// Builder for a [`SelectionEngine`] — see the [module docs](crate::engine)
+/// for the full picture.  All setters are infallible; [`EngineBuilder::build`]
+/// validates everything at once and returns the first violated rule as a
+/// typed [`EngineError`].
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    method: String,
+    seed: u64,
+    fraction: f64,
+    budget: Option<usize>,
+    epsilon: f64,
+    rank: RankMode,
+    extractor: Option<String>,
+    merge: MergeSpec,
+    shape: ShapeSpec,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder::new()
+    }
+}
+
+impl EngineBuilder {
+    /// Start from the defaults: GRAFT, fraction 0.25, ε = 0.1, strict
+    /// rank, serial execution, method-aware merge, seed 42.
+    pub fn new() -> EngineBuilder {
+        EngineBuilder {
+            method: "graft".to_string(),
+            seed: 42,
+            fraction: 0.25,
+            budget: None,
+            epsilon: 0.1,
+            rank: RankMode::Strict,
+            extractor: None,
+            merge: MergeSpec::Default,
+            shape: ShapeSpec::Knobs { shards: 1, pool_workers: 0, overlap: false },
+        }
+    }
+
+    /// Selection method: `graft`, `graft-warm`, or any
+    /// [`selection::by_name`] baseline (`maxvol`, `cross-maxvol`,
+    /// `random`, `craig`, …).
+    pub fn method(mut self, method: impl Into<String>) -> Self {
+        self.method = method.into();
+        self
+    }
+
+    /// Base RNG seed for seeded methods.  Shard `i` derives its instance
+    /// seed as `seed ^ i·φ64` (shard 0 keeps the base seed, so every
+    /// shape matches the serial construction).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Target data fraction f ∈ (0, 1]: the per-batch budget is
+    /// `round(f·K)` unless [`EngineBuilder::budget`] pins an absolute
+    /// size, and the adaptive rank policy averages toward it.
+    pub fn fraction(mut self, fraction: f64) -> Self {
+        self.fraction = fraction;
+        self
+    }
+
+    /// Fixed per-batch budget in rows (overrides the fraction-derived
+    /// size; the adaptive policy still averages toward `fraction`).
+    pub fn budget(mut self, rows: usize) -> Self {
+        self.budget = Some(rows);
+        self
+    }
+
+    /// Projection-error threshold ε recorded by strict-mode decisions
+    /// (the criterion threshold in adaptive mode travels inside
+    /// [`RankMode::Adaptive`]).
+    pub fn epsilon(mut self, epsilon: f64) -> Self {
+        self.epsilon = epsilon;
+        self
+    }
+
+    /// How the subset size is decided per batch (GRAFT only).
+    pub fn rank(mut self, rank: RankMode) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Rust-side feature extractor (`svd` | `pca` | `ica` | `ae`): the
+    /// built engine owns the validated extractor and hands it to
+    /// [`SelectionEngine::windows`] assembly closures (also readable via
+    /// [`SelectionEngine::extractor`]).
+    pub fn extractor(mut self, name: impl Into<String>) -> Self {
+        self.extractor = Some(name.into());
+        self
+    }
+
+    /// Merge policy for sharded shapes (typed).  Unset = method-aware
+    /// default ([`default_merge`]).
+    pub fn merge(mut self, merge: MergePolicy) -> Self {
+        self.merge = MergeSpec::Policy(merge);
+        self
+    }
+
+    /// Merge policy by CLI spelling (`hierarchical` | `flat` | `grad`);
+    /// unknown spellings fail `build()` with [`EngineError::UnknownMerge`].
+    pub fn merge_name(mut self, name: impl Into<String>) -> Self {
+        self.merge = MergeSpec::Named(name.into());
+        self
+    }
+
+    /// Typed execution shape.  Overrides any previously set knobs; later
+    /// knob setters decompose it back into knob form.
+    pub fn exec(mut self, shape: ExecShape) -> Self {
+        self.shape = ShapeSpec::Typed(shape);
+        self
+    }
+
+    /// Legacy knob: shard count (`--shards`).
+    pub fn shards(mut self, shards: usize) -> Self {
+        let (_, pool_workers, overlap) = self.knobs();
+        self.shape = ShapeSpec::Knobs { shards, pool_workers, overlap };
+        self
+    }
+
+    /// Legacy knob: persistent pool workers (`--pool-workers`; 0 = no
+    /// pool, scoped-thread fan-out).
+    pub fn pool_workers(mut self, workers: usize) -> Self {
+        let (shards, _, overlap) = self.knobs();
+        self.shape = ShapeSpec::Knobs { shards, pool_workers: workers, overlap };
+        self
+    }
+
+    /// Legacy knob: overlap assembly with in-flight selection
+    /// (`--overlap`; needs a pool).
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        let (shards, pool_workers, _) = self.knobs();
+        self.shape = ShapeSpec::Knobs { shards, pool_workers, overlap };
+        self
+    }
+
+    fn knobs(&self) -> (usize, usize, bool) {
+        match &self.shape {
+            ShapeSpec::Knobs { shards, pool_workers, overlap } => {
+                (*shards, *pool_workers, *overlap)
+            }
+            ShapeSpec::Typed(ExecShape::Serial) => (1, 0, false),
+            ShapeSpec::Typed(ExecShape::Sharded { shards }) => (*shards, 0, false),
+            ShapeSpec::Typed(ExecShape::Pooled { shards, workers, overlap }) => {
+                (*shards, *workers, *overlap)
+            }
+        }
+    }
+
+    /// Map a [`TrainConfig`]'s selection knobs onto the builder.  This is
+    /// the compatibility path for the CLI/trainer and it preserves the
+    /// historical *fallback* semantics where the typed API rejects:
+    /// `overlap` without a pool is dropped here (the trainer prints the
+    /// run-level note, since the rule also concerns the AOT path that
+    /// never builds an engine) and `shards == 0` is clamped to serial.
+    /// Rank-stage knobs (`epsilon`, `adaptive_rank`) and the extractor are
+    /// GRAFT-path settings: baselines never consulted them pre-engine, so
+    /// they are not mapped — and therefore not validated — for baseline
+    /// methods (`--method el2n --epsilon 2.0` keeps running, exactly as it
+    /// always did; the typed builder path still rejects it).
+    pub fn from_train_config(cfg: &TrainConfig) -> EngineBuilder {
+        let mut b = EngineBuilder::new()
+            .method(&cfg.method)
+            .seed(cfg.seed ^ 0xBA5E)
+            .fraction(cfg.fraction)
+            .merge(cfg.merge)
+            .shards(cfg.shards.max(1))
+            .pool_workers(cfg.pool_workers)
+            .overlap(cfg.overlap && cfg.pool_workers >= 1);
+        if is_graft_method(&cfg.method) {
+            b = b.epsilon(cfg.epsilon);
+            if cfg.adaptive_rank {
+                b = b.rank(RankMode::Adaptive { epsilon: cfg.epsilon });
+            }
+            if let Some(ext) = &cfg.extractor {
+                b = b.extractor(ext);
+            }
+        }
+        b
+    }
+
+    /// Validate the whole configuration and construct the engine.  The
+    /// first violated rule is returned as a typed [`EngineError`];
+    /// *requested-but-inapplicable* shapes (sharding a non-shardable
+    /// method) fall back with a note instead — readable afterwards via
+    /// [`SelectionEngine::notes`], and echoed to stderr like the
+    /// pre-engine trainer did.
+    pub fn build(self) -> Result<SelectionEngine, EngineError> {
+        // -- scalar knobs ------------------------------------------------
+        if !self.fraction.is_finite() || self.fraction <= 0.0 || self.fraction > 1.0 {
+            return Err(EngineError::FractionOutOfRange { fraction: self.fraction });
+        }
+        let check_eps = |epsilon: f64| {
+            if !epsilon.is_finite() || epsilon <= 0.0 || epsilon > 1.0 {
+                Err(EngineError::EpsilonOutOfRange { epsilon })
+            } else {
+                Ok(())
+            }
+        };
+        check_eps(self.epsilon)?;
+        if let RankMode::Adaptive { epsilon } = self.rank {
+            check_eps(epsilon)?;
+        }
+        if self.budget == Some(0) {
+            return Err(EngineError::ZeroBudget);
+        }
+
+        // -- names -------------------------------------------------------
+        let is_graft = is_graft_method(&self.method);
+        let probe = if is_graft { None } else { selection::by_name(&self.method, 0) };
+        if !is_graft && probe.is_none() {
+            return Err(EngineError::UnknownMethod { method: self.method.clone() });
+        }
+        let extractor: Option<Box<dyn FeatureExtractor>> = match &self.extractor {
+            Some(name) => Some(
+                features::by_name(name)
+                    .ok_or_else(|| EngineError::UnknownExtractor { extractor: name.clone() })?,
+            ),
+            None => None,
+        };
+        let merge = match &self.merge {
+            MergeSpec::Default => default_merge(&self.method),
+            MergeSpec::Policy(p) => *p,
+            MergeSpec::Named(s) => MergePolicy::parse(s)
+                .ok_or_else(|| EngineError::UnknownMerge { merge: s.clone() })?,
+        };
+
+        // -- execution shape (the one cross-knob decision table) ---------
+        let requested = match &self.shape {
+            ShapeSpec::Knobs { shards, pool_workers, overlap } => {
+                ExecShape::from_knobs(*shards, *pool_workers, *overlap)?
+            }
+            ShapeSpec::Typed(shape) => shape.validate()?,
+        };
+
+        // -- shardability fallback (note, not error) ---------------------
+        let shardable = is_graft || probe.as_ref().is_some_and(|s| s.shardable());
+        let mut notes = Vec::new();
+        let shape = match requested {
+            ExecShape::Sharded { shards } if !shardable => {
+                notes.push(format!(
+                    "method '{}' is not shardable (its criterion or cross-batch state would \
+                     not survive the MaxVol merge); selection runs serial (shards {shards} \
+                     ignored)",
+                    self.method
+                ));
+                ExecShape::Serial
+            }
+            ExecShape::Pooled { shards, workers, overlap } if shards > 1 && !shardable => {
+                notes.push(format!(
+                    "method '{}' is not shardable (its criterion or cross-batch state would \
+                     not survive the MaxVol merge); the pool hosts it at one shard (shards \
+                     {shards} ignored)",
+                    self.method
+                ));
+                ExecShape::Pooled { shards: 1, workers, overlap }
+            }
+            // A one-shard scoped fan-out is exactly the serial path.
+            ExecShape::Sharded { shards: 1 } => ExecShape::Serial,
+            s => s,
+        };
+        let sharded = shape.shards() > 1;
+        if is_graft && sharded && !merge.gradient_aware() {
+            if let RankMode::Adaptive { .. } = self.rank {
+                notes.push(format!(
+                    "adaptive rank at {} shards needs the gradient-aware merge to apply the \
+                     rank decision (merge grad, the GRAFT default); this run's feature-only \
+                     merge keeps the full strict budget per refresh",
+                    shape.shards()
+                ));
+            }
+        }
+
+        // -- selector construction (trainer wiring, centralised) ---------
+        // GRAFT: the run policy sits on the single instance when serial;
+        // at shards > 1 the per-shard instances run strict (each emits its
+        // full MaxVol pivot prefix, so the merge union is never starved by
+        // a local rank cut) and the run policy is hoisted onto the
+        // coordinator's ONE rank authority — a single ε/budget accumulator
+        // at any shard/worker count.
+        let exec = if is_graft {
+            let eps = match self.rank {
+                RankMode::Adaptive { epsilon } => epsilon,
+                RankMode::Strict => self.epsilon,
+            };
+            let run_policy = || match self.rank {
+                RankMode::Adaptive { epsilon } => {
+                    BudgetedRankPolicy::adaptive(epsilon, self.fraction)
+                }
+                RankMode::Strict => BudgetedRankPolicy::strict(self.epsilon),
+            };
+            let make = |_si: usize| -> Box<dyn Selector> {
+                Box::new(GraftSelector::new(if sharded {
+                    BudgetedRankPolicy::strict(eps)
+                } else {
+                    run_policy()
+                }))
+            };
+            let authority = (sharded && merge.gradient_aware())
+                .then(|| Box::new(GraftSelector::new(run_policy())) as Box<dyn Selector>);
+            build_exec(shape, merge, authority, make)
+        } else {
+            let (seed, method) = (self.seed, self.method.clone());
+            let make = move |si: usize| -> Box<dyn Selector> {
+                // Shard 0 keeps the base seed so every shape matches the
+                // serial construction of seeded methods.
+                let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                selection::by_name(&method, wseed).expect("method validated above")
+            };
+            build_exec(shape, merge, None, make)
+        };
+
+        for n in &notes {
+            eprintln!("note: {n}");
+        }
+        Ok(SelectionEngine::from_parts(
+            exec,
+            extractor,
+            shape,
+            merge,
+            self.fraction,
+            self.budget,
+            notes,
+        ))
+    }
+}
+
+/// Wrap per-shard selector instances in the resolved execution shape.
+/// `make(0)` uses the base seed, so the serial shape is exactly the
+/// unsharded construction.
+fn build_exec(
+    shape: ExecShape,
+    merge: MergePolicy,
+    authority: Option<Box<dyn Selector>>,
+    mut make: impl FnMut(usize) -> Box<dyn Selector>,
+) -> Exec {
+    match shape {
+        ExecShape::Serial => Exec::Serial(make(0)),
+        ExecShape::Sharded { shards } => {
+            let mut sel = ShardedSelector::from_factory(shards, merge, make);
+            if let Some(a) = authority {
+                sel = sel.with_rank_authority(a);
+            }
+            Exec::Sharded(Box::new(sel))
+        }
+        ExecShape::Pooled { shards, workers, .. } => {
+            let mut sel = PooledSelector::from_factory(shards, workers, merge, make);
+            if let Some(a) = authority {
+                sel = sel.with_rank_authority(a);
+            }
+            Exec::Pooled(Box::new(sel))
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! `SelectionEngine` — the one typed facade over every selection
+//! execution shape.
+//!
+//! Before this module, "scale" was four loosely-coupled `TrainConfig`
+//! knobs (`shards`, `merge`, `pool_workers`, `overlap`) whose validity
+//! rules, method-aware defaults, and fallbacks were duplicated across the
+//! CLI, `TrainConfig::default`, and ~600 lines of trainer hand-wiring —
+//! and selection *results* leaked out through per-type side channels
+//! (`last_rank_decision`, `rank_stats`, `with_rank_authority`).  The
+//! engine replaces all of that with one boundary:
+//!
+//! * [`EngineBuilder`] — method, budget/fraction, typed
+//!   [`ExecShape`]`::{Serial, Sharded, Pooled}`,
+//!   [`MergePolicy`](crate::coordinator::MergePolicy),
+//!   [`RankMode`]`::{Strict, Adaptive}`, extractor, seed.  Every
+//!   cross-knob rule (overlap ⇒ pool, non-shardable ⇒ serial-with-note,
+//!   method-aware merge default) is validated **here and only here**;
+//!   invalid combinations return a typed [`EngineError`] naming the
+//!   offending field.
+//! * [`SelectionEngine::select`] — the hot path: feed a
+//!   [`BatchView`](crate::selection::BatchView), get a first-class
+//!   [`Selection`] (indices into a reused buffer, the dynamic-rank
+//!   decision, refresh telemetry).  No side-channel accessors.
+//! * [`SelectionEngine::windows`] — the streaming session: drive N
+//!   assembled windows through the engine, overlapping next-window
+//!   assembly with in-flight pooled selection when the shape says so
+//!   (the pipeline previously inlined in the trainer).
+//!
+//! Internally the engine owns the [`Workspace`](crate::linalg::Workspace),
+//! the result buffer, the sharded/pooled coordinator wrappers, and the
+//! single gradient-merge rank authority, so the bit-identity guarantees
+//! pinned by `tests/sharded_selection.rs`, `tests/selection_pool.rs`, and
+//! `tests/gradient_merge.rs` hold unchanged through the facade (pinned
+//! again, through the facade, by `tests/engine_api.rs`).
+//!
+//! # Quickstart
+//!
+//! ```
+//! use graft::engine::{EngineBuilder, ExecShape};
+//! use graft::linalg::Mat;
+//! use graft::rng::Rng;
+//! use graft::selection::BatchView;
+//!
+//! let k = 8;
+//! let mut rng = Rng::new(7);
+//! let features = Mat::from_fn(k, 3, |_, _| rng.normal());
+//! let grads = Mat::from_fn(k, 4, |_, _| rng.normal());
+//! let losses = vec![1.0; k];
+//! let labels = vec![0i32; k];
+//! let preds = vec![0i32; k];
+//! let row_ids: Vec<usize> = (0..k).collect();
+//! let batch = BatchView {
+//!     features: &features,
+//!     grads: &grads,
+//!     losses: &losses,
+//!     labels: &labels,
+//!     preds: &preds,
+//!     classes: 2,
+//!     row_ids: &row_ids,
+//! };
+//!
+//! let mut eng = EngineBuilder::new()
+//!     .method("graft")
+//!     .budget(4)
+//!     .exec(ExecShape::Serial)
+//!     .build()
+//!     .expect("valid configuration");
+//! let sel = eng.select(&batch);
+//! assert_eq!(sel.indices.len(), 4);
+//! println!("kept {:?} (decision {:?})", sel.indices, sel.decision);
+//! ```
+
+mod builder;
+mod select;
+
+pub use builder::{default_merge, EngineBuilder, EngineError, ExecShape, RankMode};
+pub use select::{Selection, SelectionEngine};

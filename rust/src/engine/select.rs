@@ -1,0 +1,258 @@
+//! The built engine: hot-path [`SelectionEngine::select`] and the
+//! streaming [`SelectionEngine::windows`] session.
+
+use crate::coordinator::{MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
+use crate::features::FeatureExtractor;
+use crate::graft::{RankDecision, RankStats};
+use crate::linalg::Workspace;
+use crate::selection::{BatchView, Selector};
+
+use super::builder::ExecShape;
+
+/// The resolved execution backend.  All three are bit-identical for the
+/// same method and seed; see [`ExecShape`].
+pub(super) enum Exec {
+    Serial(Box<dyn Selector>),
+    Sharded(Box<ShardedSelector>),
+    Pooled(Box<PooledSelector>),
+}
+
+impl Exec {
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        match self {
+            Exec::Serial(s) => s.select_into(view, r, ws, out),
+            Exec::Sharded(s) => s.select_into(view, r, ws, out),
+            Exec::Pooled(p) => p.select_into(view, r, ws, out),
+        }
+    }
+
+    fn rank_stats(&self) -> Option<RankStats> {
+        match self {
+            Exec::Serial(s) => s.rank_stats(),
+            Exec::Sharded(s) => s.rank_stats(),
+            Exec::Pooled(p) => p.rank_stats(),
+        }
+    }
+
+    fn last_decision(&self) -> Option<RankDecision> {
+        match self {
+            // The serial decision maker is the selector itself.
+            Exec::Serial(s) => s.rank_stats().and_then(|t| t.last),
+            // Sharded/pooled: the gradient-merge authority's decision
+            // (None under feature-only merges, and for a one-shard pool,
+            // whose inner selector lives on a worker thread).
+            Exec::Sharded(s) => {
+                s.last_rank_decision().or_else(|| s.rank_stats().and_then(|t| t.last))
+            }
+            Exec::Pooled(p) => p.last_rank_decision(),
+        }
+    }
+}
+
+/// One selection result — the first-class replacement for the per-type
+/// side-channel accessors.  Borrows the engine's reused buffer, so
+/// holding a `Selection` holds the engine; copy the indices out if you
+/// need them across selects.
+pub struct Selection<'e> {
+    /// Batch-local winner ids (indices into the selected batch's rows),
+    /// unique, in selection order.
+    pub indices: &'e [usize],
+    /// The dynamic-rank decision behind this subset (methods without a
+    /// rank stage, feature-only merges, and one-shard pools — whose inner
+    /// selector lives on a worker thread — report `None`).
+    pub decision: Option<RankDecision>,
+    /// The budget this selection was asked for (`min(r, K)` rows come
+    /// back for budget-honouring methods).
+    pub budget: usize,
+    /// 0-based running index of this selection in the engine's lifetime
+    /// (windows and one-shot selects share the counter).
+    pub window: u64,
+}
+
+/// A built selection engine: owns the selector(s) in their execution
+/// shape, the scratch [`Workspace`], the result buffer, the validated
+/// feature extractor, and the single gradient-merge rank authority.
+/// Construct with [`EngineBuilder`](super::EngineBuilder).
+pub struct SelectionEngine {
+    exec: Exec,
+    extractor: Option<Box<dyn FeatureExtractor>>,
+    shape: ExecShape,
+    merge: MergePolicy,
+    fraction: f64,
+    budget: Option<usize>,
+    ws: Workspace,
+    buf: Vec<usize>,
+    notes: Vec<String>,
+    windows_done: u64,
+}
+
+impl SelectionEngine {
+    pub(super) fn from_parts(
+        exec: Exec,
+        extractor: Option<Box<dyn FeatureExtractor>>,
+        shape: ExecShape,
+        merge: MergePolicy,
+        fraction: f64,
+        budget: Option<usize>,
+        notes: Vec<String>,
+    ) -> SelectionEngine {
+        SelectionEngine {
+            exec,
+            extractor,
+            shape,
+            merge,
+            fraction,
+            budget,
+            ws: Workspace::new(),
+            buf: Vec::new(),
+            notes,
+            windows_done: 0,
+        }
+    }
+
+    /// The resolved execution shape (after any non-shardable fallback).
+    pub fn shape(&self) -> ExecShape {
+        self.shape
+    }
+
+    /// The resolved merge policy.
+    pub fn merge(&self) -> MergePolicy {
+        self.merge
+    }
+
+    /// Build-time fallback notes (e.g. a non-shardable method downgraded
+    /// to serial); empty when the configuration applied as requested.
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+
+    /// The engine-owned feature extractor, when one was configured.
+    pub fn extractor(&self) -> Option<&dyn FeatureExtractor> {
+        self.extractor.as_deref()
+    }
+
+    /// Per-batch row budget for a K-row batch: the explicit
+    /// [`budget`](super::EngineBuilder::budget) if set, else
+    /// `round(fraction · K)` clamped to `[1, K]`.
+    pub fn budget_for(&self, k: usize) -> usize {
+        resolve_budget(self.budget, self.fraction, k)
+    }
+
+    /// Dynamic-rank accounting of the single decision maker — the
+    /// coordinator's rank authority on sharded/pooled gradient-aware
+    /// shapes, or the selector's own policy on the serial path.  `None`
+    /// for methods without a rank stage (and for a one-shard pool, whose
+    /// inner selector lives on a worker thread).
+    pub fn rank_stats(&self) -> Option<RankStats> {
+        self.exec.rank_stats()
+    }
+
+    /// Decision behind the most recent selection (same caveats as
+    /// [`SelectionEngine::rank_stats`]).
+    pub fn last_decision(&self) -> Option<RankDecision> {
+        self.exec.last_decision()
+    }
+
+    /// Select a subset from one batch.  The hot path: scratch and the
+    /// result buffer are engine-owned and reused, so steady-state
+    /// selection performs no heap allocations (exactly zero for the
+    /// MaxVol/GRAFT paths, as pinned by `tests/alloc_free.rs` on the
+    /// underlying executors).
+    pub fn select(&mut self, view: &BatchView<'_>) -> Selection<'_> {
+        let r = resolve_budget(self.budget, self.fraction, view.k());
+        self.exec.select_into(view, r, &mut self.ws, &mut self.buf);
+        self.windows_done += 1;
+        Selection {
+            indices: &self.buf,
+            decision: self.exec.last_decision(),
+            budget: r,
+            window: self.windows_done - 1,
+        }
+    }
+
+    /// Drive `count` selection windows through the engine — the streaming
+    /// session that owns the assemble ∥ select overlap pipeline.
+    ///
+    /// `assemble(w, extractor)` builds window `w` (batch gather, `embed`,
+    /// feature extraction — whatever the caller does); the engine passes
+    /// its validated extractor in so assembly closures need no selector
+    /// knowledge.  `consume(w, window, winners)` receives the batch-local
+    /// winner ids for window `w`.
+    ///
+    /// On a [`ExecShape::Pooled`] shape with `overlap` set, window `w + 1`
+    /// is assembled on the calling thread while the pool workers select
+    /// window `w`; every other shape runs strictly serial.  The `consume`
+    /// stream is identical either way — assembly never depends on
+    /// selection results — extending the `run_windows` guarantee pinned by
+    /// `tests/selection_pool.rs::overlap_and_serial_paths_agree` to the
+    /// facade.  An `Err` from `assemble` aborts the loop after draining
+    /// any in-flight selection.
+    pub fn windows<E, A, C>(
+        &mut self,
+        count: usize,
+        mut assemble: A,
+        mut consume: C,
+    ) -> Result<(), E>
+    where
+        // Named generics (not impl-Trait arguments) so callers whose
+        // error type is not pinned by inference can turbofish it:
+        // `eng.windows::<anyhow::Error, _, _>(...)`.
+        A: FnMut(usize, Option<&dyn FeatureExtractor>) -> Result<SelectWindow, E>,
+        C: FnMut(usize, &SelectWindow, &[usize]),
+    {
+        if count == 0 {
+            return Ok(());
+        }
+        let SelectionEngine {
+            exec, extractor, shape, fraction, budget, ws, buf, windows_done, ..
+        } = self;
+        let ext = extractor.as_deref();
+        if let Exec::Pooled(pool) = exec {
+            // Both pooled modes run through the coordinator's single
+            // overlap-pipeline implementation (`run_windows_with`), so the
+            // subtle begin / assemble-next / finish drain-on-error
+            // ordering lives in exactly one place.
+            let overlap = matches!(shape, ExecShape::Pooled { overlap: true, .. });
+            return crate::coordinator::pool::run_windows_with(
+                pool,
+                |k| resolve_budget(*budget, *fraction, k),
+                overlap,
+                count,
+                ws,
+                buf,
+                |wi| assemble(wi, ext),
+                |wi, win, winners| {
+                    *windows_done += 1;
+                    consume(wi, win, winners);
+                },
+            );
+        }
+        for wi in 0..count {
+            let win = assemble(wi, ext)?;
+            let view = win.view();
+            let r = resolve_budget(*budget, *fraction, view.k());
+            exec.select_into(&view, r, ws, buf);
+            *windows_done += 1;
+            consume(wi, &win, buf);
+        }
+        Ok(())
+    }
+
+    /// Tear down pooled workers now (otherwise on drop; idempotent; a
+    /// no-op for non-pooled shapes).
+    pub fn shutdown(&mut self) {
+        if let Exec::Pooled(p) = &mut self.exec {
+            p.shutdown();
+        }
+    }
+}
+
+fn resolve_budget(budget: Option<usize>, fraction: f64, k: usize) -> usize {
+    budget.unwrap_or_else(|| ((fraction * k as f64).round() as usize).clamp(1, k.max(1)))
+}

@@ -5,6 +5,57 @@
 //! orchestrator, selection methods, evaluation harness); Layers 1-2 are
 //! AOT-compiled to HLO artifacts by `python/compile` and executed here
 //! through the PJRT C API (`runtime`).
+//!
+//! # Which API do I use?
+//!
+//! * **Selecting subsets from batches** — almost always [`engine`]: build
+//!   a [`engine::SelectionEngine`] with [`engine::EngineBuilder`] (method,
+//!   fraction/budget, typed [`engine::ExecShape`], merge policy, rank
+//!   mode, extractor, seed) and call
+//!   [`select`](engine::SelectionEngine::select) per batch or
+//!   [`windows`](engine::SelectionEngine::windows) for a streaming
+//!   session.  The engine owns selector construction, cross-knob
+//!   validation, workspaces, the sharded/pooled execution shapes, and the
+//!   gradient-merge rank authority, and returns first-class
+//!   [`engine::Selection`] results.  See the quickstart in the [`engine`]
+//!   module docs and `examples/quickstart.rs`.
+//! * **Whole training runs** — [`train::run`] with a [`train::TrainConfig`]
+//!   (the CLI's `train` subcommand); it drives the AOT artifacts through
+//!   [`runtime`] and builds its Rust-side selection through the engine.
+//! * **Implementing a new selection method** — the [`selection::Selector`]
+//!   trait; register it in [`selection::by_name`] and the engine picks it
+//!   up everywhere.
+//! * **Coordinator internals** (shard fan-out, merge tournaments, worker
+//!   pool, batch pipelines) — [`coordinator`], which the engine wraps.
+//!   Construct [`coordinator::ShardedSelector`] /
+//!   [`coordinator::PooledSelector`] directly only in tests and benches
+//!   that pin the engine against them; application code goes through the
+//!   facade (CI greps for violations).
+//!
+//! ```
+//! use graft::engine::{EngineBuilder, ExecShape};
+//! # use graft::linalg::Mat;
+//! # use graft::selection::BatchView;
+//! # let k = 8;
+//! # let mut rng = graft::rng::Rng::new(7);
+//! # let features = Mat::from_fn(k, 3, |_, _| rng.normal());
+//! # let grads = Mat::from_fn(k, 4, |_, _| rng.normal());
+//! # let losses = vec![1.0; k];
+//! # let labels = vec![0i32; k];
+//! # let preds = vec![0i32; k];
+//! # let row_ids: Vec<usize> = (0..k).collect();
+//! # let batch = BatchView { features: &features, grads: &grads, losses: &losses,
+//! #     labels: &labels, preds: &preds, classes: 2, row_ids: &row_ids };
+//! let mut eng = EngineBuilder::new()
+//!     .method("graft")
+//!     .fraction(0.5)
+//!     .exec(ExecShape::Sharded { shards: 2 })
+//!     .build()
+//!     .expect("valid configuration");
+//! let want = eng.budget_for(k);
+//! let sel = eng.select(&batch);
+//! assert_eq!(sel.indices.len(), want);
+//! ```
 
 // Numeric-kernel lint posture: index-based loops mirror the maths (and the
 // Pallas kernels they twin), and the orchestration layers legitimately
@@ -18,6 +69,7 @@ pub mod cmd;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod eval;
 pub mod features;
 pub mod linalg;

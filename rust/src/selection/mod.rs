@@ -67,11 +67,35 @@ pub trait Selector: Send {
         out: &mut Vec<usize>,
     );
 
-    /// Allocating wrapper over [`Selector::select_into`].
+    /// Convenience wrapper over [`Selector::select_into`] for one-shot
+    /// callers (tests, examples, REPL-style use).
+    ///
+    /// Allocation behaviour, precisely: the returned `Vec` is the only
+    /// per-call heap allocation on the warm path.  Scratch comes from a
+    /// **per-thread cached [`Workspace`]** — a thread's first `select`
+    /// allocates the arena buffers, every later `select` on that thread
+    /// reuses their capacity (buffers are cleared, never shrunk, by their
+    /// consumers, so results are identical to a fresh workspace — pinned
+    /// by `workspace_reuse_across_batches`).  A re-entrant call (a
+    /// selector calling `select` from inside its own `select_into` on the
+    /// same thread) cannot reuse the busy cache and falls back to a fresh
+    /// `Workspace` for that call, paying its allocations.  Hot loops
+    /// should keep calling [`Selector::select_into`] with run-owned
+    /// scratch and a reused output buffer — or better, drive selection
+    /// through [`crate::engine::SelectionEngine`], which owns both.
     fn select(&mut self, view: &BatchView<'_>, r: usize) -> Vec<usize> {
-        let mut ws = Workspace::default();
+        thread_local! {
+            static ONE_SHOT_WS: std::cell::RefCell<Workspace> =
+                std::cell::RefCell::new(Workspace::new());
+        }
         let mut out = Vec::new();
-        self.select_into(view, r, &mut ws, &mut out);
+        ONE_SHOT_WS.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut ws) => self.select_into(view, r, &mut ws, &mut out),
+            Err(_) => {
+                let mut ws = Workspace::default();
+                self.select_into(view, r, &mut ws, &mut out);
+            }
+        });
         out
     }
 

@@ -10,14 +10,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{run_windows, MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
+use crate::coordinator::{MergePolicy, SelectWindow};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
+use crate::engine::{EngineBuilder, SelectionEngine};
+use crate::features::FeatureExtractor;
 use crate::graft::alignment::AlignmentSample;
-use crate::graft::{AlignmentStats, BudgetedRankPolicy, RankStats};
-use crate::linalg::Workspace;
+use crate::graft::{AlignmentStats, BudgetedRankPolicy};
 use crate::rng::Rng;
 use crate::runtime::{ConfigSpec, Engine, ModelParams, TrainState};
-use crate::selection::{self, Selector};
 
 use super::energy::{selection_flops, EnergyMeter, FlopModel};
 use super::metrics::{CurvePoint, LossTracker, RunResult};
@@ -57,7 +57,7 @@ pub struct TrainConfig {
     /// single-shot, bit-identical to the pre-shard pipeline; `>1` fans
     /// each K-window across worker shards and merges the winners with a
     /// second-stage MaxVol ([`crate::coordinator::shard`]).  Only
-    /// MaxVol-criterion selectors shard ([`Selector::shardable`]:
+    /// MaxVol-criterion selectors shard ([`crate::selection::Selector::shardable`]:
     /// maxvol, cross-maxvol, and the GRAFT extractor path); other
     /// methods ignore the knob and run single-shot, because the MaxVol
     /// merge would rewrite their selection criterion.  The AOT `select`
@@ -91,9 +91,18 @@ pub struct TrainConfig {
 
 impl Default for TrainConfig {
     fn default() -> Self {
+        // The method-aware merge default is derived from the method
+        // field, not hardcoded, so the rule stays in one place
+        // (`engine::default_merge`, shared with the CLI).  Struct-update
+        // callers overriding `method` to a baseline may keep the GRAFT
+        // default: a gradient-aware merge without a rank authority is
+        // bitwise the hierarchical one (pinned in merge.rs tests), so it
+        // stays correct — the CLI path re-derives it anyway.
+        let method = String::from("graft");
         TrainConfig {
             dataset: "cifar10".into(),
-            method: "graft".into(),
+            merge: crate::engine::default_merge(&method),
+            method,
             fraction: 0.25,
             epochs: 30,
             refresh_epochs: 5,
@@ -104,9 +113,6 @@ impl Default for TrainConfig {
             adaptive_rank: false,
             extractor: None,
             shards: 1,
-            // Matches the CLI's method-aware default: the default method
-            // is "graft", whose sharded path merges gradient-aware.
-            merge: MergePolicy::Grad,
             pool_workers: 0,
             overlap: false,
             seed: 42,
@@ -173,50 +179,33 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     if cfg.overlap && cfg.pool_workers == 0 {
         eprintln!("note: --overlap needs a persistent selection pool (--pool-workers >= 1); running serial refreshes");
     }
-    let mut baseline: Option<SelectorExec> = if !is_full && !is_graft {
-        Some(build_selector(&cfg.method, cfg.seed ^ 0xBA5E, cfg.shards, cfg.pool_workers, cfg.merge)?)
+    // Rust-side selection executes through the typed facade: one
+    // `SelectionEngine` per run owns the selector instances in their
+    // execution shape (serial / scoped shards / persistent pool), the
+    // workspace and result buffers, the validated extractor, and — for
+    // GRAFT at shards > 1 under the gradient-aware merge — the single
+    // coordinator-level rank authority.  All the method-aware wiring the
+    // trainer used to hand-roll lives in `EngineBuilder::build`.
+    let mut baseline: Option<SelectionEngine> = if !is_full && !is_graft {
+        Some(
+            EngineBuilder::from_train_config(cfg)
+                .budget(r_budget)
+                .build()
+                .context("invalid selection configuration")?,
+        )
     } else {
         None
     };
-    // Rust-side GRAFT selector for the extractor ablation path, built once
-    // per *run* (not per refresh): with a persistent pool the workers —
-    // and their warmed workspaces/buffers — must live across refreshes,
-    // and even inline the merge scratch is reused run-long.  The run's
-    // rank policy is hoisted to the coordinator: at one shard the single
-    // instance applies it inline (bit-identical to single-shot GRAFT); at
-    // shards > 1 under the gradient-aware merge it becomes the
-    // coordinator's rank authority — one global decision and one budget
-    // accumulator per refreshed window, independent of shard/worker count
-    // — while the per-shard instances run strict so each emits its full
-    // MaxVol pivot prefix and the merge union is never starved by a local
-    // rank cut.
-    let mut graft_sel: Option<SelectorExec> = if is_graft && cfg.extractor.is_some() {
-        let run_policy = || {
-            if cfg.adaptive_rank {
-                BudgetedRankPolicy::adaptive(cfg.epsilon, cfg.fraction)
-            } else {
-                // strict() pins strict_budget, so |S| == r_budget holds.
-                BudgetedRankPolicy::strict(cfg.epsilon)
-            }
-        };
-        let sharded = cfg.shards > 1;
-        if cfg.adaptive_rank && sharded && !cfg.merge.gradient_aware() {
-            eprintln!(
-                "note: --adaptive-rank at --shards {} needs the gradient-aware merge to \
-                 apply the rank decision (--merge grad, the GRAFT default); this run's \
-                 feature-only merge keeps the full strict budget per refresh",
-                cfg.shards
-            );
-        }
-        let make_graft = |_si: usize| -> Box<dyn Selector> {
-            let policy =
-                if sharded { BudgetedRankPolicy::strict(cfg.epsilon) } else { run_policy() };
-            Box::new(crate::graft::GraftSelector::new(policy))
-        };
-        let authority = (sharded && cfg.merge.gradient_aware()).then(|| {
-            Box::new(crate::graft::GraftSelector::new(run_policy())) as Box<dyn Selector>
-        });
-        Some(wrap_selector(cfg.shards, cfg.pool_workers, cfg.merge, true, authority, make_graft))
+    // GRAFT extractor ablation path: same facade, built once per *run*
+    // (not per refresh) so pooled workers — and their warmed
+    // workspaces/buffers — live across refreshes.
+    let mut graft_eng: Option<SelectionEngine> = if is_graft && cfg.extractor.is_some() {
+        Some(
+            EngineBuilder::from_train_config(cfg)
+                .budget(r_budget)
+                .build()
+                .context("invalid selection configuration")?,
+        )
     } else {
         None
     };
@@ -260,16 +249,12 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     let mut epoch = 0usize;
     let mut refresh_rng = Rng::new(cfg.seed ^ 0xF5);
     let mut active: Vec<usize> = (0..train.n).collect();
-    // One workspace + selection buffer for the whole run: after the first
-    // refresh window every per-batch selection is allocation-free.
-    let mut ws = Workspace::new();
-    let mut selbuf: Vec<usize> = Vec::new();
     while epoch < cfg.epochs {
         if !is_full {
             active = refresh_subset(
                 engine, cfg, &spec, &train, &state.params, r_budget, &mut baseline,
-                &mut graft_sel, &mut policy, &mut align, &mut meter, &flops, epoch,
-                &mut refresh_rng, &mut ws, &mut selbuf,
+                &mut graft_eng, &mut policy, &mut align, &mut meter, &flops, epoch,
+                &mut refresh_rng,
             )?;
             if active.is_empty() {
                 bail!("selection produced an empty subset");
@@ -329,13 +314,13 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
             wall_secs: t0.elapsed().as_secs_f64(),
             steps: global_step,
             curve,
-            // Extractor-path runs read the coordinator's single rank
+            // Extractor-path runs read the engine's single rank
             // accumulator (the gradient-merge authority, or the one-shard
             // selector itself); the AOT path keeps its own policy.  Known
             // gap: a one-shard *pool* hosts its selector on a worker
             // thread, reports no stats, and falls back to 0.0 like the
             // pre-PR4 extractor path.
-            mean_rank: graft_sel
+            mean_rank: graft_eng
                 .as_ref()
                 .and_then(|e| e.rank_stats())
                 .map(|s| s.mean_rank)
@@ -346,114 +331,18 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     })
 }
 
-/// How the Rust-side selection for a refresh executes.  `Sync` covers the
-/// pre-pool shapes — single-shot, or the scoped-thread [`ShardedSelector`]
-/// fan-out; `Pooled` routes shard jobs through the persistent
-/// [`PooledSelector`] worker pool, which is also what the assemble ∥
-/// select `overlap` path runs on.  All three execution shapes are
-/// bit-identical (pinned by `rust/tests/selection_pool.rs`).
-enum SelectorExec {
-    Sync(Box<dyn Selector>),
-    Pooled(Box<PooledSelector>),
-}
-
-impl SelectorExec {
-    /// Dynamic-rank accounting of the wrapped selector: the coordinator's
-    /// single rank authority for sharded/pooled gradient-aware execution,
-    /// or the selector's own policy on the single-shot path.  `None` for
-    /// methods without a rank stage (and for a one-shard pool, whose
-    /// inner selector lives on a worker thread).
-    fn rank_stats(&self) -> Option<RankStats> {
-        match self {
-            SelectorExec::Sync(s) => s.rank_stats(),
-            SelectorExec::Pooled(p) => p.rank_stats(),
-        }
-    }
-}
-
-/// Wrap a selector factory in the configured execution shape.  `shards`
-/// only applies when the selector family opted in ([`Selector::shardable`]
-/// — the MaxVol criterion survives the merge); `pool_workers >= 1` moves
-/// execution onto the persistent pool (any selector qualifies at one
-/// shard, since a single shard involves no merge).  `make(0)` must use the
-/// caller's base seed so every shape matches the unsharded construction.
-/// `authority` is the coordinator-level rank decision maker consulted by
-/// the gradient-aware merge (one per run; ignored by the single-shot
-/// shape, where the inner selector decides inline).
-fn wrap_selector(
-    shards: usize,
-    pool_workers: usize,
-    merge: MergePolicy,
-    shardable: bool,
-    authority: Option<Box<dyn Selector>>,
-    mut make: impl FnMut(usize) -> Box<dyn Selector>,
-) -> SelectorExec {
-    let shards = if shardable { shards.max(1) } else { 1 };
-    if pool_workers >= 1 {
-        let mut pooled = PooledSelector::from_factory(shards, pool_workers, merge, make);
-        if let Some(a) = authority {
-            pooled = pooled.with_rank_authority(a);
-        }
-        SelectorExec::Pooled(Box::new(pooled))
-    } else if shards > 1 {
-        let mut sharded = ShardedSelector::from_factory(shards, merge, make);
-        if let Some(a) = authority {
-            sharded = sharded.with_rank_authority(a);
-        }
-        SelectorExec::Sync(Box::new(sharded))
-    } else {
-        SelectorExec::Sync(make(0))
-    }
-}
-
-/// Construct the baseline selector in its execution shape.  `shards <= 1`
-/// and no pool builds the plain selector — exactly the pre-shard object,
-/// so the single-shot path stays bit-identical; `shards > 1` wraps one
-/// instance per shard (scoped threads, or the persistent pool when
-/// `pool_workers >= 1`).  Shard 0 keeps the base seed so stateless
-/// methods line up with the single-shot construction.
-/// Only selectors that opt in via [`Selector::shardable`] (the MaxVol
-/// family) are sharded: for score-/RNG-based methods the second-stage
-/// MaxVol merge would silently rewrite the selection criterion, and
-/// cross-batch state (`forget`) would fragment across shard-private
-/// instances — those run single-shot (still pool-hosted when requested,
-/// which keeps them eligible for the overlap path) with a note.
-fn build_selector(
-    method: &str,
-    seed: u64,
-    shards: usize,
-    pool_workers: usize,
-    merge: MergePolicy,
-) -> Result<SelectorExec> {
-    let single =
-        selection::by_name(method, seed).with_context(|| format!("unknown method '{method}'"))?;
-    let shardable = single.shardable();
-    if shards > 1 && !shardable {
-        eprintln!(
-            "note: method '{method}' is not shardable (its criterion or cross-batch state \
-             would not survive the MaxVol merge); selection runs single-shot \
-             (--shards {shards} ignored)"
-        );
-    }
-    if shards <= 1 && pool_workers == 0 {
-        return Ok(SelectorExec::Sync(single));
-    }
-    Ok(wrap_selector(shards, pool_workers, merge, shardable, None, |si| {
-        let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        selection::by_name(method, wseed).expect("method name validated above")
-    }))
-}
-
 /// Stage 1 of Algorithm 1: scan the training set in K-windows and select a
 /// per-batch subset; returns the aggregated active row set S^t.
 ///
 /// The AOT `select` path stays serial against the engine (its selection
 /// runs inside the compiled kernel).  The Rust-side paths — baselines and
 /// the GRAFT extractor ablation — are expressed as assemble/consume
-/// closures over [`SelectWindow`]s: with a persistent pool and `overlap`
-/// on, [`run_windows`] assembles (gather + `embed` + extractor) window
+/// closures over [`SelectWindow`]s handed to
+/// [`SelectionEngine::windows`], which owns the execution-shape dispatch
+/// and the assemble ∥ select overlap pipeline: with a pooled shape and
+/// `overlap` on it assembles (gather + `embed` + extractor) window
 /// `w + 1` while the pool workers select window `w`; otherwise the loop
-/// runs serially, step-for-step identical to the pre-pool trainer.
+/// runs serially, step-for-step identical to the pre-engine trainer.
 #[allow(clippy::too_many_arguments)]
 fn refresh_subset(
     engine: &mut Engine,
@@ -462,16 +351,14 @@ fn refresh_subset(
     train: &Dataset,
     params: &ModelParams,
     r_budget: usize,
-    baseline: &mut Option<SelectorExec>,
-    graft_sel: &mut Option<SelectorExec>,
+    baseline: &mut Option<SelectionEngine>,
+    graft_eng: &mut Option<SelectionEngine>,
     policy: &mut BudgetedRankPolicy,
     align: &mut AlignmentStats,
     meter: &mut EnergyMeter,
     flops: &FlopModel,
     epoch: usize,
     rng: &mut Rng,
-    ws: &mut Workspace,
-    selbuf: &mut Vec<usize>,
 ) -> Result<Vec<usize>> {
     let mut active = Vec::new();
     let mut order: Vec<usize> = (0..train.n).collect();
@@ -520,19 +407,18 @@ fn refresh_subset(
 
     // Rust-side selection (baselines / GRAFT extractor ablation): each
     // window is assembled into an owned [`SelectWindow`] so the pool
-    // workers can read it while this thread assembles the next one.
-    let assemble = |wi: usize| -> Result<SelectWindow> {
+    // workers can read it while this thread assembles the next one.  The
+    // engine hands its validated extractor into the assembly closure and
+    // owns the per-window budget, scratch, and result buffers.
+    let assemble = |wi: usize, ext: Option<&dyn FeatureExtractor>| -> Result<SelectWindow> {
         let rows = &order[wi * spec.k..(wi + 1) * spec.k];
         let (x, y) = (train.gather(rows), train.one_hot(rows));
         let emb = engine.embed(&cfg.dataset, params, &x, &y)?;
         meter.add_flops(flops.embed_batch);
         let labels: Vec<i32> = rows.iter().map(|&i| train.y[i]).collect();
-        let (features, grads, losses, preds) = if is_ext {
+        let (features, grads, losses, preds) = if let Some(ext) = ext {
             // Ablation path (Fig 4): embed for gradient sketches, features
-            // from a Rust-side extractor, Rust GraftSelector.
-            let name = cfg.extractor.as_deref().unwrap();
-            let ext = crate::features::by_name(name)
-                .with_context(|| format!("unknown extractor '{name}'"))?;
+            // from the engine-owned Rust-side extractor.
             let xmat = crate::linalg::Mat::from_f32(spec.k, spec.d, &x);
             // Only r_budget feature columns are consumed by the strict-
             // budget selection; extracting more would pay quadratic
@@ -559,23 +445,11 @@ fn refresh_subset(
         }
     };
     let exec = if is_ext {
-        graft_sel.as_mut().expect("extractor selector built in run()")
+        graft_eng.as_mut().expect("extractor engine built in run()")
     } else {
-        baseline.as_mut().expect("baseline selector")
+        baseline.as_mut().expect("baseline engine")
     };
-    match exec {
-        SelectorExec::Pooled(p) => {
-            run_windows(p, r_budget, cfg.overlap, windows, ws, selbuf, assemble, consume)?;
-        }
-        SelectorExec::Sync(s) => {
-            let (mut assemble, mut consume) = (assemble, consume);
-            for wi in 0..windows {
-                let win = assemble(wi)?;
-                s.select_into(&win.view(), r_budget, ws, selbuf);
-                consume(wi, &win, selbuf);
-            }
-        }
-    }
+    exec.windows(windows, assemble, consume)?;
     Ok(active)
 }
 

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Deprecation-surface check for the SelectionEngine facade (PR 5).
+#
+# The coordinator's rank-authority plumbing (`with_rank_authority`,
+# `last_rank_decision`) is engine-internal wiring: inside `rust/src/`,
+# only `engine/` (which owns the wiring) and `coordinator/` (which defines
+# it) may touch it.  Everything else — trainer, CLI, cmd, examples-adjacent
+# code — must go through `SelectionEngine`, whose `Selection` result and
+# `rank_stats()` replace the side channels.  Tests and benches still pin
+# the engine AGAINST direct construction, so they are exempt (the grep
+# covers `rust/src/` only, matching the PR 5 issue contract).
+#
+# Usage: scripts/check_facade.sh   (run from the repo root; CI does)
+set -u
+cd "$(dirname "$0")/.."
+
+hits=$(grep -rn --include='*.rs' -e 'with_rank_authority' -e 'last_rank_decision' rust/src \
+  | grep -v '^rust/src/engine/' \
+  | grep -v '^rust/src/coordinator/')
+
+if [ -n "$hits" ]; then
+  echo "facade violation: rank-authority side channels used outside engine/ and coordinator/:"
+  echo "$hits"
+  echo
+  echo "Route new callers through graft::engine::SelectionEngine instead"
+  echo "(Selection.decision / SelectionEngine::rank_stats)."
+  exit 1
+fi
+echo "facade surface clean: no out-of-facade rank-authority plumbing in rust/src/"
