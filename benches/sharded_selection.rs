@@ -12,9 +12,12 @@
 
 mod bench_util;
 
+use std::time::Duration;
+
 use bench_util::{report, smoke_mode, time_it, JsonSink};
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
-use graft::engine::{EngineBuilder, ExecShape};
+use graft::engine::{EngineBuilder, ExecShape, FaultPolicy};
+use graft::faults::FaultPlan;
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -136,7 +139,7 @@ fn main() {
             .build()
             .expect("valid engine config");
         let t = time_it(warm, reps, || {
-            let sel = eng.select(&view);
+            let sel = eng.select(&view).expect("healthy selection");
             bench_util::black_box(sel.indices.len());
         });
         report(&format!("engine select (shards={shards}, facade)"), t.0, t.1, t.2);
@@ -146,7 +149,7 @@ fn main() {
         });
         direct.select_into(&view, r, &mut ws, &mut out);
         assert_eq!(
-            eng.select(&view).indices,
+            eng.select(&view).expect("healthy selection").indices,
             &out[..],
             "engine≡direct bit-identity broke at shards={shards}"
         );
@@ -161,7 +164,7 @@ fn main() {
             .build()
             .expect("valid engine config");
         let t = time_it(warm, reps, || {
-            let sel = eng.select(&view);
+            let sel = eng.select(&view).expect("healthy selection");
             bench_util::black_box(sel.indices.len());
         });
         report(&format!("engine select (pooled {shards}x{workers}, facade)"), t.0, t.1, t.2);
@@ -175,7 +178,7 @@ fn main() {
         });
         direct.select_into(&view, r, &mut ws, &mut out);
         assert_eq!(
-            eng.select(&view).indices,
+            eng.select(&view).expect("healthy selection").indices,
             &out[..],
             "engine≡direct pooled bit-identity broke"
         );
@@ -193,7 +196,7 @@ fn main() {
             .build()
             .expect("valid engine config");
         let t = time_it(warm, reps, || {
-            let sel = eng.select(&view);
+            let sel = eng.select(&view).expect("healthy selection");
             bench_util::black_box(sel.indices.len());
         });
         report(&format!("engine select (shards={shards}, grad merge, facade)"), t.0, t.1, t.2);
@@ -204,9 +207,72 @@ fn main() {
         .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05))));
         direct.select_into(&view, r, &mut ws, &mut out);
         assert_eq!(
-            eng.select(&view).indices,
+            eng.select(&view).expect("healthy selection").indices,
             &out[..],
             "engine≡direct grad-merge bit-identity broke"
+        );
+    }
+
+    // Fault-path rows (fault-tolerance PR): the pooled facade priced under
+    // each fault policy.  Two zero-fault rows pin that the retry machinery
+    // costs nothing when healthy — and, asserted inline, that a zero-fault
+    // `Retry` run is bit-identical to `Fail`.  A third row prices a
+    // retried epoch: every measured select eats one injected shard panic,
+    // paying a worker respawn + job resubmission on top of the normal
+    // work, and must still land the fault-free subset.
+    {
+        let (shards, workers) = (4usize, 2usize);
+        let pshape = format!("{shape},shards={shards},workers={workers}");
+        let build = |policy: FaultPolicy| {
+            EngineBuilder::new()
+                .method("maxvol")
+                .budget(r)
+                .exec(ExecShape::Pooled { shards, workers, overlap: false })
+                .fault_policy(policy)
+                .build()
+                .expect("valid engine config")
+        };
+        let mut fail = build(FaultPolicy::Fail);
+        let mut retry = build(FaultPolicy::Retry { max: 2, backoff: Duration::ZERO });
+        let base = fail.select(&view).expect("healthy selection").indices.to_vec();
+        assert_eq!(
+            retry.select(&view).expect("healthy selection").indices,
+            &base[..],
+            "zero-fault Retry must be bit-identical to Fail"
+        );
+        let t = time_it(warm, reps, || {
+            let sel = fail.select(&view).expect("healthy selection");
+            bench_util::black_box(sel.indices.len());
+        });
+        report("faultpath select (pooled 4x2, Fail, zero faults)", t.0, t.1, t.2);
+        sink.record("select_faultpath", &format!("{pshape},policy=fail"), t);
+        let t = time_it(warm, reps, || {
+            let sel = retry.select(&view).expect("healthy selection");
+            bench_util::black_box(sel.indices.len());
+        });
+        report("faultpath select (pooled 4x2, Retry, zero faults)", t.0, t.1, t.2);
+        sink.record("select_faultpath", &format!("{pshape},policy=retry"), t);
+
+        // One injected panic per measured epoch: shard 0's first run of
+        // each window fails, the retry (same window, event spent) heals.
+        let mut injected = build(FaultPolicy::Retry { max: 2, backoff: Duration::ZERO });
+        let runs = (warm + reps) as u64;
+        let plan = (1..=runs).fold(FaultPlan::new(), |p, w| p.panic_shard(0, w));
+        injected.set_fault_injector(Some(plan.arc()));
+        let t = time_it(warm, reps, || {
+            let sel = injected.select(&view).expect("retry heals the injected panic");
+            bench_util::black_box(sel.indices.len());
+        });
+        report("faultpath select (pooled 4x2, Retry, 1 panic/epoch)", t.0, t.1, t.2);
+        sink.record("select_faultpath", &format!("{pshape},policy=retry,faults=1"), t);
+        assert!(
+            injected.fault_stats().retries >= runs,
+            "every epoch should have retried once"
+        );
+        assert_eq!(
+            injected.select(&view).expect("healthy selection").indices,
+            &base[..],
+            "retried epochs must converge to the fault-free subset"
         );
     }
 

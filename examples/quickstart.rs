@@ -13,7 +13,7 @@
 //! `graft train` CLI — both sit on the same engine.
 
 use graft::coordinator::SelectWindow;
-use graft::engine::{EngineBuilder, ExecShape, RankMode};
+use graft::engine::{EngineBuilder, ExecShape, FaultPolicy, RankMode};
 use graft::linalg::Mat;
 use graft::rng::Rng;
 
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         .method("graft")
         .fraction(0.25)
         .build()?;
-    let sel = strict.select(&view);
+    let sel = strict.select(&view)?;
     println!("strict @ 25%: kept {} of {k} rows (budget {})", sel.indices.len(), sel.budget);
 
     // -- 2. Adaptive rank: ε decides, the planted rank-3 geometry shows --
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         .fraction(0.25)
         .rank(RankMode::Adaptive { epsilon: 0.05 })
         .build()?;
-    let sel = adaptive.select(&view);
+    let sel = adaptive.select(&view)?;
     let d = sel.decision.expect("GRAFT reports its rank decision");
     println!(
         "adaptive ε=0.05: R* = {} (projection error {:.2e}, satisfied: {}) — \
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         .rank(RankMode::Adaptive { epsilon: 0.05 })
         .exec(ExecShape::Sharded { shards: 4 })
         .build()?;
-    let sel = sharded.select(&view);
+    let sel = sharded.select(&view)?;
     let d = sel.decision.expect("the merge's rank authority decides");
     println!("sharded×4:      R* = {} (error {:.2e}) — same decision shape", d.rank, d.error);
 
@@ -102,7 +102,22 @@ fn main() -> anyhow::Result<()> {
          (assembly of window w+1 overlapped selection of window w)"
     );
 
-    // -- 5. Misconfigurations fail with typed, field-naming errors --------
+    // -- 5. Fault tolerance: a poisoned batch is quarantined, and the
+    //       subset records how it degraded instead of silently lying ------
+    let mut hardened = EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .fault_policy(FaultPolicy::Degrade)
+        .build()?;
+    let mut poisoned = planted_window(k, 9);
+    poisoned.features[(5, 0)] = f64::NAN;
+    let sel = hardened.select(&poisoned.view())?;
+    assert!(!sel.indices.contains(&5), "the quarantined row is never selected");
+    for d in sel.degradations {
+        println!("degrade policy:  {d}");
+    }
+
+    // -- 6. Misconfigurations fail with typed, field-naming errors --------
     let err = EngineBuilder::new()
         .overlap(true)
         .build()

@@ -1,0 +1,252 @@
+//! Typed failure surface and fault policy for the selection stack.
+//!
+//! Selection can fail for exactly four reasons, and each gets its own
+//! [`SelectError`] variant instead of a `panic!`: poisoned input rows
+//! (non-finite features / gradient sketches / losses), numerical breakdown
+//! inside the MaxVol / rank kernels (near-zero pivots, non-finite
+//! projection errors), a shard job that keeps failing after its retry
+//! budget, and a pool whose workers are gone.  What happens *next* is the
+//! caller's choice, expressed as a [`FaultPolicy`] on
+//! [`EngineBuilder`](crate::engine::EngineBuilder):
+//!
+//! * [`FaultPolicy::Fail`] (default) — surface the typed error.
+//! * [`FaultPolicy::Retry`] — respawn / re-run up to `max` times with a
+//!   fixed backoff; a successful retry is **bit-identical** to the
+//!   fault-free run (same inputs, same deterministic kernels).
+//! * [`FaultPolicy::Degrade`] — walk the degradation ladder: GRAFT
+//!   grad-merge → feature-only MaxVol → seeded-random subset, recording
+//!   every step as a [`Degradation`] in the returned
+//!   [`Selection`](crate::engine::Selection) so a degraded subset is never
+//!   silently mistaken for the paper's criterion (Balles et al.'s negative
+//!   result is exactly about silently-wrong gradient selection).
+//!
+//! Fault-path activity (respawns, retries, deadline requeues, shutdown
+//! join timeouts, quarantined rows) is counted in [`PoolStats`], readable
+//! via [`SelectionEngine::fault_stats`](crate::engine::SelectionEngine::fault_stats).
+
+use std::time::Duration;
+
+/// Why a selection could not be produced by the configured method.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SelectError {
+    /// Non-finite rows in the batch (features, gradient sketches, or
+    /// losses), detected by the quarantine pre-scan under
+    /// [`FaultPolicy::Fail`].  `rows` are batch-local indices, ascending.
+    PoisonedInput { rows: Vec<usize> },
+    /// The numerics broke down: a (near-)zero MaxVol pivot was clamped,
+    /// the prefix-error curve was empty, or a projection error went
+    /// non-finite.  Deterministic — retrying cannot help — so this is
+    /// non-retryable and jumps straight to the seeded-random rung under
+    /// [`FaultPolicy::Degrade`].
+    NumericalBreakdown { stage: &'static str, detail: String },
+    /// A shard job panicked (or its worker died) and kept doing so for
+    /// every one of its `attempts` runs.
+    ShardFailure { shard: usize, attempts: u32 },
+    /// The worker pool is shut down (or every worker is dead); nothing
+    /// can be submitted.
+    PoolUnavailable,
+}
+
+impl std::fmt::Display for SelectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SelectError::PoisonedInput { rows } => {
+                write!(f, "poisoned input: {} non-finite row(s) {:?}", rows.len(), rows)
+            }
+            SelectError::NumericalBreakdown { stage, detail } => {
+                write!(f, "numerical breakdown in {stage}: {detail}")
+            }
+            SelectError::ShardFailure { shard, attempts } => {
+                write!(f, "shard {shard} failed after {attempts} attempt(s)")
+            }
+            SelectError::PoolUnavailable => write!(f, "selection pool unavailable (shut down)"),
+        }
+    }
+}
+
+impl std::error::Error for SelectError {}
+
+impl SelectError {
+    /// Whether another attempt with the same inputs could succeed.
+    /// Numerical breakdown and poisoned input are deterministic; shard
+    /// failures and pool hiccups are not.
+    pub fn retryable(&self) -> bool {
+        matches!(self, SelectError::ShardFailure { .. } | SelectError::PoolUnavailable)
+    }
+}
+
+/// What the engine (and the pool underneath it) does when selection
+/// faults.  Configured per engine via
+/// [`EngineBuilder::fault_policy`](crate::engine::EngineBuilder::fault_policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    /// Surface the first failure as a typed [`SelectError`].  The
+    /// default — zero-fault behaviour is bit-identical to the other
+    /// policies, so upgrading a config to `Retry`/`Degrade` never changes
+    /// healthy results.
+    #[default]
+    Fail,
+    /// Retry failed work up to `max` more times, sleeping `backoff`
+    /// between attempts.  Pool workers are respawned (fresh thread, fresh
+    /// `Workspace`) and the in-flight shard job re-submitted with the
+    /// same inputs, so a successful retry is bit-identical to the
+    /// fault-free run.  Exhausted retries surface the error.
+    Retry { max: u32, backoff: Duration },
+    /// Retry once, then walk the degradation ladder (feature-only MaxVol
+    /// → seeded random) instead of failing; every rung is recorded as a
+    /// [`Degradation`].
+    Degrade,
+}
+
+impl FaultPolicy {
+    /// Retry budget this policy grants a failing unit of work.
+    pub fn max_retries(self) -> u32 {
+        match self {
+            FaultPolicy::Fail => 0,
+            FaultPolicy::Retry { max, .. } => max,
+            FaultPolicy::Degrade => 1,
+        }
+    }
+
+    /// Sleep between attempts.
+    pub fn backoff(self) -> Duration {
+        match self {
+            FaultPolicy::Retry { backoff, .. } => backoff,
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+/// One recorded step down the degradation ladder, carried by
+/// [`Selection`](crate::engine::Selection) so callers can tell a paper-
+/// criterion subset from a fallback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Degradation {
+    /// Non-finite rows excluded from the batch before selection
+    /// (batch-local indices, ascending).
+    Quarantined { rows: Vec<usize> },
+    /// The configured method failed; this subset came from a serial
+    /// feature-only Fast MaxVol over the same batch.
+    FeatureOnlyMaxVol { cause: String },
+    /// Even feature-only MaxVol failed; this subset is a seeded random
+    /// draw (deterministic in the engine seed and window index).
+    SeededRandom { cause: String },
+}
+
+impl std::fmt::Display for Degradation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Degradation::Quarantined { rows } => {
+                write!(f, "quarantined {} poisoned row(s) {:?}", rows.len(), rows)
+            }
+            Degradation::FeatureOnlyMaxVol { cause } => {
+                write!(f, "degraded to feature-only MaxVol: {cause}")
+            }
+            Degradation::SeededRandom { cause } => {
+                write!(f, "degraded to seeded-random subset: {cause}")
+            }
+        }
+    }
+}
+
+/// Fault-path telemetry: every count a healthy run leaves at zero.
+/// Pool-side counts (respawns, deadline requeues, join timeouts) and
+/// engine-side counts (retries, quarantined rows) are merged by
+/// [`SelectionEngine::fault_stats`](crate::engine::SelectionEngine::fault_stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Workers replaced with a fresh thread + `Workspace`.
+    pub respawns: u64,
+    /// Shard jobs / engine selects re-run after a failure.
+    pub retries: u64,
+    /// Shard jobs re-submitted because their worker blew the per-job
+    /// deadline (the original result is still awaited and discarded).
+    pub deadline_requeues: u64,
+    /// Worker joins that timed out during shutdown (previously only a
+    /// stderr line).
+    pub join_timeouts: u64,
+    /// Total batch rows excluded by the input quarantine.
+    pub quarantined_rows: u64,
+}
+
+impl PoolStats {
+    /// Field-wise sum (engine-side + pool-side counters).
+    pub fn merged(self, other: PoolStats) -> PoolStats {
+        PoolStats {
+            respawns: self.respawns + other.respawns,
+            retries: self.retries + other.retries,
+            deadline_requeues: self.deadline_requeues + other.deadline_requeues,
+            join_timeouts: self.join_timeouts + other.join_timeouts,
+            quarantined_rows: self.quarantined_rows + other.quarantined_rows,
+        }
+    }
+}
+
+/// Error surface of [`SelectionEngine::windows`](crate::engine::SelectionEngine::windows):
+/// either the caller's assembly closure failed (`Assemble`, carrying the
+/// caller's own error type) or a window's selection did (`Select`).
+#[derive(Debug, PartialEq)]
+pub enum WindowsError<E> {
+    /// The `assemble` closure returned `Err`.
+    Assemble(E),
+    /// Selection of a window failed (after the configured fault policy
+    /// was exhausted).
+    Select(SelectError),
+}
+
+impl<E: std::fmt::Display> std::fmt::Display for WindowsError<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowsError::Assemble(e) => write!(f, "window assembly failed: {e}"),
+            WindowsError::Select(e) => write!(f, "window selection failed: {e}"),
+        }
+    }
+}
+
+impl<E: std::fmt::Display + std::fmt::Debug> std::error::Error for WindowsError<E> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_retry_budgets() {
+        assert_eq!(FaultPolicy::Fail.max_retries(), 0);
+        assert_eq!(
+            FaultPolicy::Retry { max: 3, backoff: Duration::ZERO }.max_retries(),
+            3
+        );
+        assert_eq!(FaultPolicy::Degrade.max_retries(), 1);
+        assert_eq!(FaultPolicy::default(), FaultPolicy::Fail);
+    }
+
+    #[test]
+    fn retryability_matches_determinism() {
+        assert!(SelectError::ShardFailure { shard: 0, attempts: 1 }.retryable());
+        assert!(SelectError::PoolUnavailable.retryable());
+        assert!(!SelectError::PoisonedInput { rows: vec![1] }.retryable());
+        assert!(!SelectError::NumericalBreakdown {
+            stage: "maxvol",
+            detail: String::new()
+        }
+        .retryable());
+    }
+
+    #[test]
+    fn stats_merge_is_fieldwise() {
+        let a = PoolStats { respawns: 1, retries: 2, ..Default::default() };
+        let b = PoolStats { retries: 1, quarantined_rows: 5, ..Default::default() };
+        let m = a.merged(b);
+        assert_eq!(m.respawns, 1);
+        assert_eq!(m.retries, 3);
+        assert_eq!(m.quarantined_rows, 5);
+    }
+
+    #[test]
+    fn errors_and_degradations_display() {
+        let e = SelectError::PoisonedInput { rows: vec![5, 17] };
+        assert!(e.to_string().contains("[5, 17]"));
+        let d = Degradation::SeededRandom { cause: "shard 2 failed".into() };
+        assert!(d.to_string().contains("seeded-random"));
+    }
+}

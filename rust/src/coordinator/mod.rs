@@ -28,7 +28,16 @@
 //! remains the machinery underneath — its pieces stay public for the
 //! pinning suites and benches that compare the facade against direct
 //! construction.
+//!
+//! PR 6 hardens the whole stack against faults: [`fault`] is the typed
+//! failure surface ([`SelectError`], [`FaultPolicy`], [`Degradation`],
+//! [`PoolStats`]), the pool respawns panicked/dead workers and retries
+//! their shard jobs deterministically, non-finite input rows are
+//! quarantined, and `rust/src/faults.rs` provides the deterministic
+//! injection harness the fault suites drive all of it with.  See
+//! "Failure modes & degradation ladder" in `README.md`.
 
+pub mod fault;
 pub mod merge;
 pub mod pipeline;
 pub mod pool;
@@ -36,6 +45,7 @@ pub mod scheduler;
 pub mod shard;
 pub mod state;
 
+pub use fault::{Degradation, FaultPolicy, PoolStats, SelectError, WindowsError};
 pub use merge::{merge_winners, merge_winners_grad, MergeCtx, MergePolicy, ShardGrads};
 pub use pipeline::{BatchProducer, FanOutProducer, PreparedBatch};
 pub use pool::{run_windows, PooledSelector, SelectWindow};

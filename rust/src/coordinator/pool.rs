@@ -20,25 +20,40 @@
 //! * [`run_windows`] is the pipelined refresh loop: `assemble(w+1)` runs on
 //!   the coordinator thread while the workers select window `w`.
 //!
-//! Guarantees pinned by `tests/selection_pool.rs`:
+//! Guarantees pinned by `tests/selection_pool.rs` and
+//! `tests/fault_injection.rs`:
 //!
 //! * **Bit-identity**: pooled execution at any worker count produces
 //!   exactly the subset of the scoped-thread and serial [`ShardedSelector`]
 //!   paths — both run the same [`run_shard`] kernel per shard and the same
 //!   deterministic merge, so worker count and job interleaving are
 //!   structurally invisible.
-//! * **Containment**: a panicking selector is caught on the worker, the
-//!   worker thread survives, the panic resurfaces on the caller in
-//!   [`Pending::finish`], and the pool stays usable.
+//! * **Containment + recovery**: a panicking selector is caught on the
+//!   worker; under the configured [`FaultPolicy`] the worker is
+//!   *respawned* (fresh thread, fresh [`Workspace`], fresh selector
+//!   instances from the retained factory) and the shard job re-run with
+//!   the same inputs — a successful retry is bit-identical to the
+//!   fault-free run.  Exhausted retries surface as a typed
+//!   [`SelectError::ShardFailure`] from [`Pending::finish`] (the
+//!   [`Selector::select_into`] compatibility wrapper still panics, for the
+//!   legacy call sites that expect it).
+//! * **No hangs**: a worker that blows the per-job deadline gets its shard
+//!   requeued on a fresh worker ([`PoolStats::deadline_requeues`]) and a
+//!   proven-dead worker ([`std::thread::JoinHandle::is_finished`]) has its
+//!   lost jobs written off and retried — `finish` cannot wedge on a dead
+//!   thread.  (A worker that is alive but wedged *forever* with no retry
+//!   budget still blocks `finish`: the raw view pointer it holds makes
+//!   abandoning a live worker unsound.)
 //! * **Clean shutdown**: dropping the pool (or calling
 //!   [`PooledSelector::shutdown`] — idempotent) closes the job channels,
-//!   joins every worker with the shared timeout-then-log helper, and never
-//!   deadlocks, even mid-epoch after a drop of a [`Pending`] guard.
+//!   joins every worker (including retired ones) with the shared
+//!   timeout-then-log helper, counts timed-out joins in
+//!   [`PoolStats::join_timeouts`], and never deadlocks.
 //!
 //! Steady-state refreshes are allocation-free (extended `alloc_free.rs`):
 //! gather buffers live on the workers, winner buffers round-trip through
 //! the job/result messages by move, and `sync_channel` slots are
-//! preallocated at construction.
+//! preallocated at construction.  Only the fault paths allocate.
 //!
 //! # Safety model
 //!
@@ -49,22 +64,35 @@
 //! dead) before the borrow of the view ends.**  `Pending` holds the view
 //! borrow and drains outstanding results both in [`Pending::finish`] and in
 //! its `Drop` (covering early returns and unwinding callers), so the
-//! pointee provably outlives every worker-side dereference.
+//! pointee provably outlives every worker-side dereference.  The fault
+//! paths preserve it: a deadline requeue *adds* a duplicate submission and
+//! keeps draining both results (the late one is discarded, never
+//! abandoned), and a job is only written off once `is_finished()` proves
+//! its worker's thread — and therefore any dereference of the view — gone.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::faults::{FaultAction, FaultInjector, ShardCtx};
 use crate::graft::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
 use crate::selection::{BatchView, Selector};
 
+use super::fault::{FaultPolicy, PoolStats, SelectError, WindowsError};
 use super::merge::{
     merge_winners, merge_winners_grad, MergeCtx, MergePolicy, MergeScratch, ShardGrads,
 };
 use super::pipeline::join_or_log;
 use super::shard::{run_shard, shard_ranges_into};
+
+/// Per-job deadline before the coordinator probes worker health and
+/// requeues wedged shards.  Generous: healthy selection is micro- to
+/// milliseconds, so a trip means a genuinely stuck or dead worker.
+const DEFAULT_JOB_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Raw pointer to a caller-owned [`BatchView`], sendable to a worker.
 ///
@@ -121,6 +149,12 @@ struct Done {
     panicked: bool,
 }
 
+/// The selector factory a pool retains so it can respawn a worker with
+/// fresh instances, constructed exactly as at pool creation (same seeds,
+/// same policies) — which is what keeps a respawn-and-retry bit-identical
+/// to the fault-free run for the deterministic selector family.
+type SelectorFactory = Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>;
+
 /// Persistent pool of selection workers (one pinned [`Workspace`] and
 /// recycled gather buffers each), fed shard jobs over bounded channels.
 ///
@@ -131,14 +165,43 @@ pub struct SelectionPool {
     /// Per-worker job senders; worker `w` serves shards `s ≡ w (mod W)`.
     txs: Vec<SyncSender<Job>>,
     done_rx: Receiver<Done>,
+    /// Master result sender, cloned into every (re)spawned worker.  Kept
+    /// here so respawns are possible at any time; consequently the done
+    /// channel never disconnects while the pool lives, and drain timeouts
+    /// (not `Err`) are the all-workers-dead signal.
+    done_tx: SyncSender<Done>,
+    /// Live worker handles, one per worker slot (probed with
+    /// `is_finished` by the deadline path; replaced on respawn).
     handles: Vec<JoinHandle<()>>,
+    /// Replaced worker threads, joined at shutdown.  A retired worker has
+    /// lost its job sender, so it winds down as soon as its queue drains.
+    retired: Vec<JoinHandle<()>>,
+    /// Factory for fresh per-shard selector instances (respawn path).
+    factory: SelectorFactory,
+    /// Deterministic fault injection (tests/benches only; `None` in
+    /// production).  Threaded into every worker at (re)spawn.
+    injector: Option<Arc<dyn FaultInjector>>,
     /// Retained winner buffers, one per shard, taken at submit and
     /// returned by the drain.
     bufs: Vec<Vec<usize>>,
     /// Retained per-shard gradient contexts, round-tripped like `bufs`
     /// (filled by workers only for gradient-aware merges).
     gbufs: Vec<ShardGrads>,
+    /// Per-shard submissions still unaccounted for in the current epoch
+    /// (a deadline requeue makes this 2 until the wedged result lands).
+    inflight: Vec<u32>,
+    /// Per-shard completion flags for the current epoch (first healthy
+    /// result wins; duplicates are discarded).
+    sdone: Vec<bool>,
+    /// Per-shard retry count in the current epoch.
+    attempts: Vec<u32>,
+    /// What to do when a shard job fails; see [`FaultPolicy`].
+    policy: FaultPolicy,
+    /// Per-job deadline before worker health is probed.
+    deadline: Duration,
+    stats: PoolStats,
     shards: usize,
+    nworkers: usize,
     epoch: u64,
 }
 
@@ -147,57 +210,107 @@ impl SelectionPool {
     /// `make(s)` constructs shard `s`'s instance exactly as
     /// [`super::ShardedSelector::from_factory`] would, so the two paths
     /// hold identical selectors.  `workers` is clamped to `1..=shards`.
-    fn from_factory(
-        shards: usize,
-        workers: usize,
-        mut make: impl FnMut(usize) -> Box<dyn Selector>,
-    ) -> SelectionPool {
+    /// The factory is retained for the life of the pool: respawning a
+    /// failed worker re-runs it for that worker's shards.
+    fn from_factory(shards: usize, workers: usize, make: SelectorFactory) -> SelectionPool {
         assert!(shards >= 1, "need at least one shard");
         let workers = workers.clamp(1, shards);
-        // Deal selector instances to their owning workers: worker w gets
-        // shards w, w+W, w+2W, … (local index s / W).
-        let mut per_worker: Vec<Vec<Box<dyn Selector>>> =
-            (0..workers).map(|_| Vec::new()).collect();
-        for s in 0..shards {
-            per_worker[s % workers].push(make(s));
-        }
-        let (done_tx, done_rx) = sync_channel::<Done>(shards);
-        let mut txs = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        let job_depth = shards.div_ceil(workers);
-        for sels in per_worker {
-            let (tx, rx) = sync_channel::<Job>(job_depth);
-            let done = done_tx.clone();
-            handles.push(std::thread::spawn(move || worker_loop(rx, done, sels, workers)));
-            txs.push(tx);
-        }
-        SelectionPool {
-            txs,
+        // Capacity 2·shards + slack: every shard can deliver both an
+        // original and a requeued result without any send ever blocking.
+        let (done_tx, done_rx) = sync_channel::<Done>(2 * shards + 4);
+        let mut pool = SelectionPool {
+            txs: Vec::with_capacity(workers),
             done_rx,
-            handles,
+            done_tx,
+            handles: Vec::with_capacity(workers),
+            retired: Vec::new(),
+            factory: make,
+            injector: None,
             bufs: (0..shards).map(|_| Vec::new()).collect(),
             gbufs: (0..shards).map(|_| ShardGrads::default()).collect(),
+            inflight: vec![0; shards],
+            sdone: vec![false; shards],
+            attempts: vec![0; shards],
+            policy: FaultPolicy::Fail,
+            deadline: DEFAULT_JOB_DEADLINE,
+            stats: PoolStats::default(),
             shards,
+            nworkers: workers,
             epoch: 0,
+        };
+        for w in 0..workers {
+            let (tx, h) = pool.spawn_worker(w);
+            pool.txs.push(tx);
+            pool.handles.push(h);
         }
+        pool
     }
 
     fn workers(&self) -> usize {
-        self.txs.len().max(1)
+        self.nworkers.max(1)
     }
 
-    /// Close the job channels and join every worker.  Idempotent: a second
-    /// call (or the `Drop` after an explicit call) is a no-op.  A wedged
-    /// worker cannot hang teardown — joins go through the shared
-    /// timeout-then-log helper.
+    /// Build worker `w`'s thread: fresh selector instances for its shards
+    /// (`w, w+W, w+2W, …` — the dealing [`worker_loop`] indexes by
+    /// `shard / W`), a fresh [`Workspace`], a fresh job channel.
+    fn spawn_worker(&mut self, w: usize) -> (SyncSender<Job>, JoinHandle<()>) {
+        let workers = self.workers();
+        let mut sels: Vec<Box<dyn Selector>> = Vec::new();
+        let mut s = w;
+        while s < self.shards {
+            sels.push((self.factory)(s));
+            s += workers;
+        }
+        let job_depth = self.shards.div_ceil(workers);
+        let (tx, rx) = sync_channel::<Job>(job_depth);
+        let done = self.done_tx.clone();
+        let injector = self.injector.clone();
+        let h = std::thread::spawn(move || worker_loop(rx, done, sels, workers, w, injector));
+        (tx, h)
+    }
+
+    /// Replace worker `w` with a fresh thread + selectors.  The old
+    /// sender is dropped (the old thread winds down once its queue
+    /// drains — its in-flight results still arrive through the retained
+    /// master done sender) and its handle parked for the shutdown join.
+    /// Callers count [`PoolStats::respawns`] when the replacement is
+    /// fault recovery rather than reconfiguration.
+    fn respawn_worker(&mut self, w: usize) {
+        if w >= self.txs.len() {
+            return; // pool already shut down
+        }
+        let (tx, h) = self.spawn_worker(w);
+        self.txs[w] = tx;
+        self.retired.push(std::mem::replace(&mut self.handles[w], h));
+    }
+
+    /// Install (or clear) the fault injector, rebuilding every worker so
+    /// the hook is threaded through their loops.  Reconfiguration, not
+    /// recovery: does not count as a respawn.
+    fn install_injector(&mut self, injector: Option<Arc<dyn FaultInjector>>) {
+        self.injector = injector;
+        for w in 0..self.txs.len() {
+            self.respawn_worker(w);
+        }
+    }
+
+    /// Close the job channels and join every worker (current and
+    /// retired).  Idempotent: a second call (or the `Drop` after an
+    /// explicit call) is a no-op.  A wedged worker cannot hang teardown —
+    /// joins go through the shared timeout-then-log helper, and timed-out
+    /// joins are counted in [`PoolStats::join_timeouts`] instead of only
+    /// a stderr line.
     fn shutdown(&mut self) {
         // Dropping the senders disconnects the job channels; workers exit
-        // their recv loop.  The done channel has capacity for every shard,
-        // so an in-flight worker can always deliver its last result and
-        // reach the disconnect — no send can block shutdown.
+        // their recv loop.  The done channel has capacity for every
+        // original + requeued result, so an in-flight worker can always
+        // deliver its last result and reach the disconnect — no send can
+        // block shutdown.
         self.txs.clear();
-        for h in self.handles.drain(..) {
-            join_or_log(h, "selection pool worker");
+        for h in self.handles.drain(..).chain(self.retired.drain(..)) {
+            if !join_or_log(h, "selection pool worker") {
+                self.stats.join_timeouts += 1;
+            }
         }
     }
 }
@@ -212,12 +325,20 @@ impl Drop for SelectionPool {
 /// run each through the shared [`run_shard`] kernel with this worker's
 /// pinned workspace and recycled gather buffers, and send the (epoch-
 /// tagged) winners back.  A panicking selector is caught here so the
-/// worker — and the pool — survive it; the coordinator resurfaces it.
+/// worker — and the pool — survive it; the coordinator resurfaces it
+/// through the typed fault path.  When a fault injector is installed it
+/// is consulted before each job: `Panic` raises a real panic inside the
+/// containment boundary, `Delay` sleeps (driving the job past the
+/// coordinator's deadline), `DieWorker` kills the thread without
+/// answering — the schedule the deadline/respawn machinery is tested
+/// against.
 fn worker_loop(
     rx: Receiver<Job>,
     done: SyncSender<Done>,
     mut selectors: Vec<Box<dyn Selector>>,
     stride: usize,
+    worker: usize,
+    injector: Option<Arc<dyn FaultInjector>>,
 ) {
     let mut ws = Workspace::new();
     let mut feat: Vec<f64> = Vec::new();
@@ -225,8 +346,22 @@ fn worker_loop(
     let mut local: Vec<usize> = Vec::new();
     while let Ok(job) = rx.recv() {
         let Job { view, shard, range, budget, epoch, mut winners, want_grads, mut grads } = job;
+        let action = match &injector {
+            Some(i) => i.before_shard(ShardCtx { window: epoch, shard, worker }),
+            None => FaultAction::None,
+        };
+        match action {
+            // Vanish without answering: the job is only recovered once
+            // the coordinator proves this thread dead via its handle.
+            FaultAction::DieWorker => return,
+            FaultAction::Delay(by) => std::thread::sleep(by),
+            _ => {}
+        }
         let sel = selectors[shard / stride].as_mut();
         let panicked = catch_unwind(AssertUnwindSafe(|| {
+            if matches!(action, FaultAction::Panic) {
+                panic!("injected fault: worker {worker} shard {shard} window {epoch}");
+            }
             // SAFETY: the submitting `Pending` guard keeps the view (and
             // all data it borrows) alive until this job's `Done` has been
             // received — see the module-level safety model.
@@ -245,9 +380,9 @@ fn worker_loop(
             );
         }))
         .is_err();
-        // The done channel is sized to hold every shard's result, so this
-        // send never blocks; an Err means the coordinator is gone and the
-        // worker can only wind down.
+        // The done channel is sized to hold every original + requeued
+        // result, so this send never blocks; an Err means the coordinator
+        // is gone and the worker can only wind down.
         if done.send(Done { shard, epoch, winners, grads, panicked }).is_err() {
             return;
         }
@@ -279,7 +414,9 @@ impl PooledSelector {
     /// threads; `make(s)` constructs shard `s`'s instance (worker
     /// assignment is `s % workers`).  Matches
     /// [`super::ShardedSelector::from_factory`] instance-for-instance, so
-    /// pooled and scoped execution are bit-identical.
+    /// pooled and scoped execution are bit-identical.  The factory is
+    /// retained (hence `Send + 'static`) so a failed worker can be
+    /// respawned with identically-constructed selectors.
     ///
     /// Panics if `shards > 1` and a constructed selector does not opt in
     /// via [`Selector::shardable`] (the MaxVol merge only preserves the
@@ -290,18 +427,22 @@ impl PooledSelector {
         shards: usize,
         workers: usize,
         merge: MergePolicy,
-        mut make: impl FnMut(usize) -> Box<dyn Selector>,
+        mut make: impl FnMut(usize) -> Box<dyn Selector> + Send + 'static,
     ) -> PooledSelector {
-        let pool = SelectionPool::from_factory(shards, workers, |s| {
-            let sel = make(s);
-            assert!(
-                shards == 1 || sel.shardable(),
-                "selector '{}' is not shardable: the MaxVol merge would not preserve \
-                 its selection criterion",
-                sel.name()
-            );
-            sel
-        });
+        let pool = SelectionPool::from_factory(
+            shards,
+            workers,
+            Box::new(move |s| {
+                let sel = make(s);
+                assert!(
+                    shards == 1 || sel.shardable(),
+                    "selector '{}' is not shardable: the MaxVol merge would not preserve \
+                     its selection criterion",
+                    sel.name()
+                );
+                sel
+            }),
+        );
         PooledSelector {
             pool,
             merge,
@@ -323,6 +464,35 @@ impl PooledSelector {
     pub fn with_rank_authority(mut self, authority: Box<dyn Selector>) -> Self {
         self.authority = Some(authority);
         self
+    }
+
+    /// Set what happens when a shard job fails: surface the typed error
+    /// (`Fail`, default), respawn + retry (`Retry`), or retry once before
+    /// the engine's degradation ladder takes over (`Degrade`).  Zero-fault
+    /// behaviour is identical under every policy.
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.pool.policy = policy;
+    }
+
+    /// Per-job deadline before the coordinator probes worker health and
+    /// requeues wedged shards (default 30 s).
+    pub fn set_job_deadline(&mut self, deadline: Duration) {
+        self.pool.deadline = deadline.max(Duration::from_millis(1));
+    }
+
+    /// Install (or clear) a deterministic fault injector (tests/benches).
+    /// Workers are rebuilt so the hook reaches their loops; selector
+    /// construction is re-run by the retained factory, so results are
+    /// unchanged.
+    pub fn set_fault_injector(&mut self, injector: Option<Arc<dyn FaultInjector>>) {
+        self.pool.install_injector(injector);
+    }
+
+    /// Fault-path telemetry: respawns, retries, deadline requeues, and
+    /// shutdown join timeouts observed by this pool.  All-zero on a
+    /// healthy run.
+    pub fn stats(&self) -> PoolStats {
+        self.pool.stats
     }
 
     /// Decision of the most recent gradient-aware merge (for logging).
@@ -356,12 +526,6 @@ impl PooledSelector {
         let budget = r.min(k);
         self.pool.epoch += 1;
         let epoch = self.pool.epoch;
-        if self.pool.txs.is_empty() {
-            // Pool already shut down: nothing to submit; `finish` fails
-            // loudly instead of deadlocking (pinned by the post-shutdown
-            // regression in tests/selection_pool.rs).
-            return Pending { sel: self, view, live: 0, budget, epoch, outstanding: 0, panicked: true };
-        }
         // As in `ShardedSelector`: without a rank authority the grad merge
         // is bitwise the feature-only merge, so skip the gradient carry.
         // At one shard the inner selector applies its own policy inline
@@ -369,33 +533,63 @@ impl PooledSelector {
         // authority is never consulted there either.
         let want_grads =
             self.merge.gradient_aware() && self.authority.is_some() && self.pool.shards > 1;
-        let mut outstanding = 0usize;
-        let mut panicked = false;
-        for (s, range) in self.ranges.iter().cloned().enumerate() {
-            let winners = std::mem::take(&mut self.pool.bufs[s]);
-            let grads = std::mem::take(&mut self.pool.gbufs[s]);
-            let job = Job {
-                view: ViewPtr::new(view),
-                shard: s,
-                range,
+        if self.pool.txs.is_empty() {
+            // Pool already shut down: nothing to submit; `finish` fails
+            // with `PoolUnavailable` instead of deadlocking (pinned by the
+            // post-shutdown regression in tests/selection_pool.rs).
+            return Pending {
+                sel: self,
+                view,
+                live: 0,
                 budget,
                 epoch,
-                winners,
                 want_grads,
-                grads,
+                outstanding: 0,
+                requeued: false,
+                error: Some(SelectError::PoolUnavailable),
             };
-            // Channels are sized so a live worker always has queue room;
-            // try_send only fails if the worker thread died (disconnect).
-            match self.pool.txs[s % self.pool.txs.len()].try_send(job) {
-                Ok(()) => outstanding += 1,
-                Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
-                    self.pool.bufs[s] = j.winners;
-                    self.pool.gbufs[s] = j.grads;
-                    panicked = true;
+        }
+        // Reset the per-epoch shard accounting (retained buffers).
+        for s in 0..live {
+            self.pool.inflight[s] = 0;
+            self.pool.sdone[s] = false;
+            self.pool.attempts[s] = 0;
+        }
+        let mut pending = Pending {
+            sel: self,
+            view,
+            live,
+            budget,
+            epoch,
+            want_grads,
+            outstanding: 0,
+            requeued: false,
+            error: None,
+        };
+        for s in 0..live {
+            let pool = &mut pending.sel.pool;
+            let winners = std::mem::take(&mut pool.bufs[s]);
+            let grads = std::mem::take(&mut pool.gbufs[s]);
+            if !pending.submit_with(s, winners, grads) {
+                // The worker slot is jammed or its thread died before the
+                // epoch even started: rebuild it and retry the send once
+                // if the policy allows, else record the typed failure.
+                let pool = &mut pending.sel.pool;
+                if pool.attempts[s] < pool.policy.max_retries() {
+                    pool.attempts[s] += 1;
+                    pool.stats.retries += 1;
+                    pool.stats.respawns += 1;
+                    let w = s % pool.workers();
+                    pool.respawn_worker(w);
+                    if pending.submit(s) {
+                        continue;
+                    }
                 }
+                let attempts = pending.sel.pool.attempts[s] + 1;
+                pending.error.get_or_insert(SelectError::ShardFailure { shard: s, attempts });
             }
         }
-        Pending { sel: self, view, live, budget, epoch, outstanding, panicked }
+        pending
     }
 }
 
@@ -416,6 +610,11 @@ impl Selector for PooledSelector {
         }
     }
 
+    /// Legacy synchronous path: [`PooledSelector::begin`] +
+    /// [`Pending::finish`], panicking on a typed failure (the
+    /// [`Selector`] trait has no error channel).  Fault-aware callers —
+    /// the engine — use `begin`/`finish` directly and get the
+    /// [`SelectError`].
     fn select_into(
         &mut self,
         view: &BatchView<'_>,
@@ -423,49 +622,218 @@ impl Selector for PooledSelector {
         ws: &mut Workspace,
         out: &mut Vec<usize>,
     ) {
-        self.begin(view, r).finish(ws, out);
+        self.begin(view, r).finish(ws, out).unwrap_or_else(|e| {
+            panic!("selection pool: {e} (contained; pool state stays consistent)")
+        });
     }
 }
 
 /// In-flight selection epoch: proof that shard jobs reference a live view.
 ///
 /// Obtained from [`PooledSelector::begin`]; consumed by
-/// [`Pending::finish`], which blocks for the shard results and runs the
-/// merge.  Dropping it without finishing (early return, unwinding caller)
-/// still drains every outstanding job first — the invariant the worker-side
-/// raw view pointer depends on.
+/// [`Pending::finish`], which blocks for the shard results, drives the
+/// respawn/retry/deadline machinery, and runs the merge.  Dropping it
+/// without finishing (early return, unwinding caller) still drains every
+/// outstanding job first — the invariant the worker-side raw view pointer
+/// depends on.
 pub struct Pending<'s, 'v> {
     sel: &'s mut PooledSelector,
     view: &'v BatchView<'v>,
     live: usize,
     budget: usize,
     epoch: u64,
+    want_grads: bool,
+    /// Total submissions (originals + retries + requeues) not yet
+    /// accounted for: received, or written off on a proven-dead worker.
     outstanding: usize,
-    panicked: bool,
+    /// Deadline requeue already performed this epoch (once is enough:
+    /// after it every shard has a fresh submission on a fresh worker).
+    requeued: bool,
+    error: Option<SelectError>,
 }
 
 impl Pending<'_, '_> {
-    /// Block until every job of this epoch is accounted for, recycling
-    /// winner buffers (current-epoch results into their shard slot; stale
-    /// results from an abandoned epoch likewise, without counting them).
-    fn drain(&mut self) {
-        while self.outstanding > 0 {
-            match self.sel.pool.done_rx.recv() {
-                Ok(d) => {
-                    let current = d.epoch == self.epoch;
-                    if d.panicked && current {
-                        self.panicked = true;
-                    }
-                    self.sel.pool.bufs[d.shard] = d.winners;
-                    self.sel.pool.gbufs[d.shard] = d.grads;
-                    if current {
-                        self.outstanding -= 1;
+    /// Submit a fresh job for shard `s` with the given buffers; returns
+    /// false (recycling the buffers) if the worker's channel refused it.
+    fn submit_with(&mut self, s: usize, winners: Vec<usize>, grads: ShardGrads) -> bool {
+        let job = Job {
+            view: ViewPtr::new(self.view),
+            shard: s,
+            range: self.sel.ranges[s].clone(),
+            budget: self.budget,
+            epoch: self.epoch,
+            winners,
+            want_grads: self.want_grads,
+            grads,
+        };
+        let pool = &mut self.sel.pool;
+        match pool.txs[s % pool.txs.len()].try_send(job) {
+            Ok(()) => {
+                pool.inflight[s] += 1;
+                self.outstanding += 1;
+                true
+            }
+            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
+                pool.bufs[s] = j.winners;
+                pool.gbufs[s] = j.grads;
+                false
+            }
+        }
+    }
+
+    /// [`Pending::submit_with`] with freshly allocated buffers — the
+    /// retry/requeue path, where the original buffers may still be in
+    /// flight on the faulted worker.
+    fn submit(&mut self, s: usize) -> bool {
+        self.submit_with(s, Vec::new(), ShardGrads::default())
+    }
+
+    /// Either re-run shard `s` (within the policy's retry budget, counting
+    /// [`PoolStats::retries`]) or record the typed shard failure.  Callers
+    /// respawn the faulted worker first, so the retry lands on a fresh
+    /// thread with a fresh [`Workspace`].
+    fn retry_or_fail(&mut self, s: usize) {
+        let pool = &mut self.sel.pool;
+        if pool.attempts[s] < pool.policy.max_retries() {
+            pool.attempts[s] += 1;
+            pool.stats.retries += 1;
+            let backoff = pool.policy.backoff();
+            if backoff > Duration::ZERO {
+                std::thread::sleep(backoff);
+            }
+            if self.submit(s) {
+                return;
+            }
+        }
+        let attempts = self.sel.pool.attempts[s] + 1;
+        self.error.get_or_insert(SelectError::ShardFailure { shard: s, attempts });
+    }
+
+    /// Account one received result: recycle its buffers, and if it
+    /// belongs to this epoch update the shard bookkeeping — first healthy
+    /// result completes the shard, duplicates (deadline requeues) are
+    /// discarded, a panicked result drives the respawn/retry path.
+    fn absorb(&mut self, d: Done) {
+        let pool = &mut self.sel.pool;
+        // `inflight == 0` means this job was already written off on a
+        // proven-dead worker (its Done was sitting in the channel when
+        // the thread was declared dead) — recycle only, don't double
+        // count.
+        let current = d.epoch == self.epoch && pool.inflight[d.shard] > 0;
+        let (shard, panicked) = (d.shard, d.panicked);
+        pool.bufs[shard] = d.winners;
+        pool.gbufs[shard] = d.grads;
+        if !current {
+            return;
+        }
+        pool.inflight[shard] -= 1;
+        self.outstanding -= 1;
+        if pool.sdone[shard] {
+            return; // duplicate of an already-completed shard (requeue)
+        }
+        if !panicked {
+            pool.sdone[shard] = true;
+            return;
+        }
+        // Contained panic: the worker thread survived, but its workspace
+        // and selector state are suspect — replace both before retrying.
+        let w = shard % pool.workers();
+        pool.stats.respawns += 1;
+        pool.respawn_worker(w);
+        self.retry_or_fail(shard);
+    }
+
+    /// The per-job deadline fired with results still outstanding.  Two
+    /// cases, in order:
+    ///
+    /// 1. A worker thread is *proven dead* (`is_finished`): its queued and
+    ///    running jobs can never answer, so they are written off (the
+    ///    thread's exit proves no dereference of the view survives), the
+    ///    slot respawned, and each lost shard retried or failed.
+    /// 2. Every worker is alive but something is wedged: each missing
+    ///    shard is requeued once on a freshly respawned worker
+    ///    ([`PoolStats::deadline_requeues`]).  The wedged submissions stay
+    ///    accounted — their late results are drained and discarded — so
+    ///    the safety invariant holds without abandoning a live thread.
+    fn handle_deadline(&mut self) {
+        let workers = self.sel.pool.handles.len();
+        if workers == 0 {
+            // Shut down mid-epoch (impossible through the public API, the
+            // guard borrows the selector) — nothing can answer.
+            self.error.get_or_insert(SelectError::PoolUnavailable);
+            self.outstanding = 0;
+            return;
+        }
+        let mut any_dead = false;
+        for w in 0..workers {
+            if !self.sel.pool.handles[w].is_finished() {
+                continue;
+            }
+            any_dead = true;
+            // Rebuild the slot first, then write off the dead worker's
+            // in-flight jobs: the thread has exited, so no job of this
+            // epoch on it can still dereference the view (queued jobs
+            // were dropped with its channel), and retries land on the
+            // fresh thread.
+            self.sel.pool.stats.respawns += 1;
+            self.sel.pool.respawn_worker(w);
+            let mut s = w;
+            while s < self.live {
+                let lost = self.sel.pool.inflight[s];
+                if lost > 0 {
+                    self.sel.pool.inflight[s] = 0;
+                    self.outstanding -= lost as usize;
+                    if !self.sel.pool.sdone[s] {
+                        self.retry_or_fail(s);
                     }
                 }
-                Err(_) => {
-                    // Every worker (and its done sender) is gone, so no job
-                    // of this epoch can still be running — safe to stop.
-                    self.panicked = true;
+                s += workers;
+            }
+        }
+        if any_dead || self.requeued {
+            return;
+        }
+        // All workers alive, at least one wedged past the deadline:
+        // requeue the missing shards on fresh workers (once per epoch).
+        // The wedged worker keeps its slot's old channel and eventually
+        // answers; that duplicate is drained and discarded above.
+        self.requeued = true;
+        let mut respawned = vec![false; workers];
+        for s in 0..self.live {
+            let pool = &mut self.sel.pool;
+            if pool.sdone[s] || pool.inflight[s] == 0 {
+                continue;
+            }
+            if pool.attempts[s] >= pool.policy.max_retries() {
+                continue; // no budget: keep waiting on the wedged worker
+            }
+            pool.attempts[s] += 1;
+            pool.stats.deadline_requeues += 1;
+            let w = s % pool.workers();
+            if !respawned[w] {
+                respawned[w] = true;
+                pool.stats.respawns += 1;
+                pool.respawn_worker(w);
+            }
+            self.submit(s);
+        }
+    }
+
+    /// Block until every submission of this epoch is accounted for,
+    /// recycling winner buffers (current-epoch results into their shard
+    /// slot; stale results from an abandoned epoch likewise, without
+    /// counting them) and driving the respawn/retry/deadline machinery.
+    fn drain(&mut self) {
+        while self.outstanding > 0 {
+            let deadline = self.sel.pool.deadline;
+            match self.sel.pool.done_rx.recv_timeout(deadline) {
+                Ok(d) => self.absorb(d),
+                Err(RecvTimeoutError::Timeout) => self.handle_deadline(),
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Unreachable while the pool retains its master done
+                    // sender; defensively: every sender gone means no job
+                    // can still be running — safe to stop.
+                    self.error.get_or_insert(SelectError::PoolUnavailable);
                     self.outstanding = 0;
                 }
             }
@@ -474,25 +842,23 @@ impl Pending<'_, '_> {
 
     /// Wait for the shard results and fold them with the merge policy into
     /// `out` (batch-local ids, `|out| == min(r, K)` for budget-honouring
-    /// inner selectors).  Propagates a worker panic to the caller — after
-    /// the drain, so the pool remains consistent and reusable.
-    pub fn finish(mut self, ws: &mut Workspace, out: &mut Vec<usize>) {
+    /// inner selectors).  A worker failure that survived the fault policy
+    /// surfaces as a typed [`SelectError`] — after the drain, so the pool
+    /// remains consistent and reusable either way.
+    pub fn finish(mut self, ws: &mut Workspace, out: &mut Vec<usize>) -> Result<(), SelectError> {
         self.drain();
-        if self.panicked {
-            panic!(
-                "selection pool: a shard worker panicked or was unavailable \
-                 (contained; pool state stays consistent)"
-            );
+        if let Some(e) = self.error.take() {
+            return Err(e);
         }
         out.clear();
         if self.live == 0 {
-            return;
+            return Ok(());
         }
         let sel = &mut *self.sel;
         // Must mirror `begin`'s want_grads gate (authority and shard count
         // cannot change while this guard borrows the selector): gbufs are
         // only filled when the jobs were asked to carry gradient context.
-        if sel.merge.gradient_aware() && sel.authority.is_some() && sel.pool.shards > 1 {
+        if self.want_grads {
             sel.last = merge_winners_grad(
                 self.view,
                 sel.pool.bufs[..self.live].iter().map(|b| b.as_slice()),
@@ -517,12 +883,13 @@ impl Pending<'_, '_> {
                 out,
             );
         }
+        Ok(())
     }
 }
 
 impl Drop for Pending<'_, '_> {
     fn drop(&mut self) {
-        // `finish` drains before it can panic, so reaching here with jobs
+        // `finish` drains before it can return, so reaching here with jobs
         // outstanding means the guard was dropped without finishing (early
         // return or an unwinding caller).  Drain now: the raw view pointer
         // on the workers must not outlive this borrow.
@@ -562,6 +929,21 @@ impl SelectWindow {
     }
 }
 
+/// Per-window hook deciding what a finished selection *means*: it receives
+/// the window ordinal, the view, the budget, the workspace/buffer, and the
+/// [`Pending::finish`] result, and may run post-checks or a degradation
+/// ladder before declaring the window failed.  [`run_windows`] passes the
+/// identity (propagate errors as-is); the engine passes its
+/// breakdown-check + ladder.
+pub(crate) type WindowResolve<'r> = &'r mut dyn FnMut(
+    usize,
+    &BatchView<'_>,
+    usize,
+    &mut Workspace,
+    &mut Vec<usize>,
+    Result<(), SelectError>,
+) -> Result<(), SelectError>;
+
 /// Drive `count` selection windows through a [`PooledSelector`],
 /// overlapping `assemble(w + 1)` (batch gather / `embed` / extractor —
 /// whatever the closure does) with the in-flight shard selection and merge
@@ -573,9 +955,11 @@ impl SelectWindow {
 ///
 /// `consume(w, window, winners)` receives the batch-local winner ids for
 /// window `w`; `selbuf` is the retained winner buffer threaded through
-/// every select call.  An `Err` from `assemble` aborts the loop; an
-/// in-flight epoch is drained by the [`Pending`] drop before the error
-/// propagates.
+/// every select call.  An `Err` from `assemble` aborts the loop as
+/// [`WindowsError::Assemble`]; a selection failure that survives the
+/// pool's fault policy aborts it as [`WindowsError::Select`].  Either way
+/// an in-flight epoch is drained by the [`Pending`] drop (or its
+/// `finish`) before the error propagates.
 pub fn run_windows<E>(
     sel: &mut PooledSelector,
     budget: usize,
@@ -585,16 +969,31 @@ pub fn run_windows<E>(
     selbuf: &mut Vec<usize>,
     assemble: impl FnMut(usize) -> Result<SelectWindow, E>,
     consume: impl FnMut(usize, &SelectWindow, &[usize]),
-) -> Result<(), E> {
-    run_windows_with(sel, |_| budget, overlap, count, ws, selbuf, assemble, consume)
+) -> Result<(), WindowsError<E>> {
+    run_windows_with(
+        sel,
+        |_| budget,
+        overlap,
+        count,
+        ws,
+        selbuf,
+        assemble,
+        consume,
+        &mut |_, _, _, _, _, res| res,
+    )
 }
 
-/// [`run_windows`] with a per-window budget: `budget_for(K)` is consulted
-/// with each window's row count before its jobs are submitted.  This is
-/// the ONE implementation of the overlap pipeline — [`run_windows`]
-/// (fixed budget) and [`crate::engine::SelectionEngine::windows`]
-/// (fraction-derived budgets) are both thin wrappers, so the subtle
-/// drain-on-error ordering lives in exactly one place.
+/// [`run_windows`] with a per-window budget and a per-window result
+/// resolver: `budget_for(K)` is consulted with each window's row count
+/// before its jobs are submitted, and `resolve` (see [`WindowResolve`])
+/// decides what each finished selection means — the engine's breakdown
+/// checks and degradation ladder plug in there.  This is the ONE
+/// implementation of the overlap pipeline — [`run_windows`] (fixed
+/// budget, propagate-errors) and
+/// [`crate::engine::SelectionEngine::windows`] (fraction-derived budgets,
+/// fault policy) are both thin wrappers, so the subtle drain-on-error
+/// ordering lives in exactly one place.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_windows_with<E>(
     sel: &mut PooledSelector,
     mut budget_for: impl FnMut(usize) -> usize,
@@ -604,28 +1003,36 @@ pub(crate) fn run_windows_with<E>(
     selbuf: &mut Vec<usize>,
     mut assemble: impl FnMut(usize) -> Result<SelectWindow, E>,
     mut consume: impl FnMut(usize, &SelectWindow, &[usize]),
-) -> Result<(), E> {
+    resolve: WindowResolve<'_>,
+) -> Result<(), WindowsError<E>> {
     if count == 0 {
         return Ok(());
     }
     if !overlap {
         for wi in 0..count {
-            let win = assemble(wi)?;
-            let budget = budget_for(win.view().k());
-            sel.select_into(&win.view(), budget, ws, selbuf);
+            let win = assemble(wi).map_err(WindowsError::Assemble)?;
+            let view = win.view();
+            let budget = budget_for(view.k());
+            let res = sel.begin(&view, budget).finish(ws, selbuf);
+            resolve(wi, &view, budget, ws, selbuf, res).map_err(WindowsError::Select)?;
             consume(wi, &win, selbuf);
         }
         return Ok(());
     }
-    let mut cur = assemble(0)?;
+    let mut cur = assemble(0).map_err(WindowsError::Assemble)?;
     for wi in 0..count {
         let view = cur.view();
-        let pending = sel.begin(&view, budget_for(view.k()));
+        let budget = budget_for(view.k());
+        let pending = sel.begin(&view, budget);
         // The overlap: workers are selecting window `wi` right now, while
         // this thread assembles window `wi + 1`.  If assembly fails, the
         // `pending` drop drains the in-flight epoch before `?` returns.
-        let next = if wi + 1 < count { Some(assemble(wi + 1)?) } else { None };
-        pending.finish(ws, selbuf);
+        let next = match (wi + 1 < count).then(|| assemble(wi + 1)).transpose() {
+            Ok(n) => n,
+            Err(e) => return Err(WindowsError::Assemble(e)),
+        };
+        let res = pending.finish(ws, selbuf);
+        resolve(wi, &view, budget, ws, selbuf, res).map_err(WindowsError::Select)?;
         consume(wi, &cur, selbuf);
         if let Some(n) = next {
             cur = n;

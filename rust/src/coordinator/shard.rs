@@ -16,7 +16,9 @@
 //!   `|out| == min(r, K)` for budget-honouring inner selectors.
 
 use std::ops::Range;
+use std::sync::Arc;
 
+use crate::faults::{FaultAction, FaultInjector, ShardCtx};
 use crate::graft::geometry::grad_sum_into;
 use crate::graft::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
@@ -213,6 +215,28 @@ pub struct ShardedSelector {
     scratch: MergeScratch,
     /// Retained partition buffer (recomputed per call, capacity reused).
     ranges: Vec<Range<usize>>,
+    /// Deterministic fault injection (tests only; `None` in production).
+    /// On this path an injected fault is a real panic on the scoped
+    /// thread, which propagates to the caller — the engine's containment
+    /// and retry/ladder machinery is what is being exercised.
+    injector: Option<Arc<dyn FaultInjector>>,
+    /// Running select count (the injector's 1-based window ordinal).
+    calls: u64,
+}
+
+/// Apply an injected fault at a shard-execution site without its own
+/// containment: `Delay` sleeps in place; `Panic` and `DieWorker` (which
+/// has no dedicated thread to kill here) raise a real panic that unwinds
+/// to the engine's catch.
+fn trip(injector: Option<&dyn FaultInjector>, window: u64, shard: usize) {
+    let Some(i) = injector else { return };
+    match i.before_shard(ShardCtx { window, shard, worker: shard }) {
+        FaultAction::None => {}
+        FaultAction::Delay(by) => std::thread::sleep(by),
+        FaultAction::Panic | FaultAction::DieWorker => {
+            panic!("injected fault: shard {shard} window {window}")
+        }
+    }
 }
 
 impl ShardedSelector {
@@ -254,7 +278,14 @@ impl ShardedSelector {
             workers,
             scratch: MergeScratch::default(),
             ranges: Vec::new(),
+            injector: None,
+            calls: 0,
         }
+    }
+
+    /// Install (or clear) a deterministic fault injector (tests only).
+    pub fn set_fault_injector(&mut self, injector: Option<Arc<dyn FaultInjector>>) {
+        self.injector = injector;
     }
 
     /// Force shard execution serial (`false`) or allow scoped threads
@@ -326,10 +357,14 @@ impl Selector for ShardedSelector {
         if k == 0 {
             return;
         }
+        self.calls += 1;
+        let window = self.calls;
+        let inj = self.injector.as_deref();
         if self.workers.len() == 1 {
             // Single-shot fast path: same selector, same caller workspace,
             // no partition, no merge — bit-identical to the unsharded call
             // (pinned by tests/sharded_selection.rs).
+            trip(inj, window, 0);
             self.workers[0].selector.select_into(view, r, ws, out);
             return;
         }
@@ -343,20 +378,29 @@ impl Selector for ShardedSelector {
         let want_grads = self.merge.gradient_aware() && self.authority.is_some();
         if self.parallel && k >= SHARD_PAR_MIN_K {
             std::thread::scope(|scope| {
-                for ((w, g), range) in self.workers[..live]
+                for (s, ((w, g), range)) in self.workers[..live]
                     .iter_mut()
                     .zip(self.grads[..live].iter_mut())
                     .zip(self.ranges.iter().cloned())
+                    .enumerate()
                 {
-                    scope.spawn(move || w.run(view, range, budget, want_grads.then_some(g)));
+                    scope.spawn(move || {
+                        // An injected panic unwinds this scoped thread and
+                        // re-raises at scope exit — exactly the path a
+                        // selector bug would take to the engine's catch.
+                        trip(inj, window, s);
+                        w.run(view, range, budget, want_grads.then_some(g));
+                    });
                 }
             });
         } else {
-            for ((w, g), range) in self.workers[..live]
+            for (s, ((w, g), range)) in self.workers[..live]
                 .iter_mut()
                 .zip(self.grads[..live].iter_mut())
                 .zip(self.ranges.iter().cloned())
+                .enumerate()
             {
+                trip(inj, window, s);
                 w.run(view, range, budget, want_grads.then_some(g));
             }
         }

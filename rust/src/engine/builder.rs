@@ -7,7 +7,9 @@
 //! method-aware defaults are, and which requested shapes fall back (with a
 //! note) instead of erroring.
 
-use crate::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
+use std::time::Duration;
+
+use crate::coordinator::{FaultPolicy, MergePolicy, PooledSelector, ShardedSelector};
 use crate::features::{self, FeatureExtractor};
 use crate::graft::{BudgetedRankPolicy, GraftSelector};
 use crate::selection::{self, Selector};
@@ -250,6 +252,8 @@ pub struct EngineBuilder {
     extractor: Option<String>,
     merge: MergeSpec,
     shape: ShapeSpec,
+    fault: FaultPolicy,
+    deadline: Option<Duration>,
 }
 
 impl Default for EngineBuilder {
@@ -272,6 +276,8 @@ impl EngineBuilder {
             extractor: None,
             merge: MergeSpec::Default,
             shape: ShapeSpec::Knobs { shards: 1, pool_workers: 0, overlap: false },
+            fault: FaultPolicy::Fail,
+            deadline: None,
         }
     }
 
@@ -347,6 +353,30 @@ impl EngineBuilder {
     /// knob setters decompose it back into knob form.
     pub fn exec(mut self, shape: ExecShape) -> Self {
         self.shape = ShapeSpec::Typed(shape);
+        self
+    }
+
+    /// What the engine does when selection faults (worker panic, poisoned
+    /// input, numerical breakdown): surface the typed
+    /// [`SelectError`](crate::engine::SelectError) (the
+    /// [`FaultPolicy::Fail`] default), respawn-and-retry within a budget
+    /// ([`FaultPolicy::Retry`] — a successful retry is bit-identical to
+    /// the fault-free run), or walk the degradation ladder
+    /// ([`FaultPolicy::Degrade`]: GRAFT → feature-only MaxVol →
+    /// seeded-random, every rung recorded on the
+    /// [`Selection`](crate::engine::Selection)).  Zero-fault results are
+    /// bit-identical under every policy.
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault = policy;
+        self
+    }
+
+    /// Per-job deadline on pooled shapes before the coordinator probes
+    /// worker health and requeues wedged shards (default 30 s; ignored by
+    /// serial/sharded shapes, whose shard work runs on the caller's
+    /// thread).
+    pub fn job_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -517,18 +547,19 @@ impl EngineBuilder {
         // a local rank cut) and the run policy is hoisted onto the
         // coordinator's ONE rank authority — a single ε/budget accumulator
         // at any shard/worker count.
-        let exec = if is_graft {
+        let mut exec = if is_graft {
             let eps = match self.rank {
                 RankMode::Adaptive { epsilon } => epsilon,
                 RankMode::Strict => self.epsilon,
             };
-            let run_policy = || match self.rank {
-                RankMode::Adaptive { epsilon } => {
-                    BudgetedRankPolicy::adaptive(epsilon, self.fraction)
-                }
-                RankMode::Strict => BudgetedRankPolicy::strict(self.epsilon),
+            // Hoisted copies: the pool retains `make` as a respawn factory,
+            // so both closures must be `move + Send + 'static`.
+            let (rank, fraction, base_eps) = (self.rank, self.fraction, self.epsilon);
+            let run_policy = move || match rank {
+                RankMode::Adaptive { epsilon } => BudgetedRankPolicy::adaptive(epsilon, fraction),
+                RankMode::Strict => BudgetedRankPolicy::strict(base_eps),
             };
-            let make = |_si: usize| -> Box<dyn Selector> {
+            let make = move |_si: usize| -> Box<dyn Selector> {
                 Box::new(GraftSelector::new(if sharded {
                     BudgetedRankPolicy::strict(eps)
                 } else {
@@ -549,6 +580,12 @@ impl EngineBuilder {
             build_exec(shape, merge, None, make)
         };
 
+        if let Some(d) = self.deadline {
+            if let Exec::Pooled(p) = &mut exec {
+                p.set_job_deadline(d);
+            }
+        }
+
         for n in &notes {
             eprintln!("note: {n}");
         }
@@ -559,6 +596,8 @@ impl EngineBuilder {
             merge,
             self.fraction,
             self.budget,
+            self.fault,
+            self.seed,
             notes,
         ))
     }
@@ -571,7 +610,7 @@ fn build_exec(
     shape: ExecShape,
     merge: MergePolicy,
     authority: Option<Box<dyn Selector>>,
-    mut make: impl FnMut(usize) -> Box<dyn Selector>,
+    mut make: impl FnMut(usize) -> Box<dyn Selector> + Send + 'static,
 ) -> Exec {
     match shape {
         ExecShape::Serial => Exec::Serial(make(0)),

@@ -65,13 +65,24 @@
 //!     .exec(ExecShape::Serial)
 //!     .build()
 //!     .expect("valid configuration");
-//! let sel = eng.select(&batch);
+//! let sel = eng.select(&batch).expect("selection fault");
 //! assert_eq!(sel.indices.len(), 4);
+//! assert!(sel.degradations.is_empty(), "healthy run");
 //! println!("kept {:?} (decision {:?})", sel.indices, sel.decision);
 //! ```
+//!
+//! Since the fault-tolerance PR, `select` returns
+//! `Result<Selection, `[`SelectError`]`>` and the engine runs a
+//! configurable [`FaultPolicy`] (typed failure / retry with respawn /
+//! degradation ladder) — see [`EngineBuilder::fault_policy`] and the
+//! crate-level docs for the error taxonomy.
 
 mod builder;
 mod select;
 
 pub use builder::{default_merge, EngineBuilder, EngineError, ExecShape, RankMode};
 pub use select::{Selection, SelectionEngine};
+
+pub use crate::coordinator::fault::{
+    Degradation, FaultPolicy, PoolStats, SelectError, WindowsError,
+};

@@ -1,10 +1,24 @@
 //! The built engine: hot-path [`SelectionEngine::select`] and the
-//! streaming [`SelectionEngine::windows`] session.
+//! streaming [`SelectionEngine::windows`] session — both fallible, both
+//! driving the configured [`FaultPolicy`] (quarantine → retry →
+//! degradation ladder) so a selection either matches the paper's
+//! criterion, carries a recorded [`Degradation`], or fails with a typed
+//! [`SelectError`].  Never a panic, and never a silently-different subset.
 
-use crate::coordinator::{MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::coordinator::{
+    Degradation, FaultPolicy, MergePolicy, PoolStats, PooledSelector, SelectError, SelectWindow,
+    ShardedSelector, WindowsError,
+};
+use crate::faults::{FaultAction, FaultInjector, ShardCtx};
 use crate::features::FeatureExtractor;
 use crate::graft::{RankDecision, RankStats};
-use crate::linalg::Workspace;
+use crate::linalg::{Mat, Workspace};
+use crate::rng::Rng;
+use crate::selection::maxvol::FastMaxVol;
 use crate::selection::{BatchView, Selector};
 
 use super::builder::ExecShape;
@@ -18,20 +32,6 @@ pub(super) enum Exec {
 }
 
 impl Exec {
-    fn select_into(
-        &mut self,
-        view: &BatchView<'_>,
-        r: usize,
-        ws: &mut Workspace,
-        out: &mut Vec<usize>,
-    ) {
-        match self {
-            Exec::Serial(s) => s.select_into(view, r, ws, out),
-            Exec::Sharded(s) => s.select_into(view, r, ws, out),
-            Exec::Pooled(p) => p.select_into(view, r, ws, out),
-        }
-    }
-
     fn rank_stats(&self) -> Option<RankStats> {
         match self {
             Exec::Serial(s) => s.rank_stats(),
@@ -56,16 +56,19 @@ impl Exec {
 }
 
 /// One selection result — the first-class replacement for the per-type
-/// side-channel accessors.  Borrows the engine's reused buffer, so
+/// side-channel accessors.  Borrows the engine's reused buffers, so
 /// holding a `Selection` holds the engine; copy the indices out if you
 /// need them across selects.
 pub struct Selection<'e> {
     /// Batch-local winner ids (indices into the selected batch's rows),
-    /// unique, in selection order.
+    /// unique, in selection order.  When rows were quarantined these
+    /// still index the *original* batch — the engine maps the winners of
+    /// the filtered copy back before returning.
     pub indices: &'e [usize],
     /// The dynamic-rank decision behind this subset (methods without a
-    /// rank stage, feature-only merges, and one-shard pools — whose inner
-    /// selector lives on a worker thread — report `None`).
+    /// rank stage, feature-only merges, one-shard pools — whose inner
+    /// selector lives on a worker thread — and degraded selections report
+    /// `None`).
     pub decision: Option<RankDecision>,
     /// The budget this selection was asked for (`min(r, K)` rows come
     /// back for budget-honouring methods).
@@ -73,12 +76,18 @@ pub struct Selection<'e> {
     /// 0-based running index of this selection in the engine's lifetime
     /// (windows and one-shot selects share the counter).
     pub window: u64,
+    /// Every step this selection took down the degradation ladder
+    /// (quarantined rows, feature-only fallback, seeded-random fallback),
+    /// in order.  Empty for a healthy paper-criterion selection — check
+    /// this before treating the subset as GRAFT's.
+    pub degradations: &'e [Degradation],
 }
 
 /// A built selection engine: owns the selector(s) in their execution
 /// shape, the scratch [`Workspace`], the result buffer, the validated
-/// feature extractor, and the single gradient-merge rank authority.
-/// Construct with [`EngineBuilder`](super::EngineBuilder).
+/// feature extractor, the single gradient-merge rank authority, and the
+/// fault machinery (policy, quarantine buffers, telemetry).  Construct
+/// with [`EngineBuilder`](super::EngineBuilder).
 pub struct SelectionEngine {
     exec: Exec,
     extractor: Option<Box<dyn FeatureExtractor>>,
@@ -86,22 +95,52 @@ pub struct SelectionEngine {
     merge: MergePolicy,
     fraction: f64,
     budget: Option<usize>,
+    policy: FaultPolicy,
+    /// Engine seed: deterministic stream for the seeded-random ladder rung
+    /// (mixed with the window ordinal, so each degraded window draws a
+    /// different but reproducible subset).
+    seed: u64,
+    /// Fault injector consulted on the serial path (sharded/pooled shapes
+    /// hold their own copy, installed via
+    /// [`SelectionEngine::set_fault_injector`]).
+    injector: Option<Arc<dyn FaultInjector>>,
     ws: Workspace,
     buf: Vec<usize>,
+    /// Degradations recorded by the most recent `select` call (or
+    /// accumulated across the most recent `windows` session).
+    degr: Vec<Degradation>,
+    /// Engine-side fault telemetry (select retries, quarantined rows);
+    /// merged with the pool's counters by
+    /// [`SelectionEngine::fault_stats`].
+    stats: PoolStats,
+    /// Scratch for the quarantine scan (poisoned row indices).
+    qrows: Vec<usize>,
+    /// Original batch-local index of each kept row of the filtered copy
+    /// (the winner remap table).
+    qkept: Vec<usize>,
     notes: Vec<String>,
     windows_done: u64,
 }
 
 impl SelectionEngine {
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn from_parts(
-        exec: Exec,
+        mut exec: Exec,
         extractor: Option<Box<dyn FeatureExtractor>>,
         shape: ExecShape,
         merge: MergePolicy,
         fraction: f64,
         budget: Option<usize>,
+        policy: FaultPolicy,
+        seed: u64,
         notes: Vec<String>,
     ) -> SelectionEngine {
+        // The pool runs shard-level retries itself (respawn + resubmit);
+        // the engine layers quarantine and the ladder on top.  One policy
+        // configures both.
+        if let Exec::Pooled(p) = &mut exec {
+            p.set_fault_policy(policy);
+        }
         SelectionEngine {
             exec,
             extractor,
@@ -109,8 +148,15 @@ impl SelectionEngine {
             merge,
             fraction,
             budget,
+            policy,
+            seed,
+            injector: None,
             ws: Workspace::new(),
             buf: Vec::new(),
+            degr: Vec::new(),
+            stats: PoolStats::default(),
+            qrows: Vec::new(),
+            qkept: Vec::new(),
             notes,
             windows_done: 0,
         }
@@ -124,6 +170,11 @@ impl SelectionEngine {
     /// The resolved merge policy.
     pub fn merge(&self) -> MergePolicy {
         self.merge
+    }
+
+    /// The configured fault policy.
+    pub fn fault_policy(&self) -> FaultPolicy {
+        self.policy
     }
 
     /// Build-time fallback notes (e.g. a non-shardable method downgraded
@@ -159,21 +210,122 @@ impl SelectionEngine {
         self.exec.last_decision()
     }
 
-    /// Select a subset from one batch.  The hot path: scratch and the
-    /// result buffer are engine-owned and reused, so steady-state
-    /// selection performs no heap allocations (exactly zero for the
-    /// MaxVol/GRAFT paths, as pinned by `tests/alloc_free.rs` on the
-    /// underlying executors).
-    pub fn select(&mut self, view: &BatchView<'_>) -> Selection<'_> {
+    /// Fault-path telemetry: engine-side counters (retries, quarantined
+    /// rows) merged with the pool's (respawns, deadline requeues,
+    /// shutdown join timeouts).  All-zero on a healthy run.
+    pub fn fault_stats(&self) -> PoolStats {
+        let pool = match &self.exec {
+            Exec::Pooled(p) => p.stats(),
+            _ => PoolStats::default(),
+        };
+        self.stats.merged(pool)
+    }
+
+    /// Degradations recorded by the most recent [`SelectionEngine::select`]
+    /// (also available on the returned [`Selection`]) or accumulated over
+    /// the most recent [`SelectionEngine::windows`] session.
+    pub fn last_degradations(&self) -> &[Degradation] {
+        &self.degr
+    }
+
+    /// Install (or clear) a deterministic fault injector (tests/benches
+    /// only): consulted before every unit of selection work on whichever
+    /// execution shape this engine runs.
+    pub fn set_fault_injector(&mut self, injector: Option<Arc<dyn FaultInjector>>) {
+        match &mut self.exec {
+            Exec::Serial(_) => {}
+            Exec::Sharded(s) => s.set_fault_injector(injector.clone()),
+            Exec::Pooled(p) => p.set_fault_injector(injector.clone()),
+        }
+        self.injector = injector;
+    }
+
+    /// Select a subset from one batch under the configured fault policy.
+    ///
+    /// The healthy path is unchanged from the infallible days — scratch
+    /// and the result buffer are engine-owned and reused, so steady-state
+    /// selection performs no heap allocations (pinned by
+    /// `tests/alloc_free.rs` on the underlying executors), and zero-fault
+    /// results are bit-identical under every [`FaultPolicy`].  On a fault:
+    ///
+    /// 1. Non-finite rows are quarantined (one vectorized pre-scan).
+    ///    Under `Fail`/`Retry` that is [`SelectError::PoisonedInput`];
+    ///    under `Degrade` the rows are excluded, reported in
+    ///    [`Selection::degradations`], and the winners mapped back to
+    ///    original batch-local indices.
+    /// 2. A panicking selector (or failing pool shard) is retried within
+    ///    the policy's budget — bit-identical on success.
+    /// 3. Numerical breakdown (degenerate MaxVol pivots, non-finite
+    ///    projection errors) is deterministic, never retried, and under
+    ///    `Degrade` skips straight to the seeded-random rung.
+    /// 4. Under `Degrade`, exhausted retries walk the ladder: feature-only
+    ///    Fast MaxVol, then a seeded-random subset — each recorded.
+    pub fn select(&mut self, view: &BatchView<'_>) -> Result<Selection<'_>, SelectError> {
+        self.degr.clear();
+        scan_poisoned(view, &mut self.qrows);
+        let quarantined = !self.qrows.is_empty();
+        let qwin;
+        let qview;
+        let view: &BatchView<'_> = if quarantined {
+            if !matches!(self.policy, FaultPolicy::Degrade) {
+                return Err(SelectError::PoisonedInput { rows: self.qrows.clone() });
+            }
+            self.stats.quarantined_rows += self.qrows.len() as u64;
+            self.degr.push(Degradation::Quarantined { rows: self.qrows.clone() });
+            qwin = filtered_window(view, &self.qrows, &mut self.qkept);
+            qview = qwin.view();
+            &qview
+        } else {
+            view
+        };
+        let window = self.windows_done;
         let r = resolve_budget(self.budget, self.fraction, view.k());
-        self.exec.select_into(view, r, &mut self.ws, &mut self.buf);
+        let SelectionEngine {
+            exec, policy, seed, injector, ws, buf, degr, stats, qkept, ..
+        } = self;
+        // Shard-level faults on the pooled shape are already retried by
+        // the pool itself (respawn + resubmit with the same inputs); an
+        // engine-level loop on top would square the budget.
+        let retries = if matches!(exec, Exec::Pooled(_)) { 0 } else { policy.max_retries() };
+        let mut attempt = 0u32;
+        let mut result = loop {
+            match attempt_select(exec, injector.as_deref(), window, view, r, ws, buf, attempt) {
+                Err(e) if e.retryable() && attempt < retries => {
+                    attempt += 1;
+                    stats.retries += 1;
+                    let backoff = policy.backoff();
+                    if backoff > std::time::Duration::ZERO {
+                        std::thread::sleep(backoff);
+                    }
+                }
+                other => break other,
+            }
+        };
+        if matches!(*policy, FaultPolicy::Degrade) {
+            if let Err(e) = result {
+                result = run_ladder(e, view, r, *seed, window, ws, buf, degr);
+            }
+        }
+        result?;
+        if quarantined {
+            // Winners index the filtered copy; map them back so callers
+            // can index the original batch arrays.
+            for i in buf.iter_mut() {
+                *i = qkept[*i];
+            }
+        }
         self.windows_done += 1;
-        Selection {
+        let degraded = !self.degr.is_empty();
+        Ok(Selection {
             indices: &self.buf,
-            decision: self.exec.last_decision(),
+            // A degraded subset was not produced by the rank criterion;
+            // whatever decision the executor last made does not describe
+            // it.
+            decision: if degraded { None } else { self.exec.last_decision() },
             budget: r,
             window: self.windows_done - 1,
-        }
+            degradations: &self.degr,
+        })
     }
 
     /// Drive `count` selection windows through the engine — the streaming
@@ -191,14 +343,21 @@ impl SelectionEngine {
     /// stream is identical either way — assembly never depends on
     /// selection results — extending the `run_windows` guarantee pinned by
     /// `tests/selection_pool.rs::overlap_and_serial_paths_agree` to the
-    /// facade.  An `Err` from `assemble` aborts the loop after draining
-    /// any in-flight selection.
+    /// facade.
+    ///
+    /// Every window runs under the engine's [`FaultPolicy`], exactly as in
+    /// [`SelectionEngine::select`]; window degradations accumulate in
+    /// [`SelectionEngine::last_degradations`] and the counters in
+    /// [`SelectionEngine::fault_stats`].  An `Err` from `assemble` aborts
+    /// the loop as [`WindowsError::Assemble`] after draining any in-flight
+    /// selection; a selection failure that survives the policy aborts it
+    /// as [`WindowsError::Select`].
     pub fn windows<E, A, C>(
         &mut self,
         count: usize,
         mut assemble: A,
         mut consume: C,
-    ) -> Result<(), E>
+    ) -> Result<(), WindowsError<E>>
     where
         // Named generics (not impl-Trait arguments) so callers whose
         // error type is not pinned by inference can turbofish it:
@@ -209,39 +368,133 @@ impl SelectionEngine {
         if count == 0 {
             return Ok(());
         }
+        if !matches!(self.exec, Exec::Pooled(_)) {
+            // Serial / sharded: no overlap to orchestrate, so each window
+            // is one fallible `select` — quarantine, retries, and ladder
+            // included for free.  `select` resets the degradation log per
+            // call, so accumulate the session's here.
+            let mut acc: Vec<Degradation> = Vec::new();
+            for wi in 0..count {
+                let win = assemble(wi, self.extractor.as_deref()).map_err(WindowsError::Assemble)?;
+                let sel = self.select(&win.view()).map_err(WindowsError::Select)?;
+                consume(wi, &win, sel.indices);
+                acc.extend(self.degr.iter().cloned());
+            }
+            self.degr = acc;
+            return Ok(());
+        }
+        self.degr.clear();
+        let base = self.windows_done;
         let SelectionEngine {
-            exec, extractor, shape, fraction, budget, ws, buf, windows_done, ..
+            exec,
+            extractor,
+            shape,
+            fraction,
+            budget,
+            policy,
+            seed,
+            ws,
+            buf,
+            degr,
+            stats,
+            windows_done,
+            ..
         } = self;
+        let Exec::Pooled(pool) = exec else { unreachable!() };
         let ext = extractor.as_deref();
-        if let Exec::Pooled(pool) = exec {
-            // Both pooled modes run through the coordinator's single
-            // overlap-pipeline implementation (`run_windows_with`), so the
-            // subtle begin / assemble-next / finish drain-on-error
-            // ordering lives in exactly one place.
-            let overlap = matches!(shape, ExecShape::Pooled { overlap: true, .. });
-            return crate::coordinator::pool::run_windows_with(
-                pool,
-                |k| resolve_budget(*budget, *fraction, k),
-                overlap,
-                count,
-                ws,
-                buf,
-                |wi| assemble(wi, ext),
-                |wi, win, winners| {
-                    *windows_done += 1;
-                    consume(wi, win, winners);
-                },
-            );
+        let (policy, seed) = (*policy, *seed);
+        // Shared fault log for the two closures below (assemble spots
+        // poisoned windows, resolve adjudicates them): a RefCell because
+        // both need it and the pipeline interleaves their calls.
+        struct FaultLog {
+            /// Poisoned-row reports per window ordinal, consumed by
+            /// `resolve` (with overlap, assembly runs one window ahead).
+            poisoned: Vec<(usize, Vec<usize>)>,
+            degr: Vec<Degradation>,
+            quarantined_rows: u64,
+            /// `ws.mv_degenerate` after the previous window's merge — the
+            /// per-window breakdown check is the delta against this.
+            degen: u64,
         }
-        for wi in 0..count {
-            let win = assemble(wi, ext)?;
-            let view = win.view();
-            let r = resolve_budget(*budget, *fraction, view.k());
-            exec.select_into(&view, r, ws, buf);
-            *windows_done += 1;
-            consume(wi, &win, buf);
-        }
-        Ok(())
+        let log = RefCell::new(FaultLog {
+            poisoned: Vec::new(),
+            degr: Vec::new(),
+            quarantined_rows: 0,
+            degen: ws.mv_degenerate,
+        });
+        let mut qrows = std::mem::take(&mut self.qrows);
+        let result = crate::coordinator::pool::run_windows_with(
+            pool,
+            |k| resolve_budget(*budget, *fraction, k),
+            matches!(shape, ExecShape::Pooled { overlap: true, .. }),
+            count,
+            ws,
+            buf,
+            |wi| {
+                let mut win = assemble(wi, ext)?;
+                // Quarantine at assembly time, before the window's jobs
+                // are submitted.  The window is owned, so under `Degrade`
+                // the poisoned rows are compacted away in place (row_ids
+                // shift with them — consume sees a consistent window);
+                // under `Fail`/`Retry` the rows are only logged and
+                // `resolve` raises the typed error for this window.
+                scan_poisoned(&win.view(), &mut qrows);
+                if !qrows.is_empty() {
+                    log.borrow_mut().poisoned.push((wi, qrows.clone()));
+                    if matches!(policy, FaultPolicy::Degrade) {
+                        quarantine_owned(&mut win, &qrows);
+                    }
+                }
+                Ok(win)
+            },
+            |wi, win, winners| {
+                *windows_done += 1;
+                consume(wi, win, winners);
+            },
+            &mut |wi, view, r, ws, buf, res| {
+                let mut l = log.borrow_mut();
+                if let Some(pos) = l.poisoned.iter().position(|(w, _)| *w == wi) {
+                    let (_, rows) = l.poisoned.swap_remove(pos);
+                    if !matches!(policy, FaultPolicy::Degrade) {
+                        return Err(SelectError::PoisonedInput { rows });
+                    }
+                    l.quarantined_rows += rows.len() as u64;
+                    l.degr.push(Degradation::Quarantined { rows });
+                }
+                let degen0 = l.degen;
+                drop(l);
+                // Post-check: the merge stage runs with this workspace, so
+                // a degenerate pivot in it shows up in the counter delta.
+                // (Shard-level counters live in the worker workspaces and
+                // are owned by their containment; see coordinator README.)
+                let checked = res.and_then(|()| {
+                    let clamped = ws.mv_degenerate - degen0;
+                    if clamped > 0 {
+                        Err(SelectError::NumericalBreakdown {
+                            stage: "merge-maxvol",
+                            detail: format!("{clamped} degenerate pivot(s) clamped"),
+                        })
+                    } else {
+                        Ok(())
+                    }
+                });
+                let out = match checked {
+                    Err(e) if matches!(policy, FaultPolicy::Degrade) => {
+                        let mut l = log.borrow_mut();
+                        let view_r = r.min(view.k());
+                        run_ladder(e, view, view_r, seed, base + wi as u64, ws, buf, &mut l.degr)
+                    }
+                    other => other,
+                };
+                log.borrow_mut().degen = ws.mv_degenerate;
+                out
+            },
+        );
+        let l = log.into_inner();
+        degr.extend(l.degr);
+        stats.quarantined_rows += l.quarantined_rows;
+        self.qrows = qrows;
+        result
     }
 
     /// Tear down pooled workers now (otherwise on drop; idempotent; a
@@ -251,6 +504,207 @@ impl SelectionEngine {
             p.shutdown();
         }
     }
+}
+
+/// One attempt at the configured selection: run the executor (with panic
+/// containment and serial-path fault injection), then the numerical
+/// post-checks.  Errors are typed; retryability is the caller's business.
+#[allow(clippy::too_many_arguments)]
+fn attempt_select(
+    exec: &mut Exec,
+    injector: Option<&dyn FaultInjector>,
+    window: u64,
+    view: &BatchView<'_>,
+    r: usize,
+    ws: &mut Workspace,
+    buf: &mut Vec<usize>,
+    attempt: u32,
+) -> Result<(), SelectError> {
+    let degen0 = ws.mv_degenerate;
+    match exec {
+        Exec::Pooled(p) => p.begin(view, r).finish(ws, buf)?,
+        Exec::Serial(s) => {
+            catch_unwind(AssertUnwindSafe(|| {
+                if let Some(i) = injector {
+                    // 1-based window ordinal, matching the pool's epoch
+                    // convention; shard/worker are 0 on the serial path.
+                    match i.before_shard(ShardCtx { window: window + 1, shard: 0, worker: 0 }) {
+                        FaultAction::None => {}
+                        FaultAction::Delay(by) => std::thread::sleep(by),
+                        FaultAction::Panic | FaultAction::DieWorker => {
+                            panic!("injected fault: serial select window {window}")
+                        }
+                    }
+                }
+                s.select_into(view, r, ws, buf);
+            }))
+            .map_err(|_| SelectError::ShardFailure { shard: 0, attempts: attempt + 1 })?;
+        }
+        Exec::Sharded(sh) => {
+            // A scoped-thread shard panic re-raises on the caller; catch
+            // it here exactly like the pool contains its workers.  The
+            // failing shard index does not survive the unwind, so the
+            // error reports shard 0.
+            catch_unwind(AssertUnwindSafe(|| sh.select_into(view, r, ws, buf)))
+                .map_err(|_| SelectError::ShardFailure { shard: 0, attempts: attempt + 1 })?;
+        }
+    }
+    let clamped = ws.mv_degenerate - degen0;
+    if clamped > 0 {
+        // The volume criterion no longer justifies the subset (duplicate /
+        // rank-deficient rows).  Deterministic: retrying cannot help.
+        return Err(SelectError::NumericalBreakdown {
+            stage: "maxvol",
+            detail: format!("{clamped} degenerate pivot(s) clamped"),
+        });
+    }
+    if let Some(d) = exec.last_decision() {
+        if !d.error.is_finite() {
+            return Err(SelectError::NumericalBreakdown {
+                stage: "rank",
+                detail: format!("non-finite projection error {}", d.error),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// The degradation ladder, entered once the configured method has failed
+/// under [`FaultPolicy::Degrade`]: feature-only Fast MaxVol first (skipped
+/// for deterministic numerical breakdown — MaxVol would break the same
+/// way), then a seeded-random subset, which cannot fail.  Each rung taken
+/// is recorded in `degr`.
+#[allow(clippy::too_many_arguments)]
+fn run_ladder(
+    cause: SelectError,
+    view: &BatchView<'_>,
+    r: usize,
+    seed: u64,
+    window: u64,
+    ws: &mut Workspace,
+    buf: &mut Vec<usize>,
+    degr: &mut Vec<Degradation>,
+) -> Result<(), SelectError> {
+    if !matches!(cause, SelectError::NumericalBreakdown { .. }) {
+        let degen0 = ws.mv_degenerate;
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            FastMaxVol.select_into(view, r, ws, buf);
+        }))
+        .is_ok();
+        if ok && ws.mv_degenerate == degen0 {
+            degr.push(Degradation::FeatureOnlyMaxVol { cause: cause.to_string() });
+            return Ok(());
+        }
+    }
+    // Deterministic in (engine seed, window ordinal): reproducible, but
+    // different windows draw different subsets.
+    let mut rng = Rng::new(seed ^ (0xDE6 ^ window.wrapping_mul(0x9E37_79B9)));
+    buf.clear();
+    buf.extend(rng.choose(view.k(), r.min(view.k())));
+    degr.push(Degradation::SeededRandom { cause: cause.to_string() });
+    Ok(())
+}
+
+/// One vectorized pass over the batch looking for non-finite rows
+/// (feature row, gradient-sketch row, or loss): per row, one summing fold
+/// over the feature and gradient slices — any NaN/±∞ poisons the sum —
+/// with an exact cell-wise re-check when the fold trips, since
+/// huge-but-finite values can overflow it.  Poisoned row indices land in
+/// `out`, ascending.
+fn scan_poisoned(view: &BatchView<'_>, out: &mut Vec<usize>) {
+    out.clear();
+    let (rc, ec) = (view.features.cols(), view.grads.cols());
+    let (fd, gd) = (view.features.data(), view.grads.data());
+    for i in 0..view.k() {
+        let frow = &fd[i * rc..(i + 1) * rc];
+        let grow = &gd[i * ec..(i + 1) * ec];
+        let loss = view.losses.get(i).copied().unwrap_or(0.0);
+        let acc: f64 = frow.iter().chain(grow.iter()).sum::<f64>() + loss;
+        if !acc.is_finite()
+            && (!loss.is_finite()
+                || frow.iter().chain(grow.iter()).any(|x| !x.is_finite()))
+        {
+            out.push(i);
+        }
+    }
+}
+
+/// Owned filtered copy of `view` without the `poisoned` rows (ascending),
+/// recording each kept row's original index in `kept` (the winner remap
+/// table).  Cold path — only runs when something was actually poisoned —
+/// so the allocations are irrelevant.
+fn filtered_window(
+    view: &BatchView<'_>,
+    poisoned: &[usize],
+    kept: &mut Vec<usize>,
+) -> SelectWindow {
+    let (rc, ec) = (view.features.cols(), view.grads.cols());
+    kept.clear();
+    let mut p = 0usize;
+    for i in 0..view.k() {
+        if p < poisoned.len() && poisoned[p] == i {
+            p += 1;
+        } else {
+            kept.push(i);
+        }
+    }
+    let n = kept.len();
+    let mut feat = Vec::with_capacity(n * rc);
+    let mut grad = Vec::with_capacity(n * ec);
+    let mut win = SelectWindow {
+        features: Mat::from_vec(0, rc, Vec::new()),
+        grads: Mat::from_vec(0, ec, Vec::new()),
+        losses: Vec::with_capacity(n),
+        labels: Vec::with_capacity(n),
+        preds: Vec::with_capacity(n),
+        classes: view.classes,
+        row_ids: Vec::with_capacity(n),
+    };
+    for &i in kept.iter() {
+        feat.extend_from_slice(&view.features.data()[i * rc..(i + 1) * rc]);
+        grad.extend_from_slice(&view.grads.data()[i * ec..(i + 1) * ec]);
+        win.losses.push(view.losses.get(i).copied().unwrap_or(0.0));
+        win.labels.push(view.labels.get(i).copied().unwrap_or(0));
+        win.preds.push(view.preds.get(i).copied().unwrap_or(0));
+        win.row_ids.push(view.row_ids.get(i).copied().unwrap_or(i));
+    }
+    win.features = Mat::from_vec(n, rc, feat);
+    win.grads = Mat::from_vec(n, ec, grad);
+    win
+}
+
+/// In-place row compaction of an owned [`SelectWindow`]: drop the
+/// `poisoned` rows (ascending), shifting everything — including `row_ids`,
+/// so the window stays self-consistent for `consume`.  Cold path.
+fn quarantine_owned(win: &mut SelectWindow, poisoned: &[usize]) {
+    let (rc, ec) = (win.features.cols(), win.grads.cols());
+    let k = win.features.rows();
+    let mut fv = std::mem::replace(&mut win.features, Mat::from_vec(0, rc, Vec::new())).into_vec();
+    let mut gv = std::mem::replace(&mut win.grads, Mat::from_vec(0, ec, Vec::new())).into_vec();
+    let (mut w, mut p) = (0usize, 0usize);
+    for i in 0..k {
+        if p < poisoned.len() && poisoned[p] == i {
+            p += 1;
+            continue;
+        }
+        if w != i {
+            fv.copy_within(i * rc..(i + 1) * rc, w * rc);
+            gv.copy_within(i * ec..(i + 1) * ec, w * ec);
+            win.losses[w] = win.losses[i];
+            win.labels[w] = win.labels[i];
+            win.preds[w] = win.preds[i];
+            win.row_ids[w] = win.row_ids[i];
+        }
+        w += 1;
+    }
+    fv.truncate(w * rc);
+    gv.truncate(w * ec);
+    win.losses.truncate(w);
+    win.labels.truncate(w);
+    win.preds.truncate(w);
+    win.row_ids.truncate(w);
+    win.features = Mat::from_vec(w, rc, fv);
+    win.grads = Mat::from_vec(w, ec, gv);
 }
 
 fn resolve_budget(budget: Option<usize>, fraction: f64, k: usize) -> usize {

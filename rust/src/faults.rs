@@ -1,0 +1,269 @@
+//! Deterministic fault injection for the selection stack.
+//!
+//! A [`FaultInjector`] is consulted right before each unit of selection
+//! work runs — once per shard job on the pool workers and the scoped
+//! shard fan-out, once per select on the serial path — and answers with a
+//! [`FaultAction`]: do nothing, panic (contained by the normal
+//! containment machinery, so this exercises the *real* respawn / retry /
+//! ladder paths), sleep past the per-job deadline, or kill the worker
+//! thread outright.
+//!
+//! [`FaultPlan`] is the deterministic schedule used by
+//! `tests/fault_injection.rs`: a list of events ("panic shard 2 at window
+//! 3", "delay worker 1 by 50 ms", "kill worker 0"), each with a fire
+//! limit so a one-shot fault is injected exactly once and the retry then
+//! observes a healthy run — which is what makes the headline bit-identity
+//! property testable.  Plans can also be generated from a seed
+//! ([`FaultPlan::seeded`]) to sweep random schedules.
+//!
+//! The injector hooks are compiled unconditionally (they are a handful of
+//! `Option` checks on cold paths) but nothing installs one outside tests
+//! and benches: production engines run with `None`.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+/// Where a unit of selection work is about to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardCtx {
+    /// 1-based select/window ordinal (the pool epoch on pooled shapes,
+    /// the engine's running select count elsewhere).
+    pub window: u64,
+    /// Batch-local shard index (0 on the serial path).
+    pub shard: usize,
+    /// Worker index executing the job (`shard % workers` on the pool; 0
+    /// elsewhere).
+    pub worker: usize,
+}
+
+/// What the injector asks the executing site to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultAction {
+    /// Run normally.
+    #[default]
+    None,
+    /// Panic before selecting (caught by the containment layer exactly
+    /// like a selector bug would be).
+    Panic,
+    /// Sleep this long before selecting (drives a job past the pool's
+    /// per-job deadline without killing anything).
+    Delay(Duration),
+    /// Kill the worker thread without answering (pool only; elsewhere
+    /// treated like [`FaultAction::Panic`]).
+    DieWorker,
+}
+
+/// A source of injected faults.  Implementations must be cheap and
+/// deterministic: the same call sequence must see the same actions.
+pub trait FaultInjector: Send + Sync {
+    /// Consulted immediately before the work for `ctx` runs.
+    fn before_shard(&self, ctx: ShardCtx) -> FaultAction;
+}
+
+/// Which work units an event applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Jobs for this shard index (any worker).
+    Shard(usize),
+    /// Any job on this worker index.
+    Worker(usize),
+}
+
+/// One scheduled fault: fires for matching contexts until `limit` is
+/// exhausted.
+#[derive(Debug)]
+pub struct FaultEvent {
+    pub target: Target,
+    /// Restrict to one 1-based window ordinal (`None` = any).
+    pub window: Option<u64>,
+    pub action: FaultAction,
+    /// How many times this event may fire (1 = one-shot, so the retry of
+    /// the faulted job observes a healthy run).
+    pub limit: u32,
+    fires: AtomicU32,
+}
+
+impl FaultEvent {
+    fn matches(&self, ctx: ShardCtx) -> bool {
+        let t = match self.target {
+            Target::Shard(s) => ctx.shard == s,
+            Target::Worker(w) => ctx.worker == w,
+        };
+        t && self.window.unwrap_or(ctx.window) == ctx.window
+    }
+}
+
+/// A deterministic fault schedule ([`FaultInjector`] implementation).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Empty plan (injects nothing).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn push(
+        mut self,
+        target: Target,
+        window: Option<u64>,
+        action: FaultAction,
+        limit: u32,
+    ) -> Self {
+        self.events.push(FaultEvent { target, window, action, limit, fires: AtomicU32::new(0) });
+        self
+    }
+
+    /// Panic shard `shard`'s job once, at 1-based window `window`.
+    pub fn panic_shard(self, shard: usize, window: u64) -> Self {
+        self.push(Target::Shard(shard), Some(window), FaultAction::Panic, 1)
+    }
+
+    /// Panic shard `shard`'s job on its next `times` runs (any window).
+    pub fn panic_shard_times(self, shard: usize, times: u32) -> Self {
+        self.push(Target::Shard(shard), None, FaultAction::Panic, times)
+    }
+
+    /// Panic every job of shard `shard`, forever (exhausts any retry
+    /// budget).
+    pub fn panic_shard_always(self, shard: usize) -> Self {
+        self.push(Target::Shard(shard), None, FaultAction::Panic, u32::MAX)
+    }
+
+    /// Delay worker `worker`'s next job by `by` (one-shot).
+    pub fn delay_worker(self, worker: usize, by: Duration) -> Self {
+        self.push(Target::Worker(worker), None, FaultAction::Delay(by), 1)
+    }
+
+    /// Kill worker `worker` on its next job (one-shot; the pool respawns
+    /// it under a retrying policy).
+    pub fn kill_worker(self, worker: usize) -> Self {
+        self.push(Target::Worker(worker), None, FaultAction::DieWorker, 1)
+    }
+
+    /// Kill every worker's next job — the all-workers-dead schedule.
+    pub fn kill_all_workers(self, workers: usize) -> Self {
+        (0..workers).fold(self, |p, w| p.kill_worker(w))
+    }
+
+    /// Generate a small random one-shot schedule over `shards` shards,
+    /// `workers` workers, and `windows` windows — deterministic in
+    /// `seed`.  Every event is one-shot, so under a retrying policy the
+    /// final subsets must be bit-identical to the fault-free run.
+    pub fn seeded(seed: u64, shards: usize, workers: usize, windows: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA017);
+        let mut plan = FaultPlan::new();
+        let events = 1 + rng.below(3); // 1..=3 faults
+        for _ in 0..events {
+            let window = 1 + rng.below(windows.max(1) as usize) as u64;
+            match rng.below(3) {
+                0 => {
+                    let s = rng.below(shards.max(1));
+                    plan = plan.push(Target::Shard(s), Some(window), FaultAction::Panic, 1);
+                }
+                1 => {
+                    let w = rng.below(workers.max(1));
+                    let ms = 1 + rng.below(5) as u64;
+                    plan = plan.push(
+                        Target::Worker(w),
+                        Some(window),
+                        FaultAction::Delay(Duration::from_millis(ms)),
+                        1,
+                    );
+                }
+                _ => {
+                    let w = rng.below(workers.max(1));
+                    plan = plan.push(Target::Worker(w), Some(window), FaultAction::DieWorker, 1);
+                }
+            }
+        }
+        plan
+    }
+
+    /// Wrap in the `Arc` every injector consumer takes.
+    pub fn arc(self) -> Arc<dyn FaultInjector> {
+        Arc::new(self)
+    }
+
+    /// Total fires across all events so far (test observability).
+    pub fn fired(&self) -> u32 {
+        self.events.iter().map(|e| e.fires.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl FaultInjector for FaultPlan {
+    fn before_shard(&self, ctx: ShardCtx) -> FaultAction {
+        for ev in &self.events {
+            if !ev.matches(ctx) {
+                continue;
+            }
+            // First matching event with budget left fires; fetch_update
+            // keeps the limit exact under concurrent workers.
+            let won = ev
+                .fires
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                    (n < ev.limit).then_some(n + 1)
+                })
+                .is_ok();
+            if won {
+                return ev.action;
+            }
+        }
+        FaultAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(window: u64, shard: usize, worker: usize) -> ShardCtx {
+        ShardCtx { window, shard, worker }
+    }
+
+    #[test]
+    fn one_shot_event_fires_exactly_once() {
+        let plan = FaultPlan::new().panic_shard(2, 3);
+        assert_eq!(plan.before_shard(ctx(3, 1, 0)), FaultAction::None);
+        assert_eq!(plan.before_shard(ctx(2, 2, 0)), FaultAction::None, "wrong window");
+        assert_eq!(plan.before_shard(ctx(3, 2, 0)), FaultAction::Panic);
+        assert_eq!(plan.before_shard(ctx(3, 2, 0)), FaultAction::None, "budget spent");
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn persistent_event_never_exhausts() {
+        let plan = FaultPlan::new().panic_shard_always(0);
+        for w in 1..50u64 {
+            assert_eq!(plan.before_shard(ctx(w, 0, 0)), FaultAction::Panic);
+        }
+    }
+
+    #[test]
+    fn worker_targets_match_any_shard() {
+        let plan = FaultPlan::new().delay_worker(1, Duration::from_millis(1));
+        assert_eq!(plan.before_shard(ctx(1, 5, 0)), FaultAction::None);
+        assert_eq!(
+            plan.before_shard(ctx(1, 5, 1)),
+            FaultAction::Delay(Duration::from_millis(1))
+        );
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(7, 4, 2, 6);
+        let b = FaultPlan::seeded(7, 4, 2, 6);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.target, y.target);
+            assert_eq!(x.window, y.window);
+            assert_eq!(x.action, y.action);
+            assert_eq!(x.limit, y.limit);
+        }
+    }
+}

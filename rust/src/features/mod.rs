@@ -12,12 +12,63 @@ pub mod svd;
 
 use crate::linalg::Mat;
 
+/// Why feature extraction refused a batch.
+///
+/// Every extractor in this module silently propagates non-finite inputs —
+/// SVD/PCA power iterations turn one NaN cell into an all-NaN factor, and
+/// the selector downstream then "selects" garbage.  The typed pre-check in
+/// [`FeatureExtractor::try_extract`] catches that at the boundary instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExtractError {
+    /// The batch contains non-finite cells; `row` is the first offending
+    /// batch-local row (the quarantine pass in the engine reports all of
+    /// them).
+    NonFiniteInput { row: usize },
+}
+
+impl std::fmt::Display for ExtractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExtractError::NonFiniteInput { row } => {
+                write!(f, "non-finite feature input at batch row {row}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExtractError {}
+
 /// A batch feature extractor. Implementations must return a K×R matrix
 /// with importance-ordered columns.
 pub trait FeatureExtractor: Send + Sync {
     fn name(&self) -> &'static str;
     /// Extract R ordered features from the K×M batch.
+    ///
+    /// Assumes finite input; a non-finite batch produces non-finite
+    /// features rather than a panic.  Gate untrusted batches through
+    /// [`FeatureExtractor::try_extract`].
     fn extract(&self, batch: &Mat, r: usize) -> Mat;
+
+    /// [`FeatureExtractor::extract`] behind a cheap finite pre-scan: one
+    /// pass over the K×M cells (branch-free accumulation per row),
+    /// refusing the batch with a typed [`ExtractError`] instead of
+    /// propagating NaN/±∞ into the factorisation.
+    fn try_extract(&self, batch: &Mat, r: usize) -> Result<Mat, ExtractError> {
+        let m = batch.cols();
+        if m > 0 {
+            for (row, chunk) in batch.data().chunks_exact(m).enumerate() {
+                // One fold per row: summing keeps the scan vectorizable,
+                // and any NaN/±∞ cell poisons the row sum.  A tripped sum
+                // is re-checked cell-wise, since huge-but-finite values
+                // can overflow the fold without the row being poisoned.
+                let acc: f64 = chunk.iter().sum();
+                if !acc.is_finite() && chunk.iter().any(|x| !x.is_finite()) {
+                    return Err(ExtractError::NonFiniteInput { row });
+                }
+            }
+        }
+        Ok(self.extract(batch, r))
+    }
 }
 
 pub use ae::AutoencoderFeatures;
@@ -33,6 +84,50 @@ pub fn by_name(name: &str) -> Option<Box<dyn FeatureExtractor>> {
         "ica" => Some(Box::new(IcaFeatures::default())),
         "ae" => Some(Box::new(AutoencoderFeatures::default())),
         _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testsupport::structured_batch;
+    use super::*;
+
+    /// Regression (fault-tolerance PR): extractors used to silently
+    /// propagate NaN — one poisoned cell became an all-NaN feature matrix
+    /// and the selector downstream picked garbage.  `try_extract` now
+    /// refuses the batch with a typed error naming the first bad row.
+    #[test]
+    fn try_extract_rejects_non_finite_rows() {
+        for name in ["svd", "pca", "ica", "ae"] {
+            let e = by_name(name).unwrap();
+            let mut x = structured_batch(32, 12, 3, 11);
+            assert!(e.try_extract(&x, 4).is_ok(), "{name}: clean batch refused");
+            x[(17, 5)] = f64::NAN;
+            assert_eq!(
+                e.try_extract(&x, 4),
+                Err(ExtractError::NonFiniteInput { row: 17 }),
+                "{name}: poisoned batch accepted"
+            );
+            x[(17, 5)] = 0.0;
+            x[(3, 0)] = f64::INFINITY;
+            assert_eq!(
+                e.try_extract(&x, 4),
+                Err(ExtractError::NonFiniteInput { row: 3 }),
+                "{name}: infinite cell accepted"
+            );
+        }
+    }
+
+    /// Huge-but-finite rows may overflow the vectorized row-sum; they are
+    /// still finite input and must pass.
+    #[test]
+    fn try_extract_tolerates_finite_overflowing_rows() {
+        let e = by_name("svd").unwrap();
+        let mut x = structured_batch(16, 8, 2, 13);
+        for j in 0..8 {
+            x[(5, j)] = f64::MAX;
+        }
+        assert!(e.try_extract(&x, 3).is_ok());
     }
 }
 

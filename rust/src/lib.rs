@@ -53,9 +53,70 @@
 //!     .build()
 //!     .expect("valid configuration");
 //! let want = eng.budget_for(k);
-//! let sel = eng.select(&batch);
+//! let sel = eng.select(&batch).expect("selection fault");
 //! assert_eq!(sel.indices.len(), want);
 //! ```
+//!
+//! # Fault tolerance
+//!
+//! Selection can fail — a worker thread panics, the input batch carries
+//! NaN rows, the MaxVol factorisation degenerates.  The engine surfaces
+//! all of it through one typed ladder (see [`coordinator::fault`] and
+//! `rust/src/coordinator/README.md`, "Failure modes & degradation
+//! ladder"):
+//!
+//! * [`engine::SelectError`] — the error taxonomy:
+//!   `PoisonedInput { rows }` (non-finite rows, found by a vectorized
+//!   pre-scan), `NumericalBreakdown { stage, .. }` (degenerate pivots /
+//!   non-finite rank error), `ShardFailure { shard, attempts }` (a shard
+//!   job panicked or its worker died), and `PoolUnavailable` (selecting
+//!   after shutdown).
+//! * [`engine::FaultPolicy`] — what the engine does about it.
+//!   `Fail` (default) returns the error; `Retry { max, backoff }`
+//!   respawns dead workers and re-runs the same inputs on identically
+//!   constructed selectors, so a successful retry is **bit-identical** to
+//!   the fault-free run; `Degrade` quarantines poisoned rows and walks
+//!   GRAFT → feature-only MaxVol → seeded-random, recording every rung in
+//!   [`engine::Selection::degradations`].
+//! * [`engine::SelectionEngine::fault_stats`] — respawn / retry /
+//!   requeue / quarantine counters ([`engine::PoolStats`]).
+//!
+//! Zero-fault runs are bit-identical under every policy:
+//!
+//! ```
+//! use graft::engine::{EngineBuilder, ExecShape, FaultPolicy};
+//! # use graft::linalg::Mat;
+//! # use graft::selection::BatchView;
+//! # let k = 8;
+//! # let mut rng = graft::rng::Rng::new(7);
+//! # let features = Mat::from_fn(k, 3, |_, _| rng.normal());
+//! # let grads = Mat::from_fn(k, 4, |_, _| rng.normal());
+//! # let losses = vec![1.0; k];
+//! # let labels = vec![0i32; k];
+//! # let preds = vec![0i32; k];
+//! # let row_ids: Vec<usize> = (0..k).collect();
+//! # let batch = BatchView { features: &features, grads: &grads, losses: &losses,
+//! #     labels: &labels, preds: &preds, classes: 2, row_ids: &row_ids };
+//! let build = |policy: FaultPolicy| {
+//!     EngineBuilder::new()
+//!         .method("graft")
+//!         .budget(4)
+//!         .exec(ExecShape::Serial)
+//!         .fault_policy(policy)
+//!         .build()
+//!         .expect("valid configuration")
+//! };
+//! let mut fail = build(FaultPolicy::Fail);
+//! let mut degrade = build(FaultPolicy::Degrade);
+//! let a = fail.select(&batch).expect("healthy").indices.to_vec();
+//! let b = degrade.select(&batch).expect("healthy").indices.to_vec();
+//! assert_eq!(a, b, "zero-fault runs are policy-invariant");
+//! assert_eq!(degrade.fault_stats().retries, 0);
+//! ```
+//!
+//! The deterministic fault-injection harness behind the fault suites
+//! lives in [`faults`] ([`faults::FaultPlan`] — seeded, replayable
+//! schedules of panics / delays / worker deaths).
 
 // Numeric-kernel lint posture: index-based loops mirror the maths (and the
 // Pallas kernels they twin), and the orchestration layers legitimately
@@ -71,6 +132,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod eval;
+pub mod faults;
 pub mod features;
 pub mod linalg;
 pub mod pruning;

@@ -40,6 +40,13 @@ pub struct Workspace {
     /// Prefix errors d_r (R).
     pub(crate) pe_err: Vec<f64>,
 
+    // -- numerics health ---------------------------------------------------
+    /// Degenerate (|pivot| < 1e-300, clamped) MaxVol pivots seen by this
+    /// workspace, monotone over its lifetime.  The engine reads the delta
+    /// across a select to detect numerical breakdown (rank-deficient /
+    /// duplicated rows) and route it through the typed fault path.
+    pub(crate) mv_degenerate: u64,
+
     // -- selector plumbing -------------------------------------------------
     /// MaxVol pivot order (taken out via `mem::take` around nested calls).
     pub(crate) sel_order: Vec<usize>,

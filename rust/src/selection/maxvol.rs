@@ -58,6 +58,11 @@ pub fn fast_maxvol_with(v: &Mat, r: usize, ws: &mut Workspace, out: &mut Vec<usi
         }
         let piv = w[best * rcols + j];
         let safe = if piv.abs() < 1e-300 {
+            // Degenerate pivot: selection proceeds (clamped, matching the
+            // Pallas kernel) but the workspace counts it so the engine's
+            // fault path can surface the breakdown instead of silently
+            // returning a subset the volume criterion no longer justifies.
+            ws.mv_degenerate += 1;
             if piv >= 0.0 { 1e-300 } else { -1e-300 }
         } else {
             piv
@@ -440,6 +445,19 @@ mod tests {
         let vol_g = det(&vr.take_rows(&greedy)).abs();
         let vol_c = det(&vr.take_rows(&conv)).abs();
         assert!(vol_c >= vol_g * 0.999, "conv {vol_c} < greedy {vol_g}");
+    }
+
+    #[test]
+    fn degenerate_pivots_are_counted() {
+        let mut ws = Workspace::default();
+        let mut out = Vec::new();
+        let v = randmat(16, 4, 11);
+        fast_maxvol_with(&v, 4, &mut ws, &mut out);
+        assert_eq!(ws.mv_degenerate, 0, "full-rank gaussian features are clean");
+        let dup = Mat::from_fn(16, 4, |_, j| (j + 1) as f64); // identical rows
+        fast_maxvol_with(&dup, 4, &mut ws, &mut out);
+        assert!(ws.mv_degenerate > 0, "identical rows must trip the pivot clamp");
+        assert_eq!(out.len(), 4, "clamped selection still returns unique rows");
     }
 
     #[test]

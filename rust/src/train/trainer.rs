@@ -12,7 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{MergePolicy, SelectWindow};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
-use crate::engine::{EngineBuilder, SelectionEngine};
+use crate::engine::{EngineBuilder, SelectionEngine, WindowsError};
 use crate::features::FeatureExtractor;
 use crate::graft::alignment::AlignmentSample;
 use crate::graft::{AlignmentStats, BudgetedRankPolicy};
@@ -449,7 +449,10 @@ fn refresh_subset(
     } else {
         baseline.as_mut().expect("baseline engine")
     };
-    exec.windows(windows, assemble, consume)?;
+    exec.windows(windows, assemble, consume).map_err(|e| match e {
+        WindowsError::Assemble(err) => err.context("assembling selection window"),
+        WindowsError::Select(s) => anyhow::Error::new(s).context("selecting subset"),
+    })?;
     Ok(active)
 }
 

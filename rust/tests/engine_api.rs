@@ -15,7 +15,9 @@
 //!    fails mid-overlap.
 
 use graft::coordinator::{MergePolicy, PooledSelector, SelectWindow, ShardedSelector};
-use graft::engine::{EngineBuilder, EngineError, ExecShape, RankMode, SelectionEngine};
+use graft::engine::{
+    EngineBuilder, EngineError, ExecShape, RankMode, SelectionEngine, WindowsError,
+};
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -280,7 +282,7 @@ fn graft_facade_matches_pre_engine_wiring_at_every_shape() {
         let mut direct = GraftSelector::new(run_policy(adaptive));
         for b in &batches {
             let want = direct.select(&b.view(), 16);
-            assert_eq!(eng.select(&b.view()).indices, &want[..], "{ctx} serial");
+            assert_eq!(eng.select(&b.view()).expect("healthy").indices, &want[..], "{ctx} serial");
         }
         assert_eq!(eng.rank_stats(), direct.rank_stats(), "{ctx} serial accounting");
 
@@ -292,7 +294,11 @@ fn graft_facade_matches_pre_engine_wiring_at_every_shape() {
             let mut out = Vec::new();
             for b in &batches {
                 direct.select_into(&b.view(), 16, &mut ws, &mut out);
-                assert_eq!(eng.select(&b.view()).indices, &out[..], "{ctx} sharded{shards}");
+                assert_eq!(
+                    eng.select(&b.view()).expect("healthy").indices,
+                    &out[..],
+                    "{ctx} sharded{shards}"
+                );
             }
             assert_eq!(eng.rank_stats(), direct.rank_stats(), "{ctx} sharded{shards} accounting");
         }
@@ -309,7 +315,7 @@ fn graft_facade_matches_pre_engine_wiring_at_every_shape() {
             for b in &batches {
                 direct.select_into(&b.view(), 16, &mut ws, &mut out);
                 assert_eq!(
-                    eng.select(&b.view()).indices,
+                    eng.select(&b.view()).expect("healthy").indices,
                     &out[..],
                     "{ctx} pooled shards={shards}"
                 );
@@ -331,7 +337,7 @@ fn maxvol_facade_matches_direct_construction() {
 
     let mut eng = EngineBuilder::new().method("maxvol").budget(24).build().unwrap();
     FastMaxVol.select_into(&owned.view(), 24, &mut ws, &mut want);
-    assert_eq!(eng.select(&owned.view()).indices, &want[..], "serial");
+    assert_eq!(eng.select(&owned.view()).expect("healthy").indices, &want[..], "serial");
 
     for shards in [2usize, 4] {
         let mut eng = EngineBuilder::new()
@@ -344,7 +350,11 @@ fn maxvol_facade_matches_direct_construction() {
             Box::new(FastMaxVol)
         });
         direct.select_into(&owned.view(), 24, &mut ws, &mut want);
-        assert_eq!(eng.select(&owned.view()).indices, &want[..], "sharded{shards}");
+        assert_eq!(
+            eng.select(&owned.view()).expect("healthy").indices,
+            &want[..],
+            "sharded{shards}"
+        );
     }
 
     let mut eng = EngineBuilder::new()
@@ -356,7 +366,7 @@ fn maxvol_facade_matches_direct_construction() {
     let mut direct =
         PooledSelector::from_factory(4, 2, MergePolicy::Hierarchical, |_| Box::new(FastMaxVol));
     direct.select_into(&owned.view(), 24, &mut ws, &mut want);
-    assert_eq!(eng.select(&owned.view()).indices, &want[..], "pooled");
+    assert_eq!(eng.select(&owned.view()).expect("healthy").indices, &want[..], "pooled");
 }
 
 #[test]
@@ -367,7 +377,7 @@ fn seeded_baselines_match_direct_construction_per_shape() {
     let seed = 0xC0FFEE;
     let want = graft::selection::by_name("random", seed).unwrap().select(&owned.view(), 16);
     let mut eng = EngineBuilder::new().method("random").seed(seed).budget(16).build().unwrap();
-    assert_eq!(eng.select(&owned.view()).indices, &want[..], "serial random");
+    assert_eq!(eng.select(&owned.view()).expect("healthy").indices, &want[..], "serial random");
     // Non-shardable → a pool hosts it at ONE shard: same instance, same
     // seed, same subset.
     let mut eng = EngineBuilder::new()
@@ -379,7 +389,11 @@ fn seeded_baselines_match_direct_construction_per_shape() {
         .unwrap();
     assert!(!eng.notes().is_empty(), "downgrade must be noted");
     assert_eq!(eng.shape(), ExecShape::Pooled { shards: 1, workers: 2, overlap: false });
-    assert_eq!(eng.select(&owned.view()).indices, &want[..], "pool-hosted random");
+    assert_eq!(
+        eng.select(&owned.view()).expect("healthy").indices,
+        &want[..],
+        "pool-hosted random"
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -399,7 +413,11 @@ fn non_shardable_method_downgrades_to_serial_with_note() {
     let note = eng.notes().join("\n");
     assert!(note.contains("not shardable"), "note explains the downgrade: {note}");
     let want = El2n.select(&owned.view(), 16);
-    assert_eq!(eng.select(&owned.view()).indices, &want[..], "downgraded ≡ serial el2n");
+    assert_eq!(
+        eng.select(&owned.view()).expect("healthy").indices,
+        &want[..],
+        "downgraded ≡ serial el2n"
+    );
 }
 
 #[test]
@@ -409,14 +427,18 @@ fn selection_reports_budget_window_and_decision() {
     let mut eng = EngineBuilder::new().method("graft").fraction(0.25).build().unwrap();
     assert_eq!(eng.budget_for(64), 16);
     {
-        let sel = eng.select(&owned.view());
+        let sel = eng.select(&owned.view()).expect("healthy");
         assert_eq!(sel.budget, 16);
         assert_eq!(sel.indices.len(), 16, "strict GRAFT honours the budget");
         assert_eq!(sel.window, 0);
         let d = sel.decision.expect("serial GRAFT reports its decision");
         assert!(d.rank >= 1);
     }
-    assert_eq!(eng.select(&owned.view()).window, 1, "window counter advances");
+    assert_eq!(
+        eng.select(&owned.view()).expect("healthy").window,
+        1,
+        "window counter advances"
+    );
 
     // Sharded gradient-aware path: the authority's decision is surfaced.
     let mut eng = EngineBuilder::new()
@@ -425,7 +447,7 @@ fn selection_reports_budget_window_and_decision() {
         .exec(ExecShape::Sharded { shards: 2 })
         .build()
         .unwrap();
-    let sel = eng.select(&owned.view());
+    let sel = eng.select(&owned.view()).expect("healthy");
     let d = sel.decision.expect("grad-merge authority decides");
     assert_eq!(d.rank, 16, "strict authority keeps the budget");
     assert_eq!(sel.indices.len(), 16);
@@ -503,11 +525,18 @@ fn windows_assemble_error_mid_overlap_drains_and_propagates() {
         |_wi, _win, _winners| consumed += 1,
     );
     let err = res.expect_err("assembly error must propagate");
-    assert!(err.contains("window 2"), "{err}");
+    let WindowsError::Assemble(msg) = err else {
+        panic!("assembly failure must surface as WindowsError::Assemble, got {err:?}");
+    };
+    assert!(msg.contains("window 2"), "{msg}");
     // The in-flight epoch was drained by the pending guard: the engine
     // stays usable for the next refresh.
     let owned = random_owned(96, 12, 16, 4, 603);
-    assert_eq!(eng.select(&owned.view()).indices.len(), 16, "engine usable after error");
+    assert_eq!(
+        eng.select(&owned.view()).expect("healthy").indices.len(),
+        16,
+        "engine usable after error"
+    );
 }
 
 #[test]

@@ -1,0 +1,582 @@
+//! Fault-injection suite (PR 6) — the headline robustness property:
+//!
+//! **Under any injected fault schedule, selection either returns the
+//! bit-identical fault-free subset after retries, or a recorded
+//! degradation — never a panic, a hang, or a silently different
+//! subset.**
+//!
+//! Pinned here as shapes × faults × policies:
+//!
+//! * shapes — `Serial`, `Sharded{2,4}`, `Pooled{2×2, 4×2}`;
+//! * faults — injected shard panic, worker death, worker delay past the
+//!   per-job deadline (via [`graft::faults::FaultPlan`]), poisoned
+//!   (non-finite) input rows, numerical breakdown (identical rows
+//!   tripping the MaxVol pivot clamp);
+//! * policies — `Fail` (typed error, engine stays usable), `Retry`
+//!   (bit-identical recovery), `Degrade` (quarantine + ladder, every
+//!   rung recorded in `Selection::degradations`).
+//!
+//! Zero-fault runs must be bit-identical under every policy, so opting
+//! into fault tolerance can never change healthy results.
+//!
+//! `GRAFT_FAULT_STRESS=1` (the CI `fault-stress` job) multiplies the
+//! iteration counts ~20× and should run serialized
+//! (`--test-threads=1`).
+
+use std::time::Duration;
+
+use graft::coordinator::SelectWindow;
+use graft::engine::{
+    Degradation, EngineBuilder, ExecShape, FaultPolicy, RankMode, SelectError, SelectionEngine,
+    WindowsError,
+};
+use graft::faults::FaultPlan;
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::BatchView;
+
+const EPS: f64 = 0.05;
+const K: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Synthetic batch builders (mirrors tests/engine_api.rs)
+// ---------------------------------------------------------------------------
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    classes: usize,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+
+    fn into_window(self) -> SelectWindow {
+        SelectWindow {
+            features: self.features,
+            grads: self.grads,
+            losses: self.losses,
+            labels: self.labels,
+            preds: self.preds,
+            classes: self.classes,
+            row_ids: self.row_ids,
+        }
+    }
+
+    /// Copy without the given rows (ascending) — the expected-value twin
+    /// of the engine's quarantine filter.
+    fn without_rows(&self, drop: &[usize]) -> Owned {
+        let (rc, ec) = (self.features.cols(), self.grads.cols());
+        let kept: Vec<usize> =
+            (0..self.features.rows()).filter(|i| !drop.contains(i)).collect();
+        let mut feat = Vec::new();
+        let mut grad = Vec::new();
+        let mut out = Owned {
+            features: Mat::from_vec(0, rc, Vec::new()),
+            grads: Mat::from_vec(0, ec, Vec::new()),
+            losses: Vec::new(),
+            labels: Vec::new(),
+            preds: Vec::new(),
+            classes: self.classes,
+            row_ids: Vec::new(),
+        };
+        for &i in &kept {
+            feat.extend_from_slice(&self.features.data()[i * rc..(i + 1) * rc]);
+            grad.extend_from_slice(&self.grads.data()[i * ec..(i + 1) * ec]);
+            out.losses.push(self.losses[i]);
+            out.labels.push(self.labels[i]);
+            out.preds.push(self.preds[i]);
+            out.row_ids.push(self.row_ids[i]);
+        }
+        out.features = Mat::from_vec(kept.len(), rc, feat);
+        out.grads = Mat::from_vec(kept.len(), ec, grad);
+        out
+    }
+}
+
+fn random_owned(k: usize, rc: usize, e: usize, classes: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    Owned {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+fn healthy_batch() -> Owned {
+    random_owned(K, 4, 6, 2, 42)
+}
+
+/// Healthy batch with NaN planted in rows 5 and 17.
+fn poisoned_batch() -> Owned {
+    let mut b = healthy_batch();
+    b.features[(5, 0)] = f64::NAN;
+    b.grads[(17, 2)] = f64::INFINITY;
+    b
+}
+
+/// Identical feature rows: rank 1, so MaxVol past the first pivot trips
+/// the degenerate-pivot clamp — deterministic numerical breakdown.
+fn degenerate_batch() -> Owned {
+    let mut b = healthy_batch();
+    b.features = Mat::from_fn(K, 4, |_, j| (j + 1) as f64);
+    b
+}
+
+// ---------------------------------------------------------------------------
+// Engine builders over the shape × policy grid
+// ---------------------------------------------------------------------------
+
+/// Every execution shape the headline property quantifies over:
+/// (label, shape, shards, workers).
+fn shapes() -> Vec<(&'static str, ExecShape, usize, usize)> {
+    vec![
+        ("serial", ExecShape::Serial, 1, 1),
+        ("sharded2", ExecShape::Sharded { shards: 2 }, 2, 1),
+        ("sharded4", ExecShape::Sharded { shards: 4 }, 4, 1),
+        ("pooled2x2", ExecShape::Pooled { shards: 2, workers: 2, overlap: false }, 2, 2),
+        ("pooled4x2", ExecShape::Pooled { shards: 4, workers: 2, overlap: false }, 4, 2),
+    ]
+}
+
+fn retry(max: u32) -> FaultPolicy {
+    FaultPolicy::Retry { max, backoff: Duration::ZERO }
+}
+
+fn build(shape: ExecShape, policy: FaultPolicy) -> SelectionEngine {
+    EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .rank(RankMode::Adaptive { epsilon: EPS })
+        .seed(11)
+        .exec(shape)
+        .fault_policy(policy)
+        .build()
+        .expect("valid configuration")
+}
+
+/// Same, with a short per-job deadline so dead/wedged pool workers are
+/// probed quickly instead of after the generous production default.
+fn build_deadline(shape: ExecShape, policy: FaultPolicy) -> SelectionEngine {
+    EngineBuilder::new()
+        .method("graft")
+        .fraction(0.25)
+        .rank(RankMode::Adaptive { epsilon: EPS })
+        .seed(11)
+        .exec(shape)
+        .fault_policy(policy)
+        .job_deadline(Duration::from_millis(50))
+        .build()
+        .expect("valid configuration")
+}
+
+/// Fault-free reference subset for one shape (fresh `Fail` engine).
+fn reference(shape: ExecShape, batch: &Owned) -> Vec<usize> {
+    build(shape, FaultPolicy::Fail).select(&batch.view()).expect("healthy").indices.to_vec()
+}
+
+/// Fault-free reference stream: `count` consecutive selects on the same
+/// batch (the adaptive rank authority accumulates across them, so the
+/// stream — not just the first subset — is the bit-identity target).
+fn reference_stream(shape: ExecShape, batch: &Owned, count: usize) -> Vec<Vec<usize>> {
+    let mut eng = build(shape, FaultPolicy::Fail);
+    (0..count).map(|_| eng.select(&batch.view()).expect("healthy").indices.to_vec()).collect()
+}
+
+fn fault_iters(base: usize, stress: usize) -> usize {
+    if std::env::var("GRAFT_FAULT_STRESS").ok().as_deref() == Some("1") {
+        stress
+    } else {
+        base
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero faults: policy invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_fault_runs_are_policy_invariant_across_shapes() {
+    let batch = healthy_batch();
+    let serial_ref = reference(ExecShape::Serial, &batch);
+    for (name, shape, _, _) in shapes() {
+        for policy in [FaultPolicy::Fail, retry(2), FaultPolicy::Degrade] {
+            let mut eng = build(shape, policy);
+            let sel = eng.select(&batch.view()).expect("zero-fault select must succeed");
+            assert_eq!(
+                sel.indices, &serial_ref[..],
+                "{name}/{policy:?}: zero-fault subset must be policy- and shape-invariant"
+            );
+            assert!(sel.degradations.is_empty(), "{name}/{policy:?}: nothing degraded");
+            let stats = eng.fault_stats();
+            assert_eq!(stats.retries, 0, "{name}/{policy:?}");
+            assert_eq!(stats.respawns, 0, "{name}/{policy:?}");
+            assert_eq!(stats.quarantined_rows, 0, "{name}/{policy:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Injected shard panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_shard_panic_retries_bit_identically_across_shapes() {
+    let batch = healthy_batch();
+    for (name, shape, shards, _) in shapes() {
+        let want = reference(shape, &batch);
+        let faulted_shard = if shards > 1 { 1 } else { 0 };
+        for _ in 0..fault_iters(2, 40) {
+            let mut eng = build(shape, retry(2));
+            eng.set_fault_injector(Some(FaultPlan::new().panic_shard(faulted_shard, 1).arc()));
+            let got = eng
+                .select(&batch.view())
+                .unwrap_or_else(|e| panic!("{name}: retry must absorb a one-shot panic: {e}"))
+                .indices
+                .to_vec();
+            assert_eq!(got, want, "{name}: successful retry must be bit-identical");
+            assert!(eng.fault_stats().retries >= 1, "{name}: the retry must be counted");
+            assert!(eng.last_degradations().is_empty(), "{name}: recovery is not degradation");
+        }
+    }
+}
+
+#[test]
+fn injected_shard_panic_under_fail_is_typed_and_engine_stays_usable() {
+    let batch = healthy_batch();
+    for (name, shape, _, _) in shapes() {
+        let want = reference(shape, &batch);
+        let mut eng = build(shape, FaultPolicy::Fail);
+        eng.set_fault_injector(Some(FaultPlan::new().panic_shard(0, 1).arc()));
+        let err = eng.select(&batch.view()).expect_err("Fail must surface the panic");
+        assert!(
+            matches!(err, SelectError::ShardFailure { .. }),
+            "{name}: expected ShardFailure, got {err:?}"
+        );
+        // The fault was one-shot and the failure drained cleanly: the
+        // same engine's next select is healthy and bit-identical.
+        let got = eng.select(&batch.view()).expect("engine must stay usable").indices.to_vec();
+        assert_eq!(got, want, "{name}: post-error select must be bit-identical");
+    }
+}
+
+#[test]
+fn exhausted_retries_under_degrade_walk_the_ladder() {
+    let batch = healthy_batch();
+    let mut outputs: Vec<Vec<usize>> = Vec::new();
+    for (name, shape, _, _) in shapes() {
+        let mut eng = build(shape, FaultPolicy::Degrade);
+        eng.set_fault_injector(Some(FaultPlan::new().panic_shard_always(0).arc()));
+        let sel = eng.select(&batch.view()).expect("Degrade never fails on a healthy batch");
+        assert!(
+            matches!(sel.degradations, [Degradation::FeatureOnlyMaxVol { .. }]),
+            "{name}: expected the feature-only rung, got {:?}",
+            sel.degradations
+        );
+        assert!(sel.decision.is_none(), "{name}: a degraded subset has no rank decision");
+        outputs.push(sel.indices.to_vec());
+    }
+    // The ladder's feature-only MaxVol runs serially on the engine
+    // thread, so every shape degrades to the same subset.
+    for (i, out) in outputs.iter().enumerate() {
+        assert_eq!(out, &outputs[0], "ladder output must not depend on the shape (#{i})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poisoned input rows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poisoned_rows_surface_typed_error_under_fail_and_retry() {
+    let batch = poisoned_batch();
+    for (name, shape, _, _) in shapes() {
+        for policy in [FaultPolicy::Fail, retry(3)] {
+            let mut eng = build(shape, policy);
+            let err = eng.select(&batch.view()).expect_err("poisoned input must error");
+            assert_eq!(
+                err,
+                SelectError::PoisonedInput { rows: vec![5, 17] },
+                "{name}/{policy:?}"
+            );
+            // Not retryable: the same rows would poison every attempt.
+            assert_eq!(eng.fault_stats().retries, 0, "{name}/{policy:?}");
+        }
+    }
+}
+
+#[test]
+fn poisoned_rows_under_degrade_are_quarantined_and_winners_remapped() {
+    let batch = poisoned_batch();
+    let clean = batch.without_rows(&[5, 17]);
+    let kept: Vec<usize> = (0..K).filter(|i| *i != 5 && *i != 17).collect();
+    for (name, shape, _, _) in shapes() {
+        // Expected: exactly the subset the same shape picks on the
+        // filtered batch, mapped back to original batch-local indices.
+        let expect: Vec<usize> =
+            reference(shape, &clean).into_iter().map(|i| kept[i]).collect();
+        let mut eng = build(shape, FaultPolicy::Degrade);
+        let sel = eng.select(&batch.view()).expect("Degrade quarantines instead of failing");
+        assert_eq!(
+            sel.degradations,
+            &[Degradation::Quarantined { rows: vec![5, 17] }],
+            "{name}"
+        );
+        assert_eq!(sel.indices, &expect[..], "{name}: winners must map back to the original batch");
+        assert!(!sel.indices.contains(&5) && !sel.indices.contains(&17), "{name}");
+        assert_eq!(eng.fault_stats().quarantined_rows, 2, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Numerical breakdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn numerical_breakdown_is_typed_and_never_retried() {
+    let batch = degenerate_batch();
+    for (name, shape, _, _) in shapes() {
+        for policy in [FaultPolicy::Fail, retry(3)] {
+            let mut eng = build(shape, policy);
+            let err = eng.select(&batch.view()).expect_err("degenerate pivots must error");
+            assert!(
+                matches!(err, SelectError::NumericalBreakdown { .. }),
+                "{name}/{policy:?}: expected NumericalBreakdown, got {err:?}"
+            );
+            // Deterministic breakdown: retrying would be useless, so the
+            // retry counter must stay at zero even under Retry.
+            assert_eq!(eng.fault_stats().retries, 0, "{name}/{policy:?}");
+        }
+    }
+}
+
+#[test]
+fn numerical_breakdown_under_degrade_takes_the_seeded_random_rung() {
+    let batch = degenerate_batch();
+    let r = build(ExecShape::Serial, FaultPolicy::Fail).budget_for(K);
+    for (name, shape, _, _) in shapes() {
+        let run = |mut eng: SelectionEngine| {
+            let sel = eng.select(&batch.view()).expect("Degrade never fails");
+            assert!(
+                matches!(sel.degradations, [Degradation::SeededRandom { .. }]),
+                "{name}: feature-only MaxVol breaks the same way, so the ladder must \
+                 skip straight to seeded random; got {:?}",
+                sel.degradations
+            );
+            sel.indices.to_vec()
+        };
+        let a = run(build(shape, FaultPolicy::Degrade));
+        let b = run(build(shape, FaultPolicy::Degrade));
+        assert_eq!(a, b, "{name}: the random rung is deterministic in (seed, window)");
+        assert_eq!(a.len(), r, "{name}: the fallback still honours the budget");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), a.len(), "{name}: unique rows");
+        assert!(sorted.iter().all(|&i| i < K), "{name}: in range");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker death and deadline delays (pooled shapes)
+// ---------------------------------------------------------------------------
+
+fn pooled_shapes() -> Vec<(&'static str, ExecShape)> {
+    shapes()
+        .into_iter()
+        .filter(|(_, s, _, _)| matches!(s, ExecShape::Pooled { .. }))
+        .map(|(n, s, _, _)| (n, s))
+        .collect()
+}
+
+#[test]
+fn worker_death_is_respawned_and_retried_bit_identically() {
+    let batch = healthy_batch();
+    for (name, shape) in pooled_shapes() {
+        let want = reference(shape, &batch);
+        for _ in 0..fault_iters(2, 40) {
+            let mut eng = build_deadline(shape, retry(2));
+            eng.set_fault_injector(Some(FaultPlan::new().kill_worker(0).arc()));
+            let got = eng
+                .select(&batch.view())
+                .unwrap_or_else(|e| panic!("{name}: death must be recovered: {e}"))
+                .indices
+                .to_vec();
+            assert_eq!(got, want, "{name}: recovery after a worker death is bit-identical");
+            let stats = eng.fault_stats();
+            assert!(stats.respawns >= 1, "{name}: the dead worker must be respawned");
+            assert!(stats.retries >= 1, "{name}: its lost job must be retried");
+            // The respawned worker serves the next epoch normally.
+            let again = eng.select(&batch.view()).expect("healed pool").indices.to_vec();
+            assert_eq!(again, want, "{name}");
+        }
+    }
+}
+
+#[test]
+fn worker_delay_past_deadline_is_requeued_and_stays_bit_identical() {
+    let batch = healthy_batch();
+    for (name, shape) in pooled_shapes() {
+        let want = reference(shape, &batch);
+        for _ in 0..fault_iters(2, 20) {
+            let mut eng = build_deadline(shape, retry(2));
+            eng.set_fault_injector(Some(
+                FaultPlan::new().delay_worker(0, Duration::from_millis(250)).arc(),
+            ));
+            let got = eng
+                .select(&batch.view())
+                .unwrap_or_else(|e| panic!("{name}: a wedged worker must not fail: {e}"))
+                .indices
+                .to_vec();
+            assert_eq!(got, want, "{name}: requeued shard must produce the same subset");
+            assert!(
+                eng.fault_stats().deadline_requeues >= 1,
+                "{name}: the deadline requeue must be counted"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded schedule sweeps — the headline property, quantified
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_fault_schedules_converge_bit_identically_under_retry() {
+    let batch = healthy_batch();
+    let windows = 3usize;
+    for (name, shape, shards, workers) in shapes() {
+        let refs = reference_stream(shape, &batch, windows);
+        for seed in 0..fault_iters(4, 24) as u64 {
+            let plan = FaultPlan::seeded(seed, shards, workers, windows as u64);
+            // Budget ≥ the worst case: every event of the plan hitting
+            // the same shard in the same window.
+            let mut eng = build_deadline(shape, retry(3));
+            eng.set_fault_injector(Some(plan.arc()));
+            for (w, want) in refs.iter().enumerate() {
+                let got = eng
+                    .select(&batch.view())
+                    .unwrap_or_else(|e| {
+                        panic!("{name}/seed {seed}/window {w}: retry must converge: {e}")
+                    })
+                    .indices
+                    .to_vec();
+                assert_eq!(
+                    &got, want,
+                    "{name}/seed {seed}/window {w}: one-shot schedules must end bit-identical"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_schedules_under_degrade_never_fail_and_record_any_drift() {
+    let batch = healthy_batch();
+    let windows = 3usize;
+    for (name, shape, shards, workers) in shapes() {
+        let refs = reference_stream(shape, &batch, windows);
+        for seed in 0..fault_iters(4, 24) as u64 {
+            let mut eng = build_deadline(shape, FaultPolicy::Degrade);
+            eng.set_fault_injector(Some(
+                FaultPlan::seeded(seed, shards, workers, windows as u64).arc(),
+            ));
+            for w in 0..windows {
+                let sel = eng.select(&batch.view()).unwrap_or_else(|e| {
+                    panic!("{name}/seed {seed}/window {w}: Degrade must never fail: {e}")
+                });
+                // The headline property: either the fault-free subset, or
+                // the drift is recorded — never silent.
+                assert!(
+                    sel.indices == &refs[w][..] || !sel.degradations.is_empty(),
+                    "{name}/seed {seed}/window {w}: subset drifted without a recorded \
+                     degradation: got {:?}, want {:?}",
+                    sel.indices,
+                    refs[w]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming windows under faults (pooled assembly-time quarantine)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pooled_windows_quarantine_poisoned_window_under_degrade() {
+    let shape = ExecShape::Pooled { shards: 2, workers: 2, overlap: false };
+    let mut eng = build(shape, FaultPolicy::Degrade);
+    let mut consumed: Vec<(usize, usize, Vec<usize>)> = Vec::new();
+    eng.windows::<String, _, _>(
+        3,
+        |wi, _ext| {
+            let mut b = random_owned(K, 4, 6, 2, 100 + wi as u64);
+            if wi == 1 {
+                b.features[(5, 0)] = f64::NAN;
+            }
+            Ok(b.into_window())
+        },
+        |wi, win, winners| consumed.push((wi, win.features.rows(), winners.to_vec())),
+    )
+    .expect("Degrade quarantines the poisoned window instead of failing");
+    assert_eq!(consumed.len(), 3, "every window must be consumed");
+    assert_eq!(consumed[0].1, K);
+    assert_eq!(consumed[1].1, K - 1, "the quarantined row is compacted out of window 1");
+    assert_eq!(consumed[2].1, K);
+    assert!(
+        eng.last_degradations()
+            .iter()
+            .any(|d| matches!(d, Degradation::Quarantined { rows } if rows == &[5])),
+        "the quarantine must be recorded: {:?}",
+        eng.last_degradations()
+    );
+    assert_eq!(eng.fault_stats().quarantined_rows, 1);
+}
+
+#[test]
+fn pooled_windows_poisoned_window_fails_typed_under_fail() {
+    let shape = ExecShape::Pooled { shards: 2, workers: 2, overlap: false };
+    let mut eng = build(shape, FaultPolicy::Fail);
+    let mut consumed: Vec<usize> = Vec::new();
+    let err = eng
+        .windows::<String, _, _>(
+            3,
+            |wi, _ext| {
+                let mut b = random_owned(K, 4, 6, 2, 100 + wi as u64);
+                if wi == 1 {
+                    b.features[(5, 0)] = f64::NAN;
+                }
+                Ok(b.into_window())
+            },
+            |wi, _win, _winners| consumed.push(wi),
+        )
+        .expect_err("a poisoned window under Fail aborts the session");
+    assert_eq!(
+        err,
+        WindowsError::Select(SelectError::PoisonedInput { rows: vec![5] })
+    );
+    assert_eq!(consumed, vec![0], "only the healthy window before the poison lands");
+}

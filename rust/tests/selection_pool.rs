@@ -24,12 +24,22 @@
 //!
 //! `GRAFT_POOL_STRESS=1` (the CI `pool-stress` job, with
 //! `--test-threads=1`) raises the iteration counts by ~20×.
+//!
+//! 6. **Fault-tolerance regressions** (fault-tolerance PR): a worker that
+//!    panics twice in a row is respawned twice and the retried epoch is
+//!    bit-identical; a panic arriving while an errored epoch drains is
+//!    absorbed; killing every worker surfaces a typed [`SelectError`]
+//!    instead of deadlocking.  `GRAFT_FAULT_STRESS=1` (the CI
+//!    `fault-stress` job, `--test-threads=1`) raises these counts ~20×.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
 
 use graft::coordinator::{
-    merge_winners, run_windows, MergePolicy, PooledSelector, SelectWindow, ShardedSelector,
+    merge_winners, run_windows, FaultPolicy, MergePolicy, PooledSelector, SelectError,
+    SelectWindow, ShardedSelector, WindowsError,
 };
+use graft::faults::FaultPlan;
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -166,7 +176,7 @@ fn pool_single_shard_hosts_any_selector_bit_identically() {
         // the identical call sequence: the pool-hosted instance must track
         // it draw for draw.
         let mut twin = by_name(method, 7).unwrap();
-        let mut p = PooledSelector::from_factory(1, 1, MergePolicy::Hierarchical, |_| {
+        let mut p = PooledSelector::from_factory(1, 1, MergePolicy::Hierarchical, move |_| {
             by_name(method, 7).unwrap()
         });
         for rep in 0..3 {
@@ -503,7 +513,7 @@ fn assemble_error_mid_overlap_drains_and_propagates() {
         },
         |_, _, _| consumed += 1,
     );
-    assert_eq!(err, Err("assembly failed"));
+    assert_eq!(err, Err(WindowsError::Assemble("assembly failed")));
     // Windows 0..=1 finished before the wi=3 assembly ran (wi=2 was
     // in flight and is drained, not consumed).
     assert_eq!(consumed, 2, "exactly the pre-error windows consume");
@@ -512,4 +522,119 @@ fn assemble_error_mid_overlap_drains_and_propagates() {
     let owned = random_owned(128, 8, 8, 2, 79);
     let reference = scoped(4).with_parallel(false).select(&owned.view(), 16);
     assert_eq!(p.select(&owned.view(), 16), reference, "pool unusable after aborted overlap");
+}
+
+// ---------------------------------------------------------------------------
+// 6. Fault-tolerance regressions (fault-tolerance PR)
+// ---------------------------------------------------------------------------
+
+/// Iteration count for the fault regressions: `GRAFT_FAULT_STRESS=1`
+/// (the CI `fault-stress` job, with `--test-threads=1`) raises it ~20×.
+fn fault_iters(base: usize, stress: usize) -> usize {
+    let on = std::env::var("GRAFT_FAULT_STRESS").map(|v| v != "0").unwrap_or(false);
+    if on {
+        stress
+    } else {
+        base
+    }
+}
+
+/// The typed epoch API the engine uses (`select_into` keeps the legacy
+/// panicking contract; these suites pin the `Result` surface).
+fn typed_select(
+    p: &mut PooledSelector,
+    owned: &Owned,
+    r: usize,
+) -> Result<Vec<usize>, SelectError> {
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    let view = owned.view();
+    p.begin(&view, r).finish(&mut ws, &mut out)?;
+    Ok(out)
+}
+
+#[test]
+fn worker_panicking_twice_in_a_row_is_respawned_and_retried_bit_identically() {
+    let owned = random_owned(256, 12, 8, 4, 83);
+    let reference = scoped(4).with_parallel(false).select(&owned.view(), 24);
+    for rep in 0..fault_iters(3, 60) {
+        let mut p = pooled(4, 2);
+        p.set_fault_policy(FaultPolicy::Retry { max: 3, backoff: Duration::ZERO });
+        // Shard 1's job panics on its next two runs: the hosting worker is
+        // respawned after each, and the third attempt must land the exact
+        // fault-free subset.
+        p.set_fault_injector(Some(FaultPlan::new().panic_shard_times(1, 2).arc()));
+        let got = typed_select(&mut p, &owned, 24).expect("retry budget absorbs both panics");
+        assert_eq!(got, reference, "retried epoch must be bit-identical (rep={rep})");
+        let st = p.stats();
+        assert!(st.respawns >= 2, "two panics → two respawns, got {st:?} (rep={rep})");
+        assert!(st.retries >= 2, "two panics → two retries, got {st:?} (rep={rep})");
+        // Injector spent: the next epoch on the same pool is healthy.
+        assert_eq!(typed_select(&mut p, &owned, 24).unwrap(), reference, "rep={rep}");
+    }
+}
+
+#[test]
+fn panic_during_drain_of_errored_epoch_is_absorbed() {
+    // Two shards panic in one epoch under `Fail`: the first panicked
+    // result types the error, the second arrives while the epoch drains
+    // and must be absorbed (respawn, no double count) — the pool stays
+    // fully usable.
+    let owned = random_owned(256, 12, 8, 4, 89);
+    let reference = scoped(4).with_parallel(false).select(&owned.view(), 24);
+    for rep in 0..fault_iters(3, 60) {
+        let mut p = pooled(4, 2);
+        p.set_fault_injector(Some(FaultPlan::new().panic_shard(0, 1).panic_shard(3, 1).arc()));
+        let err = typed_select(&mut p, &owned, 24).expect_err("Fail surfaces the panic");
+        assert!(
+            matches!(err, SelectError::ShardFailure { .. }),
+            "typed shard failure, got {err} (rep={rep})"
+        );
+        assert_eq!(
+            typed_select(&mut p, &owned, 24).unwrap(),
+            reference,
+            "pool unusable after drained panic (rep={rep})"
+        );
+    }
+}
+
+#[test]
+fn all_workers_dead_surfaces_typed_error_not_deadlock() {
+    let owned = random_owned(256, 12, 8, 4, 97);
+    let reference = scoped(4).with_parallel(false).select(&owned.view(), 24);
+    for rep in 0..fault_iters(2, 40) {
+        let mut p = pooled(4, 2);
+        p.set_job_deadline(Duration::from_millis(50));
+        p.set_fault_injector(Some(FaultPlan::new().kill_all_workers(2).arc()));
+        // Every worker dies mid-epoch.  The deadline probe proves the
+        // threads dead, writes their jobs off, and `finish` returns a
+        // typed error instead of waiting forever on answers that cannot
+        // come (the pre-PR code would hang here).
+        let err = typed_select(&mut p, &owned, 24).expect_err("dead pool must fail typed");
+        assert!(
+            matches!(err, SelectError::ShardFailure { .. } | SelectError::PoolUnavailable),
+            "typed death, got {err} (rep={rep})"
+        );
+        // The probe respawned the dead slots: the same pool heals.
+        assert!(p.stats().respawns >= 2, "dead workers must be respawned (rep={rep})");
+        assert_eq!(
+            typed_select(&mut p, &owned, 24).unwrap(),
+            reference,
+            "pool must heal after total worker death (rep={rep})"
+        );
+    }
+}
+
+#[test]
+fn all_workers_dead_under_retry_recovers_bit_identically() {
+    let owned = random_owned(256, 12, 8, 4, 101);
+    let reference = scoped(4).with_parallel(false).select(&owned.view(), 24);
+    for rep in 0..fault_iters(2, 40) {
+        let mut p = pooled(4, 2);
+        p.set_job_deadline(Duration::from_millis(50));
+        p.set_fault_policy(FaultPolicy::Retry { max: 2, backoff: Duration::ZERO });
+        p.set_fault_injector(Some(FaultPlan::new().kill_all_workers(2).arc()));
+        let got = typed_select(&mut p, &owned, 24).expect("retry heals total worker death");
+        assert_eq!(got, reference, "healed epoch must be bit-identical (rep={rep})");
+    }
 }
