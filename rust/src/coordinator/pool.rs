@@ -38,12 +38,15 @@
 //!   [`Selector::select_into`] compatibility wrapper still panics, for the
 //!   legacy call sites that expect it).
 //! * **No hangs**: a worker that blows the per-job deadline gets its shard
-//!   requeued on a fresh worker ([`PoolStats::deadline_requeues`]) and a
-//!   proven-dead worker ([`std::thread::JoinHandle::is_finished`]) has its
-//!   lost jobs written off and retried — `finish` cannot wedge on a dead
-//!   thread.  (A worker that is alive but wedged *forever* with no retry
-//!   budget still blocks `finish`: the raw view pointer it holds makes
-//!   abandoning a live worker unsound.)
+//!   requeued on a fresh worker ([`PoolStats::deadline_requeues`]).  Every
+//!   submission is tagged with the id of the thread it was handed to, and
+//!   is written off (and retried) only when *that specific thread* is
+//!   proven finished ([`std::thread::JoinHandle::is_finished`]) — current
+//!   slot or retired predecessor alike — so `finish` cannot wedge on a
+//!   dead thread, and a submission on a live-but-wedged thread is never
+//!   abandoned.  (A worker that is alive but wedged *forever* with no
+//!   retry budget still blocks `finish`: the raw view pointer it holds
+//!   makes abandoning a live worker unsound.)
 //! * **Clean shutdown**: dropping the pool (or calling
 //!   [`PooledSelector::shutdown`] — idempotent) closes the job channels,
 //!   joins every worker (including retired ones) with the shared
@@ -67,8 +70,12 @@
 //! pointee provably outlives every worker-side dereference.  The fault
 //! paths preserve it: a deadline requeue *adds* a duplicate submission and
 //! keeps draining both results (the late one is discarded, never
-//! abandoned), and a job is only written off once `is_finished()` proves
-//! its worker's thread — and therefore any dereference of the view — gone.
+//! abandoned), and each submission records the id of the thread it was
+//! handed to, so it is only written off once `is_finished()` proves that
+//! specific thread — and therefore any dereference of the view on it —
+//! gone.  A requeue duplicate on a fresh thread is accounted separately
+//! from the wedged original: the replacement dying never writes off the
+//! original still running on a live retired thread.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -134,19 +141,33 @@ struct Job {
     range: Range<usize>,
     budget: usize,
     epoch: u64,
+    /// Id of the thread this job was handed to (echoed into [`Done`]);
+    /// the coordinator's per-submission accounting key.
+    owner: u64,
     winners: Vec<usize>,
     want_grads: bool,
     grads: ShardGrads,
 }
 
-/// One shard result.  `epoch` lets the coordinator discard results from an
-/// abandoned epoch while still recycling their buffers.
+/// One shard result.  `epoch` and `owner` let the coordinator match a
+/// result to the exact submission it answers — and discard results from an
+/// abandoned epoch or an already-written-off submission while still
+/// recycling their buffers (into the spare lists, never a shard slot).
 struct Done {
     shard: usize,
     epoch: u64,
+    owner: u64,
     winners: Vec<usize>,
     grads: ShardGrads,
     panicked: bool,
+}
+
+/// A worker thread plus the monotonically-assigned id the coordinator uses
+/// to account submissions to it (ids are never reused, so a stale result
+/// can never be confused with a live submission's).
+struct WorkerThread {
+    id: u64,
+    handle: JoinHandle<()>,
 }
 
 /// The selector factory a pool retains so it can respawn a worker with
@@ -170,12 +191,16 @@ pub struct SelectionPool {
     /// channel never disconnects while the pool lives, and drain timeouts
     /// (not `Err`) are the all-workers-dead signal.
     done_tx: SyncSender<Done>,
-    /// Live worker handles, one per worker slot (probed with
+    /// Live worker threads, one per worker slot (probed with
     /// `is_finished` by the deadline path; replaced on respawn).
-    handles: Vec<JoinHandle<()>>,
-    /// Replaced worker threads, joined at shutdown.  A retired worker has
-    /// lost its job sender, so it winds down as soon as its queue drains.
-    retired: Vec<JoinHandle<()>>,
+    handles: Vec<WorkerThread>,
+    /// Replaced worker threads: joined at shutdown, or reaped early by the
+    /// deadline path once proven finished (which is also what writes off
+    /// any submissions they still owned).  A retired worker has lost its
+    /// job sender, so it winds down as soon as its queue drains.
+    retired: Vec<WorkerThread>,
+    /// Next [`WorkerThread::id`]; monotonic, never reused.
+    next_thread: u64,
     /// Factory for fresh per-shard selector instances (respawn path).
     factory: SelectorFactory,
     /// Deterministic fault injection (tests/benches only; `None` in
@@ -187,9 +212,19 @@ pub struct SelectionPool {
     /// Retained per-shard gradient contexts, round-tripped like `bufs`
     /// (filled by workers only for gradient-aware merges).
     gbufs: Vec<ShardGrads>,
-    /// Per-shard submissions still unaccounted for in the current epoch
-    /// (a deadline requeue makes this 2 until the wedged result lands).
-    inflight: Vec<u32>,
+    /// Free-listed winner buffers recycled from results that did not
+    /// complete their shard (stale epochs, written-off submissions,
+    /// requeue duplicates, contained panics).  Retry submissions draw
+    /// from here; the live shard slots in `bufs` are only ever written by
+    /// the result that actually completes the shard.
+    spare_bufs: Vec<Vec<usize>>,
+    /// Gradient-context twin of `spare_bufs`.
+    spare_gbufs: Vec<ShardGrads>,
+    /// Per-shard owner ids of submissions still unaccounted for in the
+    /// current epoch — the thread each outstanding job was handed to.  A
+    /// deadline requeue gives a shard two owners until the wedged result
+    /// lands (or its thread is proven dead).
+    inflight: Vec<Vec<u64>>,
     /// Per-shard completion flags for the current epoch (first healthy
     /// result wins; duplicates are discarded).
     sdone: Vec<bool>,
@@ -215,20 +250,27 @@ impl SelectionPool {
     fn from_factory(shards: usize, workers: usize, make: SelectorFactory) -> SelectionPool {
         assert!(shards >= 1, "need at least one shard");
         let workers = workers.clamp(1, shards);
-        // Capacity 2·shards + slack: every shard can deliver both an
-        // original and a requeued result without any send ever blocking.
-        let (done_tx, done_rx) = sync_channel::<Done>(2 * shards + 4);
+        // Capacity 4·shards + slack: originals, deadline requeues, and the
+        // write-off retries of a faulted epoch can all deliver without a
+        // send blocking under any realistic retry budget; and while an
+        // epoch is live the drain is consuming, so even a pathological
+        // budget only delays a worker send — it can never wedge shutdown,
+        // whose joins are timeout-guarded.
+        let (done_tx, done_rx) = sync_channel::<Done>(4 * shards + 8);
         let mut pool = SelectionPool {
             txs: Vec::with_capacity(workers),
             done_rx,
             done_tx,
             handles: Vec::with_capacity(workers),
             retired: Vec::new(),
+            next_thread: 0,
             factory: make,
             injector: None,
             bufs: (0..shards).map(|_| Vec::new()).collect(),
             gbufs: (0..shards).map(|_| ShardGrads::default()).collect(),
-            inflight: vec![0; shards],
+            spare_bufs: Vec::new(),
+            spare_gbufs: Vec::new(),
+            inflight: (0..shards).map(|_| Vec::new()).collect(),
             sdone: vec![false; shards],
             attempts: vec![0; shards],
             policy: FaultPolicy::Fail,
@@ -253,7 +295,7 @@ impl SelectionPool {
     /// Build worker `w`'s thread: fresh selector instances for its shards
     /// (`w, w+W, w+2W, …` — the dealing [`worker_loop`] indexes by
     /// `shard / W`), a fresh [`Workspace`], a fresh job channel.
-    fn spawn_worker(&mut self, w: usize) -> (SyncSender<Job>, JoinHandle<()>) {
+    fn spawn_worker(&mut self, w: usize) -> (SyncSender<Job>, WorkerThread) {
         let workers = self.workers();
         let mut sels: Vec<Box<dyn Selector>> = Vec::new();
         let mut s = w;
@@ -265,8 +307,10 @@ impl SelectionPool {
         let (tx, rx) = sync_channel::<Job>(job_depth);
         let done = self.done_tx.clone();
         let injector = self.injector.clone();
+        let id = self.next_thread;
+        self.next_thread += 1;
         let h = std::thread::spawn(move || worker_loop(rx, done, sels, workers, w, injector));
-        (tx, h)
+        (tx, WorkerThread { id, handle: h })
     }
 
     /// Replace worker `w` with a fresh thread + selectors.  The old
@@ -307,8 +351,8 @@ impl SelectionPool {
         // deliver its last result and reach the disconnect — no send can
         // block shutdown.
         self.txs.clear();
-        for h in self.handles.drain(..).chain(self.retired.drain(..)) {
-            if !join_or_log(h, "selection pool worker") {
+        for t in self.handles.drain(..).chain(self.retired.drain(..)) {
+            if !join_or_log(t.handle, "selection pool worker") {
                 self.stats.join_timeouts += 1;
             }
         }
@@ -345,7 +389,8 @@ fn worker_loop(
     let mut grad: Vec<f64> = Vec::new();
     let mut local: Vec<usize> = Vec::new();
     while let Ok(job) = rx.recv() {
-        let Job { view, shard, range, budget, epoch, mut winners, want_grads, mut grads } = job;
+        let Job { view, shard, range, budget, epoch, owner, mut winners, want_grads, mut grads } =
+            job;
         let action = match &injector {
             Some(i) => i.before_shard(ShardCtx { window: epoch, shard, worker }),
             None => FaultAction::None,
@@ -383,7 +428,7 @@ fn worker_loop(
         // The done channel is sized to hold every original + requeued
         // result, so this send never blocks; an Err means the coordinator
         // is gone and the worker can only wind down.
-        if done.send(Done { shard, epoch, winners, grads, panicked }).is_err() {
+        if done.send(Done { shard, epoch, owner, winners, grads, panicked }).is_err() {
             return;
         }
     }
@@ -549,9 +594,14 @@ impl PooledSelector {
                 error: Some(SelectError::PoolUnavailable),
             };
         }
-        // Reset the per-epoch shard accounting (retained buffers).
+        // Reset the per-epoch shard accounting (retained buffers).  Every
+        // inflight list is cleared, not just the live ones: a prior epoch
+        // that ended early (pool unavailable) may have left owners behind,
+        // and their threads are provably gone by then.
+        for infl in self.pool.inflight.iter_mut() {
+            infl.clear();
+        }
         for s in 0..live {
-            self.pool.inflight[s] = 0;
             self.pool.sdone[s] = false;
             self.pool.attempts[s] = 0;
         }
@@ -653,39 +703,48 @@ pub struct Pending<'s, 'v> {
 }
 
 impl Pending<'_, '_> {
-    /// Submit a fresh job for shard `s` with the given buffers; returns
-    /// false (recycling the buffers) if the worker's channel refused it.
+    /// Submit a fresh job for shard `s` with the given buffers, stamped
+    /// with the id of the thread currently serving the shard's slot (the
+    /// submission's accounting key); returns false (recycling the buffers
+    /// into the spare lists) if the worker's channel refused it.
     fn submit_with(&mut self, s: usize, winners: Vec<usize>, grads: ShardGrads) -> bool {
+        let pool = &mut self.sel.pool;
+        let w = s % pool.txs.len();
+        let owner = pool.handles[w].id;
         let job = Job {
             view: ViewPtr::new(self.view),
             shard: s,
             range: self.sel.ranges[s].clone(),
             budget: self.budget,
             epoch: self.epoch,
+            owner,
             winners,
             want_grads: self.want_grads,
             grads,
         };
-        let pool = &mut self.sel.pool;
-        match pool.txs[s % pool.txs.len()].try_send(job) {
+        match pool.txs[w].try_send(job) {
             Ok(()) => {
-                pool.inflight[s] += 1;
+                pool.inflight[s].push(owner);
                 self.outstanding += 1;
                 true
             }
             Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
-                pool.bufs[s] = j.winners;
-                pool.gbufs[s] = j.grads;
+                pool.spare_bufs.push(j.winners);
+                pool.spare_gbufs.push(j.grads);
                 false
             }
         }
     }
 
-    /// [`Pending::submit_with`] with freshly allocated buffers — the
+    /// [`Pending::submit_with`] drawing from the spare buffer lists (the
     /// retry/requeue path, where the original buffers may still be in
-    /// flight on the faulted worker.
+    /// flight on the faulted worker); allocates only when no spares are
+    /// free-listed yet.
     fn submit(&mut self, s: usize) -> bool {
-        self.submit_with(s, Vec::new(), ShardGrads::default())
+        let pool = &mut self.sel.pool;
+        let winners = pool.spare_bufs.pop().unwrap_or_default();
+        let grads = pool.spare_gbufs.pop().unwrap_or_default();
+        self.submit_with(s, winners, grads)
     }
 
     /// Either re-run shard `s` (within the policy's retry budget, counting
@@ -709,31 +768,39 @@ impl Pending<'_, '_> {
         self.error.get_or_insert(SelectError::ShardFailure { shard: s, attempts });
     }
 
-    /// Account one received result: recycle its buffers, and if it
-    /// belongs to this epoch update the shard bookkeeping — first healthy
-    /// result completes the shard, duplicates (deadline requeues) are
-    /// discarded, a panicked result drives the respawn/retry path.
+    /// Account one received result.  It counts only if it answers a
+    /// still-accounted submission of this epoch — matched by (epoch,
+    /// owner thread id) — otherwise it is stale (abandoned epoch, or a
+    /// submission already written off when its thread was proven dead)
+    /// and only its buffers are recycled, into the spare lists.  Of the
+    /// counted results, the first healthy one completes the shard and its
+    /// buffers become the shard slot; duplicates (deadline requeues) are
+    /// discarded into the spares; a panicked result drives the
+    /// respawn/retry path.  A result that does not complete its shard can
+    /// therefore never overwrite one that did.
     fn absorb(&mut self, d: Done) {
         let pool = &mut self.sel.pool;
-        // `inflight == 0` means this job was already written off on a
-        // proven-dead worker (its Done was sitting in the channel when
-        // the thread was declared dead) — recycle only, don't double
-        // count.
-        let current = d.epoch == self.epoch && pool.inflight[d.shard] > 0;
         let (shard, panicked) = (d.shard, d.panicked);
-        pool.bufs[shard] = d.winners;
-        pool.gbufs[shard] = d.grads;
-        if !current {
+        let pos = (d.epoch == self.epoch)
+            .then(|| pool.inflight[shard].iter().position(|&o| o == d.owner))
+            .flatten();
+        let Some(pos) = pos else {
+            pool.spare_bufs.push(d.winners);
+            pool.spare_gbufs.push(d.grads);
             return;
-        }
-        pool.inflight[shard] -= 1;
+        };
+        pool.inflight[shard].swap_remove(pos);
         self.outstanding -= 1;
-        if pool.sdone[shard] {
-            return; // duplicate of an already-completed shard (requeue)
-        }
-        if !panicked {
+        if !panicked && !pool.sdone[shard] {
+            pool.bufs[shard] = d.winners;
+            pool.gbufs[shard] = d.grads;
             pool.sdone[shard] = true;
             return;
+        }
+        pool.spare_bufs.push(d.winners);
+        pool.spare_gbufs.push(d.grads);
+        if pool.sdone[shard] {
+            return; // duplicate of an already-completed shard (requeue)
         }
         // Contained panic: the worker thread survived, but its workspace
         // and selector state are suspect — replace both before retrying.
@@ -746,51 +813,78 @@ impl Pending<'_, '_> {
     /// The per-job deadline fired with results still outstanding.  Two
     /// cases, in order:
     ///
-    /// 1. A worker thread is *proven dead* (`is_finished`): its queued and
-    ///    running jobs can never answer, so they are written off (the
-    ///    thread's exit proves no dereference of the view survives), the
-    ///    slot respawned, and each lost shard retried or failed.
-    /// 2. Every worker is alive but something is wedged: each missing
+    /// 1. A thread is *proven dead* (`is_finished`) — a current slot
+    ///    (respawned in place) or a retired predecessor (reaped now; a
+    ///    finished thread joins without blocking).  Only the submissions
+    ///    *owned by that exact thread* are written off (its exit proves no
+    ///    dereference of the view survives there; queued jobs died with
+    ///    its channel) and their shards retried or failed.  A submission
+    ///    owned by a live thread — say, the wedged original behind a
+    ///    requeue whose replacement just died — stays accounted, so the
+    ///    safety invariant holds even when replacements keep dying.
+    /// 2. Every thread is alive but something is wedged: each missing
     ///    shard is requeued once on a freshly respawned worker
     ///    ([`PoolStats::deadline_requeues`]).  The wedged submissions stay
     ///    accounted — their late results are drained and discarded — so
     ///    the safety invariant holds without abandoning a live thread.
     fn handle_deadline(&mut self) {
-        let workers = self.sel.pool.handles.len();
-        if workers == 0 {
+        if self.sel.pool.handles.is_empty() {
             // Shut down mid-epoch (impossible through the public API, the
-            // guard borrows the selector) — nothing can answer.
+            // guard borrows the selector) — nothing can answer, and no
+            // thread survives to dereference anything.
             self.error.get_or_insert(SelectError::PoolUnavailable);
+            for infl in self.sel.pool.inflight.iter_mut() {
+                infl.clear();
+            }
             self.outstanding = 0;
             return;
         }
-        let mut any_dead = false;
-        for w in 0..workers {
-            if !self.sel.pool.handles[w].is_finished() {
+        // Collect every thread proven dead since the last probe.
+        let mut dead: Vec<u64> = Vec::new();
+        for w in 0..self.sel.pool.handles.len() {
+            if !self.sel.pool.handles[w].handle.is_finished() {
                 continue;
             }
-            any_dead = true;
-            // Rebuild the slot first, then write off the dead worker's
-            // in-flight jobs: the thread has exited, so no job of this
-            // epoch on it can still dereference the view (queued jobs
-            // were dropped with its channel), and retries land on the
-            // fresh thread.
+            dead.push(self.sel.pool.handles[w].id);
             self.sel.pool.stats.respawns += 1;
             self.sel.pool.respawn_worker(w);
-            let mut s = w;
-            while s < self.live {
-                let lost = self.sel.pool.inflight[s];
-                if lost > 0 {
-                    self.sel.pool.inflight[s] = 0;
-                    self.outstanding -= lost as usize;
-                    if !self.sel.pool.sdone[s] {
-                        self.retry_or_fail(s);
-                    }
+        }
+        {
+            let pool = &mut self.sel.pool;
+            let mut i = 0;
+            while i < pool.retired.len() {
+                if pool.retired[i].handle.is_finished() {
+                    let t = pool.retired.swap_remove(i);
+                    dead.push(t.id);
+                    let _ = t.handle.join();
+                } else {
+                    i += 1;
                 }
-                s += workers;
             }
         }
-        if any_dead || self.requeued {
+        // Write off only submissions owned by a proven-dead thread; any
+        // lost shard not yet completed gets an extra submission (safe:
+        // first healthy result wins, duplicates are discarded), so the
+        // epoch keeps making progress even while a wedged original is
+        // still accounted on a live retired thread.
+        let mut lost_any = false;
+        for s in 0..self.live {
+            let lost = {
+                let infl = &mut self.sel.pool.inflight[s];
+                let before = infl.len();
+                infl.retain(|o| !dead.contains(o));
+                before - infl.len()
+            };
+            if lost == 0 {
+                continue;
+            }
+            lost_any = true;
+            self.outstanding -= lost;
+            if !self.sel.pool.sdone[s] {
+                self.retry_or_fail(s);
+            }
+        }
+        if lost_any || self.requeued {
             return;
         }
         // All workers alive, at least one wedged past the deadline:
@@ -798,10 +892,10 @@ impl Pending<'_, '_> {
         // The wedged worker keeps its slot's old channel and eventually
         // answers; that duplicate is drained and discarded above.
         self.requeued = true;
-        let mut respawned = vec![false; workers];
+        let mut respawned = vec![false; self.sel.pool.handles.len()];
         for s in 0..self.live {
             let pool = &mut self.sel.pool;
-            if pool.sdone[s] || pool.inflight[s] == 0 {
+            if pool.sdone[s] || pool.inflight[s].is_empty() {
                 continue;
             }
             if pool.attempts[s] >= pool.policy.max_retries() {
@@ -820,9 +914,10 @@ impl Pending<'_, '_> {
     }
 
     /// Block until every submission of this epoch is accounted for,
-    /// recycling winner buffers (current-epoch results into their shard
-    /// slot; stale results from an abandoned epoch likewise, without
-    /// counting them) and driving the respawn/retry/deadline machinery.
+    /// recycling winner buffers (the result completing a shard into its
+    /// shard slot; everything else — stale epochs, written-off
+    /// submissions, requeue duplicates, contained panics — into the spare
+    /// lists) and driving the respawn/retry/deadline machinery.
     fn drain(&mut self) {
         while self.outstanding > 0 {
             let deadline = self.sel.pool.deadline;
@@ -834,6 +929,9 @@ impl Pending<'_, '_> {
                     // sender; defensively: every sender gone means no job
                     // can still be running — safe to stop.
                     self.error.get_or_insert(SelectError::PoolUnavailable);
+                    for infl in self.sel.pool.inflight.iter_mut() {
+                        infl.clear();
+                    }
                     self.outstanding = 0;
                 }
             }

@@ -203,6 +203,11 @@ pub struct ShardedSelector {
     merge: MergePolicy,
     parallel: bool,
     workers: Vec<ShardWorker>,
+    /// Retained selector factory, mirroring the pool's respawn factory:
+    /// [`ShardedSelector::rebuild_workers`] re-runs it to replace the
+    /// per-shard workers with identically-constructed instances after a
+    /// contained panic left their state suspect.
+    make: Box<dyn FnMut(usize) -> Box<dyn Selector>>,
     /// Per-shard gradient context, parallel to `workers`; filled by the
     /// shard jobs only when the merge policy is gradient-aware.
     grads: Vec<ShardGrads>,
@@ -251,12 +256,17 @@ impl ShardedSelector {
     /// else would silently measure a different method (the trainer routes
     /// those to single-shot instead — see
     /// `engine::EngineBuilder::build`).
+    ///
+    /// The factory is retained (hence `'static`) so
+    /// [`ShardedSelector::rebuild_workers`] can replace the workers with
+    /// identically-constructed instances after a contained panic.
     pub fn from_factory(
         shards: usize,
         merge: MergePolicy,
-        mut make: impl FnMut(usize) -> Box<dyn Selector>,
+        make: impl FnMut(usize) -> Box<dyn Selector> + 'static,
     ) -> ShardedSelector {
         assert!(shards >= 1, "need at least one shard");
+        let mut make: Box<dyn FnMut(usize) -> Box<dyn Selector>> = Box::new(make);
         let workers = (0..shards)
             .map(|i| {
                 let sel = make(i);
@@ -276,10 +286,36 @@ impl ShardedSelector {
             authority: None,
             last: None,
             workers,
+            make,
             scratch: MergeScratch::default(),
             ranges: Vec::new(),
             injector: None,
             calls: 0,
+        }
+    }
+
+    /// Replace every shard worker with a factory-fresh one — fresh
+    /// selector instance, fresh [`Workspace`], empty gather buffers —
+    /// keeping the merge policy, the rank authority (and its accumulated
+    /// budget state), the fault injector, and the call counter.  The
+    /// scoped-thread mirror of the pool's worker respawn: after a
+    /// contained shard panic the worker-side state is suspect, but the
+    /// authority never ran (a shard panic re-raises at scope exit, before
+    /// the merge), so keeping it is what makes a retry bit-identical
+    /// under the adaptive rank policy's cross-window accounting.  The
+    /// per-shard instances themselves are selection-stateless (strict
+    /// policies on the engine-built path), so rebuilding them never
+    /// changes a healthy rerun's subset.
+    pub fn rebuild_workers(&mut self) {
+        for i in 0..self.workers.len() {
+            let sel = (self.make)(i);
+            assert!(
+                sel.shardable(),
+                "selector '{}' is not shardable: the MaxVol merge would not preserve \
+                 its selection criterion",
+                sel.name()
+            );
+            self.workers[i] = ShardWorker::new(sel);
         }
     }
 

@@ -547,13 +547,15 @@ impl EngineBuilder {
         // a local rank cut) and the run policy is hoisted onto the
         // coordinator's ONE rank authority — a single ε/budget accumulator
         // at any shard/worker count.
-        let mut exec = if is_graft {
+        let (mut exec, rebuild) = if is_graft {
             let eps = match self.rank {
                 RankMode::Adaptive { epsilon } => epsilon,
                 RankMode::Strict => self.epsilon,
             };
-            // Hoisted copies: the pool retains `make` as a respawn factory,
-            // so both closures must be `move + Send + 'static`.
+            // Hoisted copies: every shape retains `make` as a respawn /
+            // rebuild factory (pool workers, sharded workers, or the
+            // engine's serial retry), so both closures must be
+            // `move + Send + 'static`.
             let (rank, fraction, base_eps) = (self.rank, self.fraction, self.epsilon);
             let run_policy = move || match rank {
                 RankMode::Adaptive { epsilon } => BudgetedRankPolicy::adaptive(epsilon, fraction),
@@ -591,6 +593,7 @@ impl EngineBuilder {
         }
         Ok(SelectionEngine::from_parts(
             exec,
+            rebuild,
             extractor,
             shape,
             merge,
@@ -605,28 +608,33 @@ impl EngineBuilder {
 
 /// Wrap per-shard selector instances in the resolved execution shape.
 /// `make(0)` uses the base seed, so the serial shape is exactly the
-/// unsharded construction.
+/// unsharded construction.  Every shape keeps the factory reachable for
+/// post-panic rebuilds: sharded/pooled executors retain it internally,
+/// while the serial shape hands it back for the engine's retry path.
 fn build_exec(
     shape: ExecShape,
     merge: MergePolicy,
     authority: Option<Box<dyn Selector>>,
     mut make: impl FnMut(usize) -> Box<dyn Selector> + Send + 'static,
-) -> Exec {
+) -> (Exec, Option<Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>>) {
     match shape {
-        ExecShape::Serial => Exec::Serial(make(0)),
+        ExecShape::Serial => {
+            let sel = make(0);
+            (Exec::Serial(sel), Some(Box::new(make)))
+        }
         ExecShape::Sharded { shards } => {
             let mut sel = ShardedSelector::from_factory(shards, merge, make);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }
-            Exec::Sharded(Box::new(sel))
+            (Exec::Sharded(Box::new(sel)), None)
         }
         ExecShape::Pooled { shards, workers, .. } => {
             let mut sel = PooledSelector::from_factory(shards, workers, merge, make);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }
-            Exec::Pooled(Box::new(sel))
+            (Exec::Pooled(Box::new(sel)), None)
         }
     }
 }

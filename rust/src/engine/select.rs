@@ -90,6 +90,13 @@ pub struct Selection<'e> {
 /// with [`EngineBuilder`](super::EngineBuilder).
 pub struct SelectionEngine {
     exec: Exec,
+    /// Retained selector factory for the serial shape — the engine-level
+    /// mirror of the pool's respawn factory, re-run after a contained
+    /// panic so retries (and later selects) never reuse a suspect
+    /// instance.  `None` on sharded/pooled shapes, which rebuild through
+    /// their own machinery ([`ShardedSelector::rebuild_workers`], pool
+    /// worker respawn).
+    rebuild: Option<Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>>,
     extractor: Option<Box<dyn FeatureExtractor>>,
     shape: ExecShape,
     merge: MergePolicy,
@@ -126,6 +133,7 @@ impl SelectionEngine {
     #[allow(clippy::too_many_arguments)]
     pub(super) fn from_parts(
         mut exec: Exec,
+        rebuild: Option<Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>>,
         extractor: Option<Box<dyn FeatureExtractor>>,
         shape: ExecShape,
         merge: MergePolicy,
@@ -143,6 +151,7 @@ impl SelectionEngine {
         }
         SelectionEngine {
             exec,
+            rebuild,
             extractor,
             shape,
             merge,
@@ -254,7 +263,12 @@ impl SelectionEngine {
     ///    [`Selection::degradations`], and the winners mapped back to
     ///    original batch-local indices.
     /// 2. A panicking selector (or failing pool shard) is retried within
-    ///    the policy's budget — bit-identical on success.
+    ///    the policy's budget — bit-identical on success.  A contained
+    ///    panic first rebuilds the suspect selector(s) and workspace from
+    ///    the retained factory (counted in [`PoolStats::respawns`]),
+    ///    mirroring the pool's worker respawn, so neither the retry nor
+    ///    any later select reuses torn state; the coordinator-side rank
+    ///    authority survives untouched.
     /// 3. Numerical breakdown (degenerate MaxVol pivots, non-finite
     ///    projection errors) is deterministic, never retried, and under
     ///    `Degrade` skips straight to the seeded-random rung.
@@ -281,7 +295,7 @@ impl SelectionEngine {
         let window = self.windows_done;
         let r = resolve_budget(self.budget, self.fraction, view.k());
         let SelectionEngine {
-            exec, policy, seed, injector, ws, buf, degr, stats, qkept, ..
+            exec, rebuild, policy, seed, injector, ws, buf, degr, stats, qkept, ..
         } = self;
         // Shard-level faults on the pooled shape are already retried by
         // the pool itself (respawn + resubmit with the same inputs); an
@@ -289,7 +303,40 @@ impl SelectionEngine {
         let retries = if matches!(exec, Exec::Pooled(_)) { 0 } else { policy.max_retries() };
         let mut attempt = 0u32;
         let mut result = loop {
-            match attempt_select(exec, injector.as_deref(), window, view, r, ws, buf, attempt) {
+            let mut suspect = false;
+            let res = attempt_select(
+                exec,
+                injector.as_deref(),
+                window,
+                view,
+                r,
+                ws,
+                buf,
+                attempt,
+                &mut suspect,
+            );
+            if suspect {
+                // A contained (non-injected) panic may have left selector
+                // and workspace state torn: rebuild both from the retained
+                // factory — exactly what the pool's worker respawn does —
+                // before deciding retry-vs-bail, so the engine is healthy
+                // for subsequent selects either way.  The coordinator-side
+                // rank authority survives (the panic re-raised before any
+                // merge ran), which keeps adaptive-rank retries
+                // bit-identical.
+                stats.respawns += 1;
+                *ws = Workspace::new();
+                match exec {
+                    Exec::Serial(s) => {
+                        if let Some(mk) = rebuild.as_mut() {
+                            *s = mk(0);
+                        }
+                    }
+                    Exec::Sharded(sh) => sh.rebuild_workers(),
+                    Exec::Pooled(_) => {}
+                }
+            }
+            match res {
                 Err(e) if e.retryable() && attempt < retries => {
                     attempt += 1;
                     stats.retries += 1;
@@ -372,12 +419,26 @@ impl SelectionEngine {
             // Serial / sharded: no overlap to orchestrate, so each window
             // is one fallible `select` — quarantine, retries, and ladder
             // included for free.  `select` resets the degradation log per
-            // call, so accumulate the session's here.
+            // call, so accumulate the session's here — including on the
+            // error paths, so an aborted session still reports every
+            // earlier window's recorded degradations.
             let mut acc: Vec<Degradation> = Vec::new();
             for wi in 0..count {
-                let win = assemble(wi, self.extractor.as_deref()).map_err(WindowsError::Assemble)?;
-                let sel = self.select(&win.view()).map_err(WindowsError::Select)?;
-                consume(wi, &win, sel.indices);
+                let win = match assemble(wi, self.extractor.as_deref()) {
+                    Ok(w) => w,
+                    Err(e) => {
+                        self.degr = acc;
+                        return Err(WindowsError::Assemble(e));
+                    }
+                };
+                match self.select(&win.view()) {
+                    Ok(sel) => consume(wi, &win, sel.indices),
+                    Err(e) => {
+                        acc.extend(self.degr.iter().cloned());
+                        self.degr = acc;
+                        return Err(WindowsError::Select(e));
+                    }
+                }
                 acc.extend(self.degr.iter().cloned());
             }
             self.degr = acc;
@@ -509,6 +570,12 @@ impl SelectionEngine {
 /// One attempt at the configured selection: run the executor (with panic
 /// containment and serial-path fault injection), then the numerical
 /// post-checks.  Errors are typed; retryability is the caller's business.
+/// A caught panic sets `suspect` — the caller must then treat the
+/// executor's worker-side selector/workspace state as torn and rebuild it
+/// before running again.  Injected serial faults are consulted *outside*
+/// the containment boundary and return the typed error directly: the
+/// selector never ran, so its state (including any adaptive rank
+/// accumulator) is untouched and legitimately reused by the retry.
 #[allow(clippy::too_many_arguments)]
 fn attempt_select(
     exec: &mut Exec,
@@ -519,34 +586,41 @@ fn attempt_select(
     ws: &mut Workspace,
     buf: &mut Vec<usize>,
     attempt: u32,
+    suspect: &mut bool,
 ) -> Result<(), SelectError> {
     let degen0 = ws.mv_degenerate;
     match exec {
         Exec::Pooled(p) => p.begin(view, r).finish(ws, buf)?,
         Exec::Serial(s) => {
-            catch_unwind(AssertUnwindSafe(|| {
-                if let Some(i) = injector {
-                    // 1-based window ordinal, matching the pool's epoch
-                    // convention; shard/worker are 0 on the serial path.
-                    match i.before_shard(ShardCtx { window: window + 1, shard: 0, worker: 0 }) {
-                        FaultAction::None => {}
-                        FaultAction::Delay(by) => std::thread::sleep(by),
-                        FaultAction::Panic | FaultAction::DieWorker => {
-                            panic!("injected fault: serial select window {window}")
-                        }
+            if let Some(i) = injector {
+                // 1-based window ordinal, matching the pool's epoch
+                // convention; shard/worker are 0 on the serial path.
+                match i.before_shard(ShardCtx { window: window + 1, shard: 0, worker: 0 }) {
+                    FaultAction::None => {}
+                    FaultAction::Delay(by) => std::thread::sleep(by),
+                    FaultAction::Panic | FaultAction::DieWorker => {
+                        return Err(SelectError::ShardFailure { shard: 0, attempts: attempt + 1 });
                     }
                 }
-                s.select_into(view, r, ws, buf);
-            }))
-            .map_err(|_| SelectError::ShardFailure { shard: 0, attempts: attempt + 1 })?;
+            }
+            catch_unwind(AssertUnwindSafe(|| s.select_into(view, r, ws, buf))).map_err(|_| {
+                *suspect = true;
+                SelectError::ShardFailure { shard: 0, attempts: attempt + 1 }
+            })?;
         }
         Exec::Sharded(sh) => {
             // A scoped-thread shard panic re-raises on the caller; catch
             // it here exactly like the pool contains its workers.  The
             // failing shard index does not survive the unwind, so the
-            // error reports shard 0.
-            catch_unwind(AssertUnwindSafe(|| sh.select_into(view, r, ws, buf)))
-                .map_err(|_| SelectError::ShardFailure { shard: 0, attempts: attempt + 1 })?;
+            // error reports shard 0.  Injected faults panic on the scoped
+            // threads, so they are indistinguishable from real ones here —
+            // `suspect` covers both, and the worker rebuild is harmless
+            // for injected faults (per-shard instances are strict, i.e.
+            // selection-stateless).
+            catch_unwind(AssertUnwindSafe(|| sh.select_into(view, r, ws, buf))).map_err(|_| {
+                *suspect = true;
+                SelectError::ShardFailure { shard: 0, attempts: attempt + 1 }
+            })?;
         }
     }
     let clamped = ws.mv_degenerate - degen0;

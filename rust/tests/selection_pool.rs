@@ -153,13 +153,14 @@ fn pool_bit_identical_for_graft_selector() {
     };
     for &(shards, workers) in &[(1usize, 1usize), (4, 1), (4, 3), (8, 8)] {
         let reference =
-            ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, |_| mk())
+            ShardedSelector::from_factory(shards, MergePolicy::Hierarchical, move |_| mk())
                 .with_parallel(false)
                 .select(&owned.view(), 32);
-        let pool = PooledSelector::from_factory(shards, workers, MergePolicy::Hierarchical, |_| {
-            mk()
-        })
-        .select(&owned.view(), 32);
+        let pool =
+            PooledSelector::from_factory(shards, workers, MergePolicy::Hierarchical, move |_| {
+                mk()
+            })
+            .select(&owned.view(), 32);
         assert_eq!(pool, reference, "graft shards={shards} workers={workers}");
     }
 }
