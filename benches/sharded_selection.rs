@@ -276,6 +276,74 @@ fn main() {
         );
     }
 
+    // Streaming engine rows (PR 7): the bounded-memory reservoir path
+    // priced at two chunk sizes.  K is 8× the reservoir capacity (2r), so
+    // these rows price genuine steady-state elimination/admission churn,
+    // not the growth phase.  Two inline asserts keep the family honest:
+    // chunked arrival must be bit-identical to a single whole-view push
+    // (chunking invariance), and on a reservoir-sized window the stream
+    // must reproduce the batch FastMaxVol subset bit for bit.
+    {
+        let mut se = EngineBuilder::new()
+            .method("maxvol")
+            .budget(r)
+            .build_streaming()
+            .expect("valid streaming config");
+        let cap = se.reservoir_capacity();
+        for chunk in [cap / 4, k] {
+            let t = time_it(warm, reps, || {
+                se.reset();
+                let mut lo = 0usize;
+                while lo < k {
+                    let hi = (lo + chunk).min(k);
+                    se.push_range(&view, lo..hi).expect("clean stream push");
+                    lo = hi;
+                }
+                let snap = se.snapshot().expect("clean stream snapshot");
+                bench_util::black_box(snap.indices.len());
+            });
+            report(&format!("streaming select (reservoir={cap}, chunk={chunk})"), t.0, t.1, t.2);
+            sink.record("select_streaming", &format!("{shape},chunk={chunk}"), t);
+        }
+
+        // Chunking invariance: one whole-view push vs ragged chunks.
+        se.reset();
+        se.push(&view).expect("clean stream push");
+        let whole = se.snapshot().expect("clean stream snapshot").indices;
+        se.reset();
+        let mut lo = 0usize;
+        while lo < k {
+            let hi = (lo + 97).min(k);
+            se.push_range(&view, lo..hi).expect("clean stream push");
+            lo = hi;
+        }
+        let chunked = se.snapshot().expect("clean stream snapshot").indices;
+        assert_eq!(chunked, whole, "chunked arrival changed the streamed selection");
+
+        // Stream ≡ batch where the reservoir holds the whole window.
+        let kw = cap.min(k);
+        let mut wrng = Rng::new(23);
+        let wfeat = Mat::from_fn(kw, rc, |_, _| wrng.normal());
+        let wgrads = Mat::from_fn(kw, e, |_, _| wrng.normal());
+        let wlosses: Vec<f64> = (0..kw).map(|_| wrng.uniform() * 2.0).collect();
+        let wlabels: Vec<i32> = (0..kw).map(|i| (i % 10) as i32).collect();
+        let wids: Vec<usize> = (0..kw).collect();
+        let wview = BatchView {
+            features: &wfeat,
+            grads: &wgrads,
+            losses: &wlosses,
+            labels: &wlabels,
+            preds: &wlabels,
+            classes: 10,
+            row_ids: &wids,
+        };
+        se.reset();
+        se.push(&wview).expect("clean stream push");
+        let streamed = se.snapshot().expect("clean stream snapshot").indices;
+        single.select_into(&wview, r.min(kw), &mut ws, &mut out);
+        assert_eq!(streamed, out, "stream≡batch bit-identity broke on a reservoir-sized window");
+    }
+
     match sink.write() {
         Ok(path) => println!("\nbench JSON → {}", path.display()),
         Err(e) => eprintln!("\nWARN could not write bench JSON: {e}"),

@@ -46,6 +46,9 @@ COMMANDS
                             [--shards N] [--merge hierarchical|flat|grad]
                             (grad = gradient-aware merge, default for graft)
                             [--pool-workers N] [--overlap]
+                            [--stream-chunk N] (stream refresh windows
+                            through the bounded-memory reservoir, N rows
+                            at a time; 0 = batch selection)
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]
   fig2                      alignment heatmap / rank trend / class hist

@@ -160,6 +160,7 @@ impl Args {
             shards: self.usize_or("shards", d.shards)?,
             pool_workers: self.usize_or("pool-workers", d.pool_workers)?,
             overlap: self.try_flag("overlap")? || d.overlap,
+            stream_chunk: self.usize_or("stream-chunk", d.stream_chunk)?,
             merge: {
                 let s = self.get_or("merge", merge_default.name());
                 MergePolicy::parse(&s).with_context(|| {
@@ -226,6 +227,14 @@ mod tests {
         let gm = parse("train --method maxvol --merge grad").train_config().unwrap();
         assert_eq!(gm.merge, MergePolicy::Grad, "explicit grad works for any method");
         assert!(parse("train --merge nope").train_config().is_err());
+    }
+
+    #[test]
+    fn stream_chunk_parses_and_defaults_to_batch_mode() {
+        let c = parse("train --stream-chunk 64").train_config().unwrap();
+        assert_eq!(c.stream_chunk, 64);
+        assert_eq!(parse("train").train_config().unwrap().stream_chunk, 0, "batch by default");
+        assert!(parse("train --stream-chunk nope").train_config().is_err());
     }
 
     #[test]

@@ -36,6 +36,14 @@
 //! quarantined, and `rust/src/faults.rs` provides the deterministic
 //! injection harness the fault suites drive all of it with.  See
 //! "Failure modes & degradation ladder" in `README.md`.
+//!
+//! PR 7 adds **streaming selection**: [`stream`] keeps a bounded
+//! reservoir of pivot candidates (incremental MaxVol admission via a
+//! replayable elimination cache) plus stream-wide gradient sums, so rows
+//! can arrive in chunks of any size and a snapshot at any point
+//! reproduces the batch GRAFT selection bit-for-bit whenever the stream
+//! fits the reservoir.  Drive it through
+//! [`crate::engine::StreamingEngine`].
 
 pub mod fault;
 pub mod merge;
@@ -44,6 +52,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod shard;
 pub mod state;
+pub(crate) mod stream;
 
 pub use fault::{Degradation, FaultPolicy, PoolStats, SelectError, WindowsError};
 pub use merge::{merge_winners, merge_winners_grad, MergeCtx, MergePolicy, ShardGrads};

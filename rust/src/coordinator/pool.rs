@@ -34,9 +34,11 @@
 //!   instances from the retained factory) and the shard job re-run with
 //!   the same inputs — a successful retry is bit-identical to the
 //!   fault-free run.  Exhausted retries surface as a typed
-//!   [`SelectError::ShardFailure`] from [`Pending::finish`] (the
-//!   [`Selector::select_into`] compatibility wrapper still panics, for the
-//!   legacy call sites that expect it).
+//!   [`SelectError::ShardFailure`] from [`Pending::finish`]; the
+//!   [`Selector::select_into`] compatibility wrapper (no error channel in
+//!   the trait) logs the typed error and degrades to a coordinator-side
+//!   feature-only selection instead of panicking, so **no public entry
+//!   point can panic on fault input**.
 //! * **No hangs**: a worker that blows the per-job deadline gets its shard
 //!   requeued on a fresh worker ([`PoolStats::deadline_requeues`]).  Every
 //!   submission is tagged with the id of the thread it was handed to, and
@@ -87,7 +89,8 @@ use std::time::Duration;
 use crate::faults::{FaultAction, FaultInjector, ShardCtx};
 use crate::graft::{RankDecision, RankStats};
 use crate::linalg::{Mat, Workspace};
-use crate::selection::{BatchView, Selector};
+use crate::selection::maxvol::fast_maxvol_with;
+use crate::selection::{top_up_by_loss, BatchView, Selector};
 
 use super::fault::{FaultPolicy, PoolStats, SelectError, WindowsError};
 use super::merge::{
@@ -661,10 +664,16 @@ impl Selector for PooledSelector {
     }
 
     /// Legacy synchronous path: [`PooledSelector::begin`] +
-    /// [`Pending::finish`], panicking on a typed failure (the
-    /// [`Selector`] trait has no error channel).  Fault-aware callers —
-    /// the engine — use `begin`/`finish` directly and get the
-    /// [`SelectError`].
+    /// [`Pending::finish`].  The [`Selector`] trait has no error channel,
+    /// so a typed failure that survives the pool's fault policy is
+    /// **logged and degraded**, never panicked: the wrapper falls back to
+    /// a deterministic coordinator-side feature-only MaxVol (+ loss-ranked
+    /// top-up to the budget) computed on the caller's thread from the
+    /// caller's view — the same bottom-rung criterion as the engine's
+    /// degradation ladder, with no worker involvement, so it cannot fail
+    /// again.  The drain in `finish` has already run, so the pool stays
+    /// consistent and reusable afterwards.  Fault-aware callers — the
+    /// engine — use `begin`/`finish` directly and get the [`SelectError`].
     fn select_into(
         &mut self,
         view: &BatchView<'_>,
@@ -672,9 +681,19 @@ impl Selector for PooledSelector {
         ws: &mut Workspace,
         out: &mut Vec<usize>,
     ) {
-        self.begin(view, r).finish(ws, out).unwrap_or_else(|e| {
-            panic!("selection pool: {e} (contained; pool state stays consistent)")
-        });
+        if let Err(e) = self.begin(view, r).finish(ws, out) {
+            eprintln!(
+                "selection pool: {e}; degrading to coordinator-side feature-only selection \
+                 (pool state stays consistent)"
+            );
+            self.last = None;
+            out.clear();
+            let width = r.min(view.features.cols()).min(view.k());
+            if width > 0 {
+                fast_maxvol_with(view.features, width, ws, out);
+            }
+            top_up_by_loss(view, r, ws, out);
+        }
     }
 }
 

@@ -28,9 +28,12 @@ impl RefreshScheduler {
         }
     }
 
-    /// Record that a refresh happened at `step`.
+    /// Record that a refresh happened at `step`.  A mark earlier than the
+    /// last recorded one is clamped (the schedule never rewinds): an
+    /// out-of-order caller used to silently move `last` backwards and
+    /// re-trigger refreshes that had already happened.
     pub fn mark(&mut self, step: usize) {
-        self.last = Some(step);
+        self.last = Some(self.last.map_or(step, |l| l.max(step)));
     }
 
     pub fn period(&self) -> usize {
@@ -122,6 +125,26 @@ mod tests {
         s.mark(17);
         assert!(!s.due(26));
         assert!(s.due(27)); // next window counts from 17
+    }
+
+    #[test]
+    fn backwards_mark_does_not_rewind_schedule() {
+        // Regression: an out-of-order caller (e.g. a late shard reporting
+        // an old step) used to rewind `last`, making an already-served
+        // window due again.  Backwards marks are clamped to the newest
+        // mark instead.
+        let mut s = RefreshScheduler::every_steps(10);
+        s.mark(40);
+        assert!(!s.due(45));
+        s.mark(20); // stale mark arrives late
+        assert!(!s.due(45), "stale mark must not make step 45 due again");
+        assert!(!s.due(49));
+        assert!(s.due(50), "schedule still counts from the newest mark");
+        // A backwards mark before any forward progress is just a mark.
+        let mut fresh = RefreshScheduler::every_steps(10);
+        fresh.mark(7);
+        assert!(!fresh.due(16));
+        assert!(fresh.due(17));
     }
 
     #[test]

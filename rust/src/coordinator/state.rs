@@ -22,15 +22,24 @@ impl SubsetState {
         SubsetState { active: (0..n).collect(), selected_at_epoch: 0, generation: 0 }
     }
 
-    /// Install a fresh selection; deduplicates and validates.
-    pub fn refresh(&mut self, mut rows: Vec<usize>, epoch: usize, n: usize) {
+    /// Install a fresh selection; deduplicates and validates.  Returns
+    /// the number of duplicate rows dropped — every selector pins unique
+    /// winners, so a non-zero count means the caller handed in a
+    /// shrunken-below-budget subset and should surface it (the trainer
+    /// reports it as [`crate::train::RunResult::dup_rows_dropped`])
+    /// instead of training on silently fewer rows.
+    #[must_use = "a non-zero count means the active set shrank below the requested budget"]
+    pub fn refresh(&mut self, mut rows: Vec<usize>, epoch: usize, n: usize) -> usize {
+        let before = rows.len();
         rows.sort_unstable();
         rows.dedup();
+        let dropped = before - rows.len();
         assert!(rows.iter().all(|&r| r < n), "subset row out of range");
         assert!(!rows.is_empty(), "empty subset");
         self.active = rows;
         self.selected_at_epoch = epoch;
         self.generation += 1;
+        dropped
     }
 
     pub fn rows(&self) -> &[usize] {
@@ -65,7 +74,8 @@ mod tests {
     #[test]
     fn refresh_dedups_and_counts() {
         let mut s = SubsetState::full(100);
-        s.refresh(vec![5, 3, 5, 7, 3], 2, 100);
+        let dropped = s.refresh(vec![5, 3, 5, 7, 3], 2, 100);
+        assert_eq!(dropped, 2, "two duplicate rows (5 and 3) must be reported, not hidden");
         assert_eq!(s.rows(), &[3, 5, 7]);
         assert_eq!(s.generation, 1);
         assert_eq!(s.selected_at_epoch, 2);
@@ -76,14 +86,14 @@ mod tests {
     #[should_panic]
     fn rejects_out_of_range() {
         let mut s = SubsetState::full(10);
-        s.refresh(vec![11], 0, 10);
+        let _ = s.refresh(vec![11], 0, 10);
     }
 
     #[test]
     #[should_panic]
     fn rejects_empty() {
         let mut s = SubsetState::full(10);
-        s.refresh(vec![], 0, 10);
+        let _ = s.refresh(vec![], 0, 10);
     }
 
     #[test]
@@ -95,7 +105,8 @@ mod tests {
     #[test]
     fn refresh_sorts_unsorted_rows() {
         let mut s = SubsetState::full(100);
-        s.refresh(vec![42, 7, 99, 0, 63], 1, 100);
+        let dropped = s.refresh(vec![42, 7, 99, 0, 63], 1, 100);
+        assert_eq!(dropped, 0, "unique rows drop nothing");
         assert_eq!(s.rows(), &[0, 7, 42, 63, 99]);
     }
 
@@ -103,7 +114,7 @@ mod tests {
     fn refresh_accepts_boundary_row() {
         // Row n-1 is in range; row n is the first out-of-range id.
         let mut s = SubsetState::full(10);
-        s.refresh(vec![9], 0, 10);
+        assert_eq!(s.refresh(vec![9], 0, 10), 0);
         assert_eq!(s.rows(), &[9]);
     }
 
@@ -111,7 +122,7 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn rejects_boundary_overflow() {
         let mut s = SubsetState::full(10);
-        s.refresh(vec![10], 0, 10);
+        let _ = s.refresh(vec![10], 0, 10);
     }
 
     #[test]
@@ -120,14 +131,14 @@ mod tests {
         // Dedup happens before validation; a duplicated bad row must
         // still be caught.
         let mut s = SubsetState::full(5);
-        s.refresh(vec![7, 7, 7], 0, 5);
+        let _ = s.refresh(vec![7, 7, 7], 0, 5);
     }
 
     #[test]
     fn generation_counts_every_refresh() {
         let mut s = SubsetState::full(20);
         for g in 1..=5 {
-            s.refresh((0..g).collect(), g, 20);
+            assert_eq!(s.refresh((0..g).collect(), g, 20), 0);
             assert_eq!(s.generation, g);
             assert_eq!(s.len(), g);
         }
@@ -136,11 +147,11 @@ mod tests {
     #[test]
     fn shrinking_to_singleton_and_back() {
         let mut s = SubsetState::full(8);
-        s.refresh(vec![3], 0, 8);
+        let _ = s.refresh(vec![3], 0, 8);
         assert_eq!(s.rows(), &[3]);
         assert!(!s.is_empty());
         assert!((s.fraction(8) - 0.125).abs() < 1e-12);
-        s.refresh((0..8).collect(), 1, 8);
+        let _ = s.refresh((0..8).collect(), 1, 8);
         assert_eq!(s.len(), 8);
         assert!((s.fraction(8) - 1.0).abs() < 1e-12);
     }

@@ -1,0 +1,621 @@
+//! Bounded-memory streaming selection state: the reservoir behind
+//! [`crate::engine::StreamingEngine`].
+//!
+//! Rows arrive one at a time (the engine chunks views into per-row
+//! pushes); the state keeps **at most `cap = max(2·r_budget, R)` resident
+//! rows** — their feature rows, gradient sketches, losses, and ids — plus
+//! an `E`-vector of accumulated gradient sums, so memory is O(cap·(R+E))
+//! no matter how long the stream runs.  A snapshot at any point re-runs
+//! the exact batch GRAFT pipeline (Fast MaxVol → prefix projection errors
+//! of ḡ → rank decision → loss top-up) over the residents, which makes a
+//! stream that fits in the reservoir **bit-identical** to the one-shot
+//! batch selection (pinned by `tests/streaming.rs`).
+//!
+//! # Three regimes
+//!
+//! 1. **Growth** (`len < cap`): every row is appended verbatim.  A stream
+//!    of at most `cap` rows is therefore *exactly* the batch input, in
+//!    arrival order — equivalence with the batch selector is structural,
+//!    not approximate.
+//! 2. **Saturation** (first push past `cap`): one Fast MaxVol tournament
+//!    over the residents fixes the pivot set, and
+//!    [`crate::linalg::incremental::replay_pivot_cache`] distils its
+//!    elimination trajectory into `pvals`/`prows`.
+//! 3. **Steady state**: each incoming row is pushed through the cached
+//!    trajectory ([`crate::linalg::incremental::eliminate_row`], O(R²),
+//!    allocation-free).  Rows that would *strictly* win an argmax step
+//!    trigger a full re-tournament with the candidate included (the
+//!    cache is rebuilt; the displaced worst-by-loss non-pivot row is
+//!    evicted); rows that would not change the pivot set only compete,
+//!    by `(loss desc, arrival asc)`, for the non-pivot slots that feed
+//!    the strict-budget loss top-up.  Either way the invariant holds
+//!    that a fresh tournament over the residents reproduces the cached
+//!    pivot set bit-for-bit — which is what lets the skip be exact.
+//!
+//! Gradient sketches of **every** streamed row (resident or evicted)
+//! accumulate into `gsum`, so the snapshot's ḡ = `gsum / rows_seen` is
+//! the exact batch mean in arrival order — element-wise the same
+//! floating-point addition sequence as the batch kernel
+//! (`graft::geometry::grad_sum_into`).
+//!
+//! Per-row processing makes the state **chunk-oblivious**: any chunking
+//! of the same arrival order produces identical state, which is the
+//! determinism property the engine tests pin.
+
+use std::cmp::Ordering;
+
+use crate::graft::geometry::prefix_errors_core;
+use crate::graft::{BudgetedRankPolicy, RankDecision};
+use crate::linalg::incremental::{eliminate_row, replay_pivot_cache};
+use crate::linalg::Workspace;
+use crate::selection::maxvol::fast_maxvol_core;
+
+/// Reservoir of pivot candidates + gradient accumulator for one selection
+/// stream.  See the [module docs](self) for the regime structure; drive
+/// it through [`crate::engine::StreamingEngine`], which owns the fault
+/// policy and the rank authority.
+pub struct StreamState {
+    r_budget: usize,
+    /// Feature width R and sketch width E, fixed by the first row.
+    rcols: usize,
+    ecols: usize,
+    /// Resident-row bound: `max(2·r_budget, R)` (≥ 1), fixed with dims.
+    cap: usize,
+    dims_set: bool,
+
+    // -- resident rows (physical slot order = arrival order, with evicted
+    //    slots overwritten in place; capacity cap+1 so an admission
+    //    tournament can append the candidate without reallocating) -------
+    feat: Vec<f64>,
+    sketch: Vec<f64>,
+    losses: Vec<f64>,
+    ids: Vec<usize>,
+    arrivals: Vec<u64>,
+
+    // -- stream-wide gradient accumulation --------------------------------
+    gsum: Vec<f64>,
+    seen: u64,
+
+    // -- steady-state pivot machinery -------------------------------------
+    saturated: bool,
+    /// Physical slots of the current pivots, in pivot order (≤ R).
+    pivot_idx: Vec<usize>,
+    /// Cached pre-clamp pivot values per elimination step (≤ R).
+    pvals: Vec<f64>,
+    /// Cached scaled elimination rows, flattened ragged (step j holds
+    /// R−j−1 entries).
+    prows: Vec<f64>,
+    /// Non-pivot physical slots sorted by `(loss desc, arrival asc)` —
+    /// the candidates the strict-budget top-up draws from, worst last.
+    rest_order: Vec<usize>,
+
+    // -- owned scratch (retained capacity keeps steady state alloc-free) --
+    pivots_flat: Vec<f64>,
+    cache_work: Vec<f64>,
+    taken: Vec<bool>,
+}
+
+impl StreamState {
+    /// Empty stream targeting `r_budget` selected rows per snapshot.
+    /// Dimensions (and the reservoir bound) are fixed by the first row.
+    pub(crate) fn new(r_budget: usize) -> StreamState {
+        assert!(r_budget >= 1, "streaming selection needs a budget of at least 1 row");
+        StreamState {
+            r_budget,
+            rcols: 0,
+            ecols: 0,
+            cap: 0,
+            dims_set: false,
+            feat: Vec::new(),
+            sketch: Vec::new(),
+            losses: Vec::new(),
+            ids: Vec::new(),
+            arrivals: Vec::new(),
+            gsum: Vec::new(),
+            seen: 0,
+            saturated: false,
+            pivot_idx: Vec::new(),
+            pvals: Vec::new(),
+            prows: Vec::new(),
+            rest_order: Vec::new(),
+            pivots_flat: Vec::new(),
+            cache_work: Vec::new(),
+            taken: Vec::new(),
+        }
+    }
+
+    /// Rows currently resident in the reservoir (≤ [`StreamState::capacity`]).
+    pub(crate) fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Total rows streamed in so far (resident or not).
+    pub(crate) fn rows_seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Resident-row bound (0 until the first row fixes the dimensions).
+    pub(crate) fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Global row id of reservoir slot `slot` (for degraded fallbacks
+    /// that select by slot).
+    pub(crate) fn id_at(&self, slot: usize) -> usize {
+        self.ids[slot]
+    }
+
+    /// Forget everything but the budget and the warmed buffer capacity:
+    /// the next stream reuses every allocation.
+    pub(crate) fn reset(&mut self) {
+        self.feat.clear();
+        self.sketch.clear();
+        self.losses.clear();
+        self.ids.clear();
+        self.arrivals.clear();
+        for v in self.gsum.iter_mut() {
+            *v = 0.0;
+        }
+        self.seen = 0;
+        self.saturated = false;
+        self.pivot_idx.clear();
+        self.pvals.clear();
+        self.prows.clear();
+        self.rest_order.clear();
+    }
+
+    fn init_dims(&mut self, rcols: usize, ecols: usize) {
+        self.rcols = rcols;
+        self.ecols = ecols;
+        self.cap = (2 * self.r_budget).max(rcols).max(1);
+        self.gsum.clear();
+        self.gsum.resize(ecols, 0.0);
+        let slots = self.cap + 1;
+        self.feat.reserve(slots * rcols);
+        self.sketch.reserve(slots * ecols);
+        self.losses.reserve(slots);
+        self.ids.reserve(slots);
+        self.arrivals.reserve(slots);
+        self.pivot_idx.reserve(rcols);
+        self.pvals.reserve(rcols);
+        self.prows.reserve(rcols * rcols);
+        self.rest_order.reserve(slots);
+        self.pivots_flat.reserve(rcols * rcols);
+        self.cache_work.reserve(rcols * rcols);
+        self.taken.reserve(slots);
+        self.dims_set = true;
+    }
+
+    /// Ingest one row.  `f`/`g` are the feature row (R) and gradient
+    /// sketch (E); `id` is the caller's global row identity, carried
+    /// through to snapshots.  Dimensions must match the first row —
+    /// feeding views of different shapes into one stream is a caller
+    /// contract violation, not a data fault.
+    pub(crate) fn push_row(
+        &mut self,
+        f: &[f64],
+        g: &[f64],
+        loss: f64,
+        id: usize,
+        ws: &mut Workspace,
+    ) {
+        if !self.dims_set {
+            self.init_dims(f.len(), g.len());
+        }
+        assert_eq!(f.len(), self.rcols, "feature width changed mid-stream");
+        assert_eq!(g.len(), self.ecols, "sketch width changed mid-stream");
+        // ḡ accumulates every streamed row in arrival order — the exact
+        // addition sequence of the batch kernel.
+        for (t, &v) in g.iter().enumerate() {
+            self.gsum[t] += v;
+        }
+        self.seen += 1;
+        let arrival = self.seen;
+        if self.ids.len() < self.cap {
+            self.append_row(f, g, loss, id, arrival);
+            return;
+        }
+        if !self.saturated {
+            self.saturate(ws);
+        }
+        // Steady state: O(R²) cached-trajectory admission test.
+        let x = &mut ws.st_x;
+        x.clear();
+        x.extend_from_slice(f);
+        if eliminate_row(x, &self.prows, &self.pvals, self.rcols).is_some() {
+            self.admit(f, g, loss, id, arrival, ws);
+        } else {
+            self.try_replace_rest(f, g, loss, id, arrival);
+        }
+    }
+
+    fn append_row(&mut self, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64) {
+        self.feat.extend_from_slice(f);
+        self.sketch.extend_from_slice(g);
+        self.losses.push(loss);
+        self.ids.push(id);
+        self.arrivals.push(arrival);
+    }
+
+    /// Overwrite physical slot `dst` with row data from slot `src`
+    /// (`src > dst`), used when evicting: the last slot's row moves into
+    /// the hole.
+    fn move_row(&mut self, src: usize, dst: usize) {
+        let (r, e) = (self.rcols, self.ecols);
+        self.feat.copy_within(src * r..(src + 1) * r, dst * r);
+        self.sketch.copy_within(src * e..(src + 1) * e, dst * e);
+        self.losses[dst] = self.losses[src];
+        self.ids[dst] = self.ids[src];
+        self.arrivals[dst] = self.arrivals[src];
+    }
+
+    /// Overwrite physical slot `dst` with a fresh row.
+    fn write_row(&mut self, dst: usize, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64) {
+        let (r, e) = (self.rcols, self.ecols);
+        self.feat[dst * r..(dst + 1) * r].copy_from_slice(f);
+        self.sketch[dst * e..(dst + 1) * e].copy_from_slice(g);
+        self.losses[dst] = loss;
+        self.ids[dst] = id;
+        self.arrivals[dst] = arrival;
+    }
+
+    fn truncate(&mut self, len: usize) {
+        self.feat.truncate(len * self.rcols);
+        self.sketch.truncate(len * self.ecols);
+        self.losses.truncate(len);
+        self.ids.truncate(len);
+        self.arrivals.truncate(len);
+    }
+
+    /// `true` when slot `a` sorts after slot `b` under
+    /// `(loss desc, arrival asc)` — i.e. `a` is the worse top-up
+    /// candidate.
+    fn sorts_after(losses: &[f64], arrivals: &[u64], a: usize, b: usize) -> bool {
+        match losses[a].total_cmp(&losses[b]) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => arrivals[a] > arrivals[b],
+        }
+    }
+
+    /// First transition into steady state: tournament over the full
+    /// reservoir, then distil the elimination cache.
+    fn saturate(&mut self, ws: &mut Workspace) {
+        let len = self.ids.len();
+        let width = self.rcols.min(len);
+        let mut order = std::mem::take(&mut ws.st_order);
+        fast_maxvol_core(&self.feat[..len * self.rcols], len, self.rcols, width, ws, &mut order);
+        self.pivot_idx.clear();
+        self.pivot_idx.extend_from_slice(&order);
+        ws.st_order = order;
+        self.rebuild_cache();
+        self.rebuild_rest_order();
+        self.saturated = true;
+    }
+
+    /// A candidate that would win an argmax step: append it, re-run the
+    /// tournament with it included, evict the worst non-pivot by
+    /// `(loss desc, arrival asc)`, and rebuild the caches.
+    fn admit(&mut self, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64, ws: &mut Workspace) {
+        self.append_row(f, g, loss, id, arrival);
+        let len = self.ids.len(); // cap + 1
+        let width = self.rcols.min(len);
+        let mut order = std::mem::take(&mut ws.st_order);
+        fast_maxvol_core(&self.feat[..len * self.rcols], len, self.rcols, width, ws, &mut order);
+        self.pivot_idx.clear();
+        self.pivot_idx.extend_from_slice(&order);
+        ws.st_order = order;
+        // Worst non-pivot row loses its slot.
+        self.taken.clear();
+        self.taken.resize(len, false);
+        for &p in &self.pivot_idx {
+            self.taken[p] = true;
+        }
+        let mut worst = usize::MAX;
+        for i in 0..len {
+            if self.taken[i] {
+                continue;
+            }
+            if worst == usize::MAX || Self::sorts_after(&self.losses, &self.arrivals, i, worst) {
+                worst = i;
+            }
+        }
+        debug_assert!(worst != usize::MAX, "cap+1 rows cannot all be pivots (width ≤ R ≤ cap)");
+        let last = len - 1;
+        if worst != last {
+            self.move_row(last, worst);
+            for p in self.pivot_idx.iter_mut() {
+                if *p == last {
+                    *p = worst;
+                }
+            }
+        }
+        self.truncate(last);
+        self.rebuild_cache();
+        self.rebuild_rest_order();
+    }
+
+    /// A candidate that cannot change the pivot set only competes for the
+    /// top-up pool: replace the worst non-pivot iff the candidate's loss
+    /// is strictly higher (on ties the earlier arrival stays — the same
+    /// `(loss desc, arrival asc)` rule the snapshot top-up sorts by).
+    fn try_replace_rest(&mut self, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64) {
+        let Some(&worst) = self.rest_order.last() else {
+            return; // cap == R and every slot is a pivot: nothing to trade
+        };
+        if loss.total_cmp(&self.losses[worst]) != Ordering::Greater {
+            return;
+        }
+        self.rest_order.pop();
+        self.write_row(worst, f, g, loss, id, arrival);
+        let (losses, arrivals) = (&self.losses, &self.arrivals);
+        let pos = self.rest_order.partition_point(|&i| match losses[i].total_cmp(&loss) {
+            Ordering::Greater => true,
+            Ordering::Less => false,
+            Ordering::Equal => arrivals[i] < arrival,
+        });
+        self.rest_order.insert(pos, worst);
+    }
+
+    /// Gather the pivot rows (pivot order) and replay their elimination
+    /// trajectory into `pvals`/`prows`.
+    fn rebuild_cache(&mut self) {
+        self.pivots_flat.clear();
+        for &i in &self.pivot_idx {
+            self.pivots_flat.extend_from_slice(&self.feat[i * self.rcols..(i + 1) * self.rcols]);
+        }
+        replay_pivot_cache(
+            &self.pivots_flat,
+            self.rcols,
+            &mut self.cache_work,
+            &mut self.prows,
+            &mut self.pvals,
+        );
+    }
+
+    fn rebuild_rest_order(&mut self) {
+        let len = self.ids.len();
+        self.taken.clear();
+        self.taken.resize(len, false);
+        for &p in &self.pivot_idx {
+            self.taken[p] = true;
+        }
+        self.rest_order.clear();
+        for i in 0..len {
+            if !self.taken[i] {
+                self.rest_order.push(i);
+            }
+        }
+        let (losses, arrivals) = (&self.losses, &self.arrivals);
+        self.rest_order
+            .sort_unstable_by(|&a, &b| losses[b].total_cmp(&losses[a]).then(arrivals[a].cmp(&arrivals[b])));
+    }
+
+    /// Run the batch selection pipeline over the residents and write the
+    /// selected **global row ids** into `out` (selection order: MaxVol
+    /// pivots first, then the loss top-up).
+    ///
+    /// With a rank `policy` this mirrors `GraftSelector::select_into`
+    /// operation-for-operation: Fast MaxVol to depth `min(R, len)`,
+    /// prefix projection errors of ḡ over the pivot sketches, one
+    /// `choose` call (the policy's budget accounting advances exactly
+    /// once per snapshot, like one batch select), and — when `top_up` —
+    /// padding to the budget by `(loss desc, arrival asc)`.  Without a
+    /// policy it mirrors the feature-only `FastMaxVol` selector: depth
+    /// `min(R, budget, len)`, full budget, loss top-up.
+    ///
+    /// Returns the rank decision (`None` for the feature-only path or an
+    /// empty stream).  `&self`: snapshots never perturb the stream.
+    pub(crate) fn snapshot_into(
+        &self,
+        mut policy: Option<&mut BudgetedRankPolicy>,
+        top_up: bool,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) -> Option<RankDecision> {
+        out.clear();
+        let len = self.ids.len();
+        if len == 0 {
+            return None;
+        }
+        let depth = if policy.is_some() {
+            self.rcols.min(len)
+        } else {
+            self.rcols.min(self.r_budget).min(len)
+        };
+        let mut order = std::mem::take(&mut ws.st_order);
+        fast_maxvol_core(&self.feat[..len * self.rcols], len, self.rcols, depth, ws, &mut order);
+        let decision = if let Some(p) = policy.as_deref_mut() {
+            ws.pe_gbar.clear();
+            ws.pe_gbar.extend(self.gsum.iter().map(|v| v / self.seen as f64));
+            ws.pe_g.clear();
+            for &i in &order {
+                ws.pe_g.extend_from_slice(&self.sketch[i * self.ecols..(i + 1) * self.ecols]);
+            }
+            prefix_errors_core(&mut ws.pe_g, self.ecols, depth, &ws.pe_gbar, &mut ws.pe_ghat, &mut ws.pe_err);
+            Some(p.choose(&ws.pe_err, self.r_budget, depth))
+        } else {
+            None
+        };
+        let rank = decision.map_or(self.r_budget, |d| d.rank);
+        let take = rank.min(order.len());
+        out.extend_from_slice(&order[..take]);
+        ws.st_order = order;
+        let want = self.r_budget.min(len);
+        if top_up && out.len() < want {
+            // Same rule (and scratch) as `selection::top_up_by_loss`,
+            // with arrival standing in for the batch-local index — equal
+            // to it whenever the stream fit in the reservoir.
+            let taken = &mut ws.sel_taken;
+            taken.clear();
+            taken.resize(len, false);
+            for &i in out.iter() {
+                taken[i] = true;
+            }
+            let rest = &mut ws.sel_rest;
+            rest.clear();
+            rest.extend((0..len).filter(|&i| !taken[i]));
+            let (losses, arrivals) = (&self.losses, &self.arrivals);
+            rest.sort_unstable_by(|&a, &b| {
+                losses[b].total_cmp(&losses[a]).then(arrivals[a].cmp(&arrivals[b]))
+            });
+            let need = want - out.len();
+            out.extend(rest.iter().copied().take(need));
+        }
+        // Physical slots → global ids, in place.
+        for v in out.iter_mut() {
+            *v = self.ids[*v];
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graft::GraftSelector;
+    use crate::selection::testsupport::random_view;
+    use crate::selection::Selector;
+
+    fn push_all(state: &mut StreamState, owned: &crate::selection::testsupport::Owned, ws: &mut Workspace) {
+        let view = owned.view();
+        for i in 0..view.k() {
+            state.push_row(
+                view.features.row(i),
+                view.grads.row(i),
+                view.losses[i],
+                view.row_ids[i],
+                ws,
+            );
+        }
+    }
+
+    #[test]
+    fn stream_within_reservoir_matches_batch_bitwise() {
+        // K ≤ cap: the reservoir holds the whole stream, so the snapshot
+        // is structurally the batch pipeline — outputs must be identical
+        // in strict and adaptive mode.
+        for (k, r, e, budget, seed) in
+            [(24usize, 8usize, 12usize, 12usize, 1u64), (32, 6, 10, 16, 2), (16, 8, 8, 8, 3)]
+        {
+            let owned = random_view(k, r, e, 3, seed);
+            for adaptive in [false, true] {
+                let mk = || {
+                    if adaptive {
+                        BudgetedRankPolicy::adaptive(0.1, 0.5)
+                    } else {
+                        BudgetedRankPolicy::strict(0.1)
+                    }
+                };
+                let mut state = StreamState::new(budget);
+                let mut ws = Workspace::default();
+                push_all(&mut state, &owned, &mut ws);
+                assert!(state.len() <= state.capacity(), "reservoir bound");
+                assert_eq!(state.len(), k, "K ≤ cap keeps every row resident");
+                let mut policy = mk();
+                let mut got = Vec::new();
+                let d = state.snapshot_into(Some(&mut policy), !adaptive, &mut ws, &mut got);
+                let mut reference = GraftSelector::new(mk());
+                let want = reference.select(&owned.view(), budget);
+                assert_eq!(got, want, "k={k} budget={budget} adaptive={adaptive}");
+                assert_eq!(d, reference.last, "decision must match too");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_pivots_equal_fresh_tournament_after_long_stream() {
+        // The steady-state invariant everything rests on: at any point, a
+        // from-scratch tournament over the residents reproduces the
+        // incrementally-maintained pivot set exactly.
+        let owned = random_view(240, 6, 8, 4, 11);
+        let mut state = StreamState::new(8);
+        let mut ws = Workspace::default();
+        push_all(&mut state, &owned, &mut ws);
+        assert!(state.saturated, "240 rows must outgrow cap={}", state.capacity());
+        assert_eq!(state.len(), state.capacity(), "reservoir pinned at cap");
+        let len = state.len();
+        let width = state.rcols.min(len);
+        let mut fresh = Vec::new();
+        fast_maxvol_core(&state.feat[..len * state.rcols], len, state.rcols, width, &mut ws, &mut fresh);
+        assert_eq!(fresh, state.pivot_idx, "cached pivots drifted from the tournament");
+        // And the rest-order bookkeeping covers exactly the non-pivots,
+        // sorted worst-last.
+        assert_eq!(state.rest_order.len(), len - width);
+        for w in state.rest_order.windows(2) {
+            assert!(
+                !StreamState::sorts_after(&state.losses, &state.arrivals, w[0], w[1]),
+                "rest_order out of order"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_is_repeatable_and_pure() {
+        // Snapshots must not perturb the stream: two in a row (fresh
+        // policies) agree, and pushing after a snapshot still works.
+        let owned = random_view(100, 5, 7, 2, 21);
+        let mut state = StreamState::new(6);
+        let mut ws = Workspace::default();
+        push_all(&mut state, &owned, &mut ws);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let mut p1 = BudgetedRankPolicy::strict(0.1);
+        let mut p2 = BudgetedRankPolicy::strict(0.1);
+        state.snapshot_into(Some(&mut p1), true, &mut ws, &mut a);
+        state.snapshot_into(Some(&mut p2), true, &mut ws, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        let ids: std::collections::HashSet<_> = a.iter().copied().collect();
+        assert_eq!(ids.len(), 6, "snapshot ids unique");
+    }
+
+    #[test]
+    fn feature_only_snapshot_matches_fast_maxvol_within_reservoir() {
+        use crate::selection::maxvol::FastMaxVol;
+        let owned = random_view(20, 6, 8, 2, 31);
+        let mut state = StreamState::new(10);
+        let mut ws = Workspace::default();
+        push_all(&mut state, &owned, &mut ws);
+        let mut got = Vec::new();
+        let d = state.snapshot_into(None, true, &mut ws, &mut got);
+        assert!(d.is_none());
+        assert_eq!(got, FastMaxVol.select(&owned.view(), 10));
+    }
+
+    #[test]
+    fn reset_reuses_the_reservoir_for_a_new_stream() {
+        let owned = random_view(40, 5, 6, 2, 41);
+        let mut state = StreamState::new(5);
+        let mut ws = Workspace::default();
+        push_all(&mut state, &owned, &mut ws);
+        let mut first = Vec::new();
+        state.snapshot_into(None, true, &mut ws, &mut first);
+        state.reset();
+        assert_eq!(state.len(), 0);
+        assert_eq!(state.rows_seen(), 0);
+        push_all(&mut state, &owned, &mut ws);
+        let mut second = Vec::new();
+        state.snapshot_into(None, true, &mut ws, &mut second);
+        assert_eq!(first, second, "reset stream replays identically");
+    }
+
+    #[test]
+    fn evicted_rows_never_resurface_but_ids_stay_consistent() {
+        // Long stream with a known high-loss tail: the top-up pool must
+        // track the best losses among non-pivots seen so far.
+        let mut owned = random_view(200, 4, 6, 2, 51);
+        for i in 150..200 {
+            owned.losses[i] = 100.0 + i as f64; // late, loud rows
+        }
+        let mut state = StreamState::new(6);
+        let mut ws = Workspace::default();
+        push_all(&mut state, &owned, &mut ws);
+        let mut got = Vec::new();
+        state.snapshot_into(None, true, &mut ws, &mut got);
+        assert_eq!(got.len(), 6);
+        // Budget 6 at feature width 4 → at least two top-up slots, which
+        // must come from the loud tail (losses 100+ dominate everything).
+        let loud = got.iter().filter(|&&id| id >= 150).count();
+        assert!(loud >= 2, "top-up missed the high-loss tail: {got:?}");
+    }
+}

@@ -16,6 +16,7 @@ use crate::selection::{self, Selector};
 use crate::train::TrainConfig;
 
 use super::select::{Exec, SelectionEngine};
+use super::stream::StreamingEngine;
 
 /// How selection executes, spatially: the typed replacement for the
 /// `shards` / `pool_workers` / `overlap` knob pile.  All shapes are
@@ -147,6 +148,14 @@ pub enum EngineError {
     FractionOutOfRange { fraction: f64 },
     /// `budget`: an explicit per-batch budget of zero rows.
     ZeroBudget,
+    /// `budget`: a streaming session without an explicit row budget (the
+    /// reservoir bound is `2·budget`, and a fraction of an unknown stream
+    /// length cannot size it).
+    StreamNeedsBudget,
+    /// `method`: a known selection method whose criterion does not
+    /// survive incremental reservoir maintenance (streaming supports the
+    /// MaxVol family: `graft`, `graft-warm`, `maxvol`, `fast-maxvol`).
+    StreamUnsupportedMethod { method: String },
 }
 
 impl EngineError {
@@ -162,6 +171,8 @@ impl EngineError {
             EngineError::EpsilonOutOfRange { .. } => "epsilon",
             EngineError::FractionOutOfRange { .. } => "fraction",
             EngineError::ZeroBudget => "budget",
+            EngineError::StreamNeedsBudget => "budget",
+            EngineError::StreamUnsupportedMethod { .. } => "method",
         }
     }
 }
@@ -192,6 +203,16 @@ impl std::fmt::Display for EngineError {
                 write!(f, "fraction: {fraction} outside the valid range (0, 1]")
             }
             EngineError::ZeroBudget => write!(f, "budget: must be at least 1 row"),
+            EngineError::StreamNeedsBudget => write!(
+                f,
+                "budget: streaming needs an explicit row budget (EngineBuilder::budget) — a \
+                 fraction of an unknown stream length cannot size the reservoir"
+            ),
+            EngineError::StreamUnsupportedMethod { method } => write!(
+                f,
+                "method: '{method}' cannot stream (its criterion does not survive incremental \
+                 reservoir maintenance); streaming supports graft|graft-warm|maxvol|fast-maxvol"
+            ),
         }
     }
 }
@@ -602,6 +623,109 @@ impl EngineBuilder {
             self.fault,
             self.seed,
             notes,
+        ))
+    }
+
+    /// Validate the configuration and construct a bounded-memory
+    /// [`StreamingEngine`] instead of a batch engine.  Same scalar/name
+    /// validation as [`EngineBuilder::build`], plus two streaming rules:
+    ///
+    /// * an explicit [`EngineBuilder::budget`] is required
+    ///   ([`EngineError::StreamNeedsBudget`]) — the reservoir bound is
+    ///   `2·budget`, and a fraction of an unknown stream length cannot
+    ///   size it (the fraction still steers the adaptive rank policy's
+    ///   running average, exactly as in batch mode);
+    /// * the method must be a MaxVol criterion that survives incremental
+    ///   reservoir maintenance: `graft` / `graft-warm` (gradient-aware
+    ///   rank authority + loss top-up) or `maxvol` / `fast-maxvol`
+    ///   (feature-only).  Other known methods are
+    ///   [`EngineError::StreamUnsupportedMethod`]; unknown names stay
+    ///   [`EngineError::UnknownMethod`].
+    ///
+    /// Streaming always runs serial on the caller's thread (reservoir
+    /// maintenance is inherently sequential); a sharded or pooled shape
+    /// request is recorded as a note and ignored, mirroring the batch
+    /// builder's shardability fallback.
+    pub fn build_streaming(self) -> Result<StreamingEngine, EngineError> {
+        // -- scalar knobs (same rules as build) --------------------------
+        if !self.fraction.is_finite() || self.fraction <= 0.0 || self.fraction > 1.0 {
+            return Err(EngineError::FractionOutOfRange { fraction: self.fraction });
+        }
+        let check_eps = |epsilon: f64| {
+            if !epsilon.is_finite() || epsilon <= 0.0 || epsilon > 1.0 {
+                Err(EngineError::EpsilonOutOfRange { epsilon })
+            } else {
+                Ok(())
+            }
+        };
+        check_eps(self.epsilon)?;
+        if let RankMode::Adaptive { epsilon } = self.rank {
+            check_eps(epsilon)?;
+        }
+        if self.budget == Some(0) {
+            return Err(EngineError::ZeroBudget);
+        }
+        let budget = self.budget.ok_or(EngineError::StreamNeedsBudget)?;
+
+        // -- names -------------------------------------------------------
+        let is_graft = is_graft_method(&self.method);
+        let is_maxvol = matches!(self.method.as_str(), "maxvol" | "fast-maxvol");
+        if !is_graft && !is_maxvol {
+            return Err(if selection::by_name(&self.method, 0).is_none() {
+                EngineError::UnknownMethod { method: self.method }
+            } else {
+                EngineError::StreamUnsupportedMethod { method: self.method }
+            });
+        }
+        let extractor: Option<Box<dyn FeatureExtractor>> = match &self.extractor {
+            Some(name) => Some(
+                features::by_name(name)
+                    .ok_or_else(|| EngineError::UnknownExtractor { extractor: name.clone() })?,
+            ),
+            None => None,
+        };
+        // A named merge spelling still validates (the knob is simply
+        // inert on a serial stream).
+        if let MergeSpec::Named(s) = &self.merge {
+            MergePolicy::parse(s).ok_or_else(|| EngineError::UnknownMerge { merge: s.clone() })?;
+        }
+
+        // -- shape: validate, then fall back to serial with a note -------
+        let requested = match &self.shape {
+            ShapeSpec::Knobs { shards, pool_workers, overlap } => {
+                ExecShape::from_knobs(*shards, *pool_workers, *overlap)?
+            }
+            ShapeSpec::Typed(shape) => shape.validate()?,
+        };
+        let mut notes = Vec::new();
+        if requested != ExecShape::Serial {
+            notes.push(
+                "streaming sessions run serial on the caller's thread (incremental \
+                 reservoir maintenance is sequential); requested execution shape ignored"
+                    .to_string(),
+            );
+        }
+
+        // -- rank authority: one accumulator per engine, as in batch -----
+        let (policy, top_up) = if is_graft {
+            match self.rank {
+                RankMode::Adaptive { epsilon } => {
+                    (Some(BudgetedRankPolicy::adaptive(epsilon, self.fraction)), false)
+                }
+                // Strict GRAFT and feature-only MaxVol both fill the whole
+                // budget, topping up past the pivot depth by loss —
+                // exactly the batch selectors' contract.
+                RankMode::Strict => (Some(BudgetedRankPolicy::strict(self.epsilon)), true),
+            }
+        } else {
+            (None, true)
+        };
+
+        for n in &notes {
+            eprintln!("note: {n}");
+        }
+        Ok(StreamingEngine::from_parts(
+            policy, top_up, budget, self.fault, self.seed, extractor, notes,
         ))
     }
 }

@@ -76,12 +76,22 @@
 //! configurable [`FaultPolicy`] (typed failure / retry with respawn /
 //! degradation ladder) — see [`EngineBuilder::fault_policy`] and the
 //! crate-level docs for the error taxonomy.
+//!
+//! The streaming PR adds a second session type:
+//! [`EngineBuilder::build_streaming`] constructs a [`StreamingEngine`]
+//! that ingests rows in chunks of any size under a bounded reservoir
+//! (memory O(budget·width) regardless of stream length) and materialises
+//! a [`StreamSnapshot`] on demand — bit-identical to the batch engine
+//! whenever the stream fits the reservoir.  See [`stream`](self) docs on
+//! [`StreamingEngine`] for the guarantees.
 
 mod builder;
 mod select;
+mod stream;
 
 pub use builder::{default_merge, EngineBuilder, EngineError, ExecShape, RankMode};
 pub use select::{Selection, SelectionEngine};
+pub use stream::{StreamSnapshot, StreamingEngine};
 
 pub use crate::coordinator::fault::{
     Degradation, FaultPolicy, PoolStats, SelectError, WindowsError,

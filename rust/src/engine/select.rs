@@ -686,10 +686,22 @@ fn run_ladder(
 /// huge-but-finite values can overflow it.  Poisoned row indices land in
 /// `out`, ascending.
 fn scan_poisoned(view: &BatchView<'_>, out: &mut Vec<usize>) {
+    scan_poisoned_range(view, 0..view.k(), out);
+}
+
+/// [`scan_poisoned`] restricted to a row range — the streaming engine
+/// quarantines per pushed chunk, so it scans only the rows it is about to
+/// ingest.  Indices in `out` are view-local (absolute, not
+/// range-relative).
+pub(crate) fn scan_poisoned_range(
+    view: &BatchView<'_>,
+    range: std::ops::Range<usize>,
+    out: &mut Vec<usize>,
+) {
     out.clear();
     let (rc, ec) = (view.features.cols(), view.grads.cols());
     let (fd, gd) = (view.features.data(), view.grads.data());
-    for i in 0..view.k() {
+    for i in range {
         let frow = &fd[i * rc..(i + 1) * rc];
         let grow = &gd[i * ec..(i + 1) * ec];
         let loss = view.losses.get(i).copied().unwrap_or(0.0);

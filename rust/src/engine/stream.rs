@@ -1,0 +1,292 @@
+//! `StreamingEngine` — the bounded-memory streaming session of the
+//! selection facade.
+//!
+//! Where [`SelectionEngine`](super::SelectionEngine) selects from one
+//! fully-assembled batch at a time, the streaming engine ingests rows
+//! **in chunks of any size** ([`StreamingEngine::push`] /
+//! [`StreamingEngine::push_range`]) and can be asked for a selection at
+//! any point ([`StreamingEngine::snapshot`]).  Memory stays
+//! O(cap·(R+E)) with `cap = max(2·budget, R)` no matter how long the
+//! stream runs — the reservoir and its incremental-MaxVol admission live
+//! in [`crate::coordinator::stream`].
+//!
+//! Guarantees (pinned by `tests/streaming.rs`):
+//!
+//! * **Stream ≡ batch.**  When the whole stream fits the reservoir
+//!   (K ≤ cap), a snapshot is bit-identical to the batch selector on the
+//!   same rows — strict and adaptive rank alike — because the snapshot
+//!   *is* the batch pipeline run over the residents.
+//! * **Chunk-oblivious.**  Rows are processed one at a time internally,
+//!   so any chunking of the same arrival order yields identical state
+//!   and identical snapshots, for streams of any length.
+//! * **Typed faults, no panics.**  Non-finite rows in a pushed chunk are
+//!   rejected atomically with [`SelectError::PoisonedInput`] under
+//!   `Fail`/`Retry` (nothing from the chunk is ingested), or skipped and
+//!   recorded as [`Degradation::Quarantined`] under `Degrade`.
+//!   Degenerate MaxVol pivots surface at the next snapshot as
+//!   [`SelectError::NumericalBreakdown`] — or, under `Degrade`, the
+//!   snapshot falls back to the same seeded-random rung as the batch
+//!   ladder (recorded as [`Degradation::SeededRandom`]).
+//!
+//! Built by [`EngineBuilder::build_streaming`](super::EngineBuilder::build_streaming);
+//! streaming requires an explicit row budget (a fraction of an unknown
+//! stream length is meaningless) and a MaxVol-criterion method (`graft`,
+//! `graft-warm`, `maxvol`) whose selection survives incremental
+//! maintenance.
+
+use crate::coordinator::fault::{Degradation, FaultPolicy, SelectError};
+use crate::coordinator::stream::StreamState;
+use crate::features::FeatureExtractor;
+use crate::graft::{BudgetedRankPolicy, RankDecision, RankStats};
+use crate::linalg::Workspace;
+use crate::rng::Rng;
+use crate::selection::BatchView;
+
+use super::select::scan_poisoned_range;
+
+/// One materialised selection from a stream: the streaming counterpart of
+/// [`Selection`](super::Selection), owned rather than borrowed because a
+/// snapshot outlives no engine buffer.
+#[derive(Debug)]
+pub struct StreamSnapshot {
+    /// Selected **global row ids** (the `row_ids` of the pushed views),
+    /// in selection order: MaxVol pivots first, then the loss top-up.
+    pub indices: Vec<usize>,
+    /// The rank decision, when a GRAFT rank authority is configured and
+    /// the snapshot was not degraded (`None` for feature-only `maxvol`
+    /// streams, empty streams, and seeded-random fallbacks).
+    pub decision: Option<RankDecision>,
+    /// The configured per-snapshot row budget.
+    pub budget: usize,
+    /// Total rows streamed in so far (resident or evicted).
+    pub rows_seen: u64,
+    /// Rows currently resident in the reservoir.
+    pub reservoir_len: usize,
+    /// Degradations recorded since the previous snapshot (quarantined
+    /// chunks, seeded-random fallback); empty on a healthy stream.
+    pub degradations: Vec<Degradation>,
+}
+
+/// Streaming selection session — see the [module docs](self).
+pub struct StreamingEngine {
+    state: StreamState,
+    /// GRAFT rank authority (one accumulator for the whole stream, like
+    /// the batch engine's); `None` runs feature-only MaxVol.
+    policy: Option<BudgetedRankPolicy>,
+    top_up: bool,
+    budget: usize,
+    fault: FaultPolicy,
+    seed: u64,
+    extractor: Option<Box<dyn FeatureExtractor>>,
+    notes: Vec<String>,
+    ws: Workspace,
+    qrows: Vec<usize>,
+    degr: Vec<Degradation>,
+    quarantined: u64,
+    /// Degenerate pivots clamped during pushes since the last snapshot
+    /// (admission tournaments); folded into the snapshot's health check.
+    push_degenerate: u64,
+    snapshots: u64,
+    last: Option<RankDecision>,
+}
+
+impl StreamingEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        policy: Option<BudgetedRankPolicy>,
+        top_up: bool,
+        budget: usize,
+        fault: FaultPolicy,
+        seed: u64,
+        extractor: Option<Box<dyn FeatureExtractor>>,
+        notes: Vec<String>,
+    ) -> StreamingEngine {
+        StreamingEngine {
+            state: StreamState::new(budget),
+            policy,
+            top_up,
+            budget,
+            fault,
+            seed,
+            extractor,
+            notes,
+            ws: Workspace::default(),
+            qrows: Vec::new(),
+            degr: Vec::new(),
+            quarantined: 0,
+            push_degenerate: 0,
+            snapshots: 0,
+            last: None,
+        }
+    }
+
+    /// Ingest every row of `view`.  Equivalent to
+    /// [`StreamingEngine::push_range`] over `0..view.k()`.
+    pub fn push(&mut self, view: &BatchView<'_>) -> Result<(), SelectError> {
+        self.push_range(view, 0..view.k())
+    }
+
+    /// Ingest rows `range` of `view` (the chunk boundary is invisible to
+    /// the result: any chunking of the same row order is equivalent).
+    ///
+    /// All pushed views of one stream must share the feature/sketch
+    /// widths of the first (a shape change is a caller contract
+    /// violation).  Non-finite rows fault per the configured policy —
+    /// under `Fail`/`Retry` the chunk is rejected atomically with
+    /// [`SelectError::PoisonedInput`] (view-local row indices) and
+    /// nothing is ingested; under `Degrade` the poisoned rows are
+    /// skipped and recorded, and the clean remainder streams in.
+    pub fn push_range(
+        &mut self,
+        view: &BatchView<'_>,
+        range: std::ops::Range<usize>,
+    ) -> Result<(), SelectError> {
+        assert!(range.end <= view.k(), "push range {range:?} exceeds view rows {}", view.k());
+        scan_poisoned_range(view, range.clone(), &mut self.qrows);
+        if !self.qrows.is_empty() {
+            if !matches!(self.fault, FaultPolicy::Degrade) {
+                return Err(SelectError::PoisonedInput { rows: self.qrows.clone() });
+            }
+            self.quarantined += self.qrows.len() as u64;
+            self.degr.push(Degradation::Quarantined { rows: self.qrows.clone() });
+        }
+        let degen0 = self.ws.mv_degenerate;
+        let mut q = 0usize;
+        for i in range {
+            if q < self.qrows.len() && self.qrows[q] == i {
+                q += 1;
+                continue;
+            }
+            self.state.push_row(
+                view.features.row(i),
+                view.grads.row(i),
+                view.losses[i],
+                view.row_ids[i],
+                &mut self.ws,
+            );
+        }
+        self.push_degenerate += self.ws.mv_degenerate - degen0;
+        Ok(())
+    }
+
+    /// Select from everything streamed so far.  Does not perturb the
+    /// stream: pushing may continue afterwards, and each snapshot
+    /// advances the rank authority's budget accounting exactly once
+    /// (like one batch select).
+    ///
+    /// Numerical breakdown (degenerate pivots in any tournament since
+    /// the last snapshot, or a non-finite rank decision) surfaces here:
+    /// typed error under `Fail`/`Retry` (deterministic — a retry cannot
+    /// help), seeded-random fallback under `Degrade`.
+    pub fn snapshot(&mut self) -> Result<StreamSnapshot, SelectError> {
+        let window = self.snapshots;
+        self.snapshots += 1;
+        let degen0 = self.ws.mv_degenerate;
+        let mut out = Vec::new();
+        let decision =
+            self.state.snapshot_into(self.policy.as_mut(), self.top_up, &mut self.ws, &mut out);
+        let clamped = self.push_degenerate + (self.ws.mv_degenerate - degen0);
+        self.push_degenerate = 0;
+        let bad_rank = decision.is_some_and(|d| !d.error.is_finite());
+        if clamped > 0 || bad_rank {
+            let cause = if clamped > 0 {
+                SelectError::NumericalBreakdown {
+                    stage: "stream-maxvol",
+                    detail: format!("{clamped} degenerate pivot(s) clamped in the streaming reservoir"),
+                }
+            } else {
+                SelectError::NumericalBreakdown {
+                    stage: "rank",
+                    detail: format!(
+                        "non-finite projection error {}",
+                        decision.map(|d| d.error).unwrap_or(f64::NAN)
+                    ),
+                }
+            };
+            if !matches!(self.fault, FaultPolicy::Degrade) {
+                return Err(cause);
+            }
+            // Deterministic breakdown skips straight to the seeded-random
+            // rung, exactly like the batch ladder (same seed formula, the
+            // snapshot ordinal standing in for the window ordinal).
+            let len = self.state.len();
+            let mut rng = Rng::new(self.seed ^ (0xDE6 ^ window.wrapping_mul(0x9E37_79B9)));
+            out.clear();
+            out.extend(rng.choose(len, self.budget.min(len)).into_iter().map(|i| self.state.id_at(i)));
+            self.degr.push(Degradation::SeededRandom { cause: cause.to_string() });
+            self.last = None;
+            return Ok(self.finish(out, None));
+        }
+        self.last = decision;
+        Ok(self.finish(out, decision))
+    }
+
+    fn finish(&mut self, indices: Vec<usize>, decision: Option<RankDecision>) -> StreamSnapshot {
+        StreamSnapshot {
+            indices,
+            decision,
+            budget: self.budget,
+            rows_seen: self.state.rows_seen(),
+            reservoir_len: self.state.len(),
+            degradations: std::mem::take(&mut self.degr),
+        }
+    }
+
+    /// Start a fresh stream, keeping the engine: the reservoir empties
+    /// (buffer capacity is retained, so the next stream allocates
+    /// nothing) while the rank authority's run-level budget accounting
+    /// carries over — one accumulator per engine, like the batch facade.
+    pub fn reset(&mut self) {
+        self.state.reset();
+        self.degr.clear();
+        self.push_degenerate = 0;
+    }
+
+    /// Configured per-snapshot row budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Total rows streamed into the current stream.
+    pub fn rows_seen(&self) -> u64 {
+        self.state.rows_seen()
+    }
+
+    /// Rows currently resident in the reservoir.
+    pub fn reservoir_len(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Resident-row bound (0 until the first push fixes the dimensions).
+    pub fn reservoir_capacity(&self) -> usize {
+        self.state.capacity()
+    }
+
+    /// Total poisoned rows quarantined over the engine's lifetime
+    /// (only grows under [`FaultPolicy::Degrade`]).
+    pub fn quarantined_rows(&self) -> u64 {
+        self.quarantined
+    }
+
+    /// Validated extractor owned by the engine (for callers assembling
+    /// their own chunks, mirroring [`SelectionEngine::extractor`]).
+    ///
+    /// [`SelectionEngine::extractor`]: super::SelectionEngine::extractor
+    pub fn extractor(&self) -> Option<&dyn FeatureExtractor> {
+        self.extractor.as_deref()
+    }
+
+    /// Build-time fallback notes (e.g. a non-serial shape request).
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+
+    /// Rank-authority accounting (`None` for feature-only streams).
+    pub fn rank_stats(&self) -> Option<RankStats> {
+        self.policy.as_ref().map(|p| RankStats {
+            mean_rank: p.mean_rank(),
+            batches: p.batches(),
+            last: self.last,
+        })
+    }
+}

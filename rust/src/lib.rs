@@ -19,6 +19,16 @@
 //!   gradient-merge rank authority, and returns first-class
 //!   [`engine::Selection`] results.  See the quickstart in the [`engine`]
 //!   module docs and `examples/quickstart.rs`.
+//! * **Selecting from unbounded streams** — [`engine::StreamingEngine`],
+//!   built with [`engine::EngineBuilder::build_streaming`]: rows arrive
+//!   in chunks via [`push`](engine::StreamingEngine::push), a bounded
+//!   reservoir (≤ 2·budget candidates) is maintained by incremental
+//!   MaxVol swaps, gradient sketches accumulate into running partial
+//!   sums, and [`snapshot`](engine::StreamingEngine::snapshot) applies
+//!   the rank authority to the current reservoir — memory stays O(r·E)
+//!   however long the stream runs.  A stream that fits the reservoir
+//!   reproduces the batch selection bit for bit, at any chunking.
+//!   CLI: `--stream-chunk N` on `train`.
 //! * **Whole training runs** — [`train::run`] with a [`train::TrainConfig`]
 //!   (the CLI's `train` subcommand); it drives the AOT artifacts through
 //!   [`runtime`] and builds its Rust-side selection through the engine.

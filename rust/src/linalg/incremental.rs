@@ -1,0 +1,251 @@
+//! Incremental MaxVol machinery for the streaming reservoir
+//! (`coordinator::stream`): a replayable cache of the pivot-elimination
+//! trajectory of `fast_maxvol_core`, plus the O(R²) per-row admission test
+//! built on it.
+//!
+//! `fast_maxvol_core` is a greedy elimination: at step `j` it picks the
+//! untaken row with the largest |column-`j`| value, then applies the
+//! rank-1 update `w[i, j+1..] -= w[i, j] · prow_j` to every row.  The key
+//! structural fact this module exploits is that each row's working-value
+//! trajectory depends only on *its own* starting values and the shared
+//! pivot rows — never on the other competitors.  So once a tournament has
+//! fixed the pivots, their per-step values (`pvals`) and scaled
+//! elimination rows (`prows`) are a complete, bit-exact description of
+//! what any future candidate row would experience in a re-run tournament:
+//!
+//! * [`replay_pivot_cache`] rebuilds `pvals`/`prows` from the pivot rows
+//!   alone (O(R²·R) once per reservoir change), reproducing the exact
+//!   clamp-and-divide arithmetic of the full kernel.
+//! * [`eliminate_row`] pushes one candidate through the cached trajectory:
+//!   if its working value ever *strictly* exceeds the pivot's, the
+//!   candidate would win that argmax step and the caller must re-run the
+//!   full tournament; otherwise the reservoir's pivot set is provably
+//!   unchanged and the candidate can be triaged by loss alone.
+//!
+//! Ties favour the resident pivot, matching the strict `>` argmax of
+//! `fast_maxvol_core` (residents precede an appended candidate in scan
+//! order), so "admit ⟺ the full tournament would change" holds exactly —
+//! pinned by the property tests below.
+
+/// Degenerate-pivot clamp shared with `fast_maxvol_core`: division uses
+/// the clamped value, comparisons use the raw one.
+#[inline]
+fn clamp_pivot(piv: f64) -> f64 {
+    if piv.abs() < 1e-300 {
+        if piv >= 0.0 {
+            1e-300
+        } else {
+            -1e-300
+        }
+    } else {
+        piv
+    }
+}
+
+/// Rebuild the elimination cache from the pivot rows of a finished
+/// tournament.
+///
+/// `pivots` holds the `width` pivot rows (each `rcols` wide, row-major,
+/// in pivot order) *as they appear in the original matrix* — i.e. before
+/// any elimination.  The replay applies the same rank-1 updates the full
+/// kernel would, recording for each step `j`:
+///
+/// * `pvals[j]` — the pivot's working value at column `j` (pre-clamp;
+///   this is what argmax compares against), and
+/// * `prows[j]` — the scaled elimination row for columns `j+1..rcols`
+///   (post-clamp divide), flattened ragged into `prows` (step `j`
+///   contributes `rcols - j - 1` entries).
+///
+/// Degenerate pivots are clamped locally and **not** counted anywhere:
+/// the tournament that produced these pivots already bumped
+/// `Workspace::mv_degenerate`, and a replay must not double-count.
+/// `work` is caller-owned scratch (capacity retained across calls).
+pub(crate) fn replay_pivot_cache(
+    pivots: &[f64],
+    rcols: usize,
+    work: &mut Vec<f64>,
+    prows: &mut Vec<f64>,
+    pvals: &mut Vec<f64>,
+) {
+    let width = if rcols == 0 { 0 } else { pivots.len() / rcols };
+    debug_assert_eq!(pivots.len(), width * rcols, "pivot buffer must be width×rcols");
+    work.clear();
+    work.extend_from_slice(pivots);
+    prows.clear();
+    pvals.clear();
+    for j in 0..width {
+        let piv = work[j * rcols + j];
+        pvals.push(piv);
+        let safe = clamp_pivot(piv);
+        let tail = rcols - j - 1;
+        let base = j * rcols;
+        let start = prows.len();
+        for t in 0..tail {
+            prows.push(work[base + j + 1 + t] / safe);
+        }
+        // Eliminate the *later* pivot rows exactly as the kernel would;
+        // earlier pivots and row j itself are never read again.
+        for i in j + 1..width {
+            let ib = i * rcols;
+            let ci = work[ib + j];
+            if ci == 0.0 {
+                continue;
+            }
+            let prow = &prows[start..start + tail];
+            for (x, &p) in work[ib + j + 1..ib + rcols].iter_mut().zip(prow) {
+                *x -= ci * p;
+            }
+        }
+    }
+}
+
+/// Push one candidate row through the cached pivot trajectory, in place.
+///
+/// `x` is the candidate's raw feature row (`rcols` long); on return it
+/// holds the partially-eliminated values.  Returns `Some(j)` at the first
+/// step where the candidate's working value **strictly** exceeds the
+/// resident pivot's (`|x[j]| > |pvals[j]|`) — the candidate would win
+/// that argmax, so the caller must re-run the full tournament with it
+/// included.  Returns `None` when every step is survived: the reservoir's
+/// pivot set is unchanged by this candidate, bit-for-bit.
+///
+/// The arithmetic (`x[j+1..] -= x[j] · prow_j`, skipped when
+/// `x[j] == 0.0`) mirrors `fast_maxvol_core` exactly, so the values seen
+/// here are the values a full re-tournament would compare.
+pub(crate) fn eliminate_row(x: &mut [f64], prows: &[f64], pvals: &[f64], rcols: usize) -> Option<usize> {
+    debug_assert_eq!(x.len(), rcols, "candidate row must be rcols wide");
+    let width = pvals.len();
+    let mut off = 0usize;
+    for j in 0..width {
+        if x[j].abs() > pvals[j].abs() {
+            return Some(j);
+        }
+        let tail = rcols - j - 1;
+        let ci = x[j];
+        if ci != 0.0 {
+            let prow = &prows[off..off + tail];
+            for (v, &p) in x[j + 1..rcols].iter_mut().zip(prow) {
+                *v -= ci * p;
+            }
+        }
+        off += tail;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Workspace;
+    use crate::rng::Rng;
+    use crate::selection::maxvol::fast_maxvol_core;
+
+    fn random_flat(k: usize, rcols: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..k * rcols).map(|_| rng.normal()).collect()
+    }
+
+    /// Run the full tournament and build the cache from its pivot rows.
+    fn cache_for(
+        data: &[f64],
+        k: usize,
+        rcols: usize,
+        ws: &mut Workspace,
+    ) -> (Vec<usize>, Vec<f64>, Vec<f64>) {
+        let mut order = Vec::new();
+        fast_maxvol_core(data, k, rcols, rcols.min(k), ws, &mut order);
+        let mut flat = Vec::new();
+        for &i in &order {
+            flat.extend_from_slice(&data[i * rcols..(i + 1) * rcols]);
+        }
+        let (mut work, mut prows, mut pvals) = (Vec::new(), Vec::new(), Vec::new());
+        replay_pivot_cache(&flat, rcols, &mut work, &mut prows, &mut pvals);
+        (order, prows, pvals)
+    }
+
+    #[test]
+    fn resident_non_pivots_never_admit() {
+        // Every row that lost the tournament must survive the cached
+        // trajectory without ever beating a pivot — otherwise skipping
+        // the re-tournament for such rows would be unsound.
+        for seed in 0..6u64 {
+            let (k, rcols) = (24usize, 6usize);
+            let data = random_flat(k, rcols, 100 + seed);
+            let mut ws = Workspace::default();
+            let (order, prows, pvals) = cache_for(&data, k, rcols, &mut ws);
+            for i in 0..k {
+                if order.contains(&i) {
+                    continue;
+                }
+                let mut x = data[i * rcols..(i + 1) * rcols].to_vec();
+                assert_eq!(
+                    eliminate_row(&mut x, &prows, &pvals, rcols),
+                    None,
+                    "seed {seed}: losing row {i} claimed an admit"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admit_iff_full_tournament_includes_candidate() {
+        // The whole point of the cache: eliminate_row says Some ⟺ a full
+        // re-tournament over reservoir+candidate picks the candidate.
+        for seed in 0..10u64 {
+            let (k, rcols) = (20usize, 5usize);
+            let data = random_flat(k, rcols, 200 + seed);
+            let mut ws = Workspace::default();
+            let (_, prows, pvals) = cache_for(&data, k, rcols, &mut ws);
+            let mut rng = Rng::new(900 + seed);
+            for trial in 0..8 {
+                // Mix of fresh rows and amplified copies of resident rows
+                // (the latter usually trip an admit, exercising both arms).
+                let cand: Vec<f64> = if trial % 2 == 0 {
+                    (0..rcols).map(|_| rng.normal()).collect()
+                } else {
+                    let src = rng.below(k);
+                    data[src * rcols..(src + 1) * rcols].iter().map(|v| v * 3.0).collect()
+                };
+                let mut x = cand.clone();
+                let admit = eliminate_row(&mut x, &prows, &pvals, rcols).is_some();
+                let mut ext = data.clone();
+                ext.extend_from_slice(&cand);
+                let mut order = Vec::new();
+                fast_maxvol_core(&ext, k + 1, rcols, rcols, &mut ws, &mut order);
+                let in_tournament = order.contains(&k);
+                assert_eq!(
+                    admit, in_tournament,
+                    "seed {seed} trial {trial}: admit={admit} but tournament={in_tournament}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_tie_favours_resident_pivot() {
+        // A candidate identical to a pivot row ties every argmax; the
+        // strict > comparison must keep the resident (no admit), matching
+        // the kernel's earliest-index tie-break for an appended candidate.
+        let (k, rcols) = (16usize, 4usize);
+        let data = random_flat(k, rcols, 77);
+        let mut ws = Workspace::default();
+        let (order, prows, pvals) = cache_for(&data, k, rcols, &mut ws);
+        let p0 = order[0];
+        let mut x = data[p0 * rcols..(p0 + 1) * rcols].to_vec();
+        assert_eq!(eliminate_row(&mut x, &prows, &pvals, rcols), None);
+    }
+
+    #[test]
+    fn degenerate_pivots_clamp_without_counting() {
+        // Rank-deficient pivot set: the replay must clamp like the kernel
+        // but leave the workspace's degeneracy counter untouched.
+        let rcols = 3usize;
+        // Two identical rows: the second pivot's working value collapses.
+        let pivots = vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 0.5, 0.1, 0.2];
+        let (mut work, mut prows, mut pvals) = (Vec::new(), Vec::new(), Vec::new());
+        replay_pivot_cache(&pivots, rcols, &mut work, &mut prows, &mut pvals);
+        assert_eq!(pvals.len(), 3);
+        assert_eq!(pvals[1], 0.0, "collapsed pivot recorded pre-clamp");
+        assert!(prows.iter().all(|v| v.is_finite()), "clamped divide stays finite");
+    }
+}

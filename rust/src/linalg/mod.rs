@@ -39,6 +39,7 @@
 //! `BENCH_pr1.json` (see `scripts/bench.sh`).
 
 pub mod angles;
+pub(crate) mod incremental;
 pub mod mat;
 pub mod qr;
 pub mod solve;

@@ -54,6 +54,15 @@ pub struct Workspace {
     pub(crate) sel_taken: Vec<bool>,
     /// Unselected candidates for budget top-up (≤ K).
     pub(crate) sel_rest: Vec<usize>,
+
+    // -- incremental (streaming) MaxVol ------------------------------------
+    /// Eliminated copy of one incoming feature row (R), consumed by
+    /// `linalg::incremental::eliminate_row` on the streaming push path.
+    pub(crate) st_x: Vec<f64>,
+    /// Pivot order scratch for the streaming reservoir tournaments (≤ R),
+    /// kept separate from `sel_order` so a snapshot can replay a
+    /// tournament without disturbing selector state.
+    pub(crate) st_order: Vec<usize>,
 }
 
 impl Workspace {

@@ -30,14 +30,29 @@ pub fn fast_maxvol(v: &Mat, r: usize) -> Vec<usize> {
 /// scalar reference, so the result is bit-identical to
 /// [`fast_maxvol_reference`].
 pub fn fast_maxvol_with(v: &Mat, r: usize, ws: &mut Workspace, out: &mut Vec<usize>) {
-    let (k, rcols) = (v.rows(), v.cols());
+    fast_maxvol_core(v.data(), v.rows(), v.cols(), r, ws, out);
+}
+
+/// [`fast_maxvol_with`] on a raw row-major K×R slice instead of a [`Mat`]
+/// — the same kernel, byte for byte, for callers that keep their candidate
+/// rows in a flat buffer (the streaming reservoir).  Extracted rather than
+/// duplicated so the two paths cannot drift.
+pub(crate) fn fast_maxvol_core(
+    data: &[f64],
+    k: usize,
+    rcols: usize,
+    r: usize,
+    ws: &mut Workspace,
+    out: &mut Vec<usize>,
+) {
+    assert_eq!(data.len(), k * rcols, "flat candidate buffer must be K×R");
     assert!(r <= rcols && r <= k, "need r <= min(K={k}, R={rcols}), got {r}");
     out.clear();
     // Working copy, row-major K×R; selected mask keeps selections unique
     // even on rank-deficient inputs (matches the Pallas kernel).
     let w = &mut ws.mv_w;
     w.clear();
-    w.extend_from_slice(v.data());
+    w.extend_from_slice(data);
     let taken = &mut ws.mv_taken;
     taken.clear();
     taken.resize(k, false);

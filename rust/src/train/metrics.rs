@@ -27,6 +27,11 @@ pub struct RunResult {
     pub curve: Vec<CurvePoint>,
     /// Mean selected subset size per refresh (GRAFT telemetry).
     pub mean_rank: f64,
+    /// Total duplicate winner rows dropped across refreshes.  Every
+    /// selector pins unique winners, so anything non-zero means some
+    /// refresh handed back duplicates and trained on fewer rows than the
+    /// requested budget — previously this shrink was silent.
+    pub dup_rows_dropped: usize,
 }
 
 impl RunResult {
@@ -42,11 +47,15 @@ impl RunResult {
     }
 
     pub fn summary_row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:<12} {:<14} f={:<5.2} acc={:<7.4} co2={:<9.6}kg kwh={:<9.6} steps={}",
             self.method, self.dataset, self.fraction, self.final_acc, self.co2_kg,
             self.energy_kwh, self.steps
-        )
+        );
+        if self.dup_rows_dropped > 0 {
+            row.push_str(&format!(" dup_rows_dropped={}", self.dup_rows_dropped));
+        }
+        row
     }
 }
 
@@ -105,8 +114,14 @@ mod tests {
             steps: 100,
             curve: vec![CurvePoint { step: 1, epoch: 0, train_loss: 2.0, test_acc: 0.1, co2_kg: 0.0, wall_secs: 0.1 }],
             mean_rank: 31.5,
+            dup_rows_dropped: 0,
         };
         assert_eq!(r.curve_csv().lines().count(), 2);
         assert!(r.summary_row().contains("graft"));
+        // The silent-shrink signal stays out of the row when clean and
+        // shows up loudly when any refresh dropped duplicate winners.
+        assert!(!r.summary_row().contains("dup_rows_dropped"));
+        let noisy = RunResult { dup_rows_dropped: 3, ..r };
+        assert!(noisy.summary_row().contains("dup_rows_dropped=3"));
     }
 }

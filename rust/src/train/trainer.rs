@@ -10,9 +10,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{MergePolicy, SelectWindow};
+use crate::coordinator::{MergePolicy, SelectWindow, SubsetState};
 use crate::data::{corpus, iris, loader::Batcher, synth, Dataset};
-use crate::engine::{EngineBuilder, SelectionEngine, WindowsError};
+use crate::engine::{EngineBuilder, SelectionEngine, StreamingEngine, WindowsError};
 use crate::features::FeatureExtractor;
 use crate::graft::alignment::AlignmentSample;
 use crate::graft::{AlignmentStats, BudgetedRankPolicy};
@@ -86,6 +86,16 @@ pub struct TrainConfig {
     /// trajectory is identical with the flag on or off: window assembly
     /// never depends on selection results, so only the wall-clock changes.
     pub overlap: bool,
+    /// Stream each refresh window through the bounded-memory
+    /// [`StreamingEngine`](crate::engine::StreamingEngine) in chunks of
+    /// this many rows instead of batch-selecting it whole.  `0` (the
+    /// default) keeps batch selection.  Applies to the Rust-side
+    /// MaxVol-criterion paths (GRAFT with `--extractor`, and the
+    /// maxvol/fast-maxvol baselines); other methods note and ignore the
+    /// knob, like the shardability fallbacks.  Selections are
+    /// bit-identical to batch mode at any chunk size whenever the window
+    /// fits the reservoir (`K ≤ max(2·budget, feature width)`).
+    pub stream_chunk: usize,
     pub seed: u64,
 }
 
@@ -115,6 +125,7 @@ impl Default for TrainConfig {
             shards: 1,
             pool_workers: 0,
             overlap: false,
+            stream_chunk: 0,
             seed: 42,
         }
     }
@@ -186,7 +197,35 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     // GRAFT at shards > 1 under the gradient-aware merge — the single
     // coordinator-level rank authority.  All the method-aware wiring the
     // trainer used to hand-roll lives in `EngineBuilder::build`.
-    let mut baseline: Option<SelectionEngine> = if !is_full && !is_graft {
+    // Streaming refresh (`--stream-chunk`): the same facade's bounded-
+    // memory session replaces batch selection for the MaxVol-criterion
+    // Rust-side paths.  Built once per run like the batch engines, so the
+    // reservoir buffers warm up once and the adaptive rank authority
+    // accumulates across every refresh.
+    let stream_ok = (is_graft && cfg.extractor.is_some())
+        || matches!(cfg.method.as_str(), "maxvol" | "fast-maxvol");
+    let mut stream_eng: Option<StreamingEngine> = if !is_full && cfg.stream_chunk > 0 {
+        if stream_ok {
+            Some(
+                EngineBuilder::from_train_config(cfg)
+                    .budget(r_budget)
+                    .build_streaming()
+                    .context("invalid streaming selection configuration")?,
+            )
+        } else {
+            eprintln!(
+                "note: --stream-chunk applies to the Rust-side MaxVol selection paths \
+                 (graft with --extractor, maxvol/fast-maxvol); method '{}' selects in \
+                 batch mode",
+                cfg.method
+            );
+            None
+        }
+    } else {
+        None
+    };
+    let streaming = stream_eng.is_some();
+    let mut baseline: Option<SelectionEngine> = if !is_full && !is_graft && !streaming {
         Some(
             EngineBuilder::from_train_config(cfg)
                 .budget(r_budget)
@@ -199,7 +238,8 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     // GRAFT extractor ablation path: same facade, built once per *run*
     // (not per refresh) so pooled workers — and their warmed
     // workspaces/buffers — live across refreshes.
-    let mut graft_eng: Option<SelectionEngine> = if is_graft && cfg.extractor.is_some() {
+    let mut graft_eng: Option<SelectionEngine> = if is_graft && cfg.extractor.is_some() && !streaming
+    {
         Some(
             EngineBuilder::from_train_config(cfg)
                 .budget(r_budget)
@@ -249,16 +289,24 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
     let mut epoch = 0usize;
     let mut refresh_rng = Rng::new(cfg.seed ^ 0xF5);
     let mut active: Vec<usize> = (0..train.n).collect();
+    // Provenance/invariant tracker for the active set: bounds-checks every
+    // refresh and counts duplicate winners dropped (surfaced in
+    // `RunResult::dup_rows_dropped`).  Training keeps iterating `active`
+    // in selection order — `SubsetState` holds the sorted canonical copy,
+    // so routing through it does not perturb batch composition.
+    let mut subset = SubsetState::full(train.n);
+    let mut dup_dropped = 0usize;
     while epoch < cfg.epochs {
         if !is_full {
             active = refresh_subset(
                 engine, cfg, &spec, &train, &state.params, r_budget, &mut baseline,
-                &mut graft_eng, &mut policy, &mut align, &mut meter, &flops, epoch,
-                &mut refresh_rng,
+                &mut graft_eng, &mut stream_eng, &mut policy, &mut align, &mut meter, &flops,
+                epoch, &mut refresh_rng,
             )?;
             if active.is_empty() {
                 bail!("selection produced an empty subset");
             }
+            dup_dropped += subset.refresh(active.clone(), epoch, train.n);
             let mut counts = vec![0usize; spec.c];
             for &i in &active {
                 counts[train.y[i] as usize] += 1;
@@ -323,8 +371,10 @@ pub fn run(engine: &mut Engine, cfg: &TrainConfig) -> Result<TrainOutput> {
             mean_rank: graft_eng
                 .as_ref()
                 .and_then(|e| e.rank_stats())
+                .or_else(|| stream_eng.as_ref().and_then(|e| e.rank_stats()))
                 .map(|s| s.mean_rank)
                 .unwrap_or_else(|| policy.mean_rank()),
+            dup_rows_dropped: dup_dropped,
         },
         alignment: align,
         state,
@@ -353,6 +403,7 @@ fn refresh_subset(
     r_budget: usize,
     baseline: &mut Option<SelectionEngine>,
     graft_eng: &mut Option<SelectionEngine>,
+    stream_eng: &mut Option<StreamingEngine>,
     policy: &mut BudgetedRankPolicy,
     align: &mut AlignmentStats,
     meter: &mut EnergyMeter,
@@ -368,7 +419,7 @@ fn refresh_subset(
     // (`run` ensures train.n >= K, so there is at least one window).
     let windows = train.n / spec.k;
     let is_ext = cfg.method.starts_with("graft") && cfg.extractor.is_some();
-    if cfg.method.starts_with("graft") && !is_ext {
+    if cfg.method.starts_with("graft") && !is_ext && stream_eng.is_none() {
         // AOT `select` artifact path: selection runs inside the compiled
         // kernel, so there is nothing to shard, pool, or overlap here.
         for wi in 0..windows {
@@ -410,7 +461,7 @@ fn refresh_subset(
     // workers can read it while this thread assembles the next one.  The
     // engine hands its validated extractor into the assembly closure and
     // owns the per-window budget, scratch, and result buffers.
-    let assemble = |wi: usize, ext: Option<&dyn FeatureExtractor>| -> Result<SelectWindow> {
+    let mut assemble = |wi: usize, ext: Option<&dyn FeatureExtractor>| -> Result<SelectWindow> {
         let rows = &order[wi * spec.k..(wi + 1) * spec.k];
         let (x, y) = (train.gather(rows), train.one_hot(rows));
         let emb = engine.embed(&cfg.dataset, params, &x, &y)?;
@@ -439,6 +490,33 @@ fn refresh_subset(
             row_ids: rows.to_vec(),
         })
     };
+    // Streaming refresh: each window is assembled once, streamed through
+    // the bounded reservoir `--stream-chunk` rows at a time, and
+    // snapshotted.  Snapshot indices are already global dataset rows
+    // (the reservoir stores `row_ids`), and `reset()` keeps windows
+    // independent while the engine-owned rank authority accumulates
+    // across them — mirroring the batch facade's single accumulator.
+    if let Some(se) = stream_eng.as_mut() {
+        let chunk = cfg.stream_chunk.max(1);
+        for wi in 0..windows {
+            let win = assemble(wi, se.extractor())?;
+            let view = win.view();
+            let mut lo = 0usize;
+            while lo < view.k() {
+                let hi = (lo + chunk).min(view.k());
+                se.push_range(&view, lo..hi)
+                    .map_err(|s| anyhow::Error::new(s).context("streaming selection push"))?;
+                lo = hi;
+            }
+            let snap = se
+                .snapshot()
+                .map_err(|s| anyhow::Error::new(s).context("streaming selection snapshot"))?;
+            active.extend_from_slice(&snap.indices);
+            se.reset();
+        }
+        return Ok(active);
+    }
+
     let consume = |_wi: usize, win: &SelectWindow, winners: &[usize]| {
         for &bi in winners {
             active.push(win.row_ids[bi]);

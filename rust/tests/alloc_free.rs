@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
+use graft::engine::EngineBuilder;
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
 use graft::rng::Rng;
@@ -199,4 +200,25 @@ fn steady_state_selection_is_allocation_free() {
         }
     });
     assert_eq!(d, 0, "grad-merge PooledSelector allocated {d} times at steady state");
+
+    // ---- streaming push (PR 7) -------------------------------------------
+    // The streaming engine's bounded-memory claim, allocation edition:
+    // once the reservoir has saturated and the elimination cache has
+    // warmed (first full pass over the stream), every further push —
+    // including admissions, which rebuild the cache, and evictions,
+    // which overwrite slots in place — reuses retained buffers.  The
+    // 512-row stream is 16× the 32-slot reservoir, so the measured
+    // region exercises the admit, reject, and loss-replace arms.
+    let big = OwnedView::random(512, 8, 12, 19);
+    let mut se = EngineBuilder::new()
+        .method("graft")
+        .budget(16)
+        .epsilon(0.05)
+        .build_streaming()
+        .expect("stream engine");
+    se.push(&big.view()).expect("warm-up stream");
+    let d = measured(|| {
+        se.push(&big.view()).expect("steady-state push");
+    });
+    assert_eq!(d, 0, "StreamingEngine::push allocated {d} times at steady state");
 }

@@ -12,9 +12,10 @@
 //!    scheduler interleavings) agree with each other.
 //! 3. **Lifecycle regressions**: drop-mid-epoch drains cleanly and leaves
 //!    the pool usable, shutdown is idempotent (double shutdown + drop),
-//!    a select after shutdown fails loudly instead of deadlocking, and a
-//!    panicking selector is contained — the worker, the pool, and
-//!    subsequent selections all survive.
+//!    a select after shutdown degrades to the coordinator-side fallback
+//!    instead of deadlocking or panicking, and a panicking selector is
+//!    contained — the worker, the pool, and subsequent selections all
+//!    survive.
 //! 4. **No-deadlock smoke**: a sustained epoch stream with interleaved
 //!    abandoned epochs and varying batch shapes completes (bounded by the
 //!    test runner's own timeout, it must simply never wedge).
@@ -32,7 +33,6 @@
 //!    instead of deadlocking.  `GRAFT_FAULT_STRESS=1` (the CI
 //!    `fault-stress` job, `--test-threads=1`) raises these counts ~20×.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
 use graft::coordinator::{
@@ -328,17 +328,23 @@ fn drop_mid_epoch_drains_and_pool_stays_usable() {
 }
 
 #[test]
-fn double_shutdown_is_idempotent_and_post_shutdown_select_fails_loudly() {
+fn double_shutdown_is_idempotent_and_post_shutdown_select_degrades() {
     let owned = random_owned(128, 8, 8, 2, 61);
     let mut p = pooled(4, 2);
     let before = p.select(&owned.view(), 16);
     assert_valid(&before, 128, 16, "pre-shutdown");
     p.shutdown();
     p.shutdown(); // second call must be a no-op, not a double-join
-    // Selecting on a torn-down pool must fail fast (contained panic), not
-    // deadlock waiting for workers that no longer exist.
-    let died = catch_unwind(AssertUnwindSafe(|| p.select(&owned.view(), 16))).is_err();
-    assert!(died, "select on a shut-down pool should panic, not hang or succeed");
+    // The typed surface fails fast: `begin`/`finish` on a torn-down pool
+    // reports `PoolUnavailable` instead of deadlocking.
+    let err = typed_select(&mut p, &owned, 16).expect_err("shut-down pool must fail typed");
+    assert!(matches!(err, SelectError::PoolUnavailable), "got {err}");
+    // The legacy `Selector::select_into` wrapper has no error channel; it
+    // must degrade to the deterministic coordinator-side feature-only
+    // selection — never panic, never hang (the pre-fix wrapper panicked).
+    let got = p.select(&owned.view(), 16);
+    let fallback = FastMaxVol.select(&owned.view(), 16);
+    assert_eq!(got, fallback, "post-shutdown select must be the feature-only fallback");
     drop(p); // third teardown path: Drop after explicit shutdowns
 }
 
@@ -386,12 +392,22 @@ fn worker_panic_is_contained_and_pool_recovers() {
         Box::new(PanicOnPoison)
     });
     assert_eq!(p.select(&clean.view(), 24), reference, "healthy before injection");
+    // What the legacy wrapper's log-and-degrade fallback computes for the
+    // poisoned batch: coordinator-side feature-only MaxVol + loss top-up.
+    let fallback = FastMaxVol.select(&poisoned.view(), 24);
     for rep in 0..iters(3, 50) {
-        // The worker catches the selector panic, reports it, and survives;
-        // the caller sees a panic *after* the epoch fully drains.
-        let died =
-            catch_unwind(AssertUnwindSafe(|| p.select(&poisoned.view(), 24))).is_err();
-        assert!(died, "poisoned select must propagate the contained panic (rep={rep})");
+        // The worker catches the selector panic, reports it, and survives.
+        // The typed surface sees the shard failure after the epoch fully
+        // drains; the legacy wrapper degrades to the deterministic
+        // coordinator-side fallback instead of panicking the caller.
+        let err = typed_select(&mut p, &poisoned, 24)
+            .expect_err("poisoned select must surface the typed shard failure");
+        assert!(matches!(err, SelectError::ShardFailure { .. }), "got {err} (rep={rep})");
+        assert_eq!(
+            p.select(&poisoned.view(), 24),
+            fallback,
+            "legacy wrapper must degrade deterministically, not panic (rep={rep})"
+        );
         // Containment: the same pool keeps answering correctly.
         assert_eq!(p.select(&clean.view(), 24), reference, "pool lost after panic (rep={rep})");
     }
@@ -540,8 +556,9 @@ fn fault_iters(base: usize, stress: usize) -> usize {
     }
 }
 
-/// The typed epoch API the engine uses (`select_into` keeps the legacy
-/// panicking contract; these suites pin the `Result` surface).
+/// The typed epoch API the engine uses (`select_into` is the legacy
+/// log-and-degrade wrapper over it; these suites pin the `Result`
+/// surface).
 fn typed_select(
     p: &mut PooledSelector,
     owned: &Owned,
@@ -622,6 +639,39 @@ fn all_workers_dead_surfaces_typed_error_not_deadlock() {
             typed_select(&mut p, &owned, 24).unwrap(),
             reference,
             "pool must heal after total worker death (rep={rep})"
+        );
+    }
+}
+
+#[test]
+fn legacy_select_into_never_panics_on_fault() {
+    // Regression (bugfix PR): the `Selector::select_into` compatibility
+    // wrapper used to `panic!` whenever `begin`/`finish` surfaced a typed
+    // `SelectError`, making it the one public entry point that could blow
+    // up a caller on fault input.  It must now log-and-degrade: return the
+    // deterministic coordinator-side feature-only selection and leave the
+    // pool consistent and reusable.
+    let owned = random_owned(256, 12, 8, 4, 103);
+    let reference = scoped(4).with_parallel(false).select(&owned.view(), 24);
+    let fallback = FastMaxVol.select(&owned.view(), 24);
+    for rep in 0..fault_iters(2, 40) {
+        let mut p = pooled(4, 2);
+        // Default `Fail` policy + a shard that panics more times than any
+        // retry budget: the typed error is guaranteed to reach the wrapper.
+        p.set_fault_injector(Some(FaultPlan::new().panic_shard_times(2, 8).arc()));
+        let got = p.select(&owned.view(), 24);
+        assert_eq!(
+            got, fallback,
+            "wrapper must return the deterministic degraded selection (rep={rep})"
+        );
+        assert_valid(&got, 256, 24, "degraded selection contract");
+        // The drain ran before the fallback: the pool stays reusable, and
+        // once the injected faults are spent it answers exactly again.
+        p.set_fault_injector(None);
+        assert_eq!(
+            p.select(&owned.view(), 24),
+            reference,
+            "pool must stay consistent after a degraded legacy call (rep={rep})"
         );
     }
 }

@@ -1,0 +1,434 @@
+//! Streaming selection engine pins (PR 7):
+//!
+//! 1. **Stream ≡ batch** — when the whole stream fits the reservoir
+//!    (K ≤ cap = max(2·budget, feature width)), a `StreamingEngine`
+//!    snapshot is bit-identical to the batch `SelectionEngine` on the
+//!    same rows — indices AND rank decision — for strict and adaptive
+//!    rank, at every chunking (one row, budget-sized, whole-window, and
+//!    irregular splits).
+//! 2. **Determinism** — chunk boundaries never change the result (long
+//!    streams included), repeated snapshots of the same state agree, and
+//!    under a permuted arrival order (strict mode, tie-free data) the
+//!    selected global id set is unchanged.
+//! 3. **Bounded memory** — the reservoir never grows past its capacity
+//!    no matter how long the stream runs (the alloc-free suite pins the
+//!    steady-state allocation count separately).
+//! 4. **Typed faults** — the PR 6 policy semantics carry over: poisoned
+//!    chunks reject atomically (`Fail`/`Retry`) or quarantine and
+//!    continue (`Degrade`); numerical breakdown surfaces at the snapshot
+//!    as a typed error or the deterministic seeded-random rung.
+//! 5. **Builder validation** — streaming-specific rejections are typed
+//!    and name the offending field.
+
+use graft::engine::{
+    Degradation, EngineBuilder, EngineError, ExecShape, FaultPolicy, RankMode, SelectError,
+    StreamingEngine,
+};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::BatchView;
+
+// ---------------------------------------------------------------------------
+// Synthetic batch builders (mirrors tests/engine_api.rs)
+// ---------------------------------------------------------------------------
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    classes: usize,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+
+    /// The same rows in a permuted arrival order, keeping each row's
+    /// original global id.
+    fn permuted(&self, perm: &[usize]) -> Owned {
+        let k = perm.len();
+        Owned {
+            features: Mat::from_fn(k, self.features.cols(), |i, j| self.features.row(perm[i])[j]),
+            grads: Mat::from_fn(k, self.grads.cols(), |i, j| self.grads.row(perm[i])[j]),
+            losses: perm.iter().map(|&p| self.losses[p]).collect(),
+            labels: perm.iter().map(|&p| self.labels[p]).collect(),
+            preds: perm.iter().map(|&p| self.preds[p]).collect(),
+            classes: self.classes,
+            row_ids: perm.iter().map(|&p| self.row_ids[p]).collect(),
+        }
+    }
+}
+
+fn random_owned(k: usize, rc: usize, e: usize, classes: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    Owned {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+fn builder(method: &str, budget: usize, adaptive: bool) -> EngineBuilder {
+    let mut b = EngineBuilder::new().method(method).budget(budget).seed(11).epsilon(0.05);
+    if adaptive {
+        b = b.rank(RankMode::Adaptive { epsilon: 0.05 });
+    }
+    b
+}
+
+/// Push `view` through `se` in chunks of the given sizes (cycled until
+/// the view is exhausted), then snapshot.
+fn stream_chunked(se: &mut StreamingEngine, view: &BatchView<'_>, chunks: &[usize]) -> Vec<usize> {
+    let mut lo = 0usize;
+    let mut ci = 0usize;
+    while lo < view.k() {
+        let step = chunks[ci % chunks.len()].max(1);
+        let hi = (lo + step).min(view.k());
+        se.push_range(view, lo..hi).expect("clean chunk");
+        lo = hi;
+        ci += 1;
+    }
+    se.snapshot().expect("clean snapshot").indices
+}
+
+// ---------------------------------------------------------------------------
+// 1. Stream ≡ batch, bit-identical, at every chunking (K ≤ cap)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_matches_batch_bitwise_at_every_chunking() {
+    // cap = max(2·budget, rcols) ≥ k in every tuple, so the stream is
+    // structurally the batch input and equality must be exact.
+    for &(k, rc, e, budget, seed) in &[(32usize, 6usize, 10usize, 16usize, 1u64), (24, 8, 12, 12, 2)] {
+        for &adaptive in &[false, true] {
+            let owned = random_owned(k, rc, e, 2, seed);
+
+            let mut batch = builder("graft", budget, adaptive).build().expect("batch engine");
+            let reference = {
+                let sel = batch.select(&owned.view()).expect("batch select");
+                (sel.indices.to_vec(), sel.decision)
+            };
+            assert!(!reference.0.is_empty(), "batch reference selected nothing");
+            if !adaptive {
+                assert_eq!(reference.0.len(), budget, "strict mode fills the whole budget");
+            }
+
+            let chunkings: &[&[usize]] = &[&[1], &[budget], &[k], &[5, 11, 3], &[7, 25]];
+            for chunks in chunkings {
+                let mut se =
+                    builder("graft", budget, adaptive).build_streaming().expect("stream engine");
+                let got = stream_chunked(&mut se, &owned.view(), chunks);
+                assert_eq!(
+                    got, reference.0,
+                    "indices diverged (adaptive={adaptive}, chunks={chunks:?}, seed={seed})"
+                );
+                let snap_decision = {
+                    // Fresh engine, same stream: decision must also match
+                    // the batch engine's, so re-run and compare.
+                    let mut se2 = builder("graft", budget, adaptive)
+                        .build_streaming()
+                        .expect("stream engine");
+                    for i in 0..k {
+                        se2.push_range(&owned.view(), i..i + 1).unwrap();
+                    }
+                    se2.snapshot().unwrap().decision
+                };
+                assert_eq!(
+                    snap_decision, reference.1,
+                    "decision diverged (adaptive={adaptive}, seed={seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn feature_only_maxvol_stream_matches_batch() {
+    let owned = random_owned(24, 6, 8, 2, 5);
+    let mut batch = builder("maxvol", 12, false).build().expect("batch engine");
+    let want = batch.select(&owned.view()).expect("batch select").indices.to_vec();
+    let mut se = builder("maxvol", 12, false).build_streaming().expect("stream engine");
+    let got = stream_chunked(&mut se, &owned.view(), &[5]);
+    assert_eq!(got, want, "feature-only stream must equal FastMaxVol batch selection");
+    assert!(se.rank_stats().is_none(), "maxvol streams have no rank authority");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Determinism: long streams, chunking invariance, arrival permutations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn long_stream_is_chunking_invariant_and_repeatable() {
+    // K = 240 blows well past cap = 16: admissions and evictions run
+    // constantly, and the result must still be a pure function of the
+    // arrival order.
+    let owned = random_owned(240, 6, 8, 2, 9);
+    let mut first: Option<Vec<usize>> = None;
+    for chunks in [&[1usize][..], &[8], &[240], &[13, 7, 64]] {
+        let mut se = builder("graft", 8, false).build_streaming().expect("stream engine");
+        let got = stream_chunked(&mut se, &owned.view(), chunks);
+        assert_eq!(se.rows_seen(), 240);
+        assert_eq!(got.len(), 8);
+        match &first {
+            None => first = Some(got),
+            Some(want) => assert_eq!(&got, want, "chunking {chunks:?} changed the selection"),
+        }
+        // A second snapshot of the same state agrees with the first
+        // (snapshots are pure reads of the reservoir).
+        let again = se.snapshot().expect("repeat snapshot").indices;
+        assert_eq!(&again, first.as_ref().unwrap(), "snapshot is not repeatable");
+    }
+}
+
+#[test]
+fn strict_arrival_permutation_keeps_the_selected_id_set() {
+    // Strict mode, tie-free data, K ≤ cap: a permuted arrival order may
+    // reorder the pivot tournament's scan, but the selected global id
+    // set is pinned (floating-point magnitudes are tie-free with
+    // probability 1 on this data).
+    let owned = random_owned(28, 6, 8, 2, 21);
+    let perms: Vec<Vec<usize>> = vec![
+        (0..28).rev().collect(),
+        {
+            let mut p: Vec<usize> = (0..28).collect();
+            let mut rng = Rng::new(77);
+            rng.shuffle(&mut p);
+            p
+        },
+    ];
+    let mut se = builder("graft", 14, false).build_streaming().expect("stream engine");
+    let mut want = stream_chunked(&mut se, &owned.view(), &[28]);
+    want.sort_unstable();
+    for perm in &perms {
+        let shuffled = owned.permuted(perm);
+        let mut se = builder("graft", 14, false).build_streaming().expect("stream engine");
+        let mut got = stream_chunked(&mut se, &shuffled.view(), &[3, 9]);
+        got.sort_unstable();
+        assert_eq!(got, want, "arrival order changed the strict selection set");
+    }
+}
+
+#[test]
+fn reset_isolates_streams_while_the_rank_authority_accumulates() {
+    let a = random_owned(24, 6, 8, 2, 31);
+    let b = random_owned(24, 6, 8, 2, 32);
+    let mut se = builder("graft", 12, false).build_streaming().expect("stream engine");
+    let first = stream_chunked(&mut se, &a.view(), &[6]);
+    se.reset();
+    assert_eq!(se.rows_seen(), 0, "reset forgets the stream");
+    let second = stream_chunked(&mut se, &b.view(), &[6]);
+    // Window 2 must behave exactly like a fresh engine fed only stream b.
+    let mut fresh = builder("graft", 12, false).build_streaming().expect("stream engine");
+    assert_eq!(second, stream_chunked(&mut fresh, &b.view(), &[24]));
+    assert_ne!(first, second, "different streams select differently");
+    let stats = se.rank_stats().expect("graft stream has a rank authority");
+    assert_eq!(stats.batches, 2.0, "one decision per snapshot, accumulated across resets");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Bounded memory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reservoir_stays_bounded_on_long_streams() {
+    let owned = random_owned(400, 6, 8, 2, 41);
+    let mut se = builder("graft", 10, false).build_streaming().expect("stream engine");
+    se.push(&owned.view()).expect("clean push");
+    assert_eq!(se.reservoir_capacity(), 20, "cap = max(2·budget, feature width)");
+    assert_eq!(se.reservoir_len(), 20, "reservoir saturates at cap, never beyond");
+    assert_eq!(se.rows_seen(), 400);
+    let snap = se.snapshot().expect("clean snapshot");
+    assert_eq!(snap.reservoir_len, 20);
+    assert_eq!(snap.indices.len(), 10);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Fault-policy semantics carried over from the batch engine
+// ---------------------------------------------------------------------------
+
+fn poison(owned: &mut Owned, row: usize) {
+    let rc = owned.features.cols();
+    owned.features.row_mut(row)[rc - 1] = f64::NAN;
+}
+
+#[test]
+fn poisoned_chunk_rejects_atomically_under_fail_and_retry() {
+    for fault in [FaultPolicy::Fail, FaultPolicy::Retry { max: 2, backoff: std::time::Duration::ZERO }] {
+        let mut owned = random_owned(24, 6, 8, 2, 51);
+        poison(&mut owned, 13);
+        let mut se = builder("graft", 8, false)
+            .fault_policy(fault)
+            .build_streaming()
+            .expect("stream engine");
+        se.push_range(&owned.view(), 0..12).expect("clean prefix streams");
+        let err = se.push_range(&owned.view(), 12..24).expect_err("poisoned chunk must fault");
+        match err {
+            SelectError::PoisonedInput { rows } => {
+                assert_eq!(rows, vec![13], "view-local row indices")
+            }
+            other => panic!("expected PoisonedInput, got {other:?}"),
+        }
+        // Atomic rejection: nothing from the bad chunk was ingested, and
+        // the stream remains usable with clean input.
+        assert_eq!(se.rows_seen(), 12);
+        let snap = se.snapshot().expect("clean rows still snapshot");
+        assert_eq!(snap.indices.len(), 8);
+        assert!(snap.degradations.is_empty());
+    }
+}
+
+#[test]
+fn poisoned_rows_quarantine_and_stream_continues_under_degrade() {
+    let mut owned = random_owned(24, 6, 8, 2, 51);
+    poison(&mut owned, 13);
+    poison(&mut owned, 17);
+    let mut se = builder("graft", 8, false)
+        .fault_policy(FaultPolicy::Degrade)
+        .build_streaming()
+        .expect("stream engine");
+    se.push(&owned.view()).expect("degrade mode never faults on poison");
+    assert_eq!(se.rows_seen(), 22, "poisoned rows skipped, clean rows ingested");
+    assert_eq!(se.quarantined_rows(), 2);
+    let snap = se.snapshot().expect("clean snapshot");
+    assert!(!snap.indices.contains(&13) && !snap.indices.contains(&17));
+    assert!(
+        snap.degradations.iter().any(|d| matches!(d, Degradation::Quarantined { rows } if rows == &vec![13, 17])),
+        "quarantine recorded: {:?}",
+        snap.degradations
+    );
+    // Degradations drain with the snapshot that reports them.
+    let again = se.snapshot().expect("second snapshot");
+    assert!(again.degradations.is_empty());
+}
+
+#[test]
+fn numerical_breakdown_surfaces_at_snapshot_or_degrades_to_seeded_random() {
+    // All-zero features degenerate every MaxVol pivot; losses/grads stay
+    // finite so the poison scan passes and the breakdown is caught by
+    // the snapshot health check, exactly like the batch ladder's.
+    let mut owned = random_owned(20, 6, 8, 2, 61);
+    owned.features = Mat::from_fn(20, 6, |_, _| 0.0);
+
+    let mut fail = builder("graft", 8, false).build_streaming().expect("stream engine");
+    fail.push(&owned.view()).expect("zeros are finite; push is clean");
+    match fail.snapshot() {
+        Err(SelectError::NumericalBreakdown { stage, .. }) => assert_eq!(stage, "stream-maxvol"),
+        other => panic!("expected NumericalBreakdown, got {other:?}"),
+    }
+
+    let degraded = |seed: u64| {
+        let mut se = builder("graft", 8, false)
+            .seed(seed)
+            .fault_policy(FaultPolicy::Degrade)
+            .build_streaming()
+            .expect("stream engine");
+        se.push(&owned.view()).expect("clean push");
+        se.snapshot().expect("degrade mode snapshots")
+    };
+    let a = degraded(7);
+    assert_eq!(a.indices.len(), 8, "seeded-random fallback honours the budget");
+    assert!(a.decision.is_none(), "degraded snapshots report no rank decision");
+    assert!(
+        a.degradations.iter().any(|d| matches!(d, Degradation::SeededRandom { .. })),
+        "fallback recorded: {:?}",
+        a.degradations
+    );
+    let b = degraded(7);
+    assert_eq!(a.indices, b.indices, "seeded-random fallback is deterministic per seed");
+}
+
+// ---------------------------------------------------------------------------
+// 5. Builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streaming_builder_rejections_name_the_offending_field() {
+    type Build = Box<dyn Fn() -> Result<StreamingEngine, EngineError>>;
+    let cases: Vec<(&str, Build, &str)> = vec![
+        (
+            "missing budget",
+            Box::new(|| EngineBuilder::new().method("graft").build_streaming()),
+            "budget",
+        ),
+        (
+            "zero budget",
+            Box::new(|| EngineBuilder::new().method("graft").budget(0).build_streaming()),
+            "budget",
+        ),
+        (
+            "unsupported method",
+            Box::new(|| EngineBuilder::new().method("el2n").budget(8).build_streaming()),
+            "method",
+        ),
+        (
+            "unknown method",
+            Box::new(|| EngineBuilder::new().method("bogus").budget(8).build_streaming()),
+            "method",
+        ),
+        (
+            "bad epsilon",
+            Box::new(|| {
+                EngineBuilder::new().method("graft").budget(8).epsilon(2.0).build_streaming()
+            }),
+            "epsilon",
+        ),
+        (
+            "unknown extractor",
+            Box::new(|| {
+                EngineBuilder::new().method("graft").budget(8).extractor("nope").build_streaming()
+            }),
+            "extractor",
+        ),
+    ];
+    for (what, build, field) in cases {
+        let err = build().err().unwrap_or_else(|| panic!("{what}: must be rejected"));
+        assert_eq!(err.field(), field, "{what}: {err}");
+    }
+    // A known-but-unstreamable method and an unknown one are DIFFERENT
+    // typed errors, even though both name the method field.
+    assert!(matches!(
+        EngineBuilder::new().method("el2n").budget(8).build_streaming(),
+        Err(EngineError::StreamUnsupportedMethod { .. })
+    ));
+    assert!(matches!(
+        EngineBuilder::new().method("bogus").budget(8).build_streaming(),
+        Err(EngineError::UnknownMethod { .. })
+    ));
+}
+
+#[test]
+fn non_serial_shapes_fall_back_to_serial_with_a_note() {
+    let se = EngineBuilder::new()
+        .method("graft")
+        .budget(8)
+        .exec(ExecShape::Sharded { shards: 4 })
+        .build_streaming()
+        .expect("shape falls back, not errors");
+    assert!(
+        se.notes().iter().any(|n| n.contains("serial")),
+        "fallback must be noted: {:?}",
+        se.notes()
+    );
+    let quiet = EngineBuilder::new().method("graft").budget(8).build_streaming().unwrap();
+    assert!(quiet.notes().is_empty());
+}
