@@ -1,0 +1,92 @@
+//! Serve-path bench: one tenant's `SubmitBatch` + `GetSelection`
+//! roundtrip over a loopback TCP daemon vs the same selection run
+//! in-process, so later PRs can track the wire/codec overhead.  The
+//! bench refuses to time a transport that lies: before the clock starts
+//! it pins served ≡ in-process bit-identity on fresh windows.
+//!
+//! Rows land in the shared bench JSON (schema `graft-bench-v1`), op
+//! family `serve_roundtrip` / `serve_inproc_select`.
+//!
+//! Run: `cargo bench --bench serve_loopback` (or `scripts/bench.sh`).
+//! `GRAFT_BENCH_SMOKE=1` shrinks shapes/reps to CI-smoke sizes.
+
+mod bench_util;
+
+use bench_util::{black_box, report, smoke_mode, time_it, JsonSink};
+use graft::coordinator::SelectWindow;
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::serve::protocol::TenantConfig;
+use graft::serve::{engine_builder, Client, ServerBuilder};
+
+fn window(k: usize, seed: u64) -> SelectWindow {
+    let (rc, e, classes) = (16usize, 16usize, 10usize);
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    SelectWindow {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+fn main() {
+    let mut sink = JsonSink::new("serve_loopback");
+    let (k, budget, warm, reps) =
+        if smoke_mode() { (256usize, 16usize, 1usize, 3usize) } else { (4096, 64, 2, 10) };
+    let shape = format!("K={k},R=16,budget={budget}");
+    println!("== serve loopback roundtrip (K={k}, budget={budget}) ==\n");
+
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let cfg = TenantConfig { budget: budget as u64, seed: 9, ..TenantConfig::default() };
+
+    let mut client = Client::connect_tcp(&addr).expect("connect");
+    client.hello("bench", &cfg).expect("hello");
+    let mut inproc = engine_builder(&cfg).build().expect("in-process engine");
+
+    // Bit-identity preflight on fresh windows: a transport that changes
+    // the answer has no business being timed.
+    for w in 0..3u64 {
+        let win = window(k, 0xB0B + w);
+        let served = client.select(&win.view()).expect("served select").indices;
+        let want: Vec<u64> = inproc
+            .select(&win.view())
+            .expect("in-process select")
+            .indices
+            .iter()
+            .map(|&i| i as u64)
+            .collect();
+        assert_eq!(served, want, "served selection diverged from in-process at window {w}");
+    }
+
+    let win = window(k, 0xFEED);
+    let view = win.view();
+
+    let wire = time_it(warm, reps, || {
+        black_box(client.select(&view).expect("served select").indices.len());
+    });
+    report("serve_roundtrip", wire.0, wire.1, wire.2);
+    sink.record("serve_roundtrip", &shape, wire);
+
+    let local = time_it(warm, reps, || {
+        black_box(inproc.select(&view).expect("in-process select").indices.len());
+    });
+    report("serve_inproc_select", local.0, local.1, local.2);
+    sink.record("serve_inproc_select", &shape, local);
+
+    client.bye().expect("bye");
+    server.shutdown();
+
+    match sink.write() {
+        Ok(path) => println!("\nbench JSON → {}", path.display()),
+        Err(e) => eprintln!("\nWARN could not write bench JSON: {e}"),
+    }
+}

@@ -15,7 +15,7 @@ use crate::train::{self, landscape, TrainConfig};
 pub fn fig2(args: &Args) -> Result<()> {
     let mut engine = Engine::new(default_dir())?;
     let cfg = TrainConfig {
-        dataset: args.get_or("dataset", "cifar10"),
+        dataset: args.get_or("dataset", "cifar10")?,
         method: "graft".into(),
         fraction: args.f64_or("fraction", 0.25)?,
         epochs: args.usize_or("epochs", 30)?,
@@ -56,7 +56,7 @@ pub fn fig2(args: &Args) -> Result<()> {
 /// Fig 3: fit E(x) = E₀ + (H−E₀)(1−e^{−λx/x_max}) to the sweep results —
 /// Φ_acc(CO₂) and Ψ(f) per method — and report (E₀, H, λ, R²).
 pub fn fig3(args: &Args) -> Result<()> {
-    let datasets = args.list_or("datasets", &["cifar10"]);
+    let datasets = args.list_or("datasets", &["cifar10"])?;
     let mut table = Table::new(
         "Fig 3 — exponential gain fits",
         &["dataset", "method", "curve", "E0", "H", "lambda", "R2"],
@@ -130,10 +130,10 @@ pub fn fig3(args: &Args) -> Result<()> {
 /// (right) FastMaxVol vs CrossMaxVol sampler convergence curves.
 pub fn fig4(args: &Args) -> Result<()> {
     let mut engine = Engine::new(default_dir())?;
-    let dataset = args.get_or("dataset", "cifar10");
+    let dataset = args.get_or("dataset", "cifar10")?;
     let epochs = args.usize_or("epochs", 20)?;
     let seeds: Vec<u64> = args
-        .list_or("seeds", &["42", "43", "44"])
+        .list_or("seeds", &["42", "43", "44"])?
         .iter()
         .map(|s| s.parse::<u64>().map_err(Into::into))
         .collect::<Result<_>>()?;
@@ -212,7 +212,7 @@ pub fn fig4(args: &Args) -> Result<()> {
 /// GRAFT-subset minimiser.
 pub fn fig5(args: &Args) -> Result<()> {
     let mut engine = Engine::new(default_dir())?;
-    let dataset = args.get_or("dataset", "cifar10");
+    let dataset = args.get_or("dataset", "cifar10")?;
     let epochs = args.usize_or("epochs", 20)?;
     let half = args.usize_or("half-points", 8)?;
     let radius = args.f64_or("radius", 1.0)? as f32;

@@ -2,6 +2,7 @@
 //! (see DESIGN.md §4 for the experiment index).
 
 pub mod figures;
+pub mod serve;
 pub mod sweep;
 pub mod tables;
 
@@ -17,6 +18,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "info" => info(),
         "train" => train_cmd(args),
         "sweep" => sweep::run(args),
+        "serve" => serve::serve(args),
+        "serve-smoke" => serve::smoke(args),
         "fig2" => figures::fig2(args),
         "fig3" => figures::fig3(args),
         "fig4" => figures::fig4(args),
@@ -51,6 +54,14 @@ COMMANDS
                             at a time; 0 = batch selection)
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]
+  serve                     selection-as-a-service daemon (see src/serve/)
+                            [--addr H:P | --uds PATH] [--addr-file PATH]
+                            [--max-sessions N] [--max-frame-mb N]
+                            [--read-tick-ms MS] [--stall-ticks N]
+  serve-smoke               multi-tenant loopback check: served selections
+                            must be bit-identical to in-process engines
+                            [--addr H:P] [--tenants K] [--windows W]
+                            [--rows N] [--stats-out PATH]
   fig2                      alignment heatmap / rank trend / class hist
   fig3                      exponential gain fits from sweep CSVs
   fig4                      extractor ablation + maxvol convergence

@@ -1,0 +1,253 @@
+//! `graft serve` — the selection-as-a-service daemon — and
+//! `graft serve-smoke`, a self-contained multi-tenant client that proves
+//! served selections are **bit-identical** to in-process engines built
+//! through the same [`serve::engine_builder`](crate::serve::engine_builder)
+//! mapping.  The smoke driver is what CI's `serve-smoke` job runs; its
+//! `--stats-out` JSON feeds `scripts/validate_bench.py --strict`.
+
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Args, ServeConfig};
+use crate::coordinator::SelectWindow;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::serve::protocol::TenantConfig;
+use crate::serve::{engine_builder, Client, ServeOptions, Server, ServerBuilder};
+
+/// Default TCP listen address when neither `--addr` nor `--uds` is given.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:4714";
+
+fn serve_options(cfg: &ServeConfig) -> ServeOptions {
+    ServeOptions {
+        max_sessions: cfg.max_sessions,
+        max_frame: cfg.max_frame_mb << 20,
+        read_tick: Duration::from_millis(cfg.read_tick_ms),
+        stall_ticks: cfg.stall_ticks as u32,
+    }
+}
+
+fn bind(cfg: &ServeConfig) -> Result<Server> {
+    let builder = ServerBuilder::new().options(serve_options(cfg));
+    if let Some(uds) = &cfg.uds {
+        #[cfg(unix)]
+        {
+            return builder.bind_unix(uds).with_context(|| format!("binding unix socket {uds}"));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = builder;
+            bail!("--uds {uds} requested but this platform has no unix sockets");
+        }
+    }
+    let addr = cfg.addr.as_deref().unwrap_or(DEFAULT_ADDR);
+    builder.bind_tcp(addr).with_context(|| format!("binding tcp address {addr}"))
+}
+
+/// Where a freshly-bound server is actually reachable (TCP resolves the
+/// OS-assigned port when `--addr` used port 0).
+fn bound_endpoint(cfg: &ServeConfig, server: &Server) -> String {
+    match server.local_addr() {
+        Some(a) => a.to_string(),
+        None => cfg.uds.clone().unwrap_or_else(|| DEFAULT_ADDR.to_string()),
+    }
+}
+
+/// `graft serve`: bind, publish the address, then hold the process open
+/// until killed.  All real work happens on the server's session threads.
+pub fn serve(args: &Args) -> Result<()> {
+    let cfg = args.serve_config()?;
+    let server = bind(&cfg)?;
+    let bound = bound_endpoint(&cfg, &server);
+    if let Some(path) = &cfg.addr_file {
+        // The newline-terminated write doubles as the readiness signal for
+        // scripts polling the file (scripts/serve_smoke.sh).
+        std::fs::write(path, format!("{bound}\n"))
+            .with_context(|| format!("writing --addr-file {path}"))?;
+    }
+    println!(
+        "graft serve: listening on {bound} (max {} sessions, {} MiB frames)",
+        cfg.max_sessions, cfg.max_frame_mb
+    );
+    loop {
+        thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve-smoke: the bit-identity loopback driver
+// ---------------------------------------------------------------------------
+
+/// Mixed tenant profiles cycled across the fleet: serial-strict batch,
+/// pooled-adaptive batch, streaming, and sharded FastMaxVol.  Seeds vary
+/// per tenant so no two engines share an RNG stream.
+fn tenant_profile(i: usize) -> TenantConfig {
+    let seed = 0x5EED + 31 * i as u64;
+    let base = TenantConfig { seed, budget: 8, ..TenantConfig::default() };
+    match i % 4 {
+        0 => base,
+        1 => TenantConfig { adaptive: true, shards: 2, workers: 2, ..base },
+        2 => TenantConfig { streaming: true, budget: 6, ..base },
+        _ => TenantConfig { method: "maxvol".to_string(), shards: 2, ..base },
+    }
+}
+
+/// Deterministic synthetic refresh window.  `base_id` offsets the global
+/// row ids so a streaming tenant's windows never collide.
+fn make_window(k: usize, seed: u64, base_id: usize) -> SelectWindow {
+    const RC: usize = 6;
+    const EC: usize = 8;
+    const CLASSES: usize = 4;
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, RC, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, EC, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % CLASSES) as i32).collect();
+    SelectWindow {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes: CLASSES,
+        row_ids: (base_id..base_id + k).collect(),
+    }
+}
+
+fn tenant_windows(tenant: usize, windows: usize, rows: usize) -> Vec<SelectWindow> {
+    (0..windows)
+        .map(|w| make_window(rows, 0xA11CE ^ ((tenant as u64) << 20) ^ w as u64, w * rows))
+        .collect()
+}
+
+/// Drive one tenant through the served path and return its per-window
+/// selections (batch-local indices for batch tenants, global row ids for
+/// streaming snapshots — matching what the in-process engines report).
+fn drive_served(
+    addr: &str,
+    name: &str,
+    cfg: &TenantConfig,
+    windows: &[SelectWindow],
+) -> Result<Vec<Vec<u64>>> {
+    let mut client = Client::connect_tcp(addr)?;
+    client.hello(name, cfg)?;
+    let mut out = Vec::with_capacity(windows.len());
+    for win in windows {
+        if cfg.streaming {
+            client.push_chunk(&win.view())?;
+            out.push(client.snapshot()?.indices);
+        } else {
+            out.push(client.select(&win.view())?.indices);
+        }
+    }
+    let drained = client.drain()?;
+    let rows: u64 = windows.iter().map(|w| w.row_ids.len() as u64).sum();
+    if drained.rows != rows {
+        bail!("tenant {name}: drain reports {} rows ingested, sent {rows}", drained.rows);
+    }
+    client.bye()?;
+    Ok(out)
+}
+
+/// The in-process reference: the same config through the same
+/// [`engine_builder`] mapping, so any divergence is the transport's fault.
+fn drive_reference(cfg: &TenantConfig, windows: &[SelectWindow]) -> Result<Vec<Vec<u64>>> {
+    let mut out = Vec::with_capacity(windows.len());
+    if cfg.streaming {
+        let mut eng = engine_builder(cfg).build_streaming().map_err(|e| anyhow::anyhow!("{e}"))?;
+        for win in windows {
+            eng.push(&win.view()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let snap = eng.snapshot().map_err(|e| anyhow::anyhow!("{e}"))?;
+            out.push(snap.indices.iter().map(|&i| i as u64).collect());
+        }
+    } else {
+        let mut eng = engine_builder(cfg).build().map_err(|e| anyhow::anyhow!("{e}"))?;
+        for win in windows {
+            let sel = eng.select(&win.view()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            out.push(sel.indices.iter().map(|&i| i as u64).collect());
+        }
+    }
+    Ok(out)
+}
+
+/// `graft serve-smoke`: spin up (or dial) a daemon, run K mixed tenants
+/// concurrently, and fail unless every served selection is bit-identical
+/// to its in-process reference.
+pub fn smoke(args: &Args) -> Result<()> {
+    let tenants = args.usize_or("tenants", 4)?.max(3);
+    let windows = args.usize_or("windows", 3)?.max(1);
+    let rows = args.usize_or("rows", 48)?.max(16);
+    let stats_out = args.value_of("stats-out")?;
+
+    // Self-host on an OS-assigned port unless pointed at a live daemon.
+    let external = args.value_of("addr")?;
+    let mut hosted: Option<Server> = None;
+    let addr = match &external {
+        Some(a) => a.clone(),
+        None => {
+            let server = ServerBuilder::new().bind_tcp("127.0.0.1:0")?;
+            let addr = server.local_addr().context("self-hosted server has no local addr")?;
+            hosted = Some(server);
+            addr.to_string()
+        }
+    };
+
+    // All tenants run concurrently so the smoke exercises interleaved
+    // sessions, not just the protocol.
+    let mut handles = Vec::new();
+    for i in 0..tenants {
+        let addr = addr.clone();
+        let cfg = tenant_profile(i);
+        let wins = tenant_windows(i, windows, rows);
+        handles.push((
+            i,
+            cfg.clone(),
+            wins.clone(),
+            thread::spawn(move || drive_served(&addr, &format!("smoke-{i}"), &cfg, &wins)),
+        ));
+    }
+
+    let mut checked = 0usize;
+    for (i, cfg, wins, handle) in handles {
+        let served = match handle.join() {
+            Ok(r) => r.map_err(|e| e.context(format!("tenant smoke-{i} (served path)")))?,
+            Err(_) => bail!("tenant smoke-{i}: client thread panicked"),
+        };
+        let reference = drive_reference(&cfg, &wins)
+            .map_err(|e| e.context(format!("tenant smoke-{i} (reference)")))?;
+        if served != reference {
+            bail!(
+                "tenant smoke-{i} diverged: served {:?} != in-process {:?}",
+                served, reference
+            );
+        }
+        checked += served.len();
+    }
+
+    // Pull the daemon's telemetry through the same wire path clients use;
+    // the file lands in graft-bench-v1 shape for validate_bench.py.
+    let stats = {
+        let mut monitor = Client::connect_tcp(&addr)?;
+        let json = monitor.stats()?;
+        monitor.bye()?;
+        json
+    };
+    if !stats.contains("graft-serve") {
+        bail!("stats reply is missing graft-serve records: {stats}");
+    }
+    if let Some(path) = &stats_out {
+        std::fs::write(path, &stats).with_context(|| format!("writing --stats-out {path}"))?;
+        println!("stats -> {path}");
+    }
+
+    if let Some(mut server) = hosted.take() {
+        server.shutdown();
+    }
+    println!(
+        "serve-smoke OK: {tenants} tenants x {windows} windows ({checked} selections) \
+         bit-identical through {addr}"
+    );
+    Ok(())
+}

@@ -14,10 +14,10 @@ pub const DEFAULT_METHODS: &[&str] =
 pub const DEFAULT_FRACTIONS: &[&str] = &["0.05", "0.15", "0.25", "0.35"];
 
 pub fn run(args: &Args) -> Result<()> {
-    let dataset = args.get_or("dataset", "cifar10");
-    let methods = args.list_or("methods", DEFAULT_METHODS);
+    let dataset = args.get_or("dataset", "cifar10")?;
+    let methods = args.list_or("methods", DEFAULT_METHODS)?;
     let fractions: Vec<f64> = args
-        .list_or("fractions", DEFAULT_FRACTIONS)
+        .list_or("fractions", DEFAULT_FRACTIONS)?
         .iter()
         .map(|s| s.parse::<f64>().map_err(Into::into))
         .collect::<Result<_>>()?;
@@ -70,7 +70,7 @@ pub fn run(args: &Args) -> Result<()> {
     let csv = csv_rows.join("\n") + "\n";
     // --tag distinguishes variant sweeps (e.g. Table 14's random comparison)
     // so they don't clobber the main per-dataset results.
-    let tag = args.opt("tag").map(|t| format!("_{t}")).unwrap_or_default();
+    let tag = args.value_of("tag")?.map(|t| format!("_{t}")).unwrap_or_default();
     let p1 = save_result(&format!("sweep_{dataset}{tag}.csv"), &csv)?;
     let p2 = save_result(&format!("sweep_{dataset}{tag}.txt"), &rendered)?;
     println!("wrote {} and {}", p1.display(), p2.display());

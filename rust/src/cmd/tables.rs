@@ -201,7 +201,7 @@ pub fn table4(args: &Args) -> Result<()> {
 /// inference time, before vs after pruning 50% of hidden channels.
 pub fn table5(args: &Args) -> Result<()> {
     let mut engine = Engine::new(default_dir())?;
-    let dataset = args.get_or("dataset", "cifar10");
+    let dataset = args.get_or("dataset", "cifar10")?;
     let epochs = args.usize_or("epochs", 20)?;
     // 1. Train a full model.
     let cfg = TrainConfig {

@@ -40,7 +40,7 @@ impl Args {
             }
         }
         let mut args = Args { command, opts, flags };
-        if let Some(path) = args.opt("config") {
+        if let Some(path) = args.value_of("config")? {
             let merged = Self::parse_file(&path)?;
             for (k, v) in merged {
                 args.opts.entry(k).or_insert(v);
@@ -65,8 +65,29 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw option lookup: the value of `--key value`, or `None` when the
+    /// key is absent *or* was given as a bare flag.  Value-taking keys
+    /// should go through [`Args::value_of`] (or the typed `*_or`
+    /// accessors), which turn the bare-flag case into an error instead of
+    /// silently dropping the option.
     pub fn opt(&self, key: &str) -> Option<String> {
         self.opts.get(key).cloned()
+    }
+
+    /// Value of a value-taking `--key`.  Unlike [`Args::opt`], a key that
+    /// was demoted to a bare flag because its value was missing —
+    /// `train --shards --overlap` parses `--shards` as a flag since the
+    /// next token starts with `--` — is an **error naming the key**, not
+    /// a silent `None`.  Boolean keys keep using [`Args::try_flag`],
+    /// where the bare spelling is the point.
+    pub fn value_of(&self, key: &str) -> Result<Option<String>> {
+        if let Some(v) = self.opts.get(key) {
+            return Ok(Some(v.clone()));
+        }
+        if self.flags.iter().any(|f| f == key) {
+            bail!("missing value for --{key}");
+        }
+        Ok(None)
     }
 
     /// Whether a boolean option is on, treating anything unparseable as
@@ -104,49 +125,51 @@ impl Args {
         }
     }
 
-    pub fn get_or(&self, key: &str, default: &str) -> String {
-        self.opt(key).unwrap_or_else(|| default.to_string())
+    pub fn get_or(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.value_of(key)?.unwrap_or_else(|| default.to_string()))
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
-        match self.opt(key) {
+        match self.value_of(key)? {
             Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
             None => Ok(default),
         }
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
-        match self.opt(key) {
+        match self.value_of(key)? {
             Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
             None => Ok(default),
         }
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
-        match self.opt(key) {
+        match self.value_of(key)? {
             Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
             None => Ok(default),
         }
     }
 
     /// Comma-separated list option.
-    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
-        match self.opt(key) {
-            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Result<Vec<String>> {
+        Ok(match self.value_of(key)? {
+            Some(v) => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
             None => default.iter().map(|s| s.to_string()).collect(),
-        }
+        })
     }
 
     /// Build a [`TrainConfig`] from the parsed options.
     pub fn train_config(&self) -> Result<TrainConfig> {
         let d = TrainConfig::default();
-        let method = self.get_or("method", &d.method);
+        let method = self.get_or("method", &d.method)?;
         // `--merge` default is method-aware; the rule lives in ONE place
         // ([`engine::default_merge`], shared with `EngineBuilder` and
         // `TrainConfig::default`).  An explicit flag wins.
         let merge_default = engine::default_merge(&method);
         Ok(TrainConfig {
-            dataset: self.get_or("dataset", &d.dataset),
+            dataset: self.get_or("dataset", &d.dataset)?,
             method,
             fraction: self.f64_or("fraction", d.fraction)?,
             epochs: self.usize_or("epochs", d.epochs)?,
@@ -156,13 +179,13 @@ impl Args {
             epsilon: self.f64_or("epsilon", d.epsilon)?,
             warm_epochs: self.usize_or("warm-epochs", d.warm_epochs)?,
             adaptive_rank: self.try_flag("adaptive-rank")?,
-            extractor: self.opt("extractor"),
+            extractor: self.value_of("extractor")?,
             shards: self.usize_or("shards", d.shards)?,
             pool_workers: self.usize_or("pool-workers", d.pool_workers)?,
             overlap: self.try_flag("overlap")? || d.overlap,
             stream_chunk: self.usize_or("stream-chunk", d.stream_chunk)?,
             merge: {
-                let s = self.get_or("merge", merge_default.name());
+                let s = self.get_or("merge", merge_default.name())?;
                 MergePolicy::parse(&s).with_context(|| {
                     format!("unknown merge policy '{s}' (hierarchical|flat|grad)")
                 })?
@@ -170,6 +193,55 @@ impl Args {
             seed: self.u64_or("seed", d.seed)?,
         })
     }
+
+    /// Build a [`ServeConfig`] from the parsed options (the `serve` /
+    /// `serve-smoke` subcommands).
+    pub fn serve_config(&self) -> Result<ServeConfig> {
+        let cfg = ServeConfig {
+            addr: self.value_of("addr")?,
+            uds: self.value_of("uds")?,
+            addr_file: self.value_of("addr-file")?,
+            max_sessions: self.usize_or("max-sessions", 64)?,
+            max_frame_mb: self.usize_or("max-frame-mb", 16)?,
+            read_tick_ms: self.u64_or("read-tick-ms", 50)?,
+            stall_ticks: self.usize_or("stall-ticks", 200)?,
+        };
+        if cfg.max_sessions == 0 {
+            bail!("--max-sessions must be at least 1");
+        }
+        if cfg.max_frame_mb == 0 {
+            bail!("--max-frame-mb must be at least 1");
+        }
+        if cfg.read_tick_ms == 0 {
+            bail!("--read-tick-ms must be at least 1");
+        }
+        if cfg.addr.is_some() && cfg.uds.is_some() {
+            bail!("--addr and --uds are mutually exclusive");
+        }
+        Ok(cfg)
+    }
+}
+
+/// Daemon knobs for `graft serve` (see `rust/src/serve/`): where to
+/// listen and the admission/framing bounds.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP listen address (`host:port`; port 0 = OS-assigned).  Default
+    /// `127.0.0.1:4714` when neither `--addr` nor `--uds` is given.
+    pub addr: Option<String>,
+    /// Unix-domain socket path (mutually exclusive with `--addr`).
+    pub uds: Option<String>,
+    /// File to write the bound address to once listening — how scripts
+    /// using port 0 learn the port (and that the daemon is ready).
+    pub addr_file: Option<String>,
+    /// Admission bound: connections beyond this get `Busy` + close.
+    pub max_sessions: usize,
+    /// Frame payload cap in MiB.
+    pub max_frame_mb: usize,
+    /// Idle read-poll tick in milliseconds.
+    pub read_tick_ms: u64,
+    /// Mid-frame stall budget, in ticks.
+    pub stall_ticks: usize,
 }
 
 #[cfg(test)]
@@ -201,8 +273,52 @@ mod tests {
     #[test]
     fn list_parsing() {
         let a = parse("sweep --methods graft,random, --x 1");
-        assert_eq!(a.list_or("methods", &[]), vec!["graft", "random"]);
-        assert_eq!(a.list_or("absent", &["d"]), vec!["d"]);
+        assert_eq!(a.list_or("methods", &[]).unwrap(), vec!["graft", "random"]);
+        assert_eq!(a.list_or("absent", &["d"]).unwrap(), vec!["d"]);
+    }
+
+    #[test]
+    fn missing_value_is_an_error_not_a_flag() {
+        // Regression: `train --shards --overlap` used to silently demote
+        // `--shards` to a boolean flag (the next token starts with `--`),
+        // so the run trained unsharded instead of erroring.
+        let a = parse("train --shards --overlap");
+        let err = a.train_config().err().expect("missing --shards value must error");
+        assert!(
+            format!("{err:#}").contains("missing value for --shards"),
+            "error must name the key: {err:#}"
+        );
+        // The same guard covers every value accessor and trailing keys.
+        let a = parse("train --epochs");
+        assert!(format!("{:#}", a.train_config().unwrap_err()).contains("--epochs"));
+        let a = parse("sweep --methods --x 1");
+        assert!(a.list_or("methods", &[]).is_err());
+        let a = parse("train --dataset --fraction 0.5");
+        assert!(a.get_or("dataset", "cifar10").is_err());
+        assert!(a.value_of("dataset").is_err());
+        // Boolean keys are untouched: bare spelling is how flags work.
+        assert!(a.try_flag("dataset").unwrap(), "bare key still visible as a flag");
+        let c = parse("train --overlap --pool-workers 2").train_config().unwrap();
+        assert!(c.overlap);
+        // And `--config` without a path errors instead of being ignored.
+        let err = Args::parse(["train".to_string(), "--config".to_string()])
+            .err()
+            .expect("bare --config must error");
+        assert!(format!("{err:#}").contains("--config"));
+    }
+
+    #[test]
+    fn serve_config_parses_and_validates() {
+        let c = parse("serve --addr 127.0.0.1:0 --max-sessions 8").serve_config().unwrap();
+        assert_eq!(c.addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.max_sessions, 8);
+        assert_eq!(c.max_frame_mb, 16, "default frame cap");
+        assert!(parse("serve --addr x --uds y").serve_config().is_err(), "exclusive endpoints");
+        assert!(parse("serve --max-sessions 0").serve_config().is_err());
+        assert!(
+            parse("serve --addr --max-sessions 8").serve_config().is_err(),
+            "missing --addr value is the parsing regression, served form"
+        );
     }
 
     #[test]

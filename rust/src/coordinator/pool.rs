@@ -295,6 +295,13 @@ impl SelectionPool {
         self.nworkers.max(1)
     }
 
+    /// Worker threads currently alive (their `JoinHandle` not yet
+    /// finished).  Purely observational — the serve layer exports it as
+    /// telemetry; fault handling keeps probing per-thread on its own.
+    fn live_workers(&self) -> usize {
+        self.handles.iter().filter(|t| !t.handle.is_finished()).count()
+    }
+
     /// Build worker `w`'s thread: fresh selector instances for its shards
     /// (`w, w+W, w+2W, …` — the dealing [`worker_loop`] indexes by
     /// `shard / W`), a fresh [`Workspace`], a fresh job channel.
@@ -555,6 +562,14 @@ impl PooledSelector {
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Worker threads currently alive (≤ [`PooledSelector::workers`]);
+    /// a dead-but-not-yet-respawned worker shows up here before the next
+    /// select's deadline path replaces it.  Telemetry for the serve
+    /// layer's `Drain`/`Stats` replies.
+    pub fn live_workers(&self) -> usize {
+        self.pool.live_workers()
     }
 
     /// Explicitly tear the pool down (also happens on drop; idempotent).
@@ -1022,6 +1037,7 @@ impl Drop for Pending<'_, '_> {
 /// the coordinator assembles the next one.  Field layout mirrors
 /// [`BatchView`]; `row_ids` carries the global dataset ids the caller maps
 /// the batch-local winners back through.
+#[derive(Clone)]
 pub struct SelectWindow {
     pub features: Mat,
     pub grads: Mat,

@@ -237,6 +237,22 @@ impl SelectionEngine {
         &self.degr
     }
 
+    /// Selections completed over this engine's lifetime (the counter
+    /// behind [`Selection::window`]).
+    pub fn windows_done(&self) -> u64 {
+        self.windows_done
+    }
+
+    /// Live pool worker threads, for telemetry: `Some(n)` on the pooled
+    /// shape (see [`crate::coordinator::PooledSelector::live_workers`]),
+    /// `None` for serial/sharded engines, which have no resident workers.
+    pub fn live_workers(&self) -> Option<usize> {
+        match &self.exec {
+            Exec::Pooled(p) => Some(p.live_workers()),
+            _ => None,
+        }
+    }
+
     /// Install (or clear) a deterministic fault injector (tests/benches
     /// only): consulted before every unit of selection work on whichever
     /// execution shape this engine runs.

@@ -29,6 +29,16 @@
 //!   however long the stream runs.  A stream that fits the reservoir
 //!   reproduces the batch selection bit for bit, at any chunking.
 //!   CLI: `--stream-chunk N` on `train`.
+//! * **Selection as a shared service** — [`serve`]: the `graft serve`
+//!   daemon hosts N tenant engines (batch and streaming) behind a
+//!   versioned length-prefixed binary protocol over TCP/Unix sockets,
+//!   with per-tenant config validated by the same [`engine::EngineBuilder`],
+//!   typed `Busy`/`Rejected` backpressure instead of unbounded queueing,
+//!   drain-on-disconnect, and a `Stats` endpoint emitting graft-bench-v1
+//!   telemetry.  Served selections are bit-identical to an in-process
+//!   engine with the same config/seed.  See the frame table and loopback
+//!   quickstart in the [`serve`] module docs; CLI: `graft serve` /
+//!   `graft serve-smoke`.
 //! * **Whole training runs** — [`train::run`] with a [`train::TrainConfig`]
 //!   (the CLI's `train` subcommand); it drives the AOT artifacts through
 //!   [`runtime`] and builds its Rust-side selection through the engine.
@@ -150,4 +160,5 @@ pub mod rng;
 pub mod runtime;
 pub mod graft;
 pub mod selection;
+pub mod serve;
 pub mod train;

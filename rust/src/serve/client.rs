@@ -1,0 +1,212 @@
+//! Loopback/remote client for the selection daemon: a thin, blocking
+//! request/response wrapper over the [`protocol`](super::protocol) codec.
+//! The integration suites and `graft serve-smoke` drive the daemon
+//! through this type, so the client-side codec is exercised by the same
+//! tests that pin the server.
+
+use std::io;
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::path::Path;
+use std::time::Duration;
+
+use crate::selection::BatchView;
+
+use super::protocol::{
+    read_frame, write_msg, FaultKind, FrameRead, Msg, ProtoError, RejectCode, TenantConfig,
+    WireBatch, WireDrain, WireSelection, WireSnapshot, DEFAULT_MAX_FRAME,
+};
+use super::Conn;
+
+/// Everything a daemon round-trip can come back with, typed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure (connect, send, or receive).
+    Io(io::Error),
+    /// The reply frame failed to decode.
+    Proto(ProtoError),
+    /// Admission control turned the connection away.
+    Busy { active: u32, max: u32 },
+    /// The server refused the request; the session is still usable.
+    Rejected { code: RejectCode, detail: String },
+    /// A typed selection fault (or, for `Protocol`, a codec violation
+    /// after which the server closes the connection).
+    Fault { kind: FaultKind, detail: String },
+    /// The server closed the connection where a reply was expected.
+    Closed,
+    /// A structurally valid reply of the wrong type for the request.
+    Unexpected(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport error: {e}"),
+            ClientError::Proto(e) => write!(f, "protocol error: {e}"),
+            ClientError::Busy { active, max } => {
+                write!(f, "server busy ({active}/{max} sessions)")
+            }
+            ClientError::Rejected { code, detail } => {
+                write!(f, "rejected ({code:?}): {detail}")
+            }
+            ClientError::Fault { kind, detail } => write!(f, "fault ({kind:?}): {detail}"),
+            ClientError::Closed => write!(f, "server closed the connection"),
+            ClientError::Unexpected(what) => write!(f, "unexpected reply: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> ClientError {
+        ClientError::Proto(e)
+    }
+}
+
+/// One tenant connection to a running daemon.
+pub struct Client {
+    conn: Conn,
+}
+
+/// How many read-timeout ticks the client tolerates while waiting for a
+/// reply (a pooled selection can legitimately take a while; 120 × 250 ms
+/// = 30 s).
+const REPLY_TICKS: u32 = 120;
+
+impl Client {
+    /// Connect over TCP (`host:port`).
+    pub fn connect_tcp(addr: &str) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let conn = Conn::Tcp(stream);
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(250)));
+        Ok(Client { conn })
+    }
+
+    /// Connect over a Unix-domain socket.
+    #[cfg(unix)]
+    pub fn connect_unix(path: impl AsRef<Path>) -> Result<Client, ClientError> {
+        let conn = Conn::Unix(UnixStream::connect(path)?);
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(250)));
+        Ok(Client { conn })
+    }
+
+    fn read_reply(&mut self) -> Result<Msg, ClientError> {
+        // Waiting for a reply, an idle tick is just the server thinking;
+        // bounded by REPLY_TICKS so a dead server surfaces as an error.
+        let mut idle = 0u32;
+        loop {
+            match read_frame(&mut self.conn, DEFAULT_MAX_FRAME, REPLY_TICKS)? {
+                FrameRead::Frame(p) => return Ok(Msg::decode(&p)?),
+                FrameRead::Eof => return Err(ClientError::Closed),
+                FrameRead::Idle => {
+                    idle += 1;
+                    if idle >= REPLY_TICKS {
+                        return Err(ClientError::Io(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "no reply within the reply budget",
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Send one message, read one reply, and translate the generic
+    /// failure replies (`Busy`/`Rejected`/`Fault`) into typed errors.
+    fn roundtrip(&mut self, msg: &Msg) -> Result<Msg, ClientError> {
+        write_msg(&mut self.conn, msg)?;
+        match self.read_reply()? {
+            Msg::Busy { active, max } => Err(ClientError::Busy { active, max }),
+            Msg::Rejected { code, detail } => Err(ClientError::Rejected { code, detail }),
+            Msg::Fault { kind, detail } => Err(ClientError::Fault { kind, detail }),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Claim a tenant name and build its engine on the daemon.  Returns
+    /// the session id and the engine's build notes.
+    pub fn hello(
+        &mut self,
+        tenant: &str,
+        config: &TenantConfig,
+    ) -> Result<(u64, Vec<String>), ClientError> {
+        let msg = Msg::Hello { tenant: tenant.to_string(), config: config.clone() };
+        match self.roundtrip(&msg)? {
+            Msg::HelloAck { session, notes } => Ok((session, notes)),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Submit one batch window (batch tenants).  Returns rows accepted.
+    pub fn submit_batch(&mut self, view: &BatchView<'_>) -> Result<u64, ClientError> {
+        match self.roundtrip(&Msg::SubmitBatch(WireBatch::from_view(view)))? {
+            Msg::Ack { rows } => Ok(rows),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Run selection on the pending window (batch tenants).
+    pub fn get_selection(&mut self) -> Result<WireSelection, ClientError> {
+        match self.roundtrip(&Msg::GetSelection)? {
+            Msg::Selection(s) => Ok(s),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Submit + select in one call — the common batch window shape.
+    pub fn select(&mut self, view: &BatchView<'_>) -> Result<WireSelection, ClientError> {
+        self.submit_batch(view)?;
+        self.get_selection()
+    }
+
+    /// Push one chunk of rows (streaming tenants).
+    pub fn push_chunk(&mut self, view: &BatchView<'_>) -> Result<u64, ClientError> {
+        match self.roundtrip(&Msg::PushChunk(WireBatch::from_view(view)))? {
+            Msg::Ack { rows } => Ok(rows),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Materialise a selection from the stream (streaming tenants).
+    pub fn snapshot(&mut self) -> Result<WireSnapshot, ClientError> {
+        match self.roundtrip(&Msg::Snapshot)? {
+            Msg::SnapshotR(s) => Ok(s),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Quiesce the tenant and fetch progress + fault telemetry.
+    pub fn drain(&mut self) -> Result<WireDrain, ClientError> {
+        match self.roundtrip(&Msg::Drain)? {
+            Msg::DrainAck(d) => Ok(d),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Fetch the daemon-wide graft-bench-v1 telemetry document.  Works
+    /// on any connection, before or without `Hello`.
+    pub fn stats(&mut self) -> Result<String, ClientError> {
+        match self.roundtrip(&Msg::Stats)? {
+            Msg::StatsR { json } => Ok(json),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Graceful goodbye: the server acknowledges, then both sides close.
+    pub fn bye(mut self) -> Result<(), ClientError> {
+        match self.roundtrip(&Msg::Bye)? {
+            Msg::ByeAck => Ok(()),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+}

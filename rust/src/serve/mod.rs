@@ -1,0 +1,495 @@
+//! Selection as a service — the `graft serve` daemon.
+//!
+//! Hosts N tenant [`SelectionEngine`](crate::engine::SelectionEngine)s /
+//! [`StreamingEngine`](crate::engine::StreamingEngine)s behind a
+//! versioned, length-prefixed binary protocol (see [`protocol`] for the
+//! frame table) over TCP or Unix sockets, so many concurrent training
+//! jobs share one selection backend instead of each linking the crate.
+//!
+//! # Tenant lifecycle
+//!
+//! One connection is one tenant session:
+//!
+//! 1. `Hello { tenant, config }` — the name is claimed in the daemon-wide
+//!    registry (`Rejected { DuplicateTenant }` while another session
+//!    holds it) and the config is validated by the in-process
+//!    [`EngineBuilder`](crate::engine::EngineBuilder) via
+//!    [`engine_builder`] — bad budgets/fractions/shapes come back as
+//!    `Rejected { BadHello }` naming the offending field.
+//! 2. Batch tenants loop `SubmitBatch` → `GetSelection`; streaming
+//!    tenants loop `PushChunk` and call `Snapshot` whenever a selection
+//!    is wanted.  `Drain` drops any pending window and reports progress +
+//!    fault counters; `Stats` (allowed on any connection, any time)
+//!    returns daemon-wide telemetry as a graft-bench-v1 JSON document.
+//! 3. `Bye` — or simply disconnecting — tears the tenant down: the
+//!    engine is shut down with the pool's drop-senders-then-join drain
+//!    idiom, the name is released, and accumulated telemetry stays in
+//!    the stats registry.
+//!
+//! Served selections are **bit-identical** to an in-process engine built
+//! from the same [`TenantConfig`](protocol::TenantConfig) — both sides
+//! construct through [`engine_builder`], and the engines are fully
+//! deterministic given (config, seed, data).  `rust/tests/serve_loopback.rs`
+//! pins this for concurrent mixed batch/streaming tenants, across
+//! disconnects and injected worker faults.
+//!
+//! # Backpressure & admission control
+//!
+//! The daemon never queues unboundedly; pressure surfaces as typed
+//! replies instead:
+//!
+//! * **Admission:** at most `max_sessions` concurrent connections; the
+//!   daemon answers `Busy { active, max }` and closes rather than
+//!   accepting work it cannot host.
+//! * **Per-session:** one window in flight — a second `SubmitBatch`
+//!   before `GetSelection` is `Rejected { PendingSelection }`.  Inside a
+//!   tenant the engine's own bounded pool channels hold (PR 3).
+//! * **Frames:** payloads above the configured cap are refused *before*
+//!   the body is read (`FrameTooLarge`), and a peer that stalls
+//!   mid-frame past the stall budget is disconnected, so a dead client
+//!   cannot pin a session slot forever.
+//!
+//! Selection faults ([`SelectError`](crate::engine::SelectError)) are
+//! reported per-request as `Fault` replies and leave the session usable;
+//! protocol errors (malformed/truncated/oversized frames, unknown
+//! versions) get a best-effort `Fault { Protocol }` reply and close only
+//! the offending connection — never anyone else's.
+//!
+//! # Loopback quickstart
+//!
+//! ```
+//! use graft::serve::{Client, ServerBuilder};
+//! use graft::serve::protocol::TenantConfig;
+//! # use graft::linalg::Mat;
+//! # use graft::selection::BatchView;
+//! // A daemon on an OS-assigned loopback port.
+//! let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+//! let addr = server.local_addr().expect("tcp addr").to_string();
+//!
+//! // A tenant: explicit 3-row budget, default GRAFT method and seed.
+//! let mut client = Client::connect_tcp(&addr).expect("connect");
+//! let config = TenantConfig { budget: 3, ..TenantConfig::default() };
+//! client.hello("quickstart", &config).expect("admitted");
+//!
+//! # let k = 8;
+//! # let mut rng = graft::rng::Rng::new(7);
+//! # let features = Mat::from_fn(k, 3, |_, _| rng.normal());
+//! # let grads = Mat::from_fn(k, 4, |_, _| rng.normal());
+//! # let losses = vec![1.0; k];
+//! # let labels = vec![0i32; k];
+//! # let preds = vec![0i32; k];
+//! # let row_ids: Vec<usize> = (0..k).collect();
+//! # let batch = BatchView { features: &features, grads: &grads, losses: &losses,
+//! #     labels: &labels, preds: &preds, classes: 2, row_ids: &row_ids };
+//! // One window: submit + select.  Bit-identical to an in-process
+//! // engine built via graft::serve::engine_builder(&config).
+//! let sel = client.select(&batch).expect("selection");
+//! assert_eq!(sel.indices.len(), 3);
+//!
+//! client.bye().expect("clean goodbye");
+//! server.shutdown();
+//! ```
+
+pub mod client;
+pub mod protocol;
+pub mod tenant;
+
+mod session;
+
+pub use client::{Client, ClientError};
+pub use tenant::{engine_builder, valid_tenant_name};
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::faults::FaultInjector;
+
+use protocol::{write_msg, Msg, DEFAULT_MAX_FRAME};
+use tenant::StatsRegistry;
+
+/// Daemon tuning knobs (all bounded-by-construction; see the
+/// [module docs](self) for the backpressure story).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Admission bound: connections above this get `Busy` + close.
+    pub max_sessions: usize,
+    /// Frame payload cap in bytes (checked against the length prefix
+    /// before the body is read).
+    pub max_frame: usize,
+    /// Socket read-poll tick: how often an idle session checks for
+    /// daemon shutdown.
+    pub read_tick: Duration,
+    /// Consecutive mid-frame timeout ticks before a peer is declared
+    /// stalled and disconnected (`read_tick × stall_ticks` ≈ the stall
+    /// budget).
+    pub stall_ticks: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            max_sessions: 64,
+            max_frame: DEFAULT_MAX_FRAME,
+            read_tick: Duration::from_millis(50),
+            stall_ticks: 200, // × 50 ms tick = 10 s stall budget
+        }
+    }
+}
+
+/// Lock that survives a poisoned mutex: a panicking session must never
+/// take the registry (and with it every other tenant) down with it.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One transport connection, TCP or Unix.  Cloned handles registered in
+/// [`Sessions`] let the daemon unblock every session at shutdown.
+pub(crate) enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> io::Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Half-close both directions, unblocking any read the session is
+    /// parked in.  Best-effort: the peer may already be gone.
+    fn shutdown_both(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true); // request/response traffic
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Conn::Unix(s))
+            }
+        }
+    }
+}
+
+/// Where the daemon listens — retained so shutdown can dial itself to
+/// wake the blocking accept loop.
+enum Endpoint {
+    Tcp(SocketAddr),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    fn wake(&self) {
+        match self {
+            Endpoint::Tcp(addr) => {
+                let _ = TcpStream::connect(addr);
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = UnixStream::connect(path);
+            }
+        }
+    }
+}
+
+/// Live-session registry: claimed tenant names (name → session id) and
+/// a cloned connection handle per session for shutdown fan-out.
+#[derive(Default)]
+pub(crate) struct Sessions {
+    pub tenants: HashMap<String, u64>,
+    pub conns: Vec<(u64, Conn)>,
+}
+
+/// State shared by the accept loop and every session thread.
+pub(crate) struct Shared {
+    pub opts: ServeOptions,
+    /// Deterministic fault injection, threaded into every batch tenant's
+    /// engine at `Hello` (tests/benches only; `None` in production).
+    pub injector: Option<Arc<dyn FaultInjector>>,
+    pub shutting_down: AtomicBool,
+    pub sessions: Mutex<Sessions>,
+    pub stats: Mutex<StatsRegistry>,
+    next_session: AtomicU64,
+}
+
+/// Configure and bind a [`Server`].
+pub struct ServerBuilder {
+    opts: ServeOptions,
+    injector: Option<Arc<dyn FaultInjector>>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder { opts: ServeOptions::default(), injector: None }
+    }
+
+    /// Replace the default [`ServeOptions`].
+    pub fn options(mut self, opts: ServeOptions) -> ServerBuilder {
+        self.opts = opts;
+        self
+    }
+
+    /// Install a deterministic fault injector on every batch tenant's
+    /// engine (the loopback fault suites drive worker panics through the
+    /// served path with this; see [`crate::faults::FaultPlan`]).
+    pub fn fault_injector(mut self, injector: Arc<dyn FaultInjector>) -> ServerBuilder {
+        self.injector = Some(injector);
+        self
+    }
+
+    /// Bind a TCP endpoint (use port 0 for an OS-assigned loopback port,
+    /// then read it back with [`Server::local_addr`]) and start serving.
+    pub fn bind_tcp(self, addr: &str) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(self.start(Listener::Tcp(listener), Endpoint::Tcp(local), Some(local)))
+    }
+
+    /// Bind a Unix-domain socket (any stale file at `path` is replaced)
+    /// and start serving.
+    #[cfg(unix)]
+    pub fn bind_unix(self, path: impl AsRef<Path>) -> io::Result<Server> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        Ok(self.start(Listener::Unix(listener), Endpoint::Unix(path), None))
+    }
+
+    fn start(self, listener: Listener, endpoint: Endpoint, local: Option<SocketAddr>) -> Server {
+        let shared = Arc::new(Shared {
+            opts: self.opts,
+            injector: self.injector,
+            shutting_down: AtomicBool::new(false),
+            sessions: Mutex::new(Sessions::default()),
+            stats: Mutex::new(StatsRegistry::default()),
+            next_session: AtomicU64::new(1),
+        });
+        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let workers = Arc::clone(&workers);
+            std::thread::spawn(move || accept_loop(listener, shared, workers))
+        };
+        Server { local, endpoint, shared, workers, accept: Some(accept), done: false }
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    shared: Arc<Shared>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        let conn = match listener.accept() {
+            Ok(c) => c,
+            Err(_) if shared.shutting_down.load(Ordering::SeqCst) => break,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break; // the self-dial (or a late arrival) during shutdown
+        }
+        // Reap finished session threads so a long-lived daemon's handle
+        // list stays proportional to live sessions.
+        {
+            let mut ws = lock(&workers);
+            let mut live = Vec::with_capacity(ws.len());
+            for h in ws.drain(..) {
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    live.push(h);
+                }
+            }
+            *ws = live;
+        }
+        // Admission control: claim a slot or answer Busy and close.
+        let admitted = {
+            let mut s = lock(&shared.sessions);
+            if s.conns.len() >= shared.opts.max_sessions {
+                Err(s.conns.len())
+            } else {
+                let id = shared.next_session.fetch_add(1, Ordering::SeqCst);
+                match conn.try_clone() {
+                    Ok(clone) => {
+                        s.conns.push((id, clone));
+                        Ok(id)
+                    }
+                    Err(_) => Err(s.conns.len()),
+                }
+            }
+        };
+        match admitted {
+            Ok(id) => {
+                let shared = Arc::clone(&shared);
+                let mut conn = conn;
+                let h = std::thread::spawn(move || session::run(&mut conn, shared, id));
+                lock(&workers).push(h);
+            }
+            Err(active) => {
+                let mut conn = conn;
+                let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
+                let _ = write_msg(
+                    &mut conn,
+                    &Msg::Busy {
+                        active: active as u32,
+                        max: shared.opts.max_sessions as u32,
+                    },
+                );
+                // Dropped: the peer sees Busy then EOF.
+            }
+        }
+    }
+}
+
+/// A running daemon.  Dropping it shuts it down (idempotent; also
+/// available explicitly as [`Server::shutdown`]).
+pub struct Server {
+    local: Option<SocketAddr>,
+    endpoint: Endpoint,
+    shared: Arc<Shared>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: Option<JoinHandle<()>>,
+    done: bool,
+}
+
+impl Server {
+    /// The bound TCP address (`None` for Unix-socket servers) — how
+    /// callers of `bind_tcp("127.0.0.1:0")` learn their port.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local
+    }
+
+    /// Live session count (admission-relevant connections).
+    pub fn active_sessions(&self) -> usize {
+        lock(&self.shared.sessions).conns.len()
+    }
+
+    /// The daemon-wide telemetry document (graft-bench-v1 JSON) — the
+    /// same bytes a `Stats` request returns over the wire.
+    pub fn stats_json(&self) -> String {
+        lock(&self.shared.stats).to_bench_json()
+    }
+
+    /// Stop accepting, unblock and drain every session (each tenant's
+    /// engine shuts down through the pool's drop-senders-then-join
+    /// idiom), and join all daemon threads.  Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        self.endpoint.wake();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Unblock sessions parked in reads; idle ones also notice the
+        // flag at their next tick.
+        for (_, conn) in lock(&self.shared.sessions).conns.iter() {
+            conn.shutdown_both();
+        }
+        let handles: Vec<JoinHandle<()>> = lock(&self.workers).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        if let Endpoint::Unix(path) = &self.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

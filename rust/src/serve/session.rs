@@ -1,0 +1,330 @@
+//! One daemon session: the per-connection message loop and tenant state
+//! machine.  See the [module docs](super) for lifecycle and backpressure
+//! semantics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::protocol::{
+    read_frame, write_msg, FaultKind, FrameRead, Msg, RejectCode, WireDecision, WireDrain,
+    WireSelection, WireSnapshot,
+};
+use super::tenant::{window_from_wire, EngineKind, Tenant};
+use super::{lock, Conn, Shared};
+
+/// What the loop does after sending a reply.
+enum Action {
+    Continue,
+    Close,
+}
+
+fn rejected(code: RejectCode, detail: impl Into<String>) -> (Msg, Action) {
+    (Msg::Rejected { code, detail: detail.into() }, Action::Continue)
+}
+
+pub(crate) fn run(conn: &mut Conn, shared: Arc<Shared>, session_id: u64) {
+    let _ = conn.set_read_timeout(Some(shared.opts.read_tick));
+    let mut tenant: Option<Tenant> = None;
+    loop {
+        let payload = match read_frame(conn, shared.opts.max_frame, shared.opts.stall_ticks) {
+            Ok(FrameRead::Idle) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Ok(FrameRead::Eof) => break,
+            Ok(FrameRead::Frame(p)) => p,
+            Err(e) => {
+                // Typed protocol failure: best-effort Fault reply, then
+                // close this connection only.
+                let _ = write_msg(
+                    conn,
+                    &Msg::Fault { kind: FaultKind::Protocol, detail: e.to_string() },
+                );
+                break;
+            }
+        };
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                let _ = write_msg(
+                    conn,
+                    &Msg::Fault { kind: FaultKind::Protocol, detail: e.to_string() },
+                );
+                break;
+            }
+        };
+        let (reply, action) = handle(&mut tenant, msg, &shared, session_id);
+        if write_msg(conn, &reply).is_err() {
+            break;
+        }
+        if matches!(action, Action::Close) {
+            break;
+        }
+    }
+    // Drain-on-disconnect: shut the tenant engine down (pool
+    // drop-senders-then-join), release the name, deregister the session.
+    // Telemetry stays in the registry under the tenant's name.
+    if let Some(mut t) = tenant.take() {
+        t.shutdown();
+        lock(&shared.sessions).tenants.remove(&t.name);
+    }
+    lock(&shared.sessions).conns.retain(|(id, _)| *id != session_id);
+}
+
+fn handle(
+    tenant: &mut Option<Tenant>,
+    msg: Msg,
+    shared: &Shared,
+    session_id: u64,
+) -> (Msg, Action) {
+    match msg {
+        Msg::Hello { tenant: name, config } => {
+            if tenant.is_some() {
+                return rejected(RejectCode::AlreadyHello, "session already has a tenant");
+            }
+            if !super::valid_tenant_name(&name) {
+                return rejected(
+                    RejectCode::BadHello,
+                    format!("tenant name {name:?} must match [A-Za-z0-9_.-]{{1,64}}"),
+                );
+            }
+            // Claim the name first (short critical section), build the
+            // engine outside the lock, release the claim on failure.
+            {
+                let mut s = lock(&shared.sessions);
+                if s.tenants.contains_key(&name) {
+                    return rejected(
+                        RejectCode::DuplicateTenant,
+                        format!("tenant '{name}' already has a live session"),
+                    );
+                }
+                s.tenants.insert(name.clone(), session_id);
+            }
+            match Tenant::build(&name, &config, shared.injector.clone()) {
+                Ok(t) => {
+                    lock(&shared.stats).entry(&name, config.streaming);
+                    let notes = t.notes();
+                    *tenant = Some(t);
+                    (Msg::HelloAck { session: session_id, notes }, Action::Continue)
+                }
+                Err(detail) => {
+                    lock(&shared.sessions).tenants.remove(&name);
+                    rejected(RejectCode::BadHello, detail)
+                }
+            }
+        }
+
+        Msg::SubmitBatch(batch) => {
+            let Some(t) = tenant.as_mut() else {
+                return rejected(RejectCode::NeedHello, "SubmitBatch before Hello");
+            };
+            let EngineKind::Batch { pending, .. } = &mut t.kind else {
+                return rejected(RejectCode::NotBatch, "streaming tenants push chunks");
+            };
+            if pending.is_some() {
+                return rejected(
+                    RejectCode::PendingSelection,
+                    "a window is already pending; GetSelection first",
+                );
+            }
+            if batch.rows == 0 {
+                return rejected(RejectCode::EmptyBatch, "zero-row batch");
+            }
+            let rows = batch.rows as u64;
+            *pending = Some(window_from_wire(&batch));
+            t.rows += rows;
+            (Msg::Ack { rows }, Action::Continue)
+        }
+
+        Msg::GetSelection => {
+            let Some(t) = tenant.as_mut() else {
+                return rejected(RejectCode::NeedHello, "GetSelection before Hello");
+            };
+            let EngineKind::Batch { eng, pending } = &mut t.kind else {
+                return rejected(RejectCode::NotBatch, "streaming tenants take snapshots");
+            };
+            let Some(win) = pending.take() else {
+                return rejected(RejectCode::NoPendingBatch, "no window pending");
+            };
+            let t0 = Instant::now();
+            let result = eng.select(&win.view());
+            let ns = t0.elapsed().as_nanos() as f64;
+            let reply = match result {
+                Ok(sel) => {
+                    t.windows += 1;
+                    Msg::Selection(WireSelection {
+                        window: sel.window,
+                        budget: sel.budget as u64,
+                        indices: sel.indices.iter().map(|&i| i as u64).collect(),
+                        decision: sel.decision.map(|d| WireDecision {
+                            rank: d.rank as u64,
+                            error: d.error,
+                            satisfied: d.satisfied,
+                        }),
+                        degradations: sel.degradations.iter().map(|d| d.to_string()).collect(),
+                    })
+                }
+                Err(e) => Msg::Fault { kind: FaultKind::of(&e), detail: e.to_string() },
+            };
+            let faulted = matches!(reply, Msg::Fault { .. });
+            {
+                let mut reg = lock(&shared.stats);
+                let e = reg.entry(&t.name, false);
+                e.select.push(ns);
+                e.windows = t.windows;
+                e.rows = t.rows;
+                if faulted {
+                    e.faults += 1;
+                }
+            }
+            (reply, Action::Continue)
+        }
+
+        Msg::PushChunk(batch) => {
+            let Some(t) = tenant.as_mut() else {
+                return rejected(RejectCode::NeedHello, "PushChunk before Hello");
+            };
+            let EngineKind::Stream { eng, dims } = &mut t.kind else {
+                return rejected(RejectCode::NotStreaming, "batch tenants submit windows");
+            };
+            if batch.rows == 0 {
+                return rejected(RejectCode::EmptyBatch, "zero-row chunk");
+            }
+            if let Some((rc, ec)) = *dims {
+                if rc != batch.rcols || ec != batch.ecols {
+                    return rejected(
+                        RejectCode::ShapeMismatch,
+                        format!(
+                            "chunk widths {}/{} (features/sketch) differ from the stream's {}/{}",
+                            batch.rcols, batch.ecols, rc, ec
+                        ),
+                    );
+                }
+            }
+            let win = window_from_wire(&batch);
+            let rows = batch.rows as u64;
+            let t0 = Instant::now();
+            let result = eng.push(&win.view());
+            let ns = t0.elapsed().as_nanos() as f64;
+            let reply = match result {
+                Ok(()) => {
+                    *dims = Some((batch.rcols, batch.ecols));
+                    t.rows += rows;
+                    Msg::Ack { rows }
+                }
+                Err(e) => Msg::Fault { kind: FaultKind::of(&e), detail: e.to_string() },
+            };
+            let faulted = matches!(reply, Msg::Fault { .. });
+            {
+                let mut reg = lock(&shared.stats);
+                let e = reg.entry(&t.name, true);
+                e.push.push(ns);
+                e.rows = t.rows;
+                if faulted {
+                    e.faults += 1;
+                }
+            }
+            (reply, Action::Continue)
+        }
+
+        Msg::Snapshot => {
+            let Some(t) = tenant.as_mut() else {
+                return rejected(RejectCode::NeedHello, "Snapshot before Hello");
+            };
+            let EngineKind::Stream { eng, .. } = &mut t.kind else {
+                return rejected(RejectCode::NotStreaming, "batch tenants get selections");
+            };
+            let t0 = Instant::now();
+            let result = eng.snapshot();
+            let ns = t0.elapsed().as_nanos() as f64;
+            let reply = match result {
+                Ok(snap) => {
+                    t.windows += 1;
+                    Msg::SnapshotR(WireSnapshot {
+                        rows_seen: snap.rows_seen,
+                        reservoir_len: snap.reservoir_len as u64,
+                        budget: snap.budget as u64,
+                        indices: snap.indices.iter().map(|&i| i as u64).collect(),
+                        decision: snap.decision.map(|d| WireDecision {
+                            rank: d.rank as u64,
+                            error: d.error,
+                            satisfied: d.satisfied,
+                        }),
+                        degradations: snap.degradations.iter().map(|d| d.to_string()).collect(),
+                    })
+                }
+                Err(e) => Msg::Fault { kind: FaultKind::of(&e), detail: e.to_string() },
+            };
+            let faulted = matches!(reply, Msg::Fault { .. });
+            {
+                let mut reg = lock(&shared.stats);
+                let e = reg.entry(&t.name, true);
+                e.snapshot.push(ns);
+                e.windows = t.windows;
+                if faulted {
+                    e.faults += 1;
+                }
+            }
+            (reply, Action::Continue)
+        }
+
+        Msg::Drain => {
+            let Some(t) = tenant.as_mut() else {
+                return rejected(RejectCode::NeedHello, "Drain before Hello");
+            };
+            let mut d = WireDrain { windows: t.windows, rows: t.rows, ..WireDrain::default() };
+            match &mut t.kind {
+                EngineKind::Batch { eng, pending } => {
+                    // Quiesce: an un-selected window is dropped, reported
+                    // implicitly by rows-vs-windows; the engine stays live.
+                    *pending = None;
+                    let s = eng.fault_stats();
+                    d.respawns = s.respawns;
+                    d.retries = s.retries;
+                    d.deadline_requeues = s.deadline_requeues;
+                    d.join_timeouts = s.join_timeouts;
+                    d.quarantined_rows = s.quarantined_rows;
+                    d.live_workers = eng.live_workers().unwrap_or(0) as u64;
+                }
+                EngineKind::Stream { eng, .. } => {
+                    d.quarantined_rows = eng.quarantined_rows();
+                }
+            }
+            (Msg::DrainAck(d), Action::Continue)
+        }
+
+        // Stats is deliberately tenant-free: monitoring connections may
+        // ask without a Hello.
+        Msg::Stats => {
+            let json = lock(&shared.stats).to_bench_json();
+            (Msg::StatsR { json }, Action::Continue)
+        }
+
+        Msg::Bye => (Msg::ByeAck, Action::Close),
+
+        // Server→client message types arriving at the server are a
+        // protocol violation, not tenant traffic: reply typed, close.
+        Msg::HelloAck { .. }
+        | Msg::Ack { .. }
+        | Msg::Selection(_)
+        | Msg::SnapshotR(_)
+        | Msg::DrainAck(_)
+        | Msg::StatsR { .. }
+        | Msg::Busy { .. }
+        | Msg::Rejected { .. }
+        | Msg::Fault { .. }
+        | Msg::ByeAck => (
+            Msg::Fault {
+                kind: FaultKind::Protocol,
+                detail: "server-to-client message sent to the server".to_string(),
+            },
+            Action::Close,
+        ),
+    }
+}

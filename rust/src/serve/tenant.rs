@@ -1,0 +1,316 @@
+//! Tenant state behind one daemon session: the wire-config →
+//! [`EngineBuilder`] mapping, the per-tenant engine (batch or streaming),
+//! and the shared latency/telemetry registry whose `Stats` reply is a
+//! graft-bench-v1 document.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::SelectWindow;
+use crate::engine::{EngineBuilder, FaultPolicy, RankMode, SelectionEngine, StreamingEngine};
+use crate::faults::FaultInjector;
+use crate::linalg::Mat;
+
+use super::protocol::{TenantConfig, WireBatch, WireFaultPolicy};
+
+/// Map a wire [`TenantConfig`] onto an [`EngineBuilder`].  This is **the**
+/// config path for served tenants — the daemon builds every engine
+/// through it, so all validation (budget/fraction/ε ranges, shape
+/// compatibility, streaming constraints) is the `EngineBuilder`'s, and a
+/// client that builds its in-process reference engine through this same
+/// function gets served selections bit-identical by construction.
+pub fn engine_builder(cfg: &TenantConfig) -> EngineBuilder {
+    let mut b = EngineBuilder::new()
+        .method(&cfg.method)
+        .seed(cfg.seed)
+        .fraction(cfg.fraction)
+        .epsilon(cfg.epsilon)
+        .shards(cfg.shards as usize)
+        .pool_workers(cfg.workers as usize)
+        .overlap(cfg.overlap)
+        .fault_policy(match cfg.fault {
+            WireFaultPolicy::Fail => FaultPolicy::Fail,
+            WireFaultPolicy::Retry { max, backoff_ms } => FaultPolicy::Retry {
+                max,
+                backoff: Duration::from_millis(backoff_ms as u64),
+            },
+            WireFaultPolicy::Degrade => FaultPolicy::Degrade,
+        });
+    if cfg.budget > 0 {
+        b = b.budget(cfg.budget as usize);
+    }
+    if cfg.adaptive {
+        b = b.rank(RankMode::Adaptive { epsilon: cfg.epsilon });
+    }
+    if !cfg.extractor.is_empty() {
+        b = b.extractor(&cfg.extractor);
+    }
+    if !cfg.merge.is_empty() {
+        b = b.merge_name(&cfg.merge);
+    }
+    b
+}
+
+/// Tenant names travel inside JSON and logs unescaped, so the daemon
+/// only admits `[A-Za-z0-9_.-]{1,64}`.
+pub fn valid_tenant_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'.' || b == b'-')
+}
+
+/// The engine behind a session, in its declared mode.
+pub(crate) enum EngineKind {
+    Batch {
+        eng: SelectionEngine,
+        /// The one admitted-but-unselected window (the per-session
+        /// backpressure bound: a second `SubmitBatch` is `Rejected`).
+        pending: Option<SelectWindow>,
+    },
+    Stream {
+        eng: StreamingEngine,
+        /// Feature/sketch widths fixed by the first chunk; later chunks
+        /// must match (the `StreamState` contract).
+        dims: Option<(u32, u32)>,
+    },
+}
+
+/// One live tenant: its engine plus session-scoped counters.
+pub(crate) struct Tenant {
+    pub name: String,
+    pub kind: EngineKind,
+    /// Selections answered (selects + snapshots).
+    pub windows: u64,
+    /// Rows ingested (batch rows submitted + stream rows pushed).
+    pub rows: u64,
+}
+
+impl Tenant {
+    /// Build a tenant engine from its `Hello`.  `Err` carries the
+    /// `EngineError` display text for the `Rejected { BadHello }` reply.
+    pub fn build(
+        name: &str,
+        cfg: &TenantConfig,
+        injector: Option<Arc<dyn FaultInjector>>,
+    ) -> Result<Tenant, String> {
+        let kind = if cfg.streaming {
+            let eng = engine_builder(cfg).build_streaming().map_err(|e| e.to_string())?;
+            EngineKind::Stream { eng, dims: None }
+        } else {
+            let mut eng = engine_builder(cfg).build().map_err(|e| e.to_string())?;
+            if injector.is_some() {
+                eng.set_fault_injector(injector);
+            }
+            EngineKind::Batch { eng, pending: None }
+        };
+        Ok(Tenant { name: name.to_string(), kind, windows: 0, rows: 0 })
+    }
+
+    pub fn notes(&self) -> Vec<String> {
+        match &self.kind {
+            EngineKind::Batch { eng, .. } => eng.notes().to_vec(),
+            EngineKind::Stream { eng, .. } => eng.notes().to_vec(),
+        }
+    }
+
+    /// Drain: release execution resources eagerly (the pool's
+    /// drop-senders-then-join shutdown).  Idempotent; a batch engine
+    /// keeps answering `PoolUnavailable` afterwards rather than panicking.
+    pub fn shutdown(&mut self) {
+        if let EngineKind::Batch { eng, .. } = &mut self.kind {
+            eng.shutdown();
+        }
+    }
+}
+
+/// Materialise a wire batch as an owned [`SelectWindow`] (whose `view()`
+/// is the `BatchView` every engine entry point takes).  Shape consistency
+/// was already enforced by the decoder; this is a straight reshape.
+pub(crate) fn window_from_wire(b: &WireBatch) -> SelectWindow {
+    let (k, rc, ec) = (b.rows as usize, b.rcols as usize, b.ecols as usize);
+    SelectWindow {
+        features: Mat::from_vec(k, rc, b.features.clone()),
+        grads: Mat::from_vec(k, ec, b.grads.clone()),
+        losses: b.losses.clone(),
+        labels: b.labels.clone(),
+        preds: b.preds.clone(),
+        classes: b.classes as usize,
+        row_ids: b.row_ids.iter().map(|&i| i as usize).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats registry
+// ---------------------------------------------------------------------------
+
+/// Welford accumulator over nanosecond samples — mean/std/min in one
+/// pass, no sample retention, exactly what a graft-bench-v1 record needs.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct LatAcc {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+}
+
+impl LatAcc {
+    pub fn push(&mut self, ns: f64) {
+        self.count += 1;
+        if self.count == 1 {
+            self.mean = ns;
+            self.m2 = 0.0;
+            self.min = ns;
+        } else {
+            let d = ns - self.mean;
+            self.mean += d / self.count as f64;
+            self.m2 += d * (ns - self.mean);
+            if ns < self.min {
+                self.min = ns;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    fn std(&self) -> f64 {
+        if self.count > 1 {
+            (self.m2 / (self.count - 1) as f64).max(0.0).sqrt()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-tenant telemetry, keyed by tenant name in the registry so a
+/// tenant that disconnects and returns keeps accumulating one row set.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct TenantStats {
+    pub streaming: bool,
+    pub select: LatAcc,
+    pub push: LatAcc,
+    pub snapshot: LatAcc,
+    pub windows: u64,
+    pub rows: u64,
+    /// Typed selection faults surfaced to the client (`Fault` replies).
+    pub faults: u64,
+}
+
+/// The daemon-wide stats registry behind the `Stats` endpoint.  Sessions
+/// record into it live (per-op lock, negligible next to a select), so a
+/// monitoring connection sees current numbers for active tenants too.
+#[derive(Debug, Default)]
+pub(crate) struct StatsRegistry {
+    tenants: BTreeMap<String, TenantStats>,
+}
+
+impl StatsRegistry {
+    pub fn entry(&mut self, tenant: &str, streaming: bool) -> &mut TenantStats {
+        let e = self.tenants.entry(tenant.to_string()).or_default();
+        e.streaming = streaming;
+        e
+    }
+
+    /// Render the registry as a graft-bench-v1 document: one record per
+    /// (tenant, op) with samples, `bench = "graft-serve"`, and the tenant
+    /// + mode + progress counters packed into `shape` (records carry
+    /// exactly the six schema fields — `scripts/validate_bench.py`
+    /// rejects extras, which is the point: production telemetry passes
+    /// the same validator as bench output).
+    pub fn to_bench_json(&self) -> String {
+        let mut out = String::from("{\"schema\":\"graft-bench-v1\",\"records\":[");
+        let mut first = true;
+        for (name, t) in &self.tenants {
+            let mode = if t.streaming { "stream" } else { "batch" };
+            let shape = format!(
+                "tenant={name},mode={mode},windows={},rows={},faults={}",
+                t.windows, t.rows, t.faults
+            );
+            for (op, acc) in [
+                ("serve_select", &t.select),
+                ("serve_push", &t.push),
+                ("serve_snapshot", &t.snapshot),
+            ] {
+                if acc.count() == 0 {
+                    continue;
+                }
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!(
+                    "{{\"bench\":\"graft-serve\",\"op\":\"{op}\",\"shape\":\"{shape}\",\
+                     \"mean_ns\":{:.1},\"std_ns\":{:.1},\"min_ns\":{:.1}}}",
+                    acc.mean, acc.std(), acc.min
+                ));
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_names_are_vetted() {
+        assert!(valid_tenant_name("job-a.7_x"));
+        assert!(!valid_tenant_name(""));
+        assert!(!valid_tenant_name("has space"));
+        assert!(!valid_tenant_name("quote\""));
+        assert!(!valid_tenant_name(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn welford_matches_direct_moments() {
+        let xs = [5.0, 3.0, 8.0, 8.0, 1.0, 4.0];
+        let mut acc = LatAcc::default();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((acc.mean - mean).abs() < 1e-12);
+        assert!((acc.std() - var.sqrt()).abs() < 1e-12);
+        assert_eq!(acc.min, 1.0);
+        assert_eq!(acc.count(), xs.len() as u64);
+    }
+
+    #[test]
+    fn registry_emits_schema_rows() {
+        let mut reg = StatsRegistry::default();
+        {
+            let t = reg.entry("job-a", false);
+            t.select.push(1200.0);
+            t.select.push(900.0);
+            t.windows = 2;
+            t.rows = 64;
+        }
+        reg.entry("idle", true); // no samples → no records
+        let json = reg.to_bench_json();
+        assert!(json.starts_with("{\"schema\":\"graft-bench-v1\""));
+        assert!(json.contains("\"op\":\"serve_select\""));
+        assert!(json.contains("tenant=job-a,mode=batch,windows=2,rows=64,faults=0"));
+        assert!(!json.contains("idle"), "sample-free tenants emit no records");
+    }
+
+    #[test]
+    fn builder_mapping_validates_through_engine_builder() {
+        // A bad fraction is the builder's error, not the daemon's.
+        let cfg = TenantConfig { fraction: 0.0, ..TenantConfig::default() };
+        let err = Tenant::build("t", &cfg, None).unwrap_err();
+        assert!(err.contains("fraction"), "builder error names the field: {err}");
+        // Streaming without a budget is rejected the same way.
+        let cfg = TenantConfig { streaming: true, budget: 0, ..TenantConfig::default() };
+        assert!(Tenant::build("t", &cfg, None).is_err());
+        // A healthy config builds.
+        let cfg = TenantConfig { budget: 4, ..TenantConfig::default() };
+        assert!(Tenant::build("t", &cfg, None).is_ok());
+    }
+}

@@ -60,10 +60,19 @@ impl RunResult {
 }
 
 /// Simple moving-average loss tracker for stable logging.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct LossTracker {
     window: Vec<f64>,
     cap: usize,
+}
+
+/// A derived `Default` would set `cap = 0`, skipping the `cap.max(1)`
+/// clamp in [`LossTracker::new`] — the first `push` then hits
+/// `window.remove(0)` on an empty window and panics.  Delegate instead.
+impl Default for LossTracker {
+    fn default() -> Self {
+        LossTracker::new(1)
+    }
 }
 
 impl LossTracker {
@@ -98,6 +107,20 @@ mod tests {
             t.push(l);
         }
         assert!((t.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_loss_tracker_accepts_pushes() {
+        // Regression: the derived Default gave cap = 0, so the first push
+        // panicked on `window.remove(0)` of an empty window.
+        let mut t = LossTracker::default();
+        t.push(1.5);
+        t.push(2.5);
+        assert!((t.mean() - 2.5).abs() < 1e-12, "cap-1 window keeps the latest loss");
+        // new(0) keeps being clamped the same way.
+        let mut z = LossTracker::new(0);
+        z.push(7.0);
+        assert!((z.mean() - 7.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Selection-as-a-service loopback pins (PR 8):
+//!
+//! 1. **Served ≡ in-process** — K ≥ 3 concurrent tenants with mixed
+//!    configs (serial strict, pooled adaptive, streaming, sharded
+//!    FastMaxVol) receive selections bit-identical to in-process engines
+//!    built through the same [`graft::serve::engine_builder`] mapping,
+//!    under interleaved arrivals.
+//! 2. **Disconnect drains** — a client that dies mid-window loses nothing
+//!    it didn't ask for: the pending window is dropped whole (no partial
+//!    selection, no duplication), the tenant name frees, and a
+//!    reconnecting tenant starts bit-identically from scratch.
+//! 3. **Faults through the wire** — an injected worker panic under
+//!    `FaultPolicy::Retry` converges to the bit-identical selection
+//!    through the served path, and the drain telemetry counts the retry.
+//! 4. **Backpressure is typed** — over-admission gets `Busy`, a name
+//!    collision gets `Rejected(DuplicateTenant)`; neither kills the
+//!    daemon or another tenant's session.
+//! 5. **Stats speak graft-bench-v1** — the `Stats` reply carries
+//!    per-tenant rows the bench validator accepts.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use graft::coordinator::SelectWindow;
+use graft::faults::FaultPlan;
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::serve::protocol::{Msg, RejectCode, TenantConfig, WireFaultPolicy};
+use graft::serve::{engine_builder, Client, ClientError, ServeOptions, Server, ServerBuilder};
+
+// ---------------------------------------------------------------------------
+// Synthetic windows (mirrors tests/streaming.rs, owned so threads can move
+// them)
+// ---------------------------------------------------------------------------
+
+fn window(k: usize, seed: u64, base_id: usize) -> SelectWindow {
+    let (rc, e, classes) = (6usize, 8usize, 4usize);
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    SelectWindow {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (base_id..base_id + k).collect(),
+    }
+}
+
+fn windows_for(tenant: usize, count: usize, rows: usize) -> Vec<SelectWindow> {
+    (0..count)
+        .map(|w| window(rows, 0x7E57 ^ ((tenant as u64) << 16) ^ w as u64, w * rows))
+        .collect()
+}
+
+fn addr_of(server: &Server) -> String {
+    server.local_addr().expect("tcp server has a local addr").to_string()
+}
+
+/// Serve one tenant's windows through the wire; returns per-window winner
+/// indices (batch-local for batch tenants, global ids for snapshots).
+fn drive_served(
+    addr: &str,
+    name: &str,
+    cfg: &TenantConfig,
+    windows: &[SelectWindow],
+) -> Result<Vec<Vec<u64>>, ClientError> {
+    let mut client = Client::connect_tcp(addr)?;
+    client.hello(name, cfg)?;
+    let mut out = Vec::new();
+    for win in windows {
+        if cfg.streaming {
+            client.push_chunk(&win.view())?;
+            out.push(client.snapshot()?.indices);
+        } else {
+            out.push(client.select(&win.view())?.indices);
+        }
+    }
+    client.bye()?;
+    Ok(out)
+}
+
+/// The in-process reference for the same config + windows.
+fn drive_reference(cfg: &TenantConfig, windows: &[SelectWindow]) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    if cfg.streaming {
+        let mut eng = engine_builder(cfg).build_streaming().expect("reference stream engine");
+        for win in windows {
+            eng.push(&win.view()).expect("reference push");
+            let snap = eng.snapshot().expect("reference snapshot");
+            out.push(snap.indices.iter().map(|&i| i as u64).collect());
+        }
+    } else {
+        let mut eng = engine_builder(cfg).build().expect("reference batch engine");
+        for win in windows {
+            let sel = eng.select(&win.view()).expect("reference select");
+            out.push(sel.indices.iter().map(|&i| i as u64).collect());
+        }
+    }
+    out
+}
+
+/// Hello with retry: after a disconnect the server frees the tenant name
+/// on its next read tick, so a racing reconnect may briefly see
+/// `DuplicateTenant`.
+fn hello_until_free(addr: &str, name: &str, cfg: &TenantConfig) -> Client {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut client = Client::connect_tcp(addr).expect("connect");
+        match client.hello(name, cfg) {
+            Ok(_) => return client,
+            Err(ClientError::Rejected { code: RejectCode::DuplicateTenant, .. })
+                if Instant::now() < deadline =>
+            {
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => panic!("reconnect hello failed: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Concurrent mixed tenants, bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_mixed_tenants_are_bit_identical() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+
+    let profiles: Vec<TenantConfig> = vec![
+        // Serial, strict rank.
+        TenantConfig { budget: 8, seed: 101, ..TenantConfig::default() },
+        // Pooled + sharded, adaptive rank.
+        TenantConfig {
+            budget: 8,
+            seed: 202,
+            adaptive: true,
+            shards: 2,
+            workers: 2,
+            ..TenantConfig::default()
+        },
+        // Streaming reservoir.
+        TenantConfig { streaming: true, budget: 6, seed: 303, ..TenantConfig::default() },
+        // Sharded FastMaxVol (non-GRAFT method through the same wire).
+        TenantConfig {
+            method: "maxvol".into(),
+            budget: 8,
+            seed: 404,
+            shards: 2,
+            ..TenantConfig::default()
+        },
+    ];
+
+    let mut handles = Vec::new();
+    for (i, cfg) in profiles.iter().enumerate() {
+        let addr = addr.clone();
+        let cfg = cfg.clone();
+        let wins = windows_for(i, 3, 48);
+        let (tcfg, twins) = (cfg.clone(), wins.clone());
+        let handle =
+            thread::spawn(move || drive_served(&addr, &format!("tenant-{i}"), &tcfg, &twins));
+        handles.push((i, cfg, wins, handle));
+    }
+    for (i, cfg, wins, handle) in handles {
+        let served = handle.join().expect("client thread").expect("served path");
+        let reference = drive_reference(&cfg, &wins);
+        assert_eq!(served, reference, "tenant-{i}: served selections must be bit-identical");
+        assert_eq!(served.len(), 3, "tenant-{i}: one selection per window");
+        for sel in &served {
+            assert!(!sel.is_empty(), "tenant-{i}: selections are non-empty");
+        }
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 2. Disconnect mid-window: drained, name freed, no loss/duplication
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disconnect_mid_window_drains_and_frees_the_name() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+    let cfg = TenantConfig { budget: 8, seed: 7, ..TenantConfig::default() };
+    let wins = windows_for(0, 2, 48);
+
+    // Die mid-window: the batch is submitted but never selected.
+    {
+        let mut client = Client::connect_tcp(&addr).expect("connect");
+        client.hello("flaky", &cfg).expect("hello");
+        let accepted = client.submit_batch(&wins[0].view()).expect("submit");
+        assert_eq!(accepted, 48);
+        // Drop without Bye — simulates a client crash mid-window.
+    }
+
+    // The name frees once the server reaps the dead session; the
+    // reconnected tenant gets a FRESH engine: its selections must be
+    // bit-identical to a fresh in-process reference, proving the dead
+    // session's pending window was dropped whole (no leftover rows, no
+    // replays) and nothing was partially selected on its behalf.
+    let mut client = hello_until_free(&addr, "flaky", &cfg);
+    let mut served = Vec::new();
+    for win in &wins {
+        served.push(client.select(&win.view()).expect("post-reconnect select").indices);
+    }
+    let drained = client.drain().expect("drain");
+    assert_eq!(drained.windows, 2, "only the reconnected session's selects count");
+    assert_eq!(drained.rows, 96, "only the reconnected session's rows count");
+    client.bye().expect("bye");
+
+    assert_eq!(served, drive_reference(&cfg, &wins), "reconnect restarts bit-identically");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Injected worker panic under Retry, served path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_worker_panic_under_retry_is_bit_identical_through_server() {
+    let mut server = ServerBuilder::new()
+        .fault_injector(FaultPlan::new().panic_shard(1, 1).arc())
+        .bind_tcp("127.0.0.1:0")
+        .expect("bind");
+    let addr = addr_of(&server);
+    let cfg = TenantConfig {
+        budget: 8,
+        seed: 55,
+        shards: 2,
+        workers: 2,
+        fault: WireFaultPolicy::Retry { max: 2, backoff_ms: 1 },
+        ..TenantConfig::default()
+    };
+    let wins = windows_for(3, 2, 48);
+
+    let mut client = Client::connect_tcp(&addr).expect("connect");
+    client.hello("faulted", &cfg).expect("hello");
+    let mut served = Vec::new();
+    for win in &wins {
+        served.push(client.select(&win.view()).expect("retry absorbs the panic").indices);
+    }
+    let drained = client.drain().expect("drain");
+    client.bye().expect("bye");
+
+    // The reference runs with NO injector: a successful retry must erase
+    // the fault from the output entirely.
+    assert_eq!(served, drive_reference(&cfg, &wins), "retry recovery must be bit-identical");
+    assert!(drained.retries >= 1, "the retry must show up in drain telemetry");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Typed backpressure: Busy and DuplicateTenant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_overflow_is_busy_and_name_collision_is_rejected() {
+    let opts = ServeOptions { max_sessions: 1, ..ServeOptions::default() };
+    let mut server = ServerBuilder::new().options(opts).bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+    let cfg = TenantConfig { budget: 4, seed: 1, ..TenantConfig::default() };
+
+    let mut first = Client::connect_tcp(&addr).expect("connect");
+    first.hello("solo", &cfg).expect("hello");
+
+    // Second connection: over the admission bound, refused with an
+    // unprompted Busy frame at accept — it never needs to speak (and a
+    // raw read avoids racing the server's close against a write).
+    let mut second = TcpStream::connect(&addr).expect("tcp connect still succeeds");
+    second.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    let mut prefix = [0u8; 4];
+    second.read_exact(&mut prefix).expect("busy prefix");
+    let mut body = vec![0u8; u32::from_le_bytes(prefix) as usize];
+    second.read_exact(&mut body).expect("busy body");
+    match Msg::decode(&body) {
+        Ok(Msg::Busy { active, max }) => assert_eq!((active, max), (1, 1)),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+
+    // The admitted tenant is unharmed and still serves bit-identically.
+    let wins = windows_for(9, 1, 32);
+    let sel = first.select(&wins[0].view()).expect("survivor selects").indices;
+    assert_eq!(vec![sel], drive_reference(&cfg, &wins));
+    first.bye().expect("bye");
+
+    // Name collisions on a server with room are a typed rejection that
+    // leaves the holder's session working.
+    let opts = ServeOptions { max_sessions: 4, ..ServeOptions::default() };
+    let mut server2 = ServerBuilder::new().options(opts).bind_tcp("127.0.0.1:0").expect("bind");
+    let addr2 = addr_of(&server2);
+    let mut holder = Client::connect_tcp(&addr2).expect("connect");
+    holder.hello("claimed", &cfg).expect("hello");
+    let mut rival = Client::connect_tcp(&addr2).expect("connect");
+    match rival.hello("claimed", &cfg) {
+        Err(ClientError::Rejected { code, .. }) => assert_eq!(code, RejectCode::DuplicateTenant),
+        other => panic!("expected Rejected(DuplicateTenant), got {other:?}"),
+    }
+    let sel = holder.select(&wins[0].view()).expect("holder unaffected").indices;
+    assert_eq!(vec![sel], drive_reference(&cfg, &wins));
+    holder.bye().expect("bye");
+
+    server.shutdown();
+    server2.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Stats rows in graft-bench-v1 shape
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stats_reply_carries_bench_schema_rows() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+
+    let batch_cfg = TenantConfig { budget: 8, seed: 21, ..TenantConfig::default() };
+    let stream_cfg =
+        TenantConfig { streaming: true, budget: 6, seed: 22, ..TenantConfig::default() };
+    drive_served(&addr, "bt", &batch_cfg, &windows_for(0, 2, 48)).expect("batch tenant");
+    drive_served(&addr, "st", &stream_cfg, &windows_for(1, 2, 48)).expect("stream tenant");
+
+    // Stats needs no Hello: it's the monitoring path.
+    let mut monitor = Client::connect_tcp(&addr).expect("connect");
+    let json = monitor.stats().expect("stats");
+    monitor.bye().expect("bye");
+    server.shutdown();
+
+    assert!(json.contains("\"bench\":\"graft-serve\""), "bench tag present: {json}");
+    assert!(json.contains("\"op\":\"serve_select\""), "batch rows present: {json}");
+    assert!(json.contains("\"op\":\"serve_push\""), "push rows present: {json}");
+    assert!(json.contains("\"op\":\"serve_snapshot\""), "snapshot rows present: {json}");
+    assert!(json.contains("tenant=bt,mode=batch,windows=2,rows=96"), "batch shape: {json}");
+    assert!(json.contains("tenant=st,mode=stream,windows=2,rows=96"), "stream shape: {json}");
+    // Every record carries exactly the graft-bench-v1 numeric fields.
+    for key in ["\"mean_ns\":", "\"std_ns\":", "\"min_ns\":"] {
+        assert!(json.contains(key), "{key} present: {json}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Wire-protocol robustness against a LIVE daemon (PR 8, satellite 3).
+//! The in-module protocol tests pin the codec on byte slices; these pin
+//! the server loop: malformed frames, oversized length prefixes, unknown
+//! versions, and mid-frame disconnects must produce typed `Fault`
+//! replies (or a clean close) — never a panic, a hang, or interference
+//! with another tenant's session.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use graft::coordinator::SelectWindow;
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::serve::protocol::{FaultKind, Msg, TenantConfig, PROTOCOL_VERSION};
+use graft::serve::{engine_builder, Client, Server, ServerBuilder};
+
+// ---------------------------------------------------------------------------
+// Raw-socket helpers (deliberately NOT the Client, so we can speak wrong)
+// ---------------------------------------------------------------------------
+
+fn raw_connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("raw connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    s.set_nodelay(true).ok();
+    s
+}
+
+/// Read one length-prefixed frame payload, or None on clean EOF.
+fn read_frame_raw(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match s.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return None,
+            Ok(0) => panic!("EOF inside a length prefix"),
+            Ok(n) => got += n,
+            Err(e) => panic!("reading reply prefix: {e}"),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).expect("reply body");
+    Some(buf)
+}
+
+/// The reply a hostile frame must earn: a decodable `Fault { Protocol }`
+/// followed by EOF (the server hangs up on protocol violations).
+fn expect_protocol_fault_then_close(s: &mut TcpStream, what: &str) {
+    let payload = read_frame_raw(s).unwrap_or_else(|| panic!("{what}: no Fault before close"));
+    match Msg::decode(&payload) {
+        Ok(Msg::Fault { kind: FaultKind::Protocol, detail }) => {
+            assert!(!detail.is_empty(), "{what}: fault detail is populated");
+        }
+        other => panic!("{what}: expected Fault(Protocol), got {other:?}"),
+    }
+    assert!(read_frame_raw(s).is_none(), "{what}: connection closes after the fault");
+}
+
+fn window(k: usize, seed: u64) -> SelectWindow {
+    let (rc, e, classes) = (6usize, 8usize, 4usize);
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    SelectWindow {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+fn addr_of(server: &Server) -> String {
+    server.local_addr().expect("tcp addr").to_string()
+}
+
+/// Wait for the server to reap dead sessions (read-tick granularity).
+fn wait_for_sessions(server: &Server, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.active_sessions() != want {
+        assert!(Instant::now() < deadline, "sessions never settled to {want}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile frames get typed faults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_length_prefix_is_refused_before_the_body() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let mut s = raw_connect(&addr_of(&server));
+    // Claim a frame far over the cap; send no body at all.  The refusal
+    // must come from the prefix check, not from buffering 64 MiB.
+    s.write_all(&(64u32 << 20).to_le_bytes()).expect("write prefix");
+    expect_protocol_fault_then_close(&mut s, "oversized prefix");
+    server.shutdown();
+}
+
+#[test]
+fn garbage_unknown_version_and_empty_frames_get_typed_faults() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+
+    // (a) Unknown protocol version.
+    let mut s = raw_connect(&addr);
+    s.write_all(&2u32.to_le_bytes()).expect("prefix");
+    s.write_all(&[PROTOCOL_VERSION + 1, 1]).expect("body");
+    expect_protocol_fault_then_close(&mut s, "unknown version");
+
+    // (b) Unknown message type on a valid version.
+    let mut s = raw_connect(&addr);
+    s.write_all(&2u32.to_le_bytes()).expect("prefix");
+    s.write_all(&[PROTOCOL_VERSION, 250]).expect("body");
+    expect_protocol_fault_then_close(&mut s, "unknown type");
+
+    // (c) Zero-length frame: no version byte to trust.
+    let mut s = raw_connect(&addr);
+    s.write_all(&0u32.to_le_bytes()).expect("prefix");
+    expect_protocol_fault_then_close(&mut s, "empty frame");
+
+    // (d) Declared counts that overrun the payload (a Hello whose tenant
+    // length claims bytes that never arrive).
+    let mut s = raw_connect(&addr);
+    let body = [PROTOCOL_VERSION, 1, 255, 255, 255, 255];
+    s.write_all(&(body.len() as u32).to_le_bytes()).expect("prefix");
+    s.write_all(&body).expect("body");
+    expect_protocol_fault_then_close(&mut s, "hostile count");
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Mid-frame disconnects and hostile peers never corrupt other tenants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_frame_disconnect_leaves_the_server_healthy() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+
+    // Die halfway through a declared frame.
+    {
+        let mut s = raw_connect(&addr);
+        s.write_all(&1000u32.to_le_bytes()).expect("prefix");
+        s.write_all(&[PROTOCOL_VERSION; 10]).expect("partial body");
+    }
+    wait_for_sessions(&server, 0);
+
+    // The daemon is intact: a well-behaved tenant gets a bit-identical
+    // selection afterwards.
+    let cfg = TenantConfig { budget: 8, seed: 31, ..TenantConfig::default() };
+    let win = window(48, 0xBEEF);
+    let mut client = Client::connect_tcp(&addr).expect("connect");
+    client.hello("healthy", &cfg).expect("hello");
+    let served = client.select(&win.view()).expect("select").indices;
+    client.bye().expect("bye");
+
+    let mut reference = engine_builder(&cfg).build().expect("reference engine");
+    let sel = reference.select(&win.view()).expect("reference select");
+    let want: Vec<u64> = sel.indices.iter().map(|&i| i as u64).collect();
+    assert_eq!(served, want, "post-disconnect selections are bit-identical");
+    server.shutdown();
+}
+
+#[test]
+fn hostile_peer_mid_stream_does_not_perturb_a_live_tenant() {
+    let mut server = ServerBuilder::new().bind_tcp("127.0.0.1:0").expect("bind");
+    let addr = addr_of(&server);
+    let cfg = TenantConfig { budget: 8, seed: 77, ..TenantConfig::default() };
+    let wins = [window(48, 1), window(48, 2)];
+
+    let mut client = Client::connect_tcp(&addr).expect("connect");
+    client.hello("steady", &cfg).expect("hello");
+    let first = client.select(&wins[0].view()).expect("first select").indices;
+
+    // Between the tenant's windows: a hostile connection sprays garbage
+    // and a second one dies mid-frame.
+    let mut hostile = raw_connect(&addr);
+    hostile.write_all(&3u32.to_le_bytes()).expect("prefix");
+    hostile.write_all(&[0xFF, 0xFF, 0xFF]).expect("garbage");
+    expect_protocol_fault_then_close(&mut hostile, "garbage spray");
+    {
+        let mut dying = raw_connect(&addr);
+        dying.write_all(&500u32.to_le_bytes()).expect("prefix");
+    }
+
+    let second = client.select(&wins[1].view()).expect("second select").indices;
+    client.bye().expect("bye");
+    server.shutdown();
+
+    // Reference: both windows through ONE engine — the tenant's state
+    // must have advanced exactly as if the hostiles never existed.
+    let mut eng = engine_builder(&cfg).build().expect("reference engine");
+    for (served, win) in [(&first, &wins[0]), (&second, &wins[1])] {
+        let want: Vec<u64> =
+            eng.select(&win.view()).expect("reference").indices.iter().map(|&i| i as u64).collect();
+        assert_eq!(served, &want, "tenant unaffected by hostile peers");
+    }
+}

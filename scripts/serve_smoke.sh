@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# End-to-end smoke of the selection-as-a-service daemon (CI's serve-smoke
+# job): start `graft serve` on an OS-assigned port, drive a mixed
+# multi-tenant client fleet against it with `graft serve-smoke` (which
+# fails unless every served selection is bit-identical to an in-process
+# engine), then validate the daemon's Stats telemetry as strict
+# graft-bench-v1 — a placeholder or malformed stats file fails the job.
+#
+# Usage: scripts/serve_smoke.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN="${GRAFT_BIN:-target/release/graft}"
+if [[ ! -x "$BIN" ]]; then
+  echo "== building release binary =="
+  cargo build --release
+fi
+
+WORK="$(mktemp -d)"
+ADDR_FILE="$WORK/addr"
+STATS="$WORK/serve_stats.json"
+SERVER_PID=""
+
+cleanup() {
+  if [[ -n "$SERVER_PID" ]] && kill -0 "$SERVER_PID" 2>/dev/null; then
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+  fi
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== starting graft serve (port 0, addr via $ADDR_FILE) =="
+"$BIN" serve --addr 127.0.0.1:0 --addr-file "$ADDR_FILE" &
+SERVER_PID=$!
+
+# The daemon writes the bound address (newline-terminated) once it is
+# accepting — poll for it rather than sleeping a fixed amount.
+for _ in $(seq 1 100); do
+  [[ -s "$ADDR_FILE" ]] && break
+  if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "FAIL: daemon exited before publishing its address" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+ADDR="$(head -n1 "$ADDR_FILE")"
+if [[ -z "$ADDR" ]]; then
+  echo "FAIL: daemon never published its address" >&2
+  exit 1
+fi
+echo "daemon listening on $ADDR (pid $SERVER_PID)"
+
+echo "== driving the multi-tenant smoke fleet =="
+"$BIN" serve-smoke --addr "$ADDR" --tenants 4 --windows 3 --stats-out "$STATS"
+
+echo "== validating served telemetry (strict graft-bench-v1) =="
+python3 scripts/validate_bench.py --strict \
+  --require serve_select --require serve_push --require serve_snapshot \
+  "$STATS"
+
+echo "serve smoke passed"

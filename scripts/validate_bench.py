@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Validate a graft-bench-v1 JSON file (emitted by benches/bench_util.rs).
 
-Usage: scripts/validate_bench.py [--allow-empty] [--require OP ...] FILE [FILE ...]
+Usage: scripts/validate_bench.py [--allow-empty] [--strict] [--require OP ...] FILE [FILE ...]
 
 Checks, per file:
   * top-level object with "schema": "graft-bench-v1" and a "records" list
@@ -17,7 +17,9 @@ Checks, per file:
 A file whose top-level "note" marks it as a placeholder (the string
 "placeholder", any case) gets a non-fatal WARNING on stderr, so a
 committed BENCH_*.json that was never populated with real rows is
-visible in CI logs without failing the build.
+visible in CI logs without failing the build.  Under --strict the
+warning is promoted to an error: jobs that validate freshly-produced
+telemetry (the serve-smoke job) must never accept a placeholder.
 
 Exit status 0 when every file passes, 1 otherwise.  Stdlib only.
 """
@@ -96,12 +98,15 @@ def placeholder_note(path):
 
 def main(argv):
     allow_empty = False
+    strict = False
     require = []
     args = []
     it = iter(argv)
     for a in it:
         if a == "--allow-empty":
             allow_empty = True
+        elif a == "--strict":
+            strict = True
         elif a == "--require":
             op = next(it, None)
             if op is None:
@@ -116,9 +121,12 @@ def main(argv):
     failed = False
     for path in args:
         note = placeholder_note(path)
-        if note is not None:
-            print(f"WARNING {path}: placeholder bench file ({note})", file=sys.stderr)
         errs = validate(path, allow_empty, require)
+        if note is not None:
+            if strict:
+                errs.append(f"placeholder bench file under --strict ({note})")
+            else:
+                print(f"WARNING {path}: placeholder bench file ({note})", file=sys.stderr)
         if errs:
             failed = True
             print(f"FAIL {path}")
