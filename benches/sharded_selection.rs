@@ -213,6 +213,43 @@ fn main() {
         );
     }
 
+    // Adaptive-only carry rows (PR 9): strict grad-merge engines install
+    // no rank authority, so zero gradient-sketch bytes cross the
+    // shard→merge boundary and the post-merge fused-MGS telemetry pass
+    // disappears.  Priced against the legacy carry wiring (the
+    // select_sharded_gradmerge rows above) with the bit-identity and the
+    // zero-carry claim asserted inline.
+    for shards in [2usize, 4, 8] {
+        let mut eng = EngineBuilder::new()
+            .method("graft")
+            .budget(r)
+            .epsilon(0.05)
+            .exec(ExecShape::Sharded { shards })
+            .build()
+            .expect("valid engine config");
+        let t = time_it(warm, reps, || {
+            let sel = eng.select(&view).expect("healthy selection");
+            bench_util::black_box(sel.indices.len());
+        });
+        report(&format!("strict no-carry select (shards={shards}, graft)"), t.0, t.1, t.2);
+        sink.record("select_strict_nocarry", &format!("{shape},shards={shards}"), t);
+        assert_eq!(
+            eng.carried_sketch_bytes(),
+            0,
+            "strict engine carried sketches at shards={shards}"
+        );
+        let mut legacy = ShardedSelector::from_factory(shards, MergePolicy::Grad, |_| {
+            Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+        })
+        .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05))));
+        legacy.select_into(&view, r, &mut ws, &mut out);
+        assert_eq!(
+            eng.select(&view).expect("healthy selection").indices,
+            &out[..],
+            "no-carry≡legacy-carry bit-identity broke at shards={shards}"
+        );
+    }
+
     // Fault-path rows (fault-tolerance PR): the pooled facade priced under
     // each fault policy.  Two zero-fault rows pin that the retry machinery
     // costs nothing when healthy — and, asserted inline, that a zero-fault

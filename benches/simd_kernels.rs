@@ -1,0 +1,84 @@
+//! SIMD kernel bench (PR 9): the portable 4-lane f64 microkernels behind
+//! `Mat::matmul` / `Mat::gram` and the fused MGS prefix-error kernel
+//! (`prefix_projection_errors`), priced at hot-path shapes so regressions
+//! in the lane kernels — or in the thresholds routing around them — show
+//! up as row-level diffs in `scripts/bench_compare.py`.  Parity with the
+//! `*_naive` ground truth is asserted inline per shape, so a kernel that
+//! silently drifts fails the bench (and the CI smoke run) rather than
+//! polluting the JSON.
+//!
+//! Run: `cargo bench --bench simd_kernels` (or `scripts/bench.sh`).
+//! `GRAFT_BENCH_SMOKE=1` shrinks shapes/reps to CI-smoke sizes.
+
+mod bench_util;
+
+use bench_util::{report, smoke_mode, time_it, JsonSink};
+use graft::graft::prefix_projection_errors;
+use graft::linalg::Mat;
+use graft::rng::Rng;
+
+fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut sink = JsonSink::new("simd_kernels");
+    let (warm, reps) = if smoke_mode() { (1, 3) } else { (2, 10) };
+    println!("== SIMD lane kernels ==\n");
+
+    // -- matmul: square, tall-skinny, and panel shapes --------------------
+    let mm_shapes: &[(usize, usize, usize)] = if smoke_mode() {
+        &[(64, 64, 64), (128, 96, 32)]
+    } else {
+        &[(256, 256, 256), (512, 384, 128), (2048, 64, 64)]
+    };
+    for &(m, k, n) in mm_shapes {
+        let a = randmat(m, k, 31);
+        let b = randmat(k, n, 32);
+        assert!(
+            a.matmul(&b).sub(&a.matmul_naive(&b)).max_abs() < 1e-12,
+            "matmul≡naive parity broke at {m}x{k}x{n}"
+        );
+        let t = time_it(warm, reps, || {
+            bench_util::black_box(a.matmul(&b).max_abs());
+        });
+        report(&format!("matmul (M={m}, K={k}, N={n})"), t.0, t.1, t.2);
+        sink.record("matmul_simd", &format!("M={m},K={k},N={n}"), t);
+    }
+
+    // -- gram: the symmetric half-work kernel -----------------------------
+    let gram_shapes: &[(usize, usize)] =
+        if smoke_mode() { &[(256, 32), (128, 96)] } else { &[(4096, 64), (1024, 256)] };
+    for &(m, n) in gram_shapes {
+        let a = randmat(m, n, 33);
+        assert!(
+            a.gram().sub(&a.gram_naive()).max_abs() < 1e-9,
+            "gram≡naive parity broke at {m}x{n}"
+        );
+        let t = time_it(warm, reps, || {
+            bench_util::black_box(a.gram().max_abs());
+        });
+        report(&format!("gram (M={m}, N={n})"), t.0, t.1, t.2);
+        sink.record("gram_simd", &format!("M={m},N={n}"), t);
+    }
+
+    // -- fused MGS prefix errors: the rank-decision kernel ----------------
+    let mgs_shapes: &[(usize, usize)] =
+        if smoke_mode() { &[(32, 16), (64, 24)] } else { &[(64, 48), (256, 96)] };
+    for &(e, r) in mgs_shapes {
+        let gsel = randmat(e, r, 34);
+        let mut rng = Rng::new(35);
+        let gbar: Vec<f64> = (0..e).map(|_| rng.normal()).collect();
+        let t = time_it(warm, reps, || {
+            bench_util::black_box(prefix_projection_errors(&gsel, &gbar).len());
+        });
+        report(&format!("mgs prefix errors (E={e}, R={r})"), t.0, t.1, t.2);
+        sink.record("mgs_simd", &format!("E={e},R={r}"), t);
+    }
+
+    match sink.write() {
+        Ok(path) => println!("\nbench JSON → {}", path.display()),
+        Err(e) => eprintln!("\nWARN could not write bench JSON: {e}"),
+    }
+}

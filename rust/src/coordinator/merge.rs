@@ -80,6 +80,150 @@ impl MergePolicy {
     }
 }
 
+/// Storage for the gradient-sketch columns that cross the shard → merge
+/// boundary.  `F64` is the default and keeps the carried sketches
+/// bit-identical to the rows they were read from; `F32` halves the
+/// boundary's bandwidth and resident memory (pool messages, streaming
+/// reservoir) at the cost of one rounding per element.  The merged pivot
+/// *order* is computed on f64 features and never touches this buffer, so
+/// narrowing can only move the adaptive rank cut — never reorder winners.
+///
+/// The global ḡ partial sums stay f64 regardless ([`ShardGrads::gsum`]):
+/// they are O(E) per shard, so narrowing them saves nothing, and they sum
+/// over the whole range, where f32 accumulation error would compound.
+#[derive(Debug, Clone)]
+pub enum SketchBuf {
+    /// Full-precision sketches (default): bitwise the source rows.
+    F64(Vec<f64>),
+    /// Narrowed sketches: half the boundary bytes, one rounding per value.
+    F32(Vec<f32>),
+}
+
+impl Default for SketchBuf {
+    fn default() -> Self {
+        SketchBuf::F64(Vec::new())
+    }
+}
+
+impl SketchBuf {
+    /// Empty buffer of the requested precision.
+    pub fn new(f32_mode: bool) -> SketchBuf {
+        if f32_mode {
+            SketchBuf::F32(Vec::new())
+        } else {
+            SketchBuf::F64(Vec::new())
+        }
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self, SketchBuf::F32(_))
+    }
+
+    /// Normalise the variant (used when recycled buffers of unknown
+    /// provenance re-enter a pool that runs in one fixed mode).  Switching
+    /// variants drops the old storage; staying put keeps capacity.
+    pub fn set_f32(&mut self, f32_mode: bool) {
+        if self.is_f32() != f32_mode {
+            *self = SketchBuf::new(f32_mode);
+        }
+    }
+
+    /// Element count (not bytes) — rows·E once filled.
+    pub fn len(&self) -> usize {
+        match self {
+            SketchBuf::F64(v) => v.len(),
+            SketchBuf::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clear contents, keeping both the variant and the capacity.
+    pub fn clear(&mut self) {
+        match self {
+            SketchBuf::F64(v) => v.clear(),
+            SketchBuf::F32(v) => v.clear(),
+        }
+    }
+
+    /// Append one sketch row, narrowing if this is an `F32` buffer.
+    pub fn push_row(&mut self, row: &[f64]) {
+        match self {
+            SketchBuf::F64(v) => v.extend_from_slice(row),
+            SketchBuf::F32(v) => v.extend(row.iter().map(|&x| x as f32)),
+        }
+    }
+
+    /// Gather `e` elements starting at `at` into `dst`, widening to f64.
+    /// This is the only read the merge performs; an `F64` buffer gathers
+    /// bit-identically, an `F32` one pays exactly one rounding per value
+    /// (the widening itself is exact).
+    pub fn gather_into(&self, at: usize, e: usize, dst: &mut Vec<f64>) {
+        match self {
+            SketchBuf::F64(v) => dst.extend_from_slice(&v[at..at + e]),
+            SketchBuf::F32(v) => dst.extend(v[at..at + e].iter().map(|&x| x as f64)),
+        }
+    }
+
+    /// Overwrite `row.len()` elements starting at `at` (narrowing for
+    /// `F32`) — the streaming reservoir's in-place slot overwrite.
+    pub fn write_at(&mut self, at: usize, row: &[f64]) {
+        match self {
+            SketchBuf::F64(v) => v[at..at + row.len()].copy_from_slice(row),
+            SketchBuf::F32(v) => {
+                for (d, &x) in v[at..at + row.len()].iter_mut().zip(row) {
+                    *d = x as f32;
+                }
+            }
+        }
+    }
+
+    /// Copy `e` elements from offset `src` to offset `dst` within the
+    /// buffer (no precision change) — the reservoir's evict-and-backfill
+    /// move.
+    pub fn copy_row_within(&mut self, src: usize, dst: usize, e: usize) {
+        match self {
+            SketchBuf::F64(v) => v.copy_within(src..src + e, dst),
+            SketchBuf::F32(v) => v.copy_within(src..src + e, dst),
+        }
+    }
+
+    /// Truncate to `len` elements (keeps variant and capacity).
+    pub fn truncate(&mut self, len: usize) {
+        match self {
+            SketchBuf::F64(v) => v.truncate(len),
+            SketchBuf::F32(v) => v.truncate(len),
+        }
+    }
+
+    /// Payload bytes currently held (len · element width) — what actually
+    /// crosses the boundary; pinned by the allocation-counting tests.
+    pub fn bytes(&self) -> usize {
+        match self {
+            SketchBuf::F64(v) => v.len() * std::mem::size_of::<f64>(),
+            SketchBuf::F32(v) => v.len() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Bytes reserved by the backing allocation (capacity · width).
+    pub fn capacity_bytes(&self) -> usize {
+        match self {
+            SketchBuf::F64(v) => v.capacity() * std::mem::size_of::<f64>(),
+            SketchBuf::F32(v) => v.capacity() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Reserve room for `additional` more elements.
+    pub fn reserve(&mut self, additional: usize) {
+        match self {
+            SketchBuf::F64(v) => v.reserve(additional),
+            SketchBuf::F32(v) => v.reserve(additional),
+        }
+    }
+}
+
 /// Per-shard gradient context crossing the shard → merge boundary: the
 /// winner rows' gradient-sketch columns and the shard's partial ḡ sum.
 /// This is everything the gradient-aware merge needs — a merge node never
@@ -90,14 +234,24 @@ impl MergePolicy {
 /// buffers are recycled across refreshes (steady state allocation-free).
 #[derive(Default)]
 pub struct ShardGrads {
-    /// Winner gradient rows, `|won|·E`, row `j` = winner `j`'s sketch —
-    /// aligned with the shard's winner list.
-    pub cols: Vec<f64>,
+    /// Winner gradient rows, `|won|·E` elements, row `j` = winner `j`'s
+    /// sketch — aligned with the shard's winner list.  f64 by default;
+    /// f32 when the coordinator opted into narrowed sketches.
+    pub cols: SketchBuf,
     /// Partial ḡ·count sum over **all** rows of the shard's range (not
-    /// just winners), length E.
+    /// just winners), length E.  Always f64: O(E) per shard, and the
+    /// count-weighted global mean must not compound narrowing error.
     pub gsum: Vec<f64>,
     /// Row count of the shard's range.
     pub count: usize,
+}
+
+impl ShardGrads {
+    /// Payload bytes of the carried sketch columns (excludes `gsum`,
+    /// which exists whether or not sketches are carried).
+    pub fn sketch_bytes(&self) -> usize {
+        self.cols.bytes()
+    }
 }
 
 /// Borrowed context for one gradient-aware merge: the per-shard
@@ -302,7 +456,7 @@ where
             .expect("merged winner must come from a shard winner list");
         let (_, s, j) = scratch.gmap[li];
         let at = j as usize * e;
-        scratch.gcols.extend_from_slice(&ctx.grads[s as usize].cols[at..at + e]);
+        ctx.grads[s as usize].cols.gather_into(at, e, &mut scratch.gcols);
     }
     let rmax = out.len();
     prefix_errors_core(&mut scratch.gcols, e, rmax, &scratch.gbar, &mut ws.pe_ghat, &mut ws.pe_err);
@@ -508,7 +662,7 @@ mod tests {
             .map(|(w, r)| {
                 let mut g = ShardGrads::default();
                 for &id in w {
-                    g.cols.extend_from_slice(view.grads.row(id));
+                    g.cols.push_row(view.grads.row(id));
                 }
                 crate::graft::geometry::grad_sum_into(view.grads, r.clone(), &mut g.gsum);
                 g.count = r.len();
@@ -625,6 +779,85 @@ mod tests {
             assert_eq!(h, f, "keep={keep}");
             assert_eq!(dh, df, "keep={keep}");
         }
+    }
+
+    #[test]
+    fn sketch_buf_f64_gather_is_bitwise_and_f32_rounds_once() {
+        let row = [1.0f64, -2.5, 3.141592653589793, 1e-30, 7.0e7];
+        let mut b64 = SketchBuf::default();
+        b64.push_row(&row);
+        let mut got = Vec::new();
+        b64.gather_into(0, row.len(), &mut got);
+        assert_eq!(got, row, "f64 buffer must round-trip bitwise");
+        assert_eq!(b64.bytes(), row.len() * 8);
+
+        let mut b32 = SketchBuf::new(true);
+        b32.push_row(&row);
+        assert_eq!(b32.len(), row.len());
+        assert_eq!(b32.bytes(), row.len() * 4, "narrowed payload is half the bytes");
+        got.clear();
+        b32.gather_into(0, row.len(), &mut got);
+        for (g, w) in got.iter().zip(&row) {
+            assert_eq!(*g, *w as f32 as f64, "exactly one narrowing per element");
+        }
+    }
+
+    #[test]
+    fn sketch_buf_set_f32_normalises_variant_and_clear_keeps_it() {
+        let mut b = SketchBuf::default();
+        assert!(!b.is_f32());
+        b.push_row(&[1.0, 2.0]);
+        b.set_f32(true);
+        assert!(b.is_f32());
+        assert!(b.is_empty(), "variant switch drops stale contents");
+        b.push_row(&[3.0]);
+        b.set_f32(true); // no-op: same variant keeps contents
+        assert_eq!(b.len(), 1);
+        b.clear();
+        assert!(b.is_f32(), "clear keeps the variant");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn grad_merge_f32_sketches_match_f64_rank_on_planted_low_rank() {
+        // Same planted 2-D gradient subspace as the adaptive truncation
+        // pin: the error curve collapses to ~1e-15 after two pivots, far
+        // below both ε and f32 rounding noise (~1e-7), so the narrowed
+        // boundary must produce the identical decision and subset.
+        let mut rng = crate::rng::Rng::new(919);
+        let (k, e, keep) = (32usize, 10usize, 8usize);
+        let loadings = Mat::from_fn(k, 2, |_, _| rng.normal());
+        let basis = Mat::from_fn(2, e, |_, _| rng.normal());
+        let grads = loadings.matmul(&basis);
+        let mut owned = random_view(k, 6, e, 4, 921);
+        owned.grads = grads;
+        let lists = vec![(0..16).collect::<Vec<_>>(), (16..32).collect()];
+        let ranges = [0..16usize, 16..32];
+        let sg64 = shard_grads(&owned.view(), &lists, &ranges);
+        let sg32: Vec<ShardGrads> = sg64
+            .iter()
+            .map(|g| {
+                let mut n = ShardGrads {
+                    cols: SketchBuf::new(true),
+                    gsum: g.gsum.clone(),
+                    count: g.count,
+                };
+                let mut wide = Vec::new();
+                g.cols.gather_into(0, g.cols.len(), &mut wide);
+                n.cols.push_row(&wide);
+                n
+            })
+            .collect();
+        let mut a64 = GraftSelector::new(BudgetedRankPolicy::adaptive(0.05, 1.0));
+        let mut a32 = GraftSelector::new(BudgetedRankPolicy::adaptive(0.05, 1.0));
+        let (o64, d64) =
+            grad_merge(&owned.view(), &lists, &sg64, keep, MergePolicy::Grad, Some(&mut a64));
+        let (o32, d32) =
+            grad_merge(&owned.view(), &lists, &sg32, keep, MergePolicy::Grad, Some(&mut a32));
+        let (d64, d32) = (d64.unwrap(), d32.unwrap());
+        assert_eq!(d64.rank, d32.rank, "planted low-rank: narrowing cannot move the cut");
+        assert_eq!(o64, o32, "identical rank → identical subset (order is f64-only)");
+        assert!((d64.error - d32.error).abs() < 1e-6, "{} vs {}", d64.error, d32.error);
     }
 
     #[test]

@@ -55,7 +55,7 @@ pub mod state;
 pub(crate) mod stream;
 
 pub use fault::{Degradation, FaultPolicy, PoolStats, SelectError, WindowsError};
-pub use merge::{merge_winners, merge_winners_grad, MergeCtx, MergePolicy, ShardGrads};
+pub use merge::{merge_winners, merge_winners_grad, MergeCtx, MergePolicy, ShardGrads, SketchBuf};
 pub use pipeline::{BatchProducer, FanOutProducer, PreparedBatch};
 pub use pool::{run_windows, PooledSelector, SelectWindow};
 pub use scheduler::RefreshScheduler;

@@ -238,6 +238,11 @@ pub struct SelectionPool {
     /// Per-job deadline before worker health is probed.
     deadline: Duration,
     stats: PoolStats,
+    /// Carry gradient sketches across the worker → merge channel as f32
+    /// (half the message bytes).  Every submission normalises its grads
+    /// buffer to this variant, so recycled spares of the other precision
+    /// can never leak a mixed-precision epoch.
+    sketch_f32: bool,
     shards: usize,
     nworkers: usize,
     epoch: u64,
@@ -279,6 +284,7 @@ impl SelectionPool {
             policy: FaultPolicy::Fail,
             deadline: DEFAULT_JOB_DEADLINE,
             stats: PoolStats::default(),
+            sketch_f32: false,
             shards,
             nworkers: workers,
             epoch: 0,
@@ -521,6 +527,33 @@ impl PooledSelector {
         self
     }
 
+    /// Carry gradient sketches across the worker → merge channel as f32
+    /// (`true`) instead of the default bitwise f64 — the pooled twin of
+    /// [`super::ShardedSelector::with_f32_sketches`].  Existing shard
+    /// slots and spares are renormalised immediately; submissions also
+    /// renormalise per job, so the switch can never mix precisions within
+    /// an epoch.
+    pub fn with_f32_sketches(mut self, on: bool) -> Self {
+        self.pool.sketch_f32 = on;
+        for g in self.pool.gbufs.iter_mut().chain(self.pool.spare_gbufs.iter_mut()) {
+            g.cols.set_f32(on);
+        }
+        self
+    }
+
+    /// Payload bytes of gradient sketches resident in the pool's shard
+    /// slots and spare list — zero whenever no rank authority is
+    /// installed (the adaptive-only carry), pinned by
+    /// `tests/alloc_free.rs`.
+    pub fn carried_sketch_bytes(&self) -> usize {
+        self.pool
+            .gbufs
+            .iter()
+            .chain(self.pool.spare_gbufs.iter())
+            .map(|g| g.sketch_bytes())
+            .sum()
+    }
+
     /// Set what happens when a shard job fails: surface the typed error
     /// (`Fail`, default), respawn + retry (`Retry`), or retry once before
     /// the engine's degradation ladder takes over (`Degrade`).  Zero-fault
@@ -741,8 +774,13 @@ impl Pending<'_, '_> {
     /// with the id of the thread currently serving the shard's slot (the
     /// submission's accounting key); returns false (recycling the buffers
     /// into the spare lists) if the worker's channel refused it.
-    fn submit_with(&mut self, s: usize, winners: Vec<usize>, grads: ShardGrads) -> bool {
+    fn submit_with(&mut self, s: usize, winners: Vec<usize>, mut grads: ShardGrads) -> bool {
         let pool = &mut self.sel.pool;
+        // Normalise the sketch variant before the buffer crosses the
+        // channel: spares recycled from before a precision switch (or
+        // freshly defaulted ones, which are f64) must not smuggle the
+        // other width into this epoch.
+        grads.cols.set_f32(pool.sketch_f32);
         let w = s % pool.txs.len();
         let owner = pool.handles[w].id;
         let job = Job {

@@ -137,7 +137,9 @@ pub(crate) fn run_shard(
         g.count = len;
         g.cols.clear();
         for &id in won.iter() {
-            g.cols.extend_from_slice(view.grads.row(id));
+            // `push_row` narrows to f32 when the coordinator opted into
+            // narrowed sketches; the default f64 buffer copies bitwise.
+            g.cols.push_row(view.grads.row(id));
         }
     }
 }
@@ -357,6 +359,26 @@ impl ShardedSelector {
     /// prefer [`crate::engine::Selection::decision`].
     pub fn last_rank_decision(&self) -> Option<RankDecision> {
         self.last
+    }
+
+    /// Carry the gradient sketches across the shard → merge boundary as
+    /// f32 (`true`) instead of the default bitwise f64 (`false`): half
+    /// the boundary bytes, one rounding per element.  The merged pivot
+    /// order is computed on f64 features either way; only the adaptive
+    /// rank cut can observe the narrowing (tolerance-pinned by
+    /// `tests/sketch_f32.rs`).
+    pub fn with_f32_sketches(mut self, on: bool) -> Self {
+        for g in self.grads.iter_mut() {
+            g.cols.set_f32(on);
+        }
+        self
+    }
+
+    /// Payload bytes of gradient sketches currently held at the merge
+    /// boundary — zero whenever no rank authority is installed (the
+    /// adaptive-only carry), pinned by `tests/alloc_free.rs`.
+    pub fn carried_sketch_bytes(&self) -> usize {
+        self.grads.iter().map(|g| g.sketch_bytes()).sum()
     }
 
     pub fn shards(&self) -> usize {

@@ -44,6 +44,7 @@
 
 use std::cmp::Ordering;
 
+use super::merge::SketchBuf;
 use crate::graft::geometry::prefix_errors_core;
 use crate::graft::{BudgetedRankPolicy, RankDecision};
 use crate::linalg::incremental::{eliminate_row, replay_pivot_cache};
@@ -67,10 +68,17 @@ pub struct StreamState {
     //    slots overwritten in place; capacity cap+1 so an admission
     //    tournament can append the candidate without reallocating) -------
     feat: Vec<f64>,
-    sketch: Vec<f64>,
+    /// Resident gradient sketches (f64 by default, f32 when narrowed).
+    /// Only maintained while `carry` is set: a stream whose snapshots will
+    /// never consult a rank policy (the engine's strict mode) skips the
+    /// per-row sketch copies and keeps the reservoir R-wide only.
+    sketch: SketchBuf,
     losses: Vec<f64>,
     ids: Vec<usize>,
     arrivals: Vec<u64>,
+    /// Whether resident sketches are kept at all (default true; cleared by
+    /// the engine when no snapshot will read them).
+    carry: bool,
 
     // -- stream-wide gradient accumulation --------------------------------
     gsum: Vec<f64>,
@@ -107,10 +115,11 @@ impl StreamState {
             cap: 0,
             dims_set: false,
             feat: Vec::new(),
-            sketch: Vec::new(),
+            sketch: SketchBuf::default(),
             losses: Vec::new(),
             ids: Vec::new(),
             arrivals: Vec::new(),
+            carry: true,
             gsum: Vec::new(),
             seen: 0,
             saturated: false,
@@ -143,6 +152,37 @@ impl StreamState {
     /// that select by slot).
     pub(crate) fn id_at(&self, slot: usize) -> usize {
         self.ids[slot]
+    }
+
+    /// Keep (`true`, default) or drop (`false`) resident gradient
+    /// sketches.  With carry off, [`StreamState::snapshot_into`] must be
+    /// called without a policy — the engine's strict mode, where the rank
+    /// is `min(budget, R, len)` by construction and the sketches would
+    /// never be read.  Call before the first row.
+    pub(crate) fn set_carry(&mut self, on: bool) {
+        debug_assert_eq!(self.seen, 0, "carry mode must be fixed before the first row");
+        self.carry = on;
+    }
+
+    /// Store resident sketches narrowed to f32 (half the reservoir's
+    /// sketch bytes).  Call before the first row.
+    pub(crate) fn set_sketch_f32(&mut self, on: bool) {
+        debug_assert_eq!(self.seen, 0, "sketch precision must be fixed before the first row");
+        self.sketch.set_f32(on);
+    }
+
+    /// The rank a policy-free strict snapshot selects by construction:
+    /// MaxVol depth capped by the budget, the feature width, and the
+    /// resident count — exactly what `BudgetedRankPolicy::strict` would
+    /// decide over any error curve of that depth.
+    pub(crate) fn strict_rank(&self) -> usize {
+        self.rcols.min(self.r_budget).min(self.len())
+    }
+
+    /// Payload bytes of resident gradient sketches — zero with carry off
+    /// (the engine's strict mode), pinned by `tests/alloc_free.rs`.
+    pub(crate) fn sketch_bytes(&self) -> usize {
+        self.sketch.bytes()
     }
 
     /// Forget everything but the budget and the warmed buffer capacity:
@@ -231,7 +271,9 @@ impl StreamState {
 
     fn append_row(&mut self, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64) {
         self.feat.extend_from_slice(f);
-        self.sketch.extend_from_slice(g);
+        if self.carry {
+            self.sketch.push_row(g);
+        }
         self.losses.push(loss);
         self.ids.push(id);
         self.arrivals.push(arrival);
@@ -243,7 +285,9 @@ impl StreamState {
     fn move_row(&mut self, src: usize, dst: usize) {
         let (r, e) = (self.rcols, self.ecols);
         self.feat.copy_within(src * r..(src + 1) * r, dst * r);
-        self.sketch.copy_within(src * e..(src + 1) * e, dst * e);
+        if self.carry {
+            self.sketch.copy_row_within(src * e, dst * e, e);
+        }
         self.losses[dst] = self.losses[src];
         self.ids[dst] = self.ids[src];
         self.arrivals[dst] = self.arrivals[src];
@@ -253,7 +297,9 @@ impl StreamState {
     fn write_row(&mut self, dst: usize, f: &[f64], g: &[f64], loss: f64, id: usize, arrival: u64) {
         let (r, e) = (self.rcols, self.ecols);
         self.feat[dst * r..(dst + 1) * r].copy_from_slice(f);
-        self.sketch[dst * e..(dst + 1) * e].copy_from_slice(g);
+        if self.carry {
+            self.sketch.write_at(dst * e, g);
+        }
         self.losses[dst] = loss;
         self.ids[dst] = id;
         self.arrivals[dst] = arrival;
@@ -428,9 +474,10 @@ impl StreamState {
         let decision = if let Some(p) = policy.as_deref_mut() {
             ws.pe_gbar.clear();
             ws.pe_gbar.extend(self.gsum.iter().map(|v| v / self.seen as f64));
+            debug_assert!(self.carry, "policy-ful snapshot requires carried sketches");
             ws.pe_g.clear();
             for &i in &order {
-                ws.pe_g.extend_from_slice(&self.sketch[i * self.ecols..(i + 1) * self.ecols]);
+                self.sketch.gather_into(i * self.ecols, self.ecols, &mut ws.pe_g);
             }
             prefix_errors_core(&mut ws.pe_g, self.ecols, depth, &ws.pe_gbar, &mut ws.pe_ghat, &mut ws.pe_err);
             Some(p.choose(&ws.pe_err, self.r_budget, depth))

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use crate::coordinator::{FaultPolicy, MergePolicy, PooledSelector, ShardedSelector};
 use crate::features::{self, FeatureExtractor};
-use crate::graft::{BudgetedRankPolicy, GraftSelector};
+use crate::graft::{BudgetedRankPolicy, GraftSelector, StrictRankTally};
 use crate::selection::{self, Selector};
 use crate::train::TrainConfig;
 
@@ -275,6 +275,7 @@ pub struct EngineBuilder {
     shape: ShapeSpec,
     fault: FaultPolicy,
     deadline: Option<Duration>,
+    sketch_f32: bool,
 }
 
 impl Default for EngineBuilder {
@@ -299,6 +300,7 @@ impl EngineBuilder {
             shape: ShapeSpec::Knobs { shards: 1, pool_workers: 0, overlap: false },
             fault: FaultPolicy::Fail,
             deadline: None,
+            sketch_f32: false,
         }
     }
 
@@ -398,6 +400,19 @@ impl EngineBuilder {
     /// thread).
     pub fn job_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Carry gradient sketches across the shard/worker → merge boundary
+    /// (and in the streaming reservoir) narrowed to f32: half the
+    /// boundary bandwidth and resident sketch memory.  Off by default —
+    /// the f64 carry is bitwise the source rows.  The merged pivot order
+    /// is computed on f64 features either way, so narrowing can only move
+    /// the adaptive rank cut, never reorder winners (tolerance-pinned by
+    /// `tests/sketch_f32.rs`).  Inert on serial shapes and in strict rank
+    /// mode, where no sketches are carried at all.
+    pub fn sketch_f32(mut self, on: bool) -> Self {
+        self.sketch_f32 = on;
         self
     }
 
@@ -568,6 +583,7 @@ impl EngineBuilder {
         // a local rank cut) and the run policy is hoisted onto the
         // coordinator's ONE rank authority — a single ε/budget accumulator
         // at any shard/worker count.
+        let adaptive = matches!(self.rank, RankMode::Adaptive { .. });
         let (mut exec, rebuild) = if is_graft {
             let eps = match self.rank {
                 RankMode::Adaptive { epsilon } => epsilon,
@@ -589,9 +605,17 @@ impl EngineBuilder {
                     run_policy()
                 }))
             };
-            let authority = (sharded && merge.gradient_aware())
+            // Adaptive-only carry: a strict authority's post-merge cut is
+            // provably the identity (the feature-only merge already
+            // returns min(budget, |union|) rows — pinned bitwise in
+            // merge.rs / tests/alloc_free.rs), so installing it would only
+            // buy O(shards·r·E) sketch copies per window plus a redundant
+            // fused-MGS pass for telemetry the engine can synthesise.
+            // Strict sharded/pooled runs carry NO gradient state; their
+            // rank accounting comes from the engine's StrictRankTally.
+            let authority = (sharded && merge.gradient_aware() && adaptive)
                 .then(|| Box::new(GraftSelector::new(run_policy())) as Box<dyn Selector>);
-            build_exec(shape, merge, authority, make)
+            build_exec(shape, merge, authority, self.sketch_f32, make)
         } else {
             let (seed, method) = (self.seed, self.method.clone());
             let make = move |si: usize| -> Box<dyn Selector> {
@@ -600,8 +624,12 @@ impl EngineBuilder {
                 let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
                 selection::by_name(&method, wseed).expect("method validated above")
             };
-            build_exec(shape, merge, None, make)
+            build_exec(shape, merge, None, self.sketch_f32, make)
         };
+        // Administrative strict accounting for the shapes that used to get
+        // it from the (now-removed) strict rank authority.
+        let strict_tally = (is_graft && sharded && merge.gradient_aware() && !adaptive)
+            .then(StrictRankTally::default);
 
         if let Some(d) = self.deadline {
             if let Exec::Pooled(p) = &mut exec {
@@ -622,6 +650,7 @@ impl EngineBuilder {
             self.budget,
             self.fault,
             self.seed,
+            strict_tally,
             notes,
         ))
     }
@@ -707,25 +736,39 @@ impl EngineBuilder {
         }
 
         // -- rank authority: one accumulator per engine, as in batch -----
-        let (policy, top_up) = if is_graft {
+        // Strict GRAFT carries no policy into snapshots at all: a
+        // policy-free snapshot already selects depth min(budget, R, len)
+        // and tops up by loss — index-identical to what the strict policy
+        // would cut (pinned by tests/streaming.rs) — so the reservoir can
+        // skip resident sketches entirely and the rank accounting comes
+        // from a StrictRankTally, as on the batch shapes.
+        let (policy, top_up, strict_tally) = if is_graft {
             match self.rank {
                 RankMode::Adaptive { epsilon } => {
-                    (Some(BudgetedRankPolicy::adaptive(epsilon, self.fraction)), false)
+                    (Some(BudgetedRankPolicy::adaptive(epsilon, self.fraction)), false, None)
                 }
                 // Strict GRAFT and feature-only MaxVol both fill the whole
                 // budget, topping up past the pivot depth by loss —
                 // exactly the batch selectors' contract.
-                RankMode::Strict => (Some(BudgetedRankPolicy::strict(self.epsilon)), true),
+                RankMode::Strict => (None, true, Some(StrictRankTally::default())),
             }
         } else {
-            (None, true)
+            (None, true, None)
         };
 
         for n in &notes {
             eprintln!("note: {n}");
         }
         Ok(StreamingEngine::from_parts(
-            policy, top_up, budget, self.fault, self.seed, extractor, notes,
+            policy,
+            top_up,
+            budget,
+            self.fault,
+            self.seed,
+            extractor,
+            strict_tally,
+            self.sketch_f32,
+            notes,
         ))
     }
 }
@@ -739,6 +782,7 @@ fn build_exec(
     shape: ExecShape,
     merge: MergePolicy,
     authority: Option<Box<dyn Selector>>,
+    sketch_f32: bool,
     mut make: impl FnMut(usize) -> Box<dyn Selector> + Send + 'static,
 ) -> (Exec, Option<Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>>) {
     match shape {
@@ -747,14 +791,16 @@ fn build_exec(
             (Exec::Serial(sel), Some(Box::new(make)))
         }
         ExecShape::Sharded { shards } => {
-            let mut sel = ShardedSelector::from_factory(shards, merge, make);
+            let mut sel =
+                ShardedSelector::from_factory(shards, merge, make).with_f32_sketches(sketch_f32);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }
             (Exec::Sharded(Box::new(sel)), None)
         }
         ExecShape::Pooled { shards, workers, .. } => {
-            let mut sel = PooledSelector::from_factory(shards, workers, merge, make);
+            let mut sel = PooledSelector::from_factory(shards, workers, merge, make)
+                .with_f32_sketches(sketch_f32);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }

@@ -15,7 +15,7 @@ use crate::coordinator::{
 };
 use crate::faults::{FaultAction, FaultInjector, ShardCtx};
 use crate::features::FeatureExtractor;
-use crate::graft::{RankDecision, RankStats};
+use crate::graft::{RankDecision, RankStats, StrictRankTally};
 use crate::linalg::{Mat, Workspace};
 use crate::rng::Rng;
 use crate::selection::maxvol::FastMaxVol;
@@ -125,6 +125,14 @@ pub struct SelectionEngine {
     /// Original batch-local index of each kept row of the filtered copy
     /// (the winner remap table).
     qkept: Vec<usize>,
+    /// Administrative strict-rank accounting for sharded/pooled
+    /// gradient-aware shapes in strict mode, where no rank authority is
+    /// installed (the adaptive-only carry: a strict post-merge cut is
+    /// provably the identity, so nothing downstream of the merge ever
+    /// computes a decision).  The engine records `|subset|` per healthy
+    /// window here — exactly the rank the removed authority would have
+    /// decided — and synthesises the surfaced [`RankDecision`] from it.
+    strict_tally: Option<StrictRankTally>,
     notes: Vec<String>,
     windows_done: u64,
 }
@@ -141,6 +149,7 @@ impl SelectionEngine {
         budget: Option<usize>,
         policy: FaultPolicy,
         seed: u64,
+        strict_tally: Option<StrictRankTally>,
         notes: Vec<String>,
     ) -> SelectionEngine {
         // The pool runs shard-level retries itself (respawn + resubmit);
@@ -166,6 +175,7 @@ impl SelectionEngine {
             stats: PoolStats::default(),
             qrows: Vec::new(),
             qkept: Vec::new(),
+            strict_tally,
             notes,
             windows_done: 0,
         }
@@ -209,14 +219,35 @@ impl SelectionEngine {
     /// shapes, or the selector's own policy on the serial path.  `None`
     /// for methods without a rank stage (and for a one-shard pool, whose
     /// inner selector lives on a worker thread).
+    ///
+    /// Sharded/pooled gradient-aware shapes in **strict** mode carry no
+    /// rank authority (the post-merge cut is the identity there); the
+    /// engine's own strict tally supplies the equivalent accounting.
     pub fn rank_stats(&self) -> Option<RankStats> {
-        self.exec.rank_stats()
+        self.exec
+            .rank_stats()
+            .or_else(|| self.strict_tally.as_ref().map(|t| t.stats()))
     }
 
     /// Decision behind the most recent selection (same caveats as
     /// [`SelectionEngine::rank_stats`]).
     pub fn last_decision(&self) -> Option<RankDecision> {
-        self.exec.last_decision()
+        self.exec
+            .last_decision()
+            .or_else(|| self.strict_tally.as_ref().and_then(|t| t.stats().last))
+    }
+
+    /// Bytes of gradient-sketch columns currently resident in the
+    /// coordinator's carry buffers (zero on the serial shape, and pinned
+    /// to zero on strict sharded/pooled shapes by the adaptive-only
+    /// carry).  Test/bench telemetry, not a stable API.
+    #[doc(hidden)]
+    pub fn carried_sketch_bytes(&self) -> usize {
+        match &self.exec {
+            Exec::Serial(_) => 0,
+            Exec::Sharded(s) => s.carried_sketch_bytes(),
+            Exec::Pooled(p) => p.carried_sketch_bytes(),
+        }
     }
 
     /// Fault-path telemetry: engine-side counters (retries, quarantined
@@ -379,12 +410,25 @@ impl SelectionEngine {
         }
         self.windows_done += 1;
         let degraded = !self.degr.is_empty();
+        // Strict sharded/pooled shapes carry no rank authority; tally the
+        // merged subset size — exactly the rank the authority's identity
+        // cut would have decided — whenever the merge itself produced the
+        // subset.  Ladder output is not a rank decision and is skipped
+        // (quarantine-only windows still ran the merge, so they count,
+        // mirroring the old authority's accounting).
+        let laddered = self.degr.iter().any(|d| {
+            matches!(d, Degradation::FeatureOnlyMaxVol { .. } | Degradation::SeededRandom { .. })
+        });
+        let fresh = match self.strict_tally.as_mut() {
+            Some(t) if !laddered && !self.buf.is_empty() => Some(t.record(self.buf.len())),
+            _ => None,
+        };
         Ok(Selection {
             indices: &self.buf,
             // A degraded subset was not produced by the rank criterion;
             // whatever decision the executor last made does not describe
             // it.
-            decision: if degraded { None } else { self.exec.last_decision() },
+            decision: if degraded { None } else { self.exec.last_decision().or(fresh) },
             budget: r,
             window: self.windows_done - 1,
             degradations: &self.degr,
@@ -474,6 +518,7 @@ impl SelectionEngine {
             buf,
             degr,
             stats,
+            strict_tally,
             windows_done,
             ..
         } = self;
@@ -555,6 +600,7 @@ impl SelectionEngine {
                         Ok(())
                     }
                 });
+                let merged_ok = checked.is_ok();
                 let out = match checked {
                     Err(e) if matches!(policy, FaultPolicy::Degrade) => {
                         let mut l = log.borrow_mut();
@@ -563,6 +609,14 @@ impl SelectionEngine {
                     }
                     other => other,
                 };
+                // Strict pools carry no rank authority; tally the merged
+                // subset size per healthy window (ladder output is not a
+                // rank decision — see `select`).
+                if merged_ok && !buf.is_empty() {
+                    if let Some(t) = strict_tally.as_mut() {
+                        t.record(buf.len());
+                    }
+                }
                 log.borrow_mut().degen = ws.mv_degenerate;
                 out
             },

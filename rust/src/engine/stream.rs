@@ -37,7 +37,7 @@
 use crate::coordinator::fault::{Degradation, FaultPolicy, SelectError};
 use crate::coordinator::stream::StreamState;
 use crate::features::FeatureExtractor;
-use crate::graft::{BudgetedRankPolicy, RankDecision, RankStats};
+use crate::graft::{BudgetedRankPolicy, RankDecision, RankStats, StrictRankTally};
 use crate::linalg::Workspace;
 use crate::rng::Rng;
 use crate::selection::BatchView;
@@ -52,9 +52,12 @@ pub struct StreamSnapshot {
     /// Selected **global row ids** (the `row_ids` of the pushed views),
     /// in selection order: MaxVol pivots first, then the loss top-up.
     pub indices: Vec<usize>,
-    /// The rank decision, when a GRAFT rank authority is configured and
-    /// the snapshot was not degraded (`None` for feature-only `maxvol`
-    /// streams, empty streams, and seeded-random fallbacks).
+    /// The rank decision for a GRAFT stream that was not degraded
+    /// (`None` for feature-only `maxvol` streams, empty streams, and
+    /// seeded-random fallbacks).  Adaptive streams report the rank
+    /// authority's decision; strict streams synthesise the equivalent
+    /// decision from the engine's strict tally (the strict cut is the
+    /// identity, so no authority — and no gradient carry — runs).
     pub decision: Option<RankDecision>,
     /// The configured per-snapshot row budget.
     pub budget: usize,
@@ -88,6 +91,12 @@ pub struct StreamingEngine {
     push_degenerate: u64,
     snapshots: u64,
     last: Option<RankDecision>,
+    /// Strict-rank accounting for GRAFT streams without a rank authority
+    /// (the adaptive-only carry; see
+    /// [`SelectionEngine`](super::SelectionEngine)'s field of the same
+    /// name).  Survives [`StreamingEngine::reset`], like the adaptive
+    /// authority's accumulator.
+    strict_tally: Option<StrictRankTally>,
 }
 
 impl StreamingEngine {
@@ -99,10 +108,18 @@ impl StreamingEngine {
         fault: FaultPolicy,
         seed: u64,
         extractor: Option<Box<dyn FeatureExtractor>>,
+        strict_tally: Option<StrictRankTally>,
+        sketch_f32: bool,
         notes: Vec<String>,
     ) -> StreamingEngine {
+        let mut state = StreamState::new(budget);
+        // Only an adaptive rank authority reads gradient sketches at
+        // snapshot time; strict and feature-only streams skip the carry
+        // entirely (zero resident sketch bytes).
+        state.set_carry(policy.is_some());
+        state.set_sketch_f32(sketch_f32);
         StreamingEngine {
-            state: StreamState::new(budget),
+            state,
             policy,
             top_up,
             budget,
@@ -117,6 +134,7 @@ impl StreamingEngine {
             push_degenerate: 0,
             snapshots: 0,
             last: None,
+            strict_tally,
         }
     }
 
@@ -217,6 +235,16 @@ impl StreamingEngine {
             self.last = None;
             return Ok(self.finish(out, None));
         }
+        // Strict GRAFT streams carry no rank authority; synthesise the
+        // decision the authority's identity cut would have made from the
+        // reservoir's strict rank (see `StreamState::strict_rank`).
+        let decision = decision.or_else(|| {
+            let rank = self.state.strict_rank();
+            match self.strict_tally.as_mut() {
+                Some(t) if !out.is_empty() => Some(t.record(rank)),
+                _ => None,
+            }
+        });
         self.last = decision;
         Ok(self.finish(out, decision))
     }
@@ -282,11 +310,20 @@ impl StreamingEngine {
     }
 
     /// Rank-authority accounting (`None` for feature-only streams).
+    /// Strict GRAFT streams report the engine's strict tally — see
+    /// [`StreamSnapshot::decision`].
     pub fn rank_stats(&self) -> Option<RankStats> {
-        self.policy.as_ref().map(|p| RankStats {
-            mean_rank: p.mean_rank(),
-            batches: p.batches(),
-            last: self.last,
-        })
+        self.policy
+            .as_ref()
+            .map(|p| RankStats { mean_rank: p.mean_rank(), batches: p.batches(), last: self.last })
+            .or_else(|| self.strict_tally.as_ref().map(|t| t.stats()))
+    }
+
+    /// Bytes of gradient-sketch columns resident in the reservoir (zero
+    /// for strict and feature-only streams under the adaptive-only
+    /// carry).  Test/bench telemetry, not a stable API.
+    #[doc(hidden)]
+    pub fn carried_sketch_bytes(&self) -> usize {
+        self.state.sketch_bytes()
     }
 }

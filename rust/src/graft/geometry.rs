@@ -70,8 +70,8 @@ pub(crate) fn grad_sum_into(grads: &Mat, range: std::ops::Range<usize>, out: &mu
     out.clear();
     out.resize(e, 0.0);
     for i in range {
-        for (t, &v) in grads.row(i).iter().enumerate() {
-            out[t] += v;
-        }
+        // Unit-coefficient lane axpy: 1.0·v is exactly v, so this is
+        // bit-identical to the scalar accumulation loop.
+        crate::linalg::axpy_lanes(out, 1.0, grads.row(i));
     }
 }

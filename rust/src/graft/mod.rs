@@ -18,7 +18,7 @@ pub mod rank;
 
 pub use alignment::AlignmentStats;
 pub use geometry::prefix_projection_errors;
-pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision, RankStats};
+pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision, RankStats, StrictRankTally};
 
 use geometry::{grad_sum_into, prefix_errors_core};
 

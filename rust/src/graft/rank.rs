@@ -148,9 +148,85 @@ impl BudgetedRankPolicy {
     }
 }
 
+/// Telemetry-only rank accounting for **strict** runs that skip the rank
+/// authority entirely (the adaptive-only gradient-carry fast path).
+///
+/// A strict authority's post-merge cut is provably the identity — the
+/// merged winner list already has exactly `min(budget, K)` entries, so
+/// `choose` would return `rank == |out|` with `errors[rank-1]` read from a
+/// freshly recomputed error curve that influences nothing.  Instead of
+/// carrying O(shards·r·E) gradient sketches across the merge boundary and
+/// re-running the fused MGS kernel just to fill `mean_rank`, the engine
+/// records the subset size it already knows into this tally and
+/// synthesizes an *administrative* [`RankDecision`]: `error: 0.0` (finite
+/// by construction — no curve was measured, and downstream breakdown
+/// checks key on non-finite errors), `satisfied: true` (the strict
+/// contract — emit exactly the budget — is met by construction).
+///
+/// Only healthy, non-degraded, non-empty selections are recorded —
+/// mirroring the old authority, which was consulted exactly once per
+/// successfully merged window.
+#[derive(Debug, Clone, Default)]
+pub struct StrictRankTally {
+    used: f64,
+    batches: f64,
+    last: Option<RankDecision>,
+}
+
+impl StrictRankTally {
+    /// Record one healthy strict selection of `rank` rows; returns the
+    /// synthesized administrative decision (also retained as `last`).
+    pub fn record(&mut self, rank: usize) -> RankDecision {
+        let d = RankDecision { rank, error: 0.0, satisfied: true };
+        self.used += rank as f64;
+        self.batches += 1.0;
+        self.last = Some(d);
+        d
+    }
+
+    /// Accounting snapshot, shaped like a policy-backed
+    /// [`crate::selection::Selector::rank_stats`] so facade consumers
+    /// cannot tell the fast path from the old authority by `mean_rank`
+    /// or `batches`.
+    pub fn stats(&self) -> RankStats {
+        let mean_rank = if self.batches == 0.0 { 0.0 } else { self.used / self.batches };
+        RankStats { mean_rank, batches: self.batches, last: self.last }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn strict_tally_matches_policy_accounting() {
+        // The tally must reproduce what a strict BudgetedRankPolicy would
+        // have accumulated for the same sequence of merged subset sizes
+        // (on the merge path the strict choice is always rank == |out|).
+        let mut tally = StrictRankTally::default();
+        let mut policy = BudgetedRankPolicy::strict(0.05);
+        let errors = vec![0.5; 32];
+        for rank in [16usize, 16, 9, 32] {
+            let d = tally.record(rank);
+            let p = policy.choose(&errors, rank, rank);
+            assert_eq!(d.rank, p.rank);
+            assert!(d.error.is_finite(), "administrative decision must pass finite checks");
+            assert!(d.satisfied);
+        }
+        let s = tally.stats();
+        assert_eq!(s.batches, policy.batches());
+        assert_eq!(s.mean_rank, policy.mean_rank());
+        assert_eq!(s.last.unwrap().rank, 32);
+    }
+
+    #[test]
+    fn strict_tally_empty_is_degenerate_like_policy() {
+        let tally = StrictRankTally::default();
+        let s = tally.stats();
+        assert_eq!(s.mean_rank, 0.0);
+        assert_eq!(s.batches, 0.0);
+        assert_eq!(s.last, None);
+    }
 
     #[test]
     fn choose_rank_smallest_satisfying() {

@@ -137,6 +137,40 @@
 //! The deterministic fault-injection harness behind the fault suites
 //! lives in [`faults`] ([`faults::FaultPlan`] — seeded, replayable
 //! schedules of panics / delays / worker deaths).
+//!
+//! # Performance tuning
+//!
+//! The hot path is tuned out of the box; three knobs exist for unusual
+//! deployments:
+//!
+//! * **Parallel kernel threshold** — [`linalg::par_min_flops`] is the
+//!   flop count above which `Mat::matmul` / `Mat::gram` fan out across
+//!   threads (below it the portable 4-lane SIMD kernels run serially).
+//!   Override with the `GRAFT_PAR_MIN_FLOPS` environment variable
+//!   (`0` forces threading, `18446744073709551615` pins the serial lane
+//!   kernels; unparsable values fall back to the default).  Read once
+//!   per process.  Results are shape-identical either way — the CI
+//!   `kernel-parity` job runs the property suites at both extremes.
+//! * **f32 gradient sketches** —
+//!   [`engine::EngineBuilder::sketch_f32`] narrows the gradient-sketch
+//!   columns carried across the shard → merge boundary to f32, halving
+//!   merge bandwidth and pool-message memory on adaptive sharded/pooled/
+//!   streaming engines.  Pivot order is computed on f64 features, so
+//!   only the adaptive rank cut can differ — by at most one on generic
+//!   data, not at all on well-separated batches (`tests/sketch_f32.rs`).
+//!   Default off: f64 sketches, bitwise legacy behaviour.
+//! * **Adaptive-only gradient carry** — automatic, not a knob: strict
+//!   (fixed-budget) engines ship **zero** gradient-sketch bytes between
+//!   shards and the merge, because the strict post-merge cut is provably
+//!   the identity; the surfaced [`graft::RankDecision`] is synthesised
+//!   by [`graft::StrictRankTally`].  See "Adaptive-only gradient carry"
+//!   in `rust/src/coordinator/README.md`.
+//!
+//! Kernel-level throughput is priced by `cargo bench --bench
+//! simd_kernels` (`matmul_simd` / `gram_simd` / `mgs_simd` rows) and the
+//! carry saving by the `select_strict_nocarry` family in `cargo bench
+//! --bench sharded_selection`; `scripts/bench_compare.py` diffs two
+//! graft-bench-v1 documents with per-family regression thresholds.
 
 // Numeric-kernel lint posture: index-based loops mirror the maths (and the
 // Pallas kernels they twin), and the orchestration layers legitimately

@@ -91,10 +91,10 @@ pub(crate) fn replay_pivot_cache(
             if ci == 0.0 {
                 continue;
             }
+            // Same negated-coefficient lane axpy as `fast_maxvol_core`
+            // uses — the replay must mirror its arithmetic bit for bit.
             let prow = &prows[start..start + tail];
-            for (x, &p) in work[ib + j + 1..ib + rcols].iter_mut().zip(prow) {
-                *x -= ci * p;
-            }
+            super::simd::axpy_lanes(&mut work[ib + j + 1..ib + rcols], -ci, prow);
         }
     }
 }
@@ -124,9 +124,7 @@ pub(crate) fn eliminate_row(x: &mut [f64], prows: &[f64], pvals: &[f64], rcols: 
         let ci = x[j];
         if ci != 0.0 {
             let prow = &prows[off..off + tail];
-            for (v, &p) in x[j + 1..rcols].iter_mut().zip(prow) {
-                *v -= ci * p;
-            }
+            super::simd::axpy_lanes(&mut x[j + 1..rcols], -ci, prow);
         }
         off += tail;
     }

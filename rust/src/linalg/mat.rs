@@ -11,6 +11,9 @@
 
 use std::fmt;
 use std::ops::{Index, IndexMut, Range};
+use std::sync::OnceLock;
+
+use super::simd::{axpy2_lanes, axpy_lanes, dot_lanes};
 
 // ---------------------------------------------------------------------------
 // Blocking / threading constants (see linalg/mod.rs for the rationale)
@@ -27,7 +30,27 @@ pub const BLOCK_KC: usize = 256;
 pub const BLOCK_TILE: usize = 32;
 /// `m·k·n` fused-op count above which `matmul`/`gram` fan row panels out
 /// across threads; below it the spawn cost dominates any speedup.
+/// Default for [`par_min_flops`], which bench sweeps can override via the
+/// `GRAFT_PAR_MIN_FLOPS` env var.
 pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// The effective parallel threshold: `GRAFT_PAR_MIN_FLOPS` when set to a
+/// parseable `usize` (`0` forces the threaded path, `usize::MAX` pins the
+/// serial path — how the CI kernel-parity job exercises both), else
+/// [`PAR_MIN_FLOPS`].  Read once per process and latched, so the hot
+/// kernels never touch the environment again.
+pub fn par_min_flops() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| parse_par_min_flops(std::env::var("GRAFT_PAR_MIN_FLOPS").ok().as_deref()))
+}
+
+/// Pure parsing rule behind [`par_min_flops`]: unset or unparseable input
+/// (garbage, negative, empty) falls back to the compiled default rather
+/// than erroring — a bad sweep variable must never change kernel results,
+/// only which path computes them.
+fn parse_par_min_flops(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(PAR_MIN_FLOPS)
+}
 
 /// Worker count for the parallel paths: the machine's parallelism, capped
 /// by the row count (each worker needs at least one row) and a fleet-
@@ -190,7 +213,7 @@ impl Mat {
         let flops = self.rows * self.cols * n;
         // Probe parallelism (a syscall) only once past the size threshold,
         // so small-matrix loops stay syscall-free.
-        let t = if flops >= PAR_MIN_FLOPS { num_threads(self.rows) } else { 1 };
+        let t = if flops >= par_min_flops() { num_threads(self.rows) } else { 1 };
         if t > 1 {
             let rows_per = (self.rows + t - 1) / t;
             std::thread::scope(|s| {
@@ -240,8 +263,11 @@ impl Mat {
     pub fn gram(&self) -> Mat {
         let n = self.cols;
         let mut g = Mat::zeros(n, n);
-        let flops = self.rows * n * n;
-        let t = if flops >= PAR_MIN_FLOPS { num_threads(self.rows) } else { 1 };
+        // Only the upper triangle is accumulated, so the fused-op count is
+        // the symmetric half-work m·n·(n+1)/2 — counting the full m·n·n
+        // here made gram go parallel ~2× before the threshold paid off.
+        let flops = self.rows * n * (n + 1) / 2;
+        let t = if flops >= par_min_flops() { num_threads(self.rows) } else { 1 };
         if t > 1 {
             let rows_per = (self.rows + t - 1) / t;
             std::thread::scope(|s| {
@@ -313,9 +339,7 @@ impl Mat {
             if xi == 0.0 {
                 continue;
             }
-            for (j, &a) in self.row(i).iter().enumerate() {
-                y[j] += xi * a;
-            }
+            axpy_lanes(&mut y, xi, self.row(i));
         }
         y
     }
@@ -414,10 +438,7 @@ fn matmul_panel(a: &Mat, b: &Mat, rows: Range<usize>, out: &mut [f64]) {
                         continue;
                     }
                     let brow = &b.row(k)[j0..jend];
-                    for ((o0, o1), &bv) in r0.iter_mut().zip(r1.iter_mut()).zip(brow) {
-                        *o0 += x0 * bv;
-                        *o1 += x1 * bv;
-                    }
+                    axpy2_lanes(r0, r1, x0, x1, brow);
                 }
                 oi += 2;
             }
@@ -430,9 +451,7 @@ fn matmul_panel(a: &Mat, b: &Mat, rows: Range<usize>, out: &mut [f64]) {
                         continue;
                     }
                     let brow = &b.row(k)[j0..jend];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += aik * bv;
-                    }
+                    axpy_lanes(orow, aik, brow);
                 }
             }
         }
@@ -451,15 +470,18 @@ fn gram_upper_panel(a: &Mat, rows: Range<usize>, g: &mut [f64]) {
                 continue;
             }
             let gi = &mut g[i * n + i..(i + 1) * n];
-            for (gv, &rj) in gi.iter_mut().zip(&row[i..]) {
-                *gv += ri * rj;
-            }
+            axpy_lanes(gi, ri, &row[i..]);
         }
     }
 }
 
 /// Tiled out-of-place transpose of a `rows×cols` row-major buffer.
-pub(crate) fn transpose_into(rows: usize, cols: usize, src: &[f64], dst: &mut [f64]) {
+///
+/// The allocation-free twin of [`Mat::transpose`]: callers that already
+/// hold scratch (a [`super::Workspace`] arena, a retained `Vec<f64>`)
+/// write into it directly instead of allocating a fresh `Mat` per call
+/// (covered by `tests/alloc_free.rs`).
+pub fn transpose_into(rows: usize, cols: usize, src: &[f64], dst: &mut [f64]) {
     debug_assert_eq!(src.len(), rows * cols);
     debug_assert_eq!(dst.len(), rows * cols);
     for i0 in (0..rows).step_by(BLOCK_TILE) {
@@ -514,10 +536,12 @@ impl fmt::Debug for Mat {
 // Vector helpers (shared across the crate)
 // -------------------------------------------------------------------------
 
+/// Dot product through the 4-lane kernel (see [`super::simd::dot_lanes`]
+/// for the deterministic-but-reassociated summation contract).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    dot_lanes(a, b)
 }
 
 #[inline]
@@ -525,11 +549,10 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// `y += α·x` through the 4-lane kernel (bit-exact vs. the scalar loop).
 pub fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    axpy_lanes(y, alpha, x);
 }
 
 pub fn normalize(v: &mut [f64]) -> f64 {
@@ -669,6 +692,25 @@ mod tests {
         assert_eq!(randmat(3, 5, 15).matmul(&b).cols(), 0);
         assert_eq!(b.gram().rows(), 0);
         assert_eq!(a.transpose().rows(), 5);
+    }
+
+    #[test]
+    fn par_min_flops_parse_falls_back_on_garbage() {
+        // Unset and unparseable values (garbage, negative, empty,
+        // whitespace) all fall back to the compiled default; valid values
+        // win, including the 0 / usize::MAX extremes the CI kernel-parity
+        // job uses to force each path.
+        assert_eq!(parse_par_min_flops(None), PAR_MIN_FLOPS);
+        for bad in ["garbage", "-5", "", "  ", "1.5", "0x10", "1e6"] {
+            assert_eq!(parse_par_min_flops(Some(bad)), PAR_MIN_FLOPS, "input {bad:?}");
+        }
+        assert_eq!(parse_par_min_flops(Some("0")), 0);
+        assert_eq!(parse_par_min_flops(Some(" 4096 ")), 4096);
+        assert_eq!(
+            parse_par_min_flops(Some("18446744073709551615")),
+            usize::MAX,
+            "usize::MAX round-trips"
+        );
     }
 
     #[test]

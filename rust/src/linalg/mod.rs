@@ -33,6 +33,17 @@
 //!    | `BLOCK_TILE`     | 32      | transpose tile edge                  |
 //!    | `PAR_MIN_FLOPS`  | 2²²     | m·k·n above which panels go parallel |
 //!
+//!    The effective threshold is [`mat::par_min_flops`], overridable via
+//!    the `GRAFT_PAR_MIN_FLOPS` env var for bench sweeps (unparseable
+//!    values fall back to the constant).  `gram` prices its symmetric
+//!    half-work (`m·n·(n+1)/2`) against the same threshold.
+//!
+//! 3. **Explicit 4-lane inner kernels** ([`simd`]): the innermost loops of
+//!    `matmul`/`gram`, the fused MGS step, and the MaxVol elimination
+//!    replays all bottom out in `dot_lanes`/`axpy_lanes` — portable
+//!    unrolled f64 lanes, axpy bit-exact vs. scalar, dot deterministic
+//!    but reassociated (see the module docs for the exactness contract).
+//!
 //! The scalar reference kernels (`matmul_naive`, `gram_naive`,
 //! `fast_maxvol_reference`) are kept as ground truth for the property
 //! tests in `tests/linalg_kernels.rs` and the before/after rows in
@@ -42,12 +53,17 @@ pub mod angles;
 pub(crate) mod incremental;
 pub mod mat;
 pub mod qr;
+pub mod simd;
 pub mod solve;
 pub mod svd;
 pub mod workspace;
 
 pub use angles::{principal_angle_cosines, subspace_similarity, subspace_similarity_normalised};
-pub use mat::{axpy, dot, norm2, normalize, Mat, BLOCK_KC, BLOCK_NC, BLOCK_TILE, PAR_MIN_FLOPS};
+pub use mat::{
+    axpy, dot, norm2, normalize, par_min_flops, transpose_into, Mat, BLOCK_KC, BLOCK_NC,
+    BLOCK_TILE, PAR_MIN_FLOPS,
+};
+pub use simd::{axpy2_lanes, axpy_lanes, dot_lanes, LANES};
 pub use qr::{orth, project_onto_colspace, qr, qr_with, Qr};
 pub use solve::{cholesky, cholesky_solve, det, lstsq, lu_solve, pinv};
 pub use svd::{spectral_norm, svd, truncated_u, Svd};

@@ -8,6 +8,7 @@
 //! allocations of the original implementation are gone.
 
 use super::mat::{dot, transpose_into, Mat};
+use super::simd::axpy_lanes;
 use super::workspace::Workspace;
 
 /// Result of a rank-revealing thin QR: `a ≈ q · r`, `q` has orthonormal
@@ -46,9 +47,10 @@ pub(crate) fn mgs_column_step(
             let qi = &done[i * m..(i + 1) * m];
             let p = dot(qi, v);
             proj(i, p);
-            for (vt, &qt) in v.iter_mut().zip(qi) {
-                *vt -= p * qt;
-            }
+            // v -= p·qᵢ as a lane axpy with negated coefficient — IEEE
+            // negation is exact, so this is bit-identical to the
+            // subtraction loop it replaces.
+            axpy_lanes(v, -p, qi);
         }
     }
     let nrm = dot(v, v).sqrt();

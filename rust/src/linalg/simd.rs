@@ -1,0 +1,179 @@
+//! Portable 4-lane f64 microkernels for the hot-path inner loops.
+//!
+//! The blocked kernels in [`super::mat`], the fused MGS step in
+//! [`super::qr`], and the MaxVol elimination loops
+//! ([`crate::selection::maxvol`], [`super::incremental`]) all bottom out
+//! in two memory-bound primitives: an elementwise `y += α·x` update and a
+//! reduction `Σ xᵢ·yᵢ`.  Written as plain `zip` loops the compiler often
+//! keeps them scalar (the loop-carried dependence of the dot, the
+//! aliasing analysis of the axpy); unrolled into four explicit lanes they
+//! vectorise on every target without `std::arch` or nightly SIMD.
+//!
+//! Exactness contract, relied on by the bit-identity pins across
+//! execution shapes:
+//!
+//! * [`axpy_lanes`] / [`axpy2_lanes`] are **bit-exact** vs. the scalar
+//!   loop: each output element still receives exactly one
+//!   `yᵢ += α·xᵢ` — the unroll changes no per-element operation order.
+//! * [`dot_lanes`] **reassociates** the reduction (four independent
+//!   accumulators, pairwise-combined, plus a scalar tail), so results
+//!   differ from a sequential sum by the usual O(n·ε) noise.  Every
+//!   cross-shape bit-identity pin in the crate compares paths that share
+//!   this same kernel, so the reassociation is invisible to them; the
+//!   cross-kernel property tests (`tests/linalg_kernels.rs`) are
+//!   tolerance-based.
+
+/// Lane width of the portable kernels (4 × f64 = one AVX2 register, two
+/// NEON registers).
+pub const LANES: usize = 4;
+
+/// Four-accumulator dot product over `min(|a|, |b|)` elements.
+///
+/// Combination order is fixed — `(acc0 + acc1) + (acc2 + acc3) + tail` —
+/// so the result is deterministic for given inputs (just not
+/// sequentially associated).
+#[inline]
+pub fn dot_lanes(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut acc = [0.0f64; LANES];
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `y[i] += alpha * x[i]` over `min(|y|, |x|)` elements, four lanes per
+/// iteration.  Bit-exact vs. the scalar loop (elementwise, no
+/// reassociation).
+#[inline]
+pub fn axpy_lanes(y: &mut [f64], alpha: f64, x: &[f64]) {
+    let n = y.len().min(x.len());
+    let (y, x) = (&mut y[..n], &x[..n]);
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (cy, cx) in (&mut yc).zip(&mut xc) {
+        cy[0] += alpha * cx[0];
+        cy[1] += alpha * cx[1];
+        cy[2] += alpha * cx[2];
+        cy[3] += alpha * cx[3];
+    }
+    for (py, &px) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *py += alpha * px;
+    }
+}
+
+/// Paired-row axpy for the register-tiled GEMM panel:
+/// `r0[i] += x0 * b[i]; r1[i] += x1 * b[i]` — each streamed `b` element
+/// is used twice per load.  Bit-exact vs. the scalar pair loop.
+#[inline]
+pub fn axpy2_lanes(r0: &mut [f64], r1: &mut [f64], x0: f64, x1: f64, b: &[f64]) {
+    let n = r0.len().min(r1.len()).min(b.len());
+    let (r0, r1, b) = (&mut r0[..n], &mut r1[..n], &b[..n]);
+    let mut c0 = r0.chunks_exact_mut(LANES);
+    let mut c1 = r1.chunks_exact_mut(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for ((o0, o1), v) in (&mut c0).zip(&mut c1).zip(&mut cb) {
+        o0[0] += x0 * v[0];
+        o1[0] += x1 * v[0];
+        o0[1] += x0 * v[1];
+        o1[1] += x1 * v[1];
+        o0[2] += x0 * v[2];
+        o1[2] += x1 * v[2];
+        o0[3] += x0 * v[3];
+        o1[3] += x1 * v[3];
+    }
+    let (t0, t1, tb) = (c0.into_remainder(), c1.into_remainder(), cb.remainder());
+    for ((o0, o1), &bv) in t0.iter_mut().zip(t1.iter_mut()).zip(tb) {
+        *o0 += x0 * bv;
+        *o1 += x1 * bv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Awkward lengths around the 4-lane boundary, shared with the
+    /// integration parity tests in `tests/linalg_kernels.rs`.
+    const SIZES: [usize; 6] = [1, 3, 5, 7, 63, 65];
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn axpy_lanes_is_bit_exact_at_lane_remainders() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let x = randv(n, si as u64 + 1);
+            let mut got = randv(n, si as u64 + 50);
+            let mut want = got.clone();
+            let alpha = -0.37;
+            axpy_lanes(&mut got, alpha, &x);
+            for (w, &xv) in want.iter_mut().zip(&x) {
+                *w += alpha * xv;
+            }
+            assert_eq!(got, want, "axpy_lanes differs from scalar at n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy2_lanes_is_bit_exact_at_lane_remainders() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let b = randv(n, si as u64 + 101);
+            let mut g0 = randv(n, si as u64 + 150);
+            let mut g1 = randv(n, si as u64 + 200);
+            let (mut w0, mut w1) = (g0.clone(), g1.clone());
+            let (x0, x1) = (1.25, -0.5);
+            axpy2_lanes(&mut g0, &mut g1, x0, x1, &b);
+            for ((o0, o1), &bv) in w0.iter_mut().zip(w1.iter_mut()).zip(&b) {
+                *o0 += x0 * bv;
+                *o1 += x1 * bv;
+            }
+            assert_eq!(g0, w0, "axpy2_lanes row 0 differs at n={n}");
+            assert_eq!(g1, w1, "axpy2_lanes row 1 differs at n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_sequential_within_tolerance() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let a = randv(n, si as u64 + 301);
+            let b = randv(n, si as u64 + 400);
+            let got = dot_lanes(&a, &b);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                "dot_lanes {got} vs sequential {want} at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_lanes_negation_symmetry_supports_exact_elimination() {
+        // The elimination loops rewrite `y -= c·p` as
+        // `axpy_lanes(y, -c, p)`; per element `y + (-c)·p == y - c·p`
+        // bitwise (IEEE negation is exact), which is what keeps the
+        // cached-vs-fresh tournament pins bit-identical.
+        let p = randv(65, 7);
+        let c = 0.8391;
+        let mut a = randv(65, 9);
+        let mut b = a.clone();
+        axpy_lanes(&mut a, -c, &p);
+        for (y, &pv) in b.iter_mut().zip(&p) {
+            *y -= c * pv;
+        }
+        assert_eq!(a, b);
+    }
+}

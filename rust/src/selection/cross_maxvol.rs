@@ -8,7 +8,7 @@
 //! properties our benchmark reproduces.
 
 use super::{BatchView, Selector};
-use crate::linalg::{Mat, Workspace};
+use crate::linalg::{transpose_into, Mat, Workspace};
 use crate::selection::maxvol::fast_maxvol;
 
 pub struct CrossMaxVol {
@@ -32,13 +32,21 @@ impl CrossMaxVol {
         let mut cols: Vec<usize> = (0..r).collect();
         let mut rows: Vec<usize> = Vec::new();
         let mut sweeps = 0;
+        // Sweep scratch, held across iterations: the row gather (r×m) and
+        // its transpose (m×r) would otherwise be two fresh `Mat`s per
+        // sweep.
+        let mut gather = vec![0.0f64; r * m];
+        let mut subr = Mat::zeros(m, r);
         for _ in 0..self.max_sweeps {
             sweeps += 1;
             // Rows maximising volume within the selected columns.
             let sub = a.take_cols(&cols);
             let new_rows = fast_maxvol(&sub, r);
             // Columns maximising volume within the selected rows.
-            let subr = a.take_rows(&new_rows).transpose(); // m×r
+            for (t, &ri) in new_rows.iter().enumerate() {
+                gather[t * m..(t + 1) * m].copy_from_slice(a.row(ri));
+            }
+            transpose_into(r, m, &gather, subr.data_mut()); // m×r
             let new_cols = fast_maxvol(&subr, r);
             let converged = new_rows == rows && new_cols == cols;
             rows = new_rows;

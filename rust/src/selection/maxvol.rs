@@ -9,7 +9,7 @@
 //! [`conventional_maxvol_reference`] for tests.
 
 use super::{BatchView, Selector};
-use crate::linalg::{lu_solve, Mat, Workspace};
+use crate::linalg::{axpy_lanes, lu_solve, Mat, Workspace};
 
 /// Greedy Fast MaxVol: selects `r` rows of the K×R matrix `v` (r ≤ R ≤ K)
 /// with one rank-1 elimination per step — O(K·R·r) total, O(KR²) at r = R.
@@ -103,10 +103,11 @@ pub(crate) fn fast_maxvol_core(
             if ci == 0.0 {
                 continue;
             }
+            // row -= ci·prow as a lane axpy with negated coefficient:
+            // bit-identical to the scalar subtraction (IEEE negation is
+            // exact), so the reference/cached-replay pins are untouched.
             let row = &mut w[base + j + 1..base + rcols];
-            for (x, &p) in row.iter_mut().zip(prow) {
-                *x -= ci * p;
-            }
+            axpy_lanes(row, -ci, prow);
         }
     }
 }
@@ -229,9 +230,7 @@ pub fn conventional_maxvol(v: &Mat, r: usize, tau: f64, max_iters: usize) -> (Ve
             if ci == 0.0 {
                 continue;
             }
-            for (x, &u) in b.row_mut(i).iter_mut().zip(&urow) {
-                *x -= ci * u;
-            }
+            axpy_lanes(b.row_mut(i), -ci, &urow);
         }
         // Pin the new basis row to the exact identity it converges to,
         // stopping float drift from accumulating over long swap chains.

@@ -13,9 +13,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
-use graft::engine::EngineBuilder;
+use graft::engine::{EngineBuilder, ExecShape};
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
-use graft::linalg::{Mat, Workspace};
+use graft::linalg::{transpose_into, Mat, Workspace};
 use graft::rng::Rng;
 use graft::selection::maxvol::{fast_maxvol_with, FastMaxVol};
 use graft::selection::{BatchView, Selector};
@@ -221,4 +221,53 @@ fn steady_state_selection_is_allocation_free() {
         se.push(&big.view()).expect("steady-state push");
     });
     assert_eq!(d, 0, "StreamingEngine::push allocated {d} times at steady state");
+    assert_eq!(se.carried_sketch_bytes(), 0, "strict stream carries no gradient sketches");
+
+    // ---- transpose_into (PR 9) -------------------------------------------
+    // The allocation-free twin of `Mat::transpose`: callers holding
+    // scratch write straight into it, so the steady-state call must not
+    // touch the allocator at all.
+    let src = OwnedView::random(96, 24, 4, 23).features;
+    let mut dst = vec![0.0f64; 96 * 24];
+    transpose_into(96, 24, src.data(), &mut dst); // warm-up (paging, not allocs)
+    let d = measured(|| {
+        for _ in 0..10 {
+            transpose_into(96, 24, src.data(), &mut dst);
+        }
+    });
+    assert_eq!(d, 0, "transpose_into allocated {d} times at steady state");
+
+    // ---- adaptive-only gradient carry (PR 9) ------------------------------
+    // Strict sharded/pooled engines install no rank authority, so zero
+    // gradient-sketch bytes ever cross the shard→merge boundary — while
+    // the subset stays bit-identical to the old strict wiring (per-shard
+    // strict instances + a strict authority on the coordinator).
+    let mut legacy = ShardedSelector::from_factory(4, MergePolicy::Grad, |_| {
+        Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05)))
+    })
+    .with_parallel(false)
+    .with_rank_authority(Box::new(GraftSelector::new(BudgetedRankPolicy::strict(0.05))));
+    let mut want = Vec::new();
+    legacy.select_into(&owned.view(), 32, &mut ws, &mut want);
+    assert!(legacy.carried_sketch_bytes() > 0, "legacy strict wiring ships sketches");
+
+    for shape in [
+        ExecShape::Sharded { shards: 4 },
+        ExecShape::Pooled { shards: 4, workers: 2, overlap: false },
+    ] {
+        let mut eng = EngineBuilder::new()
+            .method("graft")
+            .budget(32)
+            .epsilon(0.05)
+            .exec(shape)
+            .build()
+            .expect("strict engine");
+        let got = eng.select(&owned.view()).expect("healthy").indices.to_vec();
+        assert_eq!(got, want, "strict no-carry subset diverged at {shape:?}");
+        assert_eq!(
+            eng.carried_sketch_bytes(),
+            0,
+            "strict {shape:?} must carry zero gradient-sketch bytes"
+        );
+    }
 }

@@ -90,6 +90,60 @@ fn blocked_transpose_and_take_cols_elementwise() {
 }
 
 #[test]
+fn simd_kernels_match_naive_at_lane_remainder_shapes() {
+    // K, R, E ∈ {1, 3, 5, 7, 63, 65}: every size leaves a different
+    // remainder mod the 4-lane kernels (including the all-tail cases), so
+    // an off-by-one in the unrolled chunks cannot hide behind a friendly
+    // multiple-of-4 shape.
+    const SIZES: [usize; 6] = [1, 3, 5, 7, 63, 65];
+    for (i, &m) in SIZES.iter().enumerate() {
+        for (j, &k) in SIZES.iter().enumerate() {
+            let n = SIZES[(i + j) % SIZES.len()];
+            let a = randmat(m, k, (i * 6 + j) as u64 + 301);
+            let b = randmat(k, n, (i * 6 + j) as u64 + 601);
+            assert!(
+                a.matmul(&b).sub(&a.matmul_naive(&b)).max_abs() < 1e-12,
+                "lane-remainder matmul {m}x{k}x{n}"
+            );
+            assert!(
+                a.gram().sub(&a.gram_naive()).max_abs() < 1e-9,
+                "lane-remainder gram {m}x{k}"
+            );
+        }
+    }
+
+    // Fused MGS prefix errors (now running on the lane axpy/dot kernels):
+    // explicit QR plus a scalar column-by-column projection of ĝ is the
+    // ground truth, at every lane-remainder (E, R) pair.
+    use graft::graft::prefix_projection_errors;
+    for (i, &e) in SIZES.iter().enumerate() {
+        for (j, &rr) in SIZES.iter().enumerate() {
+            let r = rr.min(e); // extra columns past E are dependent anyway
+            let gsel = randmat(e, r, (i * 6 + j) as u64 + 901);
+            let mut rng = Rng::new((i * 6 + j) as u64 + 1201);
+            let gbar: Vec<f64> = (0..e).map(|_| rng.normal()).collect();
+            let got = prefix_projection_errors(&gsel, &gbar);
+            let nrm = gbar.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let d = qr(&gsel);
+            let mut cum = 0.0;
+            for jj in 0..r {
+                let mut a = 0.0;
+                for t in 0..e {
+                    a += d.q[(t, jj)] * gbar[t] / nrm;
+                }
+                cum += a * a;
+                let want = (1.0 - cum).max(0.0);
+                assert!(
+                    (got[jj] - want).abs() < 1e-9,
+                    "prefix error diverged at E={e} R={r} j={jj}: {} vs {want}",
+                    got[jj]
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn fast_maxvol_workspace_bit_identical_to_reference() {
     // One workspace reused across every shape: selections must match the
     // pre-PR clone-per-call implementation bit for bit (same pivots, same

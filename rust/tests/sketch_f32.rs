@@ -1,0 +1,255 @@
+//! f32 gradient-sketch property pins (PR 9): the
+//! [`EngineBuilder::sketch_f32`] knob halves merge bandwidth and
+//! pool-message memory by narrowing carried sketch columns to f32.
+//! Pivot ordering is computed on the f64 feature matrices — narrowing
+//! can only move the adaptive rank cut — so:
+//!
+//! 1. On planted low-rank batches (gradients in an exact 2-D subspace:
+//!    prefix errors sit at ~1e-14 and ~1, far from ε on both sides) the
+//!    f32 engine's subsets and rank decisions are **identical** to the
+//!    f64 reference across Sharded/Pooled/Streaming shapes.
+//! 2. On generic random batches the decided rank differs by at most one
+//!    and the common winner prefix is identical (the merged order is
+//!    width-independent).
+//! 3. The knob is inert where no sketches are carried: serial engines
+//!    (no merge boundary) and strict engines (the adaptive-only carry)
+//!    stay bit-identical with it on or off, at zero carried bytes.
+
+use graft::engine::{EngineBuilder, ExecShape, RankMode, SelectionEngine, StreamingEngine};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::BatchView;
+
+const EPS: f64 = 0.05;
+const BUDGET: usize = 16;
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: 4,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+fn random_owned(k: usize, rc: usize, e: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    Owned {
+        features: Mat::from_fn(k, rc, |_, _| rng.normal()),
+        grads: Mat::from_fn(k, e, |_, _| rng.normal()),
+        losses: (0..k).map(|_| rng.uniform() * 2.0).collect(),
+        labels: (0..k).map(|i| (i % 4) as i32).collect(),
+        preds: (0..k).map(|i| (i % 4) as i32).collect(),
+        row_ids: (0..k).collect(),
+    }
+}
+
+/// Gradients planted in an exact 2-D subspace: the prefix-error curve
+/// collapses at rank 2 (residual ~1e-14 after f32 rounding, « ε) while
+/// rank 1 stays generic (» ε), so the adaptive decision is pinned to the
+/// same rank at either sketch width.
+fn planted_owned(k: usize, rc: usize, e: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    let u: Vec<f64> = (0..e).map(|_| rng.normal()).collect();
+    let v: Vec<f64> = (0..e).map(|_| rng.normal()).collect();
+    let coeffs: Vec<(f64, f64)> =
+        (0..k).map(|_| (2.0 * rng.normal(), 2.0 * rng.normal())).collect();
+    let grads = Mat::from_fn(k, e, |i, j| coeffs[i].0 * u[j] + coeffs[i].1 * v[j]);
+    let mut o = random_owned(k, rc, e, seed ^ 0xABCD);
+    o.grads = grads;
+    o
+}
+
+fn engine(shape: ExecShape, f32s: bool) -> SelectionEngine {
+    EngineBuilder::new()
+        .method("graft")
+        .budget(BUDGET)
+        .epsilon(EPS)
+        .rank(RankMode::Adaptive { epsilon: EPS })
+        .sketch_f32(f32s)
+        .exec(shape)
+        .build()
+        .expect("valid adaptive configuration")
+}
+
+fn stream_engine(f32s: bool) -> StreamingEngine {
+    EngineBuilder::new()
+        .method("graft")
+        .budget(BUDGET)
+        .epsilon(EPS)
+        .rank(RankMode::Adaptive { epsilon: EPS })
+        .sketch_f32(f32s)
+        .build_streaming()
+        .expect("valid adaptive streaming configuration")
+}
+
+const SHAPES: [ExecShape; 3] = [
+    ExecShape::Sharded { shards: 2 },
+    ExecShape::Sharded { shards: 4 },
+    ExecShape::Pooled { shards: 4, workers: 2, overlap: false },
+];
+
+#[test]
+fn planted_low_rank_subsets_are_identical_across_widths() {
+    // Three windows per engine so pooled buffer recycling (spare grads
+    // re-entering circulation) runs under the narrowed width too.
+    let batches: Vec<Owned> = (0..3).map(|i| planted_owned(64, 8, 10, 919 + i)).collect();
+    for shape in SHAPES {
+        let mut wide = engine(shape, false);
+        let mut narrow = engine(shape, true);
+        assert_eq!(narrow.carried_sketch_bytes(), 0, "nothing carried before a select");
+        for (bi, b) in batches.iter().enumerate() {
+            let (wi_idx, wi_dec) = {
+                let s = wide.select(&b.view()).expect("healthy");
+                (s.indices.to_vec(), s.decision)
+            };
+            let (na_idx, na_dec) = {
+                let s = narrow.select(&b.view()).expect("healthy");
+                (s.indices.to_vec(), s.decision)
+            };
+            assert_eq!(na_idx, wi_idx, "subset diverged ({shape:?}, window {bi})");
+            let (w, n) = (wi_dec.expect("adaptive decides"), na_dec.expect("adaptive decides"));
+            assert_eq!(n.rank, w.rank, "rank diverged ({shape:?}, window {bi})");
+            assert!(
+                (n.error - w.error).abs() < 1e-6,
+                "error beyond f32 tolerance ({shape:?}, window {bi}): {} vs {}",
+                n.error,
+                w.error
+            );
+        }
+        // The narrowed carry really is narrower: same column count, half
+        // the payload bytes.
+        let (wb, nb) = (wide.carried_sketch_bytes(), narrow.carried_sketch_bytes());
+        assert!(wb > 0, "adaptive {shape:?} carries sketches");
+        assert_eq!(nb * 2, wb, "f32 carry is half the f64 payload ({shape:?})");
+    }
+
+    // Streaming: reservoir cap = 2·budget = 32 ≥ k, so the stream is the
+    // batch input and the two widths must agree exactly as above.
+    for seed in [919u64, 920] {
+        let owned = planted_owned(32, 8, 10, seed);
+        let mut wide = stream_engine(false);
+        let mut narrow = stream_engine(true);
+        wide.push(&owned.view()).expect("clean push");
+        narrow.push(&owned.view()).expect("clean push");
+        let w = wide.snapshot().expect("healthy");
+        let n = narrow.snapshot().expect("healthy");
+        assert_eq!(n.indices, w.indices, "stream subset diverged (seed {seed})");
+        let (wd, nd) = (w.decision.expect("adaptive"), n.decision.expect("adaptive"));
+        assert_eq!(nd.rank, wd.rank, "stream rank diverged (seed {seed})");
+        assert!((nd.error - wd.error).abs() < 1e-6, "stream error beyond f32 tolerance");
+        assert!(wide.carried_sketch_bytes() > 0, "adaptive stream carries sketches");
+        assert_eq!(
+            narrow.carried_sketch_bytes() * 2,
+            wide.carried_sketch_bytes(),
+            "f32 stream carry is half the f64 payload"
+        );
+    }
+}
+
+#[test]
+fn random_batches_stay_within_one_rank_and_share_the_winner_prefix() {
+    let shapes = [
+        ExecShape::Sharded { shards: 2 },
+        ExecShape::Pooled { shards: 2, workers: 2, overlap: false },
+    ];
+    for shape in shapes {
+        for seed in [101u64, 202, 303] {
+            let owned = random_owned(96, 12, 16, seed);
+            let mut wide = engine(shape, false);
+            let mut narrow = engine(shape, true);
+            let w = wide.select(&owned.view()).expect("healthy").indices.to_vec();
+            let n = narrow.select(&owned.view()).expect("healthy").indices.to_vec();
+            let (wr, nr) = (
+                wide.last_decision().expect("adaptive decides").rank,
+                narrow.last_decision().expect("adaptive decides").rank,
+            );
+            assert!(
+                wr.abs_diff(nr) <= 1,
+                "rank drifted past tolerance ({shape:?}, seed {seed}): {wr} vs {nr}"
+            );
+            // The merged pivot order is computed on f64 features, so the
+            // two subsets are prefixes of the same winner sequence.
+            let common = w.len().min(n.len());
+            assert_eq!(
+                &w[..common],
+                &n[..common],
+                "winner prefix diverged ({shape:?}, seed {seed})"
+            );
+            assert!(w.len().abs_diff(n.len()) <= 1, "subset length tracks the rank cut");
+        }
+    }
+}
+
+#[test]
+fn knob_is_inert_where_no_sketches_are_carried() {
+    let owned = random_owned(64, 8, 12, 515);
+    // Serial adaptive: no merge boundary, nothing to narrow.
+    let mut a = engine(ExecShape::Serial, false);
+    let mut b = engine(ExecShape::Serial, true);
+    assert_eq!(
+        a.select(&owned.view()).expect("healthy").indices,
+        b.select(&owned.view()).expect("healthy").indices,
+        "serial adaptive must ignore sketch_f32"
+    );
+    assert_eq!(a.rank_stats(), b.rank_stats());
+    assert_eq!(b.carried_sketch_bytes(), 0);
+
+    // Strict sharded: the adaptive-only carry ships no sketches at all,
+    // so the width knob cannot matter.
+    let strict = |f32s: bool| {
+        EngineBuilder::new()
+            .method("graft")
+            .budget(BUDGET)
+            .epsilon(EPS)
+            .sketch_f32(f32s)
+            .exec(ExecShape::Sharded { shards: 4 })
+            .build()
+            .expect("valid strict configuration")
+    };
+    let mut a = strict(false);
+    let mut b = strict(true);
+    assert_eq!(
+        a.select(&owned.view()).expect("healthy").indices,
+        b.select(&owned.view()).expect("healthy").indices,
+        "strict sharded must ignore sketch_f32"
+    );
+    assert_eq!(a.carried_sketch_bytes(), 0);
+    assert_eq!(b.carried_sketch_bytes(), 0);
+
+    // Strict streaming: carry is off, the reservoir holds no sketches.
+    let strict_stream = |f32s: bool| {
+        EngineBuilder::new()
+            .method("graft")
+            .budget(BUDGET)
+            .epsilon(EPS)
+            .sketch_f32(f32s)
+            .build_streaming()
+            .expect("valid strict streaming configuration")
+    };
+    let mut a = strict_stream(false);
+    let mut b = strict_stream(true);
+    a.push(&owned.view()).expect("clean push");
+    b.push(&owned.view()).expect("clean push");
+    assert_eq!(
+        a.snapshot().expect("healthy").indices,
+        b.snapshot().expect("healthy").indices,
+        "strict stream must ignore sketch_f32"
+    );
+    assert_eq!(a.carried_sketch_bytes(), 0);
+    assert_eq!(b.carried_sketch_bytes(), 0);
+}

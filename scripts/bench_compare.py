@@ -1,0 +1,304 @@
+#!/usr/bin/env python3
+"""Compare two graft-bench-v1 JSON documents and fail on perf regressions.
+
+Usage:
+  scripts/bench_compare.py [options] BASELINE CURRENT
+  scripts/bench_compare.py --self-test
+
+Records are matched by the (bench, op, shape) triple.  For every pair
+present in both documents the ratio current/baseline is computed for
+both mean_ns and min_ns; a pair only counts as a regression when BOTH
+ratios exceed the family threshold — requiring the minimum to move too
+filters out one-off scheduler jitter in the mean.  Unmatched rows are
+reported (baseline-only rows usually mean a family was renamed or
+silently dropped; current-only rows are new families) but never fatal:
+the family-coverage gate is scripts/validate_bench.py --require.
+
+Thresholds are per-family: the op name is matched against the keys of
+the threshold table by longest prefix, so "matmul_simd" picks the
+"matmul" entry unless a more specific "matmul_simd" one exists.
+Override or extend with --threshold FAMILY=RATIO (repeatable) and
+--default-threshold.  Pairs where both baseline numbers sit under the
+noise floor (--min-ns, default 10000) are skipped: smoke-sized runs
+bottom out at microseconds where ratios are meaningless.
+
+A BASELINE that is empty or carries a placeholder top-level "note"
+(the committed BENCH_pr1.json until scripts/bench.sh runs on a machine
+with a Rust toolchain) makes the comparison a no-op: a SKIP notice is
+printed and the exit status is 0, so CI stays green until a real
+baseline lands — at which point regressions start failing the build.
+An empty/placeholder CURRENT is always an error (the smoke run just
+produced it; it must have rows).
+
+--self-test runs the comparator against in-memory fixtures — identical
+documents must pass, an injected 2x regression must fail, a placeholder
+baseline must skip — and exits non-zero if any expectation breaks.
+
+Exit status: 0 = no regression (or baseline skip), 1 = regression or
+invalid input.  Stdlib only.
+"""
+
+import json
+import sys
+
+SCHEMA = "graft-bench-v1"
+
+# Per-family regression thresholds (current/baseline ratio on BOTH
+# mean_ns and min_ns).  Keys are op-name prefixes; longest prefix wins.
+# Microkernels get a tight leash; end-to-end families that cross thread
+# pools and channels breathe harder between runners.
+DEFAULT_THRESHOLDS = {
+    "matmul": 1.25,
+    "gram": 1.25,
+    "mgs": 1.25,
+    "fast_maxvol": 1.25,
+    "select_single": 1.30,
+    "select_strict_nocarry": 1.30,
+    "select_sharded": 1.40,
+    "select_pooled": 1.40,
+    "select_engine": 1.40,
+    "select_faultpath": 1.40,
+    "select_streaming": 1.40,
+    "serve": 1.50,
+}
+DEFAULT_FALLBACK = 1.25
+NOISE_FLOOR_NS = 10_000.0
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return None, f"{path}: unreadable or invalid JSON: {exc}"
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+        return None, f"{path}: not a {SCHEMA} document"
+    if not isinstance(doc.get("records"), list):
+        return None, f"{path}: 'records' is missing or not a list"
+    return doc, None
+
+
+def is_placeholder(doc):
+    note = doc.get("note")
+    return isinstance(note, str) and "placeholder" in note.lower()
+
+
+def index(doc):
+    out = {}
+    for rec in doc["records"]:
+        if not isinstance(rec, dict):
+            continue
+        key = (rec.get("bench"), rec.get("op"), rec.get("shape"))
+        if all(isinstance(k, str) and k for k in key):
+            out[key] = rec
+    return out
+
+
+def threshold_for(op, thresholds, fallback):
+    best = None
+    for prefix, ratio in thresholds.items():
+        if op.startswith(prefix) and (best is None or len(prefix) > len(best[0])):
+            best = (prefix, ratio)
+    return best[1] if best else fallback
+
+
+def compare(baseline, current, thresholds, fallback, floor, out=sys.stdout):
+    """Diff two parsed documents; returns the list of regression strings."""
+    base, cur = index(baseline), index(current)
+    regressions = []
+    skipped = 0
+    for key in sorted(base.keys() & cur.keys()):
+        b, c = base[key], cur[key]
+        try:
+            bm, bn = float(b["mean_ns"]), float(b["min_ns"])
+            cm, cn = float(c["mean_ns"]), float(c["min_ns"])
+        except (KeyError, TypeError, ValueError):
+            regressions.append(f"{key}: malformed timing fields")
+            continue
+        if bm < floor and bn < floor:
+            skipped += 1
+            continue
+        limit = threshold_for(key[1], thresholds, fallback)
+        mean_ratio = cm / bm if bm > 0 else float("inf")
+        min_ratio = cn / bn if bn > 0 else float("inf")
+        tag = f"{key[1]} [{key[2]}]"
+        if mean_ratio > limit and min_ratio > limit:
+            regressions.append(
+                f"{tag}: mean {bm:.0f} -> {cm:.0f} ns ({mean_ratio:.2f}x), "
+                f"min {bn:.0f} -> {cn:.0f} ns ({min_ratio:.2f}x), limit {limit:.2f}x"
+            )
+            print(f"REGRESS {regressions[-1]}", file=out)
+        else:
+            print(f"ok      {tag}: mean {mean_ratio:.2f}x, min {min_ratio:.2f}x", file=out)
+    for key in sorted(base.keys() - cur.keys()):
+        print(f"note    baseline-only row (dropped or renamed?): {key}", file=out)
+    for key in sorted(cur.keys() - base.keys()):
+        print(f"note    new row with no baseline: {key}", file=out)
+    if skipped:
+        print(f"note    {skipped} pair(s) under the {floor:.0f} ns noise floor skipped", file=out)
+    return regressions
+
+
+def run(baseline_path, current_path, thresholds, fallback, floor):
+    baseline, err = load(baseline_path)
+    if err:
+        print(f"error: {err}", file=sys.stderr)
+        return 1
+    current, err = load(current_path)
+    if err:
+        print(f"error: {err}", file=sys.stderr)
+        return 1
+    if not current["records"] or is_placeholder(current):
+        print(f"error: {current_path}: current document is empty or a placeholder", file=sys.stderr)
+        return 1
+    if not baseline["records"] or is_placeholder(baseline):
+        print(
+            f"SKIP: baseline {baseline_path} is empty or a placeholder — nothing to compare "
+            "against yet (run scripts/bench.sh on a real machine to populate it)"
+        )
+        return 0
+    regressions = compare(baseline, current, thresholds, fallback, floor)
+    if regressions:
+        print(f"FAIL: {len(regressions)} regression(s) vs {baseline_path}")
+        return 1
+    print(f"PASS: no regressions vs {baseline_path}")
+    return 0
+
+
+def fixture(scale=1.0, note=None, empty=False):
+    rows = []
+    if not empty:
+        for op, shape, mean in [
+            ("matmul_simd", "M=256,K=256,N=256", 4.0e6),
+            ("gram_simd", "M=4096,N=64", 2.0e6),
+            ("select_sharded", "K=4096,R=64,shards=4", 9.0e6),
+        ]:
+            rows.append(
+                {
+                    "bench": "fixture",
+                    "op": op,
+                    "shape": shape,
+                    "mean_ns": mean * scale,
+                    "std_ns": mean * 0.02,
+                    "min_ns": mean * 0.95 * scale,
+                }
+            )
+    doc = {"schema": SCHEMA, "records": rows}
+    if note is not None:
+        doc["note"] = note
+    return doc
+
+
+def self_test():
+    import io
+
+    failures = []
+
+    def expect(label, got_regressions, want_any):
+        if bool(got_regressions) != want_any:
+            failures.append(f"{label}: want regressions={want_any}, got {got_regressions}")
+
+    sink = io.StringIO()
+    base = fixture()
+    expect(
+        "identical documents",
+        compare(base, fixture(), DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS, sink),
+        False,
+    )
+    expect(
+        "injected 2x regression",
+        compare(base, fixture(2.0), DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS, sink),
+        True,
+    )
+    expect(
+        "improvement",
+        compare(base, fixture(0.5), DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS, sink),
+        False,
+    )
+    # Mean spikes but min holds: jitter, not a regression.
+    spiky = fixture()
+    for rec in spiky["records"]:
+        rec["mean_ns"] *= 2.0
+    expect(
+        "mean-only spike",
+        compare(base, spiky, DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS, sink),
+        False,
+    )
+    # Placeholder / empty baselines must skip (exit 0) end to end.
+    import os
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        b, c = os.path.join(td, "b.json"), os.path.join(td, "c.json")
+        with open(c, "w", encoding="utf-8") as fh:
+            json.dump(fixture(), fh)
+        for label, doc in [
+            ("placeholder baseline", fixture(note="placeholder until bench.sh runs")),
+            ("empty baseline", fixture(empty=True)),
+        ]:
+            with open(b, "w", encoding="utf-8") as fh:
+                json.dump(doc, fh)
+            rc = run(b, c, DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS)
+            if rc != 0:
+                failures.append(f"{label}: want skip (exit 0), got {rc}")
+        # And a real baseline against a regressed current must exit 1.
+        with open(b, "w", encoding="utf-8") as fh:
+            json.dump(fixture(), fh)
+        with open(c, "w", encoding="utf-8") as fh:
+            json.dump(fixture(2.0), fh)
+        rc = run(b, c, DEFAULT_THRESHOLDS, DEFAULT_FALLBACK, NOISE_FLOOR_NS)
+        if rc != 1:
+            failures.append(f"regressed current: want exit 1, got {rc}")
+
+    if failures:
+        for f in failures:
+            print(f"SELF-TEST FAIL {f}", file=sys.stderr)
+        return 1
+    print("SELF-TEST PASS (6 scenarios)")
+    return 0
+
+
+def main(argv):
+    thresholds = dict(DEFAULT_THRESHOLDS)
+    fallback = DEFAULT_FALLBACK
+    floor = NOISE_FLOOR_NS
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--self-test":
+            return self_test()
+        if a == "--threshold":
+            spec = next(it, None)
+            if spec is None or "=" not in spec:
+                print("error: --threshold needs FAMILY=RATIO", file=sys.stderr)
+                return 1
+            family, _, ratio = spec.partition("=")
+            try:
+                thresholds[family] = float(ratio)
+            except ValueError:
+                print(f"error: bad ratio in {spec!r}", file=sys.stderr)
+                return 1
+        elif a == "--default-threshold":
+            v = next(it, None)
+            try:
+                fallback = float(v)
+            except (TypeError, ValueError):
+                print("error: --default-threshold needs a number", file=sys.stderr)
+                return 1
+        elif a == "--min-ns":
+            v = next(it, None)
+            try:
+                floor = float(v)
+            except (TypeError, ValueError):
+                print("error: --min-ns needs a number", file=sys.stderr)
+                return 1
+        else:
+            paths.append(a)
+    if len(paths) != 2:
+        print(__doc__.strip())
+        return 1
+    return run(paths[0], paths[1], thresholds, fallback, floor)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
