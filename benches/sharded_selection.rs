@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use bench_util::{report, smoke_mode, time_it, JsonSink};
 use graft::coordinator::{MergePolicy, PooledSelector, ShardedSelector};
-use graft::engine::{EngineBuilder, ExecShape, FaultPolicy};
+use graft::engine::{EngineBuilder, ExecShape, FaultPolicy, PivotMode};
 use graft::faults::FaultPlan;
 use graft::graft::{BudgetedRankPolicy, GraftSelector};
 use graft::linalg::{Mat, Workspace};
@@ -248,6 +248,43 @@ fn main() {
             &out[..],
             "no-carry≡legacy-carry bit-identity broke at shards={shards}"
         );
+    }
+
+    // Gradient-aware pivot rows (PR 10): GRAFT with `PivotMode::GradAware`
+    // on the serial and sharded shapes, pricing the fused-MGS re-ordering
+    // pass against the feature-order engines above.  With budget ≥ feature
+    // width the strict cut keeps the whole pivot prefix, so the ordering
+    // change cannot move membership — asserted inline as sorted-set
+    // identity against the no-pivot engine, which keeps the family honest
+    // without over-pinning the order itself.
+    for shards in [1usize, 4] {
+        let exec = if shards == 1 { ExecShape::Serial } else { ExecShape::Sharded { shards } };
+        let mut eng = EngineBuilder::new()
+            .method("graft")
+            .budget(r)
+            .epsilon(0.05)
+            .exec(exec)
+            .pivot(PivotMode::GradAware)
+            .build()
+            .expect("valid engine config");
+        let t = time_it(warm, reps, || {
+            let sel = eng.select(&view).expect("healthy selection");
+            bench_util::black_box(sel.indices.len());
+        });
+        report(&format!("grad-pivot select (shards={shards}, graft)"), t.0, t.1, t.2);
+        sink.record("select_gradpivot", &format!("{shape},shards={shards}"), t);
+        let mut plain = EngineBuilder::new()
+            .method("graft")
+            .budget(r)
+            .epsilon(0.05)
+            .exec(exec)
+            .build()
+            .expect("valid engine config");
+        let mut got = eng.select(&view).expect("healthy selection").indices.to_vec();
+        let mut want = plain.select(&view).expect("healthy selection").indices.to_vec();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "grad pivot moved membership at shards={shards} (budget ≥ width)");
     }
 
     // Fault-path rows (fault-tolerance PR): the pooled facade priced under

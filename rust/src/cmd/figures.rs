@@ -66,14 +66,26 @@ pub fn fig3(args: &Args) -> Result<()> {
         let path = format!("results/sweep_{dataset}.csv");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("{path} missing — run `graft sweep --dataset {dataset}` first"))?;
-        // Parse sweep CSV.
+        // Parse sweep CSV.  A malformed row is an error naming the file
+        // and line — a truncated sweep used to be silently skipped here,
+        // and the fits quietly ran on whatever rows survived.
         let mut rows: Vec<(String, f64, f64, f64)> = Vec::new(); // method, fraction, co2, acc
-        for line in text.lines().skip(1) {
-            let f: Vec<&str> = line.split(',').collect();
-            if f.len() < 4 {
+        for (ln, line) in text.lines().enumerate().skip(1) {
+            if line.trim().is_empty() {
                 continue;
             }
-            rows.push((f[0].into(), f[1].parse()?, f[2].parse()?, f[3].parse()?));
+            let f: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(
+                f.len() >= 4,
+                "{path}:{}: malformed sweep row {line:?} (want method,fraction,co2,acc)",
+                ln + 1
+            );
+            let num = |col: usize, what: &str| -> Result<f64> {
+                f[col]
+                    .parse()
+                    .with_context(|| format!("{path}:{}: bad {what} {:?}", ln + 1, f[col]))
+            };
+            rows.push((f[0].into(), num(1, "fraction")?, num(2, "co2")?, num(3, "acc")?));
         }
         let full_acc = rows
             .iter()

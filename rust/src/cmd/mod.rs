@@ -2,6 +2,7 @@
 //! (see DESIGN.md §4 for the experiment index).
 
 pub mod figures;
+pub mod scenarios;
 pub mod serve;
 pub mod sweep;
 pub mod tables;
@@ -18,6 +19,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "info" => info(),
         "train" => train_cmd(args),
         "sweep" => sweep::run(args),
+        "scenarios" => scenarios::run(args),
         "serve" => serve::serve(args),
         "serve-smoke" => serve::smoke(args),
         "fig2" => figures::fig2(args),
@@ -54,6 +56,14 @@ COMMANDS
                             at a time; 0 = batch selection)
   sweep                     Tables 8-14 grid: methods × fractions
                             --dataset D [--methods a,b,…] [--fractions …]
+  scenarios                 offline scenario matrix: every selector ×
+                            (imbalance, label-noise, shift, curriculum) ×
+                            exec shapes × budget fractions, as
+                            graft-scenario-v1 JSON rows
+                            [--smoke] [--seed S] [--data-seed S]
+                            [--fractions 0.1,0.25,…] [--shards N]
+                            [--axes label_noise=0.2,shift=0.5,…]
+                            [--out PATH]
   serve                     selection-as-a-service daemon (see src/serve/)
                             [--addr H:P | --uds PATH] [--addr-file PATH]
                             [--max-sessions N] [--max-frame-mb N]

@@ -1,0 +1,115 @@
+//! `graft scenarios` — run the offline scenario matrix and write the
+//! `graft-scenario-v1` document.  See `rust/src/scenarios/README.md` for
+//! the matrix layout and schema.
+//!
+//! The run is a pure function of its flags: `--smoke --seed 42` twice
+//! produces byte-identical files, which is exactly what the CI
+//! `scenario-smoke` job asserts with `diff`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::Args;
+use crate::scenarios::{run_matrix, Axis, MatrixConfig, ScenarioSink};
+
+/// Whether the bench-style smoke switch is on (`GRAFT_BENCH_SMOKE` set to
+/// anything but `0`) — the same convention the bench harness uses, so one
+/// environment variable shrinks both.
+fn smoke_env() -> bool {
+    std::env::var("GRAFT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.try_flag("smoke")? || smoke_env();
+    let mut cfg = if smoke { MatrixConfig::smoke() } else { MatrixConfig::full() };
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.gen.seed = args.u64_or("data-seed", cfg.gen.seed)?;
+    cfg.shards = args.usize_or("shards", cfg.shards)?.max(1);
+    let fractions = args.list_or("fractions", &[])?;
+    if !fractions.is_empty() {
+        cfg.fractions = fractions
+            .iter()
+            .map(|s| s.parse::<f64>().with_context(|| format!("--fractions entry '{s}'")))
+            .collect::<Result<Vec<f64>>>()?;
+    }
+    if let Some(axes) = args.value_of("axes")? {
+        cfg.axes = parse_axes(&axes)?;
+    }
+
+    let rows = run_matrix(&cfg)?;
+    let mut sink = ScenarioSink::new();
+    for row in rows {
+        sink.record(row);
+    }
+    let out = args.get_or("out", "results/scenarios.json")?;
+    let path = sink
+        .write(Path::new(&out))
+        .with_context(|| format!("writing scenario rows to {out}"))?;
+    println!(
+        "scenarios: {} rows ({} axes x {} methods x {} fractions) -> {}",
+        sink.len(),
+        cfg.axes.len(),
+        crate::scenarios::roster().len(),
+        cfg.fractions.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+/// Parse `--axes baseline,label_noise=0.2,shift=0.5` into [`Axis`] values.
+fn parse_axes(spec: &str) -> Result<Vec<Axis>> {
+    let mut axes = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, value) = match part.split_once('=') {
+            Some((n, v)) => {
+                let v: f64 = v
+                    .parse()
+                    .with_context(|| format!("--axes entry '{part}': severity must be a number"))?;
+                (n.trim(), v)
+            }
+            None => (part, 0.5),
+        };
+        axes.push(match name {
+            "baseline" => Axis::Baseline,
+            "imbalance" => Axis::Imbalance(value),
+            "label_noise" | "label-noise" => Axis::LabelNoise(value),
+            "shift" => Axis::Shift(value),
+            "curriculum" => Axis::Curriculum(value),
+            other => anyhow::bail!(
+                "--axes entry '{other}' (want baseline|imbalance|label_noise|shift|curriculum, \
+                 optionally '=SEVERITY')"
+            ),
+        });
+    }
+    anyhow::ensure!(!axes.is_empty(), "--axes parsed to an empty list");
+    Ok(axes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axes_parse_names_and_severities() {
+        let axes =
+            parse_axes("baseline, label_noise=0.2,shift=0.75,imbalance,curriculum=1").unwrap();
+        assert_eq!(
+            axes,
+            vec![
+                Axis::Baseline,
+                Axis::LabelNoise(0.2),
+                Axis::Shift(0.75),
+                Axis::Imbalance(0.5),
+                Axis::Curriculum(1.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_axes_are_typed_errors() {
+        assert!(parse_axes("bananas").is_err());
+        assert!(parse_axes("shift=xyz").is_err());
+        assert!(parse_axes(" , ").is_err());
+    }
+}

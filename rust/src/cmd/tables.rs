@@ -7,6 +7,7 @@ use anyhow::Result;
 
 use crate::config::Args;
 use crate::data::iris::iris;
+use crate::engine::EngineBuilder;
 use crate::eval::report::{save_result, Table};
 use crate::features::{AutoencoderFeatures, FeatureExtractor, IcaFeatures, SvdFeatures};
 use crate::linalg::{lstsq, subspace_similarity_normalised, Mat};
@@ -14,7 +15,7 @@ use crate::pruning;
 use crate::rng::Rng;
 use crate::runtime::{default_dir, Engine, TrainState};
 use crate::selection::cross_maxvol::CrossMaxVol;
-use crate::selection::maxvol::fast_maxvol;
+use crate::selection::BatchView;
 use crate::train::{self, TrainConfig};
 
 /// Table 2: BERT on IMDB — Full vs GRAFT vs GRAFT-Warm at 10% / 35%.
@@ -151,14 +152,34 @@ pub fn table4(args: &Args) -> Result<()> {
     let x = Mat::from_fn(ds.n, ds.d, |i, j| ds.row(i)[j] as f64);
     // Ordered feature matrix (SVD features — paper's extractor).
     let feats = SvdFeatures.extract(&x, r);
-    // Fast MaxVol.
+    // Fast MaxVol through the engine facade, like every other selection
+    // caller: typed EngineError on a bad config instead of hand-wiring
+    // the selector.
+    let mut eng = EngineBuilder::new().method("maxvol").budget(r).build()?;
+    let grads = Mat::zeros(ds.n, 1);
+    let losses = vec![0.0; ds.n];
+    let labels: Vec<i32> = ds.y.clone();
+    let preds = vec![0i32; ds.n];
+    let row_ids: Vec<usize> = (0..ds.n).collect();
+    let view = BatchView {
+        features: &feats,
+        grads: &grads,
+        losses: &losses,
+        labels: &labels,
+        preds: &preds,
+        classes: ds.classes,
+        row_ids: &row_ids,
+    };
     let t0 = Instant::now();
     let mut p_fast = Vec::new();
     for _ in 0..reps {
-        p_fast = fast_maxvol(&feats, r);
+        p_fast = eng.select(&view)?.indices.to_vec();
     }
     let fast_time = t0.elapsed().as_secs_f64() / reps as f64;
     // CrossMaxVol over the raw matrix (as teneva operates on X itself).
+    // Deliberately NOT behind the engine: select_rows returns a
+    // (rows, cols) cross skeleton of X, and column selection has no
+    // engine-facade expression.
     let cm = CrossMaxVol::default();
     let t0 = Instant::now();
     let mut p_cross = Vec::new();

@@ -23,7 +23,7 @@
 //! (O(shards·(r·E + E)) memory; the exact global ḡ is the count-weighted
 //! mean, so no extra pass over the batch is ever taken).
 
-use crate::graft::geometry::prefix_errors_core;
+use crate::graft::geometry::{grad_aware_order, prefix_errors_core};
 use crate::graft::RankDecision;
 use crate::linalg::{Mat, Workspace};
 use crate::selection::maxvol::fast_maxvol_with;
@@ -264,6 +264,13 @@ pub struct MergeCtx<'g, 'a> {
     pub grads: &'g [ShardGrads],
     /// The single top-level rank decision maker (one per coordinator).
     pub authority: Option<&'a mut dyn Selector>,
+    /// Gradient-aware pivot stage ([`PivotMode::GradAware`]): after the
+    /// feature tournament fixes winner *membership*, greedily re-order the
+    /// merged list by residual ĝ coverage before the error curve / rank
+    /// cut.  Zero gradient signal keeps the feature order bit for bit.
+    ///
+    /// [`PivotMode::GradAware`]: crate::engine::PivotMode
+    pub grad_pivot: bool,
 }
 
 /// Reusable scratch for the merge stage (one per `ShardedSelector`): the
@@ -448,17 +455,17 @@ where
     }
     // Stage 2, globally: prefix errors of ĝ over the merged order, from
     // the gradient columns that crossed the shard boundary.
-    scratch.gcols.clear();
-    for &id in out.iter() {
-        let li = scratch
-            .gmap
-            .binary_search_by_key(&id, |&(gid, _, _)| gid)
-            .expect("merged winner must come from a shard winner list");
-        let (_, s, j) = scratch.gmap[li];
-        let at = j as usize * e;
-        ctx.grads[s as usize].cols.gather_into(at, e, &mut scratch.gcols);
-    }
+    gather_cols(&scratch.gmap, ctx.grads, out, e, &mut scratch.gcols);
     let rmax = out.len();
+    // Optional gradient-aware pivot: permute the merged order by greedy
+    // residual ĝ coverage (clobbers the column buffer — re-gather before
+    // the error curve).  Membership is already fixed; only the order the
+    // rank cut truncates changes.  Zero signal keeps the feature order.
+    if ctx.grad_pivot
+        && grad_aware_order(&mut scratch.gcols, e, rmax, &scratch.gbar, &mut ws.pe_ghat, out)
+    {
+        gather_cols(&scratch.gmap, ctx.grads, out, e, &mut scratch.gcols);
+    }
     prefix_errors_core(&mut scratch.gcols, e, rmax, &scratch.gbar, &mut ws.pe_ghat, &mut ws.pe_err);
     let decision = match ctx.authority {
         Some(authority) => authority.post_merge_rank(&ws.pe_err, keep, rmax),
@@ -468,6 +475,25 @@ where
         out.truncate(d.rank.min(rmax));
     }
     decision
+}
+
+/// Gather the gradient-sketch columns for the merged winner ids, widening
+/// to f64 — the only read the merge performs from the carried boundary.
+fn gather_cols(
+    gmap: &[(usize, u32, u32)],
+    grads: &[ShardGrads],
+    ids: &[usize],
+    e: usize,
+    gcols: &mut Vec<f64>,
+) {
+    gcols.clear();
+    for &id in ids {
+        let li = gmap
+            .binary_search_by_key(&id, |&(gid, _, _)| gid)
+            .expect("merged winner must come from a shard winner list");
+        let (_, s, j) = gmap[li];
+        grads[s as usize].cols.gather_into(j as usize * e, e, gcols);
+    }
 }
 
 /// One merge node: keep at most `keep` of the candidate rows in `union`
@@ -687,12 +713,61 @@ mod tests {
             lists.iter().map(|l| l.as_slice()),
             keep,
             base,
-            MergeCtx { grads, authority },
+            MergeCtx { grads, authority, grad_pivot: false },
             &mut ws,
             &mut scratch,
             &mut out,
         );
         (out, d)
+    }
+
+    #[test]
+    fn grad_pivot_merge_keeps_membership_and_zero_signal_keeps_order() {
+        let owned = random_view(24, 6, 8, 2, 931);
+        let lists = vec![(0..12).collect::<Vec<_>>(), (12..24).collect()];
+        let ranges = [0..12usize, 12..24];
+        let grads = shard_grads(&owned.view(), &lists, &ranges);
+        let keep = 6;
+        let run = |grads: &[ShardGrads], pivot: bool| {
+            let mut ws = Ws::new();
+            let mut scratch = MergeScratch::default();
+            let mut out = Vec::new();
+            merge_winners_grad(
+                &owned.view(),
+                lists.iter().map(|l| l.as_slice()),
+                keep,
+                MergePolicy::Grad,
+                MergeCtx { grads, authority: None, grad_pivot: pivot },
+                &mut ws,
+                &mut scratch,
+                &mut out,
+            );
+            out
+        };
+        let plain = run(&grads, false);
+        let pivoted = run(&grads, true);
+        let (mut a, mut b) = (plain.clone(), pivoted.clone());
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "pivot must not change merged membership");
+
+        // Zero gradient signal: wipe the partial ḡ sums → ‖ḡ‖ = 0 → the
+        // pivot stage falls through and the feature order survives bitwise.
+        let silent: Vec<ShardGrads> = grads
+            .iter()
+            .map(|g| {
+                let mut wide = Vec::new();
+                g.cols.gather_into(0, g.cols.len(), &mut wide);
+                let mut n = ShardGrads {
+                    cols: SketchBuf::default(),
+                    gsum: vec![0.0; g.gsum.len()],
+                    count: g.count,
+                };
+                n.cols.push_row(&wide);
+                n
+            })
+            .collect();
+        assert_eq!(run(&silent, true), run(&silent, false), "zero signal keeps feature order");
     }
 
     #[test]

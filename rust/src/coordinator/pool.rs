@@ -463,6 +463,10 @@ pub struct PooledSelector {
     /// worker), so there is exactly one budget accumulator at any
     /// shard/worker count.
     authority: Option<Box<dyn Selector>>,
+    /// Gradient-aware pivot stage ([`crate::engine::PivotMode::GradAware`]):
+    /// re-order the merged winners by residual ĝ coverage before the rank
+    /// cut; forces the gradient carry even without a rank authority.
+    grad_pivot: bool,
     /// Last gradient-merge decision, for logging.
     last: Option<RankDecision>,
     scratch: MergeScratch,
@@ -508,10 +512,21 @@ impl PooledSelector {
             pool,
             merge,
             authority: None,
+            grad_pivot: false,
             last: None,
             scratch: MergeScratch::default(),
             ranges: Vec::new(),
         }
+    }
+
+    /// Enable the gradient-aware pivot stage on the merge — the pooled
+    /// twin of [`super::ShardedSelector::with_grad_pivot`]; pooled and
+    /// scoped execution apply it identically (inert at one shard, where no
+    /// merge runs).  Facade-internal plumbing; application code goes
+    /// through [`crate::engine::EngineBuilder`].
+    pub fn with_grad_pivot(mut self, on: bool) -> Self {
+        self.grad_pivot = on;
+        self
     }
 
     /// Install the top-level rank authority for the gradient-aware merge
@@ -622,13 +637,15 @@ impl PooledSelector {
         let budget = r.min(k);
         self.pool.epoch += 1;
         let epoch = self.pool.epoch;
-        // As in `ShardedSelector`: without a rank authority the grad merge
-        // is bitwise the feature-only merge, so skip the gradient carry.
-        // At one shard the inner selector applies its own policy inline
-        // (bit-identity with the scoped fast path and single-shot), so the
-        // authority is never consulted there either.
-        let want_grads =
-            self.merge.gradient_aware() && self.authority.is_some() && self.pool.shards > 1;
+        // As in `ShardedSelector`: without a rank authority (or the
+        // gradient-aware pivot stage) the grad merge is bitwise the
+        // feature-only merge, so skip the gradient carry.  At one shard
+        // the inner selector applies its own policy inline (bit-identity
+        // with the scoped fast path and single-shot), so neither the
+        // authority nor the pivot stage is consulted there.
+        let want_grads = self.merge.gradient_aware()
+            && (self.authority.is_some() || self.grad_pivot)
+            && self.pool.shards > 1;
         if self.pool.txs.is_empty() {
             // Pool already shut down: nothing to submit; `finish` fails
             // with `PoolUnavailable` instead of deadlocking (pinned by the
@@ -1037,6 +1054,7 @@ impl Pending<'_, '_> {
                 MergeCtx {
                     grads: &sel.pool.gbufs[..self.live],
                     authority: sel.authority.as_deref_mut(),
+                    grad_pivot: sel.grad_pivot,
                 },
                 ws,
                 &mut sel.scratch,

@@ -217,6 +217,12 @@ pub struct ShardedSelector {
     /// gradient-aware merge — one per coordinator, so ε/budget accounting
     /// is shard-count-independent.  `None`: feature-only rank behaviour.
     authority: Option<Box<dyn Selector>>,
+    /// Gradient-aware pivot stage ([`PivotMode::GradAware`]): re-order the
+    /// merged winners by residual ĝ coverage before the rank cut.  Forces
+    /// the gradient carry even without a rank authority.
+    ///
+    /// [`PivotMode::GradAware`]: crate::engine::PivotMode
+    grad_pivot: bool,
     /// Last gradient-merge decision, for logging.
     last: Option<RankDecision>,
     scratch: MergeScratch,
@@ -286,6 +292,7 @@ impl ShardedSelector {
             parallel: true,
             grads: (0..shards).map(|_| ShardGrads::default()).collect(),
             authority: None,
+            grad_pivot: false,
             last: None,
             workers,
             make,
@@ -361,6 +368,19 @@ impl ShardedSelector {
         self.last
     }
 
+    /// Enable the gradient-aware pivot stage
+    /// ([`crate::engine::PivotMode::GradAware`]) on the merge: the feature
+    /// tournament still fixes winner membership, but the merged order the
+    /// rank cut truncates is re-sorted by greedy residual ĝ coverage.
+    /// Requires a gradient-aware [`MergePolicy`] (the builder validates
+    /// this with a typed error) and forces the gradient carry even when no
+    /// rank authority is installed.  Facade-internal like
+    /// [`with_rank_authority`](ShardedSelector::with_rank_authority).
+    pub fn with_grad_pivot(mut self, on: bool) -> Self {
+        self.grad_pivot = on;
+        self
+    }
+
     /// Carry the gradient sketches across the shard → merge boundary as
     /// f32 (`true`) instead of the default bitwise f64 (`false`): half
     /// the boundary bytes, one rounding per element.  The merged pivot
@@ -430,10 +450,12 @@ impl Selector for ShardedSelector {
         let live = self.ranges.len();
         let budget = r.min(k);
         // Gradient context is only worth carrying when someone will read
-        // it: without a rank authority the grad merge is provably bitwise
-        // the feature-only merge (pinned in merge.rs tests), so skip the
-        // per-shard sketch copies and the stage-2 error recomputation.
-        let want_grads = self.merge.gradient_aware() && self.authority.is_some();
+        // it: without a rank authority (or the gradient-aware pivot stage)
+        // the grad merge is provably bitwise the feature-only merge
+        // (pinned in merge.rs tests), so skip the per-shard sketch copies
+        // and the stage-2 error recomputation.
+        let want_grads =
+            self.merge.gradient_aware() && (self.authority.is_some() || self.grad_pivot);
         if self.parallel && k >= SHARD_PAR_MIN_K {
             std::thread::scope(|scope| {
                 for (s, ((w, g), range)) in self.workers[..live]
@@ -471,6 +493,7 @@ impl Selector for ShardedSelector {
                 MergeCtx {
                     grads: &self.grads[..live],
                     authority: self.authority.as_deref_mut(),
+                    grad_pivot: self.grad_pivot,
                 },
                 ws,
                 &mut self.scratch,

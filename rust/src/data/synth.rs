@@ -34,6 +34,21 @@ pub struct SynthSpec {
     /// Fraction of labels flipped uniformly (annotation noise — keeps the
     /// task from being linearly saturated and differentiates selectors).
     pub label_noise: f64,
+    /// Class imbalance: 0 = balanced (exactly n/classes rows each, the
+    /// legacy generator bit for bit); λ ∈ (0, 1) gives class c a geometric
+    /// weight (1 − λ)^c, rounded to the same total n by largest remainder
+    /// (every class keeps ≥ 1 row).  Deterministic — no extra RNG draws.
+    pub imbalance: f64,
+    /// Mid-stream distribution shift: 0 = off; s ∈ (0, 1] translates every
+    /// row at stream position ≥ ⌊n·s⌋ by one seeded random direction
+    /// (drawn after all legacy draws, so s = 0 is bit-identical).
+    pub shift_point: f64,
+    /// Curriculum ordering: 0 = shuffled stream order (legacy, bitwise);
+    /// c ∈ (0, 1] re-sorts rows by a blend of their shuffled position and
+    /// their difficulty rank (distance to own-class centroid) — c = 1 is
+    /// pure easy→hard.  A pure permutation: the row multiset is unchanged
+    /// and no RNG is drawn.
+    pub curriculum: f64,
     pub seed: u64,
 }
 
@@ -44,27 +59,33 @@ pub fn spec(name: &str) -> Option<SynthSpec> {
     let s = match name {
         "cifar10" => SynthSpec {
             name: "cifar10", n: 12_800, d: 256, classes: 10, intra_rank: 8, modes: 32,
-            separation: 1.0, noise: 1.0, redundancy: 0.3, label_noise: 0.01, seed: 0xC1FA_0010,
+            separation: 1.0, noise: 1.0, redundancy: 0.3, label_noise: 0.01,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0xC1FA_0010,
         },
         "cifar100" => SynthSpec {
             name: "cifar100", n: 12_800, d: 256, classes: 100, intra_rank: 4, modes: 8,
-            separation: 0.9, noise: 1.0, redundancy: 0.25, label_noise: 0.02, seed: 0xC1FA_0100,
+            separation: 0.9, noise: 1.0, redundancy: 0.25, label_noise: 0.02,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0xC1FA_0100,
         },
         "fashionmnist" => SynthSpec {
             name: "fashionmnist", n: 12_800, d: 196, classes: 10, intra_rank: 6, modes: 24,
-            separation: 1.15, noise: 1.0, redundancy: 0.35, label_noise: 0.01, seed: 0xFA50_0010,
+            separation: 1.15, noise: 1.0, redundancy: 0.35, label_noise: 0.01,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0xFA50_0010,
         },
         "tinyimagenet" => SynthSpec {
             name: "tinyimagenet", n: 12_800, d: 256, classes: 200, intra_rank: 3, modes: 5,
-            separation: 0.82, noise: 1.0, redundancy: 0.2, label_noise: 0.02, seed: 0x7191_0200,
+            separation: 0.82, noise: 1.0, redundancy: 0.2, label_noise: 0.02,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0x7191_0200,
         },
         "caltech256" => SynthSpec {
             name: "caltech256", n: 10_280, d: 256, classes: 257, intra_rank: 3, modes: 4,
-            separation: 0.85, noise: 1.0, redundancy: 0.2, label_noise: 0.02, seed: 0xCA17_0257,
+            separation: 0.85, noise: 1.0, redundancy: 0.2, label_noise: 0.02,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0xCA17_0257,
         },
         "dermamnist" => SynthSpec {
             name: "dermamnist", n: 7_000, d: 147, classes: 7, intra_rank: 5, modes: 26,
-            separation: 0.9, noise: 1.0, redundancy: 0.3, label_noise: 0.02, seed: 0xDE3A_0007,
+            separation: 0.9, noise: 1.0, redundancy: 0.3, label_noise: 0.02,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 0xDE3A_0007,
         },
         _ => return None,
     };
@@ -114,14 +135,14 @@ pub fn synth_dataset(spec: &SynthSpec) -> Dataset {
         bases.push(b);
     }
 
-    let per_class = spec.n / spec.classes;
-    let n = per_class * spec.classes;
+    let counts = class_counts_for(spec);
+    let n: usize = counts.iter().sum();
     let mut x = vec![0.0f32; n * d];
     let mut y = vec![0i32; n];
     let mut idx = 0usize;
     for c in 0..spec.classes {
         let mut class_rows: Vec<usize> = Vec::new();
-        for _k in 0..per_class {
+        for _k in 0..counts[c] {
             let dup = !class_rows.is_empty() && rng.uniform() < spec.redundancy;
             let mut row = vec![0.0f64; d];
             if dup {
@@ -167,7 +188,128 @@ pub fn synth_dataset(spec: &SynthSpec) -> Dataset {
             }
         }
     }
+    if spec.curriculum > 0.0 {
+        curriculum_reorder(&mut xs, &mut ys, n, d, spec.classes, spec.curriculum);
+    }
+    if spec.shift_point > 0.0 {
+        // One seeded direction, drawn after every legacy draw — the RNG
+        // stream up to here (and therefore the pre-shift prefix of the
+        // dataset) is bit-identical to the shift_point = 0 generator.
+        let cut = ((n as f64) * spec.shift_point.min(1.0)).floor() as usize;
+        let mut dir = rng.normals(d);
+        let scale = (d as f64).sqrt() / crate::linalg::norm2(&dir).max(1e-12);
+        for v in &mut dir {
+            *v *= scale;
+        }
+        for i in cut..n {
+            for t in 0..d {
+                xs[i * d + t] = (xs[i * d + t] as f64 + dir[t]) as f32;
+            }
+        }
+    }
     Dataset::new(spec.name, xs, ys, d, spec.classes)
+}
+
+/// Per-class row counts for `spec`: exactly `n / classes` each at
+/// `imbalance = 0` (the legacy balanced generator); otherwise geometric
+/// weights (1 − λ)^c rounded to the same total by largest remainder, with
+/// every class kept ≥ 1 row.  Deterministic — draws no RNG.
+pub fn class_counts_for(spec: &SynthSpec) -> Vec<usize> {
+    let per_class = spec.n / spec.classes;
+    let total = per_class * spec.classes;
+    if spec.imbalance <= 0.0 {
+        return vec![per_class; spec.classes];
+    }
+    let lambda = spec.imbalance.min(0.999);
+    let weights: Vec<f64> = (0..spec.classes).map(|c| (1.0 - lambda).powi(c as i32)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / wsum).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut have: usize = counts.iter().sum();
+    // Largest fractional remainder first (ties → lower class index).
+    let mut order: Vec<usize> = (0..spec.classes).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    let mut oi = 0usize;
+    while have < total {
+        counts[order[oi % spec.classes]] += 1;
+        have += 1;
+        oi += 1;
+    }
+    // Tail classes rounded to zero borrow a row from the largest class.
+    for c in 0..spec.classes {
+        if counts[c] == 0 {
+            let big = (0..spec.classes).max_by_key(|&i| counts[i]).unwrap();
+            if counts[big] > 1 {
+                counts[big] -= 1;
+                counts[c] = 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Stable easy→hard re-sort of the shuffled stream: difficulty is the
+/// squared distance to the own-class centroid in the normalised feature
+/// space (label-noise rows land far from "their" centroid, i.e. late), and
+/// the sort key blends difficulty rank with shuffled position by `w` —
+/// a pure permutation, drawing no RNG.
+fn curriculum_reorder(
+    xs: &mut Vec<f32>,
+    ys: &mut Vec<i32>,
+    n: usize,
+    d: usize,
+    classes: usize,
+    w: f64,
+) {
+    let mut cents = vec![0.0f64; classes * d];
+    let mut ccount = vec![0usize; classes];
+    for i in 0..n {
+        let c = ys[i] as usize;
+        ccount[c] += 1;
+        for t in 0..d {
+            cents[c * d + t] += xs[i * d + t] as f64;
+        }
+    }
+    for c in 0..classes {
+        let m = ccount[c].max(1) as f64;
+        for t in 0..d {
+            cents[c * d + t] /= m;
+        }
+    }
+    let mut diff = vec![0.0f64; n];
+    for i in 0..n {
+        let c = ys[i] as usize;
+        let mut s = 0.0;
+        for t in 0..d {
+            let v = xs[i * d + t] as f64 - cents[c * d + t];
+            s += v * v;
+        }
+        diff[i] = s;
+    }
+    let mut by_diff: Vec<usize> = (0..n).collect();
+    by_diff.sort_by(|&a, &b| diff[a].total_cmp(&diff[b]).then(a.cmp(&b)));
+    let mut rank = vec![0usize; n];
+    for (r, &i) in by_diff.iter().enumerate() {
+        rank[i] = r;
+    }
+    let w = w.min(1.0);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let ka = w * rank[a] as f64 + (1.0 - w) * a as f64;
+        let kb = w * rank[b] as f64 + (1.0 - w) * b as f64;
+        ka.total_cmp(&kb).then(a.cmp(&b))
+    });
+    let mut xs2 = vec![0.0f32; n * d];
+    let mut ys2 = vec![0i32; n];
+    for (new, &old) in order.iter().enumerate() {
+        xs2[new * d..(new + 1) * d].copy_from_slice(&xs[old * d..(old + 1) * d]);
+        ys2[new] = ys[old];
+    }
+    *xs = xs2;
+    *ys = ys2;
 }
 
 fn normalise_cols(x: &mut [f32], n: usize, d: usize) {
@@ -196,7 +338,8 @@ mod tests {
     fn small_spec() -> SynthSpec {
         SynthSpec {
             name: "test", n: 400, d: 32, classes: 4, intra_rank: 3, modes: 2,
-            separation: 2.0, noise: 1.0, redundancy: 0.3, label_noise: 0.0, seed: 99,
+            separation: 2.0, noise: 1.0, redundancy: 0.3, label_noise: 0.0,
+            imbalance: 0.0, shift_point: 0.0, curriculum: 0.0, seed: 99,
         }
     }
 
@@ -269,6 +412,91 @@ mod tests {
         }
         let acc = correct as f64 / te.n as f64;
         assert!(acc > 0.6, "nearest-centroid acc {acc}");
+    }
+
+    #[test]
+    fn imbalance_knob_skews_counts_deterministically() {
+        let mut s = small_spec();
+        s.imbalance = 0.4;
+        let counts = class_counts_for(&s);
+        assert_eq!(counts.iter().sum::<usize>(), 400, "{counts:?}");
+        assert!(counts.windows(2).all(|w| w[0] >= w[1]), "non-increasing: {counts:?}");
+        assert!(counts[0] > counts[s.classes - 1], "head must dominate tail: {counts:?}");
+        assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+        let ds = synth_dataset(&s);
+        assert_eq!(ds.class_counts(), counts, "generator honours the profile");
+        let ds2 = synth_dataset(&s);
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+        // knob = 0 keeps the balanced legacy profile.
+        assert_eq!(class_counts_for(&small_spec()), vec![100; 4]);
+    }
+
+    #[test]
+    fn shift_knob_leaves_pre_shift_prefix_bit_identical() {
+        let base = synth_dataset(&small_spec());
+        let mut s = small_spec();
+        s.shift_point = 0.5;
+        let shifted = synth_dataset(&s);
+        let (d, cut) = (base.d, 200usize);
+        assert_eq!(base.y, shifted.y, "labels untouched by the shift");
+        assert_eq!(
+            &base.x[..cut * d],
+            &shifted.x[..cut * d],
+            "rows before the shift point are bit-identical to knob = 0"
+        );
+        assert!(
+            base.x[cut * d..] != shifted.x[cut * d..],
+            "rows after the shift point must move"
+        );
+        // Same seed → same shifted dataset.
+        let again = synth_dataset(&s);
+        assert_eq!(shifted.x, again.x);
+    }
+
+    #[test]
+    fn curriculum_knob_is_a_pure_difficulty_sort() {
+        let base = synth_dataset(&small_spec());
+        let mut s = small_spec();
+        s.curriculum = 1.0;
+        let cur = synth_dataset(&s);
+        // Pure permutation: same row multiset (compare via sorted row keys).
+        let key = |ds: &crate::data::Dataset, i: usize| {
+            let mut k: Vec<u32> = ds.row(i).iter().map(|v| v.to_bits()).collect();
+            k.push(ds.y[i] as u32);
+            k
+        };
+        let mut a: Vec<Vec<u32>> = (0..base.n).map(|i| key(&base, i)).collect();
+        let mut b: Vec<Vec<u32>> = (0..cur.n).map(|i| key(&cur, i)).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "curriculum must permute, not alter, the rows");
+        // Easy→hard: recompute the difficulty proxy and check monotone.
+        let d = cur.d;
+        let mut cents = vec![vec![0.0f64; d]; cur.classes];
+        let counts = cur.class_counts();
+        for i in 0..cur.n {
+            let c = cur.y[i] as usize;
+            for (t, &v) in cur.row(i).iter().enumerate() {
+                cents[c][t] += v as f64;
+            }
+        }
+        for (c, cent) in cents.iter_mut().enumerate() {
+            for v in cent.iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let diff = |i: usize| -> f64 {
+            let c = cur.y[i] as usize;
+            cur.row(i)
+                .iter()
+                .zip(&cents[c])
+                .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                .sum()
+        };
+        let violations = (1..cur.n).filter(|&i| diff(i) + 1e-9 < diff(i - 1)).count();
+        assert_eq!(violations, 0, "curriculum = 1 must be sorted easy→hard");
+        assert!(base.x != cur.x, "ordering actually changed");
     }
 
     #[test]

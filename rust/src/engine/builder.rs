@@ -105,6 +105,25 @@ impl ExecShape {
     }
 }
 
+/// How the merged/selected pivot order is arranged before the rank cut
+/// (GRAFT methods only; other methods have no pivot stage to re-order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PivotMode {
+    /// Feature-volume order: the Fast MaxVol pivot sequence as-is (the
+    /// paper's Stage 1 and the historical behaviour).
+    #[default]
+    FeatureVol,
+    /// Gradient-aware order: MaxVol still fixes winner *membership*, but
+    /// the order the rank cut truncates is greedily re-sorted by residual
+    /// ‖ĝ‖ coverage (`graft::geometry::grad_aware_order`), so a given
+    /// budget keeps the prefix that best approximates the batch-mean
+    /// gradient.  With zero gradient signal the feature order is kept bit
+    /// for bit.  At `shards > 1` this requires the gradient-aware merge
+    /// ([`EngineError::PivotNeedsGradMerge`] otherwise); non-GRAFT methods
+    /// are rejected with [`EngineError::PivotNeedsGraft`].
+    GradAware,
+}
+
 /// How the subset size per batch is decided (GRAFT's Stage 2; ignored by
 /// methods without a rank stage).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -156,6 +175,15 @@ pub enum EngineError {
     /// survive incremental reservoir maintenance (streaming supports the
     /// MaxVol family: `graft`, `graft-warm`, `maxvol`, `fast-maxvol`).
     StreamUnsupportedMethod { method: String },
+    /// `pivot`: [`PivotMode::GradAware`] requested for a method without a
+    /// gradient-aware pivot stage (only GRAFT methods have one).
+    PivotNeedsGraft { method: String },
+    /// `pivot`: [`PivotMode::GradAware`] at `shards > 1` with a merge
+    /// policy that carries no gradient context across the shard boundary
+    /// (the pivot stage re-orders at the merge, so it needs `merge grad`).
+    PivotNeedsGradMerge { merge: String },
+    /// `explore`: hybrid explore fraction outside [0, 1] or not finite.
+    ExploreOutOfRange { explore: f64 },
 }
 
 impl EngineError {
@@ -173,6 +201,9 @@ impl EngineError {
             EngineError::ZeroBudget => "budget",
             EngineError::StreamNeedsBudget => "budget",
             EngineError::StreamUnsupportedMethod { .. } => "method",
+            EngineError::PivotNeedsGraft { .. } => "pivot",
+            EngineError::PivotNeedsGradMerge { .. } => "pivot",
+            EngineError::ExploreOutOfRange { .. } => "explore",
         }
     }
 }
@@ -213,6 +244,19 @@ impl std::fmt::Display for EngineError {
                 "method: '{method}' cannot stream (its criterion does not survive incremental \
                  reservoir maintenance); streaming supports graft|graft-warm|maxvol|fast-maxvol"
             ),
+            EngineError::PivotNeedsGraft { method } => write!(
+                f,
+                "pivot: gradient-aware pivot ordering re-orders GRAFT's rank-cut prefix; \
+                 method '{method}' has no pivot stage (use graft|graft-warm)"
+            ),
+            EngineError::PivotNeedsGradMerge { merge } => write!(
+                f,
+                "pivot: gradient-aware pivot at shards > 1 re-orders at the merge, which \
+                 needs the gradient context of the grad merge; merge '{merge}' carries none"
+            ),
+            EngineError::ExploreOutOfRange { explore } => {
+                write!(f, "explore: {explore} outside the valid range [0, 1]")
+            }
         }
     }
 }
@@ -276,6 +320,8 @@ pub struct EngineBuilder {
     fault: FaultPolicy,
     deadline: Option<Duration>,
     sketch_f32: bool,
+    pivot: PivotMode,
+    explore: Option<f64>,
 }
 
 impl Default for EngineBuilder {
@@ -301,6 +347,8 @@ impl EngineBuilder {
             fault: FaultPolicy::Fail,
             deadline: None,
             sketch_f32: false,
+            pivot: PivotMode::FeatureVol,
+            explore: None,
         }
     }
 
@@ -416,6 +464,30 @@ impl EngineBuilder {
         self
     }
 
+    /// How the rank-cut prefix is ordered (GRAFT methods only; see
+    /// [`PivotMode`]).  [`PivotMode::GradAware`] with a non-GRAFT method
+    /// fails `build()` with [`EngineError::PivotNeedsGraft`]; at
+    /// `shards > 1` it additionally requires the gradient-aware merge
+    /// ([`EngineError::PivotNeedsGradMerge`]).  Streaming sessions keep
+    /// the feature order with a note (reservoir maintenance is
+    /// incremental; there is no merged union to re-sort).
+    pub fn pivot(mut self, pivot: PivotMode) -> Self {
+        self.pivot = pivot;
+        self
+    }
+
+    /// Explore fraction φ ∈ [0, 1] for the `hybrid` method: the seeded
+    /// random share mixed into the MaxVol subset
+    /// ([`selection::hybrid::Hybrid`]).  φ = 0 is pure Fast MaxVol bit
+    /// for bit; φ = 1 is the seeded-random baseline bit for bit.  Unset
+    /// = [`selection::hybrid::DEFAULT_EXPLORE`]; out-of-range values
+    /// fail `build()` with [`EngineError::ExploreOutOfRange`].  Inert
+    /// (with a note) for every other method.
+    pub fn explore_fraction(mut self, explore: f64) -> Self {
+        self.explore = Some(explore);
+        self
+    }
+
     /// Legacy knob: shard count (`--shards`).
     pub fn shards(mut self, shards: usize) -> Self {
         let (_, pool_workers, overlap) = self.knobs();
@@ -509,12 +581,21 @@ impl EngineBuilder {
         if self.budget == Some(0) {
             return Err(EngineError::ZeroBudget);
         }
+        if let Some(explore) = self.explore {
+            if !explore.is_finite() || !(0.0..=1.0).contains(&explore) {
+                return Err(EngineError::ExploreOutOfRange { explore });
+            }
+        }
 
         // -- names -------------------------------------------------------
         let is_graft = is_graft_method(&self.method);
         let probe = if is_graft { None } else { selection::by_name(&self.method, 0) };
         if !is_graft && probe.is_none() {
             return Err(EngineError::UnknownMethod { method: self.method.clone() });
+        }
+        let grad_pivot = self.pivot == PivotMode::GradAware;
+        if grad_pivot && !is_graft {
+            return Err(EngineError::PivotNeedsGraft { method: self.method.clone() });
         }
         let extractor: Option<Box<dyn FeatureExtractor>> = match &self.extractor {
             Some(name) => Some(
@@ -565,6 +646,15 @@ impl EngineBuilder {
             s => s,
         };
         let sharded = shape.shards() > 1;
+        if grad_pivot && sharded && !merge.gradient_aware() {
+            return Err(EngineError::PivotNeedsGradMerge { merge: merge.name().to_string() });
+        }
+        if self.explore.is_some() && self.method != "hybrid" {
+            notes.push(format!(
+                "explore fraction only steers the 'hybrid' method; method '{}' ignores it",
+                self.method
+            ));
+        }
         if is_graft && sharded && !merge.gradient_aware() {
             if let RankMode::Adaptive { .. } = self.rank {
                 notes.push(format!(
@@ -598,12 +688,20 @@ impl EngineBuilder {
                 RankMode::Adaptive { epsilon } => BudgetedRankPolicy::adaptive(epsilon, fraction),
                 RankMode::Strict => BudgetedRankPolicy::strict(base_eps),
             };
+            // On the single-instance shapes (serial, one-shard pool) the
+            // gradient-aware pivot re-orders inside the selector itself;
+            // at shards > 1 the per-shard instances stay feature-ordered
+            // (their full prefix feeds the merge union) and the re-order
+            // happens once, at the merge (`MergeCtx::grad_pivot`).
             let make = move |_si: usize| -> Box<dyn Selector> {
-                Box::new(GraftSelector::new(if sharded {
-                    BudgetedRankPolicy::strict(eps)
-                } else {
-                    run_policy()
-                }))
+                Box::new(
+                    GraftSelector::new(if sharded {
+                        BudgetedRankPolicy::strict(eps)
+                    } else {
+                        run_policy()
+                    })
+                    .with_grad_pivot(grad_pivot && !sharded),
+                )
             };
             // Adaptive-only carry: a strict authority's post-merge cut is
             // provably the identity (the feature-only merge already
@@ -615,16 +713,24 @@ impl EngineBuilder {
             // rank accounting comes from the engine's StrictRankTally.
             let authority = (sharded && merge.gradient_aware() && adaptive)
                 .then(|| Box::new(GraftSelector::new(run_policy())) as Box<dyn Selector>);
-            build_exec(shape, merge, authority, self.sketch_f32, make)
+            build_exec(shape, merge, authority, self.sketch_f32, grad_pivot, make)
         } else {
-            let (seed, method) = (self.seed, self.method.clone());
+            let (seed, method, explore) = (self.seed, self.method.clone(), self.explore);
             let make = move |si: usize| -> Box<dyn Selector> {
                 // Shard 0 keeps the base seed so every shape matches the
                 // serial construction of seeded methods.
                 let wseed = seed ^ (si as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                // `by_name` can only hand out the default explore
+                // fraction, so an explicit knob constructs the hybrid
+                // directly (same seed derivation either way).
+                if method == "hybrid" {
+                    if let Some(phi) = explore {
+                        return Box::new(selection::hybrid::Hybrid::new(wseed, phi));
+                    }
+                }
                 selection::by_name(&method, wseed).expect("method validated above")
             };
-            build_exec(shape, merge, None, self.sketch_f32, make)
+            build_exec(shape, merge, None, self.sketch_f32, false, make)
         };
         // Administrative strict accounting for the shapes that used to get
         // it from the (now-removed) strict rank authority.
@@ -694,6 +800,11 @@ impl EngineBuilder {
         if self.budget == Some(0) {
             return Err(EngineError::ZeroBudget);
         }
+        if let Some(explore) = self.explore {
+            if !explore.is_finite() || !(0.0..=1.0).contains(&explore) {
+                return Err(EngineError::ExploreOutOfRange { explore });
+            }
+        }
         let budget = self.budget.ok_or(EngineError::StreamNeedsBudget)?;
 
         // -- names -------------------------------------------------------
@@ -705,6 +816,9 @@ impl EngineBuilder {
             } else {
                 EngineError::StreamUnsupportedMethod { method: self.method }
             });
+        }
+        if self.pivot == PivotMode::GradAware && !is_graft {
+            return Err(EngineError::PivotNeedsGraft { method: self.method });
         }
         let extractor: Option<Box<dyn FeatureExtractor>> = match &self.extractor {
             Some(name) => Some(
@@ -731,6 +845,21 @@ impl EngineBuilder {
             notes.push(
                 "streaming sessions run serial on the caller's thread (incremental \
                  reservoir maintenance is sequential); requested execution shape ignored"
+                    .to_string(),
+            );
+        }
+        if self.pivot == PivotMode::GradAware {
+            notes.push(
+                "streaming keeps the feature-volume pivot order (the reservoir is \
+                 maintained incrementally; there is no merged union to re-sort); \
+                 gradient-aware pivot ignored"
+                    .to_string(),
+            );
+        }
+        if self.explore.is_some() {
+            notes.push(
+                "explore fraction only steers the 'hybrid' method, which cannot stream; \
+                 ignored"
                     .to_string(),
             );
         }
@@ -783,6 +912,7 @@ fn build_exec(
     merge: MergePolicy,
     authority: Option<Box<dyn Selector>>,
     sketch_f32: bool,
+    grad_pivot: bool,
     mut make: impl FnMut(usize) -> Box<dyn Selector> + Send + 'static,
 ) -> (Exec, Option<Box<dyn FnMut(usize) -> Box<dyn Selector> + Send>>) {
     match shape {
@@ -791,8 +921,9 @@ fn build_exec(
             (Exec::Serial(sel), Some(Box::new(make)))
         }
         ExecShape::Sharded { shards } => {
-            let mut sel =
-                ShardedSelector::from_factory(shards, merge, make).with_f32_sketches(sketch_f32);
+            let mut sel = ShardedSelector::from_factory(shards, merge, make)
+                .with_f32_sketches(sketch_f32)
+                .with_grad_pivot(grad_pivot);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }
@@ -800,7 +931,8 @@ fn build_exec(
         }
         ExecShape::Pooled { shards, workers, .. } => {
             let mut sel = PooledSelector::from_factory(shards, workers, merge, make)
-                .with_f32_sketches(sketch_f32);
+                .with_f32_sketches(sketch_f32)
+                .with_grad_pivot(grad_pivot);
             if let Some(a) = authority {
                 sel = sel.with_rank_authority(a);
             }

@@ -89,7 +89,7 @@ mod builder;
 mod select;
 mod stream;
 
-pub use builder::{default_merge, EngineBuilder, EngineError, ExecShape, RankMode};
+pub use builder::{default_merge, EngineBuilder, EngineError, ExecShape, PivotMode, RankMode};
 pub use select::{Selection, SelectionEngine};
 pub use stream::{StreamSnapshot, StreamingEngine};
 

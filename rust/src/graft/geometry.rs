@@ -60,6 +60,84 @@ pub(crate) fn prefix_errors_core(
     }
 }
 
+/// Greedy gradient-aware pivot re-ordering
+/// ([`PivotMode::GradAware`](crate::engine::PivotMode)): step j picks the
+/// remaining winner column whose direction — after orthogonalisation
+/// against the already-placed prefix — captures the largest share of the
+/// remaining ĝ residual, then sweeps that component out of the rest.  The
+/// winner *membership* is untouched (the feature-volume tournament already
+/// fixed it); only the order the rank cut truncates is changed, so at a
+/// given budget the kept prefix covers as much of ĝ as the greedy can.
+///
+/// `cols` holds the `r` candidate gradient columns (each length `e`,
+/// contiguous, column j = winner `order[j]`); both are permuted in place.
+/// The column buffer is **clobbered** (orthonormalised) — re-gather the
+/// raw gradient rows before computing an error curve over the new order.
+///
+/// Returns `false` without touching anything when the gradient signal is
+/// zero (‖ḡ‖ < 1e-12, the same threshold [`prefix_errors_core`] uses) —
+/// the incoming feature-volume order is kept bit for bit, which is the
+/// GradAware ≡ FeatureVol zero-signal fallback the engine tests pin.
+pub(crate) fn grad_aware_order(
+    cols: &mut [f64],
+    e: usize,
+    r: usize,
+    gbar: &[f64],
+    resid: &mut Vec<f64>,
+    order: &mut [usize],
+) -> bool {
+    use crate::linalg::{axpy_lanes, dot, norm2};
+    debug_assert!(cols.len() >= r * e, "need {r}×{e} columns, got {}", cols.len());
+    debug_assert!(order.len() >= r);
+    let nrm = norm2(gbar);
+    if nrm < 1e-12 || e == 0 || r == 0 {
+        return false;
+    }
+    resid.clear();
+    resid.extend(gbar.iter().map(|x| x / nrm));
+    for j in 0..r {
+        // Columns j..r are already orthogonal to the placed prefix, so the
+        // score is just the normalised projection onto the residual.
+        let (mut best, mut bestscore) = (j, -1.0f64);
+        for t in j..r {
+            let v = &cols[t * e..(t + 1) * e];
+            let n = norm2(v);
+            let score = if n < 1e-12 { 0.0 } else { (dot(v, resid) / n).abs() };
+            if score > bestscore {
+                best = t;
+                bestscore = score;
+            }
+        }
+        if best != j {
+            for t in 0..e {
+                cols.swap(j * e + t, best * e + t);
+            }
+            order.swap(j, best);
+        }
+        // Normalise the placed column; a dependent (numerically zero)
+        // column places as-is and captures nothing.
+        let n = norm2(&cols[j * e..(j + 1) * e]);
+        if n < 1e-12 {
+            continue;
+        }
+        for v in cols[j * e..(j + 1) * e].iter_mut() {
+            *v /= n;
+        }
+        // Gram–Schmidt sweep: the remaining columns and the residual both
+        // lose their component along the placed direction.
+        let (head, tail) = cols.split_at_mut((j + 1) * e);
+        let q = &head[j * e..];
+        for t in 0..(r - j - 1) {
+            let v = &mut tail[t * e..(t + 1) * e];
+            let c = dot(v, q);
+            axpy_lanes(v, -c, q);
+        }
+        let c = dot(resid, q);
+        axpy_lanes(resid, -c, q);
+    }
+    true
+}
+
 /// Accumulate the per-row sum of `grads` rows `range` into `out`
 /// (cleared/zeroed first): the shard-local partial ḡ·count sum that
 /// crosses the shard → merge boundary.  The exact global ḡ is the

@@ -20,7 +20,7 @@ pub use alignment::AlignmentStats;
 pub use geometry::prefix_projection_errors;
 pub use rank::{choose_rank, BudgetedRankPolicy, RankDecision, RankStats, StrictRankTally};
 
-use geometry::{grad_sum_into, prefix_errors_core};
+use geometry::{grad_aware_order, grad_sum_into, prefix_errors_core};
 
 use crate::linalg::Workspace;
 use crate::selection::maxvol::fast_maxvol_with;
@@ -34,11 +34,26 @@ pub struct GraftSelector {
     pub policy: BudgetedRankPolicy,
     /// Last decision, for logging.
     pub last: Option<RankDecision>,
+    /// Gradient-aware pivot stage ([`PivotMode::GradAware`]): re-order the
+    /// MaxVol winners by greedy residual-‖ĝ‖ coverage before the rank cut.
+    ///
+    /// [`PivotMode::GradAware`]: crate::engine::PivotMode
+    grad_pivot: bool,
 }
 
 impl GraftSelector {
     pub fn new(policy: BudgetedRankPolicy) -> Self {
-        GraftSelector { policy, last: None }
+        GraftSelector { policy, last: None, grad_pivot: false }
+    }
+
+    /// Enable the gradient-aware pivot stage: MaxVol still fixes winner
+    /// *membership*, but [`geometry::grad_aware_order`] re-orders them so
+    /// the prefix the rank cut keeps covers as much of ĝ as the greedy
+    /// can.  With zero gradient signal the feature order is kept bit for
+    /// bit (the fallback the engine tests pin).
+    pub fn with_grad_pivot(mut self, on: bool) -> Self {
+        self.grad_pivot = on;
+        self
     }
 }
 
@@ -79,6 +94,25 @@ impl Selector for GraftSelector {
         ws.pe_g.clear();
         for &i in &order {
             ws.pe_g.extend_from_slice(view.grads.row(i));
+        }
+        // Optional gradient-aware pivot: greedily permute the winners by
+        // residual ĝ coverage (clobbers the column buffer, so re-gather
+        // before the error curve).  Zero gradient signal falls through
+        // with the feature order untouched.
+        if self.grad_pivot
+            && grad_aware_order(
+                &mut ws.pe_g,
+                e,
+                rmax,
+                &ws.pe_gbar,
+                &mut ws.pe_ghat,
+                &mut order,
+            )
+        {
+            ws.pe_g.clear();
+            for &i in &order {
+                ws.pe_g.extend_from_slice(view.grads.row(i));
+            }
         }
         prefix_errors_core(&mut ws.pe_g, e, rmax, &ws.pe_gbar, &mut ws.pe_ghat, &mut ws.pe_err);
         // Stage 2: dynamic rank.
@@ -204,6 +238,108 @@ mod tests {
         let sel = s.select(&view, 8);
         assert!(sel.len() <= 4, "low-rank gradients → small subset, got {}", sel.len());
         assert!(s.last.unwrap().error <= 0.05 + 1e-9);
+    }
+
+    #[test]
+    fn grad_pivot_zero_signal_is_feature_order_bitwise() {
+        // All-zero gradient sketches → ‖ḡ‖ = 0 → the pivot stage must fall
+        // through and leave the feature-volume order untouched, bit for
+        // bit, at every budget.
+        let mut rng = Rng::new(9);
+        let k = 40;
+        let features = Mat::from_fn(k, 8, |_, _| rng.normal());
+        let grads = Mat::from_fn(k, 12, |_, _| 0.0);
+        let losses: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+        let labels = vec![0i32; k];
+        let preds = vec![0i32; k];
+        let ids: Vec<usize> = (0..k).collect();
+        let view = BatchView {
+            features: &features,
+            grads: &grads,
+            losses: &losses,
+            labels: &labels,
+            preds: &preds,
+            classes: 1,
+            row_ids: &ids,
+        };
+        for r in [2usize, 5, 8] {
+            let plain =
+                GraftSelector::new(BudgetedRankPolicy::strict(0.05)).select(&view, r);
+            let pivoted = GraftSelector::new(BudgetedRankPolicy::strict(0.05))
+                .with_grad_pivot(true)
+                .select(&view, r);
+            assert_eq!(plain, pivoted, "r={r}");
+        }
+    }
+
+    #[test]
+    fn grad_pivot_error_dominates_feature_order_at_every_prefix() {
+        // Planted scenario: each row's gradient sketch is a scaled basis
+        // vector (low-rank + orthogonal columns; the "noisy" rows get their
+        // own large-magnitude basis dims, mimicking label-noise gradients).
+        // With mutually orthogonal columns the prefix capture of any order
+        // is a plain sum of per-column captures, so the greedy's descending
+        // sort dominates every other order at every prefix — the headline
+        // guarantee, checked here over the full error curves.
+        let mut rng = Rng::new(15);
+        let k = 32;
+        let e = 16;
+        let features = Mat::from_fn(k, 8, |_, _| rng.normal());
+        let grads = Mat::from_fn(k, e, |i, j| {
+            let dim = i % 6; // low-rank: only 6 of 16 dims used
+            let scale = if i % 7 == 0 { 5.0 } else { 1.0 + (i % 3) as f64 };
+            if j == dim {
+                scale
+            } else {
+                0.0
+            }
+        });
+        let losses = vec![1.0; k];
+        let labels: Vec<i32> = (0..k).map(|i| (i % 4) as i32).collect();
+        let preds = labels.clone();
+        let ids: Vec<usize> = (0..k).collect();
+        let view = BatchView {
+            features: &features,
+            grads: &grads,
+            losses: &losses,
+            labels: &labels,
+            preds: &preds,
+            classes: 4,
+            row_ids: &ids,
+        };
+        let rmax = 8;
+        // Full-budget strict selections expose each ordering's whole pivot
+        // sequence; membership is identical, only the order differs.
+        let plain =
+            GraftSelector::new(BudgetedRankPolicy::strict(0.5)).select(&view, rmax);
+        let pivoted = GraftSelector::new(BudgetedRankPolicy::strict(0.5))
+            .with_grad_pivot(true)
+            .select(&view, rmax);
+        let (mut a, mut b) = (plain.clone(), pivoted.clone());
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "pivot stage must not change winner membership");
+        let gbar: Vec<f64> = (0..e)
+            .map(|j| (0..k).map(|i| grads.row(i)[j]).sum::<f64>() / k as f64)
+            .collect();
+        let curve = |order: &[usize]| {
+            let gsel = Mat::from_fn(e, order.len(), |row, col| grads.row(order[col])[row]);
+            prefix_projection_errors(&gsel, &gbar)
+        };
+        let fe = curve(&plain);
+        let ge = curve(&pivoted);
+        for (r, (g, f)) in ge.iter().zip(fe.iter()).enumerate() {
+            assert!(g <= &(f + 1e-9), "budget {}: grad-aware {g} > feature {f}", r + 1);
+        }
+        // Both curves are valid error curves over the same column set, so
+        // they agree once every column is in (full-span capture).
+        for w in ge.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "greedy curve must be non-increasing");
+        }
+        assert!(
+            (ge.last().unwrap() - fe.last().unwrap()).abs() < 1e-9,
+            "full-prefix error is order-independent"
+        );
     }
 
     #[test]

@@ -171,6 +171,37 @@
 //! carry saving by the `select_strict_nocarry` family in `cargo bench
 //! --bench sharded_selection`; `scripts/bench_compare.py` diffs two
 //! graft-bench-v1 documents with per-family regression thresholds.
+//!
+//! # Evaluating selectors
+//!
+//! The [`scenarios`] module is the offline evaluation harness: a
+//! deterministic matrix of data pathologies (class imbalance, label
+//! noise, mid-stream shift, curriculum ordering) × the full selector
+//! roster × execution shapes × budget fractions, scored on
+//! gradient-approximation error, class coverage, a loss proxy, and a
+//! nearest-centroid probe, emitted as `graft-scenario-v1` JSON rows
+//! (CLI: `graft scenarios --smoke`).  Same config, same bytes — the CI
+//! `scenario-smoke` job diffs two runs.  One cell of the matrix, by
+//! hand:
+//!
+//! ```
+//! use graft::engine::{EngineBuilder, PivotMode};
+//! use graft::scenarios::{scenario_windows, subset_metrics, Axis, GenConfig};
+//!
+//! let mut cfg = GenConfig::smoke();
+//! cfg.n = 96;
+//! cfg.windows = 2;
+//! let windows = scenario_windows(Axis::LabelNoise(0.2), &cfg);
+//! let mut eng = EngineBuilder::new()
+//!     .method("graft")
+//!     .pivot(PivotMode::GradAware) // gradient-aware pivot ordering
+//!     .fraction(0.25)
+//!     .build()
+//!     .expect("valid configuration");
+//! let sel = eng.select(&windows[0].view()).expect("healthy").indices.to_vec();
+//! let m = subset_metrics(&windows[0], &sel);
+//! assert!(m.grad_error <= 1.0 && m.coverage > 0.0);
+//! ```
 
 // Numeric-kernel lint posture: index-based loops mirror the maths (and the
 // Pallas kernels they twin), and the orchestration layers legitimately
@@ -193,6 +224,7 @@ pub mod pruning;
 pub mod rng;
 pub mod runtime;
 pub mod graft;
+pub mod scenarios;
 pub mod selection;
 pub mod serve;
 pub mod train;

@@ -1,0 +1,212 @@
+//! Subset-quality metrics for one selected window: the four axes the
+//! scenario matrix reports per cell.
+//!
+//! All metrics are pure functions of `(window, selected indices)` —
+//! no model training, no randomness — so rows are reproducible and the
+//! CI smoke job can diff them byte-for-byte.
+
+use crate::coordinator::SelectWindow;
+use crate::graft::prefix_projection_errors;
+use crate::linalg::Mat;
+
+/// Quality of one selected subset within one window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubsetMetrics {
+    /// Relative gradient-approximation error ‖ḡ − ĝ_S‖ / ‖ḡ‖: how much of
+    /// the window-mean gradient the subset's gradient span fails to cover
+    /// (0 = fully covered, 1 = orthogonal or empty subset).
+    pub grad_error: f64,
+    /// Distinct selected classes over distinct window classes.
+    pub coverage: f64,
+    /// Mean loss of the selected rows (0 for an empty subset).
+    pub mean_loss: f64,
+    /// Nearest-centroid probe: class centroids fit on the subset in
+    /// feature space, accuracy measured over the whole window.
+    pub probe_acc: f64,
+}
+
+/// Score `sel` (window-local row indices) against `win`.
+pub fn subset_metrics(win: &SelectWindow, sel: &[usize]) -> SubsetMetrics {
+    let k = win.features.rows();
+    let e = win.grads.cols();
+    debug_assert!(sel.iter().all(|&i| i < k), "selection indices must be window-local");
+
+    // Gradient-approximation error: project the window-mean gradient onto
+    // the span of the selected rows' gradient sketches.
+    let grad_error = if sel.is_empty() || k == 0 {
+        1.0
+    } else {
+        let mut gbar = vec![0.0; e];
+        for i in 0..k {
+            let row = win.grads.row(i);
+            for (acc, &v) in gbar.iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+        let inv = 1.0 / k as f64;
+        for v in &mut gbar {
+            *v *= inv;
+        }
+        let gsel = Mat::from_fn(e, sel.len(), |dim, col| win.grads.row(sel[col])[dim]);
+        prefix_projection_errors(&gsel, &gbar)
+            .last()
+            .copied()
+            .unwrap_or(1.0)
+    };
+
+    // Class coverage.
+    let distinct = |rows: &mut dyn Iterator<Item = usize>| -> usize {
+        let mut seen = vec![false; win.classes.max(1)];
+        let mut count = 0usize;
+        for i in rows {
+            let y = (win.labels[i].max(0) as usize).min(seen.len() - 1);
+            if !seen[y] {
+                seen[y] = true;
+                count += 1;
+            }
+        }
+        count
+    };
+    let window_classes = distinct(&mut (0..k));
+    let subset_classes = distinct(&mut sel.iter().copied());
+    let coverage = if window_classes == 0 {
+        0.0
+    } else {
+        subset_classes as f64 / window_classes as f64
+    };
+
+    let mean_loss = if sel.is_empty() {
+        0.0
+    } else {
+        sel.iter().map(|&i| win.losses[i]).sum::<f64>() / sel.len() as f64
+    };
+
+    SubsetMetrics {
+        grad_error,
+        coverage,
+        mean_loss,
+        probe_acc: probe_accuracy(win, sel),
+    }
+}
+
+/// Nearest-centroid probe accuracy: centroids from the selected rows only,
+/// evaluated over every window row.  Rows whose class has no selected
+/// representative can never be scored correct, so sparse-coverage subsets
+/// pay for it here.
+fn probe_accuracy(win: &SelectWindow, sel: &[usize]) -> f64 {
+    let k = win.features.rows();
+    let r = win.features.cols();
+    if sel.is_empty() || k == 0 {
+        return 0.0;
+    }
+    let classes = win.classes.max(1);
+    let mut centroid = vec![0.0; classes * r];
+    let mut counts = vec![0usize; classes];
+    for &i in sel {
+        let y = (win.labels[i].max(0) as usize).min(classes - 1);
+        counts[y] += 1;
+        for (acc, &v) in centroid[y * r..(y + 1) * r].iter_mut().zip(win.features.row(i)) {
+            *acc += v;
+        }
+    }
+    for (c, &n) in counts.iter().enumerate() {
+        if n > 0 {
+            let inv = 1.0 / n as f64;
+            for v in &mut centroid[c * r..(c + 1) * r] {
+                *v *= inv;
+            }
+        }
+    }
+    let mut correct = 0usize;
+    for i in 0..k {
+        let row = win.features.row(i);
+        let mut best_d = f64::INFINITY;
+        let mut best_c = usize::MAX;
+        for (c, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let d2: f64 = centroid[c * r..(c + 1) * r]
+                .iter()
+                .zip(row)
+                .map(|(&m, &v)| (v - m) * (v - m))
+                .sum();
+            // Strict `<` keeps the lowest class index on exact ties.
+            if d2 < best_d {
+                best_d = d2;
+                best_c = c;
+            }
+        }
+        if best_c == win.labels[i].max(0) as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two classes, features = one-hot-ish axes, grads = orthogonal basis
+    /// columns per class.
+    fn window() -> SelectWindow {
+        let k = 6;
+        let labels: Vec<i32> = vec![0, 0, 0, 1, 1, 1];
+        let features = Mat::from_fn(k, 2, |i, j| {
+            if (labels[i] as usize) == j {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let grads = Mat::from_fn(k, 2, |i, j| {
+            if (labels[i] as usize) == j {
+                2.0
+            } else {
+                0.0
+            }
+        });
+        SelectWindow {
+            features,
+            grads,
+            losses: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            labels,
+            preds: vec![0; k],
+            classes: 2,
+            row_ids: (0..k).collect(),
+        }
+    }
+
+    #[test]
+    fn empty_subset_scores_worst_case() {
+        let m = subset_metrics(&window(), &[]);
+        assert_eq!(m.grad_error, 1.0);
+        assert_eq!(m.coverage, 0.0);
+        assert_eq!(m.mean_loss, 0.0);
+        assert_eq!(m.probe_acc, 0.0);
+    }
+
+    #[test]
+    fn one_class_subset_covers_half_and_misses_half_the_gradient() {
+        let m = subset_metrics(&window(), &[0, 1]);
+        assert_eq!(m.coverage, 0.5);
+        assert_eq!(m.mean_loss, 1.5);
+        // ḡ = (1, −1)-ish split over two orthogonal class directions; a
+        // one-class subset spans exactly one of them: relative error
+        // 1 − 1/2 = 0.5 of the squared mass.
+        assert!((m.grad_error - 0.5).abs() < 1e-12, "{}", m.grad_error);
+        // The probe only has a class-0 centroid, so class-1 rows are all
+        // scored as class 0: accuracy 0.5.
+        assert!((m.probe_acc - 0.5).abs() < 1e-12, "{}", m.probe_acc);
+    }
+
+    #[test]
+    fn both_classes_selected_scores_perfectly() {
+        let m = subset_metrics(&window(), &[0, 3]);
+        assert_eq!(m.coverage, 1.0);
+        assert!((m.mean_loss - 2.5).abs() < 1e-12);
+        assert!(m.grad_error < 1e-9, "{}", m.grad_error);
+        assert!((m.probe_acc - 1.0).abs() < 1e-12, "{}", m.probe_acc);
+    }
+}

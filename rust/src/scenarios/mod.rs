@@ -1,0 +1,401 @@
+//! Scenario-matrix evaluation harness: deterministic offline stress
+//! testing of every selector the engine can build, under controlled data
+//! pathologies.
+//!
+//! The matrix is the cross product of four things:
+//!
+//! * **scenario axes** ([`Axis`]) — class imbalance, label noise, a
+//!   mid-stream distribution shift, curriculum ordering — each a single
+//!   perturbed knob over the synthetic generator ([`gen`]);
+//! * **the selector roster** ([`roster`]) — GRAFT (feature-volume and
+//!   gradient-aware pivot ordering), the explore/exploit hybrid, and the
+//!   eleven baseline selectors, all built through [`EngineBuilder`] so
+//!   every cell inherits the engine's validation and fault policy;
+//! * **execution shapes** — serial, sharded, and (for the reservoir
+//!   methods) streaming ingestion through
+//!   [`StreamingEngine`](crate::engine::StreamingEngine);
+//! * **budget fractions** — the subset-size frontier.
+//!
+//! Every cell scores its subsets with the [`metrics`] module (gradient-
+//! approximation error, class coverage, loss proxy, nearest-centroid
+//! probe) averaged over the scenario's stream windows, and lands as one
+//! [`ScenarioRecord`] row in a `graft-scenario-v1` document ([`sink`]).
+//! The whole run is a pure function of [`MatrixConfig`]: same config,
+//! same bytes — which is what `tests/scenarios.rs` and the CI
+//! `scenario-smoke` job pin.
+//!
+//! ```no_run
+//! use graft::scenarios::{run_matrix, MatrixConfig, ScenarioSink};
+//!
+//! let rows = run_matrix(&MatrixConfig::smoke()).expect("offline matrix");
+//! let mut sink = ScenarioSink::new();
+//! for row in rows {
+//!     sink.record(row);
+//! }
+//! sink.write(std::path::Path::new("results/scenarios.json")).unwrap();
+//! ```
+
+pub mod gen;
+pub mod metrics;
+pub mod sink;
+
+pub use gen::{scenario_windows, Axis, GenConfig};
+pub use metrics::{subset_metrics, SubsetMetrics};
+pub use sink::{ScenarioRecord, ScenarioSink};
+
+use crate::coordinator::SelectWindow;
+use crate::engine::{EngineBuilder, ExecShape, PivotMode};
+use anyhow::Context;
+
+/// One roster entry: the sink label, the engine method name, and the
+/// pivot variant the cell is built with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MethodSpec {
+    /// Row label, e.g. `graft+gradpivot`.
+    pub label: &'static str,
+    /// Engine method name passed to [`EngineBuilder::method`].
+    pub method: &'static str,
+    /// Pivot-ordering variant for the cell.
+    pub pivot: PivotMode,
+}
+
+impl MethodSpec {
+    /// Whether this entry also runs under the streaming shape (only the
+    /// reservoir-capable methods do).
+    pub fn streams(&self) -> bool {
+        self.pivot == PivotMode::FeatureVol && matches!(self.method, "graft" | "maxvol")
+    }
+}
+
+/// The full selector roster: GRAFT under both pivot orderings, the
+/// explore/exploit hybrid, and the eleven baselines.
+pub fn roster() -> Vec<MethodSpec> {
+    let feature = |label: &'static str, method: &'static str| MethodSpec {
+        label,
+        method,
+        pivot: PivotMode::FeatureVol,
+    };
+    vec![
+        feature("graft", "graft"),
+        MethodSpec {
+            label: "graft+gradpivot",
+            method: "graft",
+            pivot: PivotMode::GradAware,
+        },
+        feature("maxvol", "maxvol"),
+        feature("cross-maxvol", "cross-maxvol"),
+        feature("random", "random"),
+        feature("craig", "craig"),
+        feature("gradmatch", "gradmatch"),
+        feature("glister", "glister"),
+        feature("drop", "drop"),
+        feature("el2n", "el2n"),
+        feature("badge", "badge"),
+        feature("moderate", "moderate"),
+        feature("forget", "forget"),
+        feature("hybrid", "hybrid"),
+    ]
+}
+
+/// Everything a matrix run depends on.  `run_matrix` is a pure function
+/// of this value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixConfig {
+    /// Scenario stream generation (size, windows, seeds).
+    pub gen: GenConfig,
+    /// Scenario axes to sweep.
+    pub axes: Vec<Axis>,
+    /// Budget fractions to sweep.
+    pub fractions: Vec<f64>,
+    /// Shard count for the sharded execution shape.
+    pub shards: usize,
+    /// Engine seed (selector seeding, fallback draws).
+    pub seed: u64,
+}
+
+impl MatrixConfig {
+    /// The CI smoke matrix: 4 axes × full roster × 3 fractions on the
+    /// tiny generator — small enough to run twice in the smoke job and
+    /// diff for bit-identity.
+    pub fn smoke() -> MatrixConfig {
+        MatrixConfig {
+            gen: GenConfig::smoke(),
+            axes: vec![
+                Axis::Imbalance(0.5),
+                Axis::LabelNoise(0.2),
+                Axis::Shift(0.5),
+                Axis::Curriculum(1.0),
+            ],
+            fractions: vec![0.1, 0.25, 0.5],
+            shards: 2,
+            seed: 42,
+        }
+    }
+
+    /// The full offline matrix: baseline plus two severities per axis,
+    /// five budget fractions, the large generator.
+    pub fn full() -> MatrixConfig {
+        MatrixConfig {
+            gen: GenConfig::full(),
+            axes: vec![
+                Axis::Baseline,
+                Axis::Imbalance(0.3),
+                Axis::Imbalance(0.7),
+                Axis::LabelNoise(0.1),
+                Axis::LabelNoise(0.3),
+                Axis::Shift(0.5),
+                Axis::Shift(1.0),
+                Axis::Curriculum(0.5),
+                Axis::Curriculum(1.0),
+            ],
+            fractions: vec![0.05, 0.1, 0.2, 0.35, 0.5],
+            shards: 2,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the full matrix and return one row per (axis, roster entry,
+/// shape, fraction) cell, in a fixed deterministic order.
+pub fn run_matrix(cfg: &MatrixConfig) -> anyhow::Result<Vec<ScenarioRecord>> {
+    let shard_label = format!("sharded{}", cfg.shards.max(1));
+    let mut rows = Vec::new();
+    for axis in &cfg.axes {
+        let windows = scenario_windows(*axis, &cfg.gen);
+        for m in roster() {
+            for &fraction in &cfg.fractions {
+                rows.push(run_batch_cell(
+                    &windows,
+                    *axis,
+                    &m,
+                    ExecShape::Serial,
+                    "serial",
+                    fraction,
+                    cfg.seed,
+                )?);
+                rows.push(run_batch_cell(
+                    &windows,
+                    *axis,
+                    &m,
+                    ExecShape::Sharded {
+                        shards: cfg.shards.max(1),
+                    },
+                    &shard_label,
+                    fraction,
+                    cfg.seed,
+                )?);
+                if m.streams() {
+                    rows.push(run_stream_cell(&windows, *axis, &m, fraction, cfg.seed)?);
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Window-mean accumulator for one cell.
+#[derive(Default)]
+struct CellAcc {
+    grad_error: f64,
+    coverage: f64,
+    mean_loss: f64,
+    probe_acc: f64,
+    budget: f64,
+    degraded: u64,
+    windows: usize,
+}
+
+impl CellAcc {
+    fn add(&mut self, m: SubsetMetrics, selected: usize, degraded: usize) {
+        self.grad_error += m.grad_error;
+        self.coverage += m.coverage;
+        self.mean_loss += m.mean_loss;
+        self.probe_acc += m.probe_acc;
+        self.budget += selected as f64;
+        self.degraded += degraded as u64;
+        self.windows += 1;
+    }
+
+    fn mean_budget(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.budget / self.windows as f64
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        self,
+        axis: Axis,
+        m: &MethodSpec,
+        shape: &str,
+        fraction: f64,
+        mean_rank: f64,
+        seed: u64,
+    ) -> ScenarioRecord {
+        let inv = if self.windows == 0 {
+            0.0
+        } else {
+            1.0 / self.windows as f64
+        };
+        ScenarioRecord {
+            scenario: axis.label(),
+            method: m.label.to_string(),
+            shape: shape.to_string(),
+            fraction,
+            budget: self.mean_budget(),
+            grad_error: self.grad_error * inv,
+            coverage: self.coverage * inv,
+            mean_loss: self.mean_loss * inv,
+            probe_acc: self.probe_acc * inv,
+            mean_rank,
+            degraded: self.degraded,
+            seed,
+        }
+    }
+}
+
+fn run_batch_cell(
+    windows: &[SelectWindow],
+    axis: Axis,
+    m: &MethodSpec,
+    shape: ExecShape,
+    shape_label: &str,
+    fraction: f64,
+    seed: u64,
+) -> anyhow::Result<ScenarioRecord> {
+    let mut eng = EngineBuilder::new()
+        .method(m.method)
+        .fraction(fraction)
+        .seed(seed)
+        .exec(shape)
+        .pivot(m.pivot)
+        .build()
+        .with_context(|| {
+            format!(
+                "building cell {} / {} / {} @ f={fraction}",
+                axis.label(),
+                m.label,
+                shape_label
+            )
+        })?;
+    let mut acc = CellAcc::default();
+    for (w, win) in windows.iter().enumerate() {
+        let view = win.view();
+        let (indices, degraded) = {
+            let sel = eng.select(&view).with_context(|| {
+                format!(
+                    "selecting window {w} of cell {} / {} / {}",
+                    axis.label(),
+                    m.label,
+                    shape_label
+                )
+            })?;
+            (sel.indices.to_vec(), sel.degradations.len())
+        };
+        acc.add(subset_metrics(win, &indices), indices.len(), degraded);
+    }
+    let mean_rank = eng
+        .rank_stats()
+        .map(|s| s.mean_rank)
+        .unwrap_or_else(|| acc.mean_budget());
+    Ok(acc.finish(axis, m, shape_label, fraction, mean_rank, seed))
+}
+
+fn run_stream_cell(
+    windows: &[SelectWindow],
+    axis: Axis,
+    m: &MethodSpec,
+    fraction: f64,
+    seed: u64,
+) -> anyhow::Result<ScenarioRecord> {
+    let k = windows.first().map_or(0, |w| w.features.rows());
+    anyhow::ensure!(k > 0, "stream cell needs non-empty windows");
+    let budget = ((fraction * k as f64).round() as usize).clamp(1, k);
+    let mut eng = EngineBuilder::new()
+        .method(m.method)
+        .seed(seed)
+        .budget(budget)
+        .build_streaming()
+        .with_context(|| {
+            format!("building stream cell {} / {} @ f={fraction}", axis.label(), m.label)
+        })?;
+    let mut acc = CellAcc::default();
+    for (w, win) in windows.iter().enumerate() {
+        let view = win.view();
+        // Two chunks per window: exercises genuine incremental ingestion
+        // rather than one batch-sized push.
+        let half = k / 2;
+        let ctx = |stage: &str| {
+            format!(
+                "{stage} window {w} of stream cell {} / {}",
+                axis.label(),
+                m.label
+            )
+        };
+        eng.push_range(&view, 0..half).with_context(|| ctx("pushing first half of"))?;
+        eng.push_range(&view, half..k).with_context(|| ctx("pushing second half of"))?;
+        let snap = eng.snapshot().with_context(|| ctx("snapshotting"))?;
+        let lo = win.row_ids[0];
+        let local: Vec<usize> = snap.indices.iter().map(|&g| g - lo).collect();
+        acc.add(subset_metrics(win, &local), local.len(), snap.degradations.len());
+        eng.reset();
+    }
+    let mean_rank = eng
+        .rank_stats()
+        .map(|s| s.mean_rank)
+        .unwrap_or_else(|| acc.mean_budget());
+    Ok(acc.finish(axis, m, "stream", fraction, mean_rank, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_covers_graft_variants_hybrid_and_eleven_baselines() {
+        let r = roster();
+        assert_eq!(r.len(), 14, "2 graft variants + 11 baselines + hybrid");
+        let labels: Vec<&str> = r.iter().map(|m| m.label).collect();
+        for want in [
+            "graft",
+            "graft+gradpivot",
+            "maxvol",
+            "cross-maxvol",
+            "random",
+            "craig",
+            "gradmatch",
+            "glister",
+            "drop",
+            "el2n",
+            "badge",
+            "moderate",
+            "forget",
+            "hybrid",
+        ] {
+            assert!(labels.contains(&want), "roster is missing {want}");
+        }
+        let gradpivot = r.iter().find(|m| m.label == "graft+gradpivot").unwrap();
+        assert_eq!(gradpivot.method, "graft");
+        assert_eq!(gradpivot.pivot, PivotMode::GradAware);
+    }
+
+    #[test]
+    fn only_reservoir_methods_stream() {
+        let streaming: Vec<&str> = roster()
+            .into_iter()
+            .filter(MethodSpec::streams)
+            .map(|m| m.label)
+            .collect();
+        assert_eq!(streaming, vec!["graft", "maxvol"]);
+    }
+
+    #[test]
+    fn smoke_config_meets_the_issue_floor() {
+        let cfg = MatrixConfig::smoke();
+        assert!(cfg.axes.len() >= 3, "need ≥ 3 scenario axes");
+        assert!(cfg.fractions.len() >= 3, "need ≥ 3 budget fractions");
+        assert!(cfg.fractions.iter().all(|f| *f > 0.0 && *f <= 1.0));
+    }
+}

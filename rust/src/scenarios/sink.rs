@@ -1,0 +1,169 @@
+//! `graft-scenario-v1` JSON sink — the scenario matrix's machine-readable
+//! output, in the same hand-rolled style as the bench harness's
+//! `graft-bench-v1` sink (`benches/bench_util.rs`).  That sink is compiled
+//! only into bench targets and is unreachable from `rust/src`, so the
+//! scenario harness carries its own: fixed field order, fixed float
+//! formatting, one record per line — the same seed always serialises to
+//! the same bytes, which is what the CI smoke job diffs.
+//!
+//! Schema (validated by `scripts/validate_bench.py --schema scenario`):
+//!
+//! ```json
+//! {"schema":"graft-scenario-v1","rows":[
+//! {"scenario":"label_noise-0.20","method":"graft+gradpivot","shape":"serial",
+//!  "fraction":0.2500,"budget":30.0,"grad_error":0.412345,"coverage":1.000000,
+//!  "mean_loss":1.234567,"probe_acc":0.812345,"mean_rank":30.000,"degraded":0,
+//!  "seed":42}
+//! ]}
+//! ```
+
+use std::path::{Path, PathBuf};
+
+/// One scenario-matrix cell: a (scenario axis, method, execution shape,
+/// budget fraction) combination, with subset-quality metrics averaged over
+/// the scenario's stream windows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRecord {
+    /// Scenario axis label, e.g. `imbalance-0.50` or `label_noise-0.20`.
+    pub scenario: String,
+    /// Roster label (method plus variant), e.g. `graft`, `graft+gradpivot`,
+    /// `hybrid`, `random`.
+    pub method: String,
+    /// Execution shape the cell ran under: `serial`, `sharded2`, `stream`.
+    pub shape: String,
+    /// Requested budget fraction f ∈ (0, 1].
+    pub fraction: f64,
+    /// Mean selected rows per window (the realised budget).
+    pub budget: f64,
+    /// Mean relative gradient-approximation error ‖ḡ − ĝ_S‖ / ‖ḡ‖ of the
+    /// selected subset (0 = the subset spans the batch-mean gradient).
+    pub grad_error: f64,
+    /// Mean fraction of the window's classes present in the subset.
+    pub coverage: f64,
+    /// Mean loss of the selected rows (the loss-proxy axis).
+    pub mean_loss: f64,
+    /// Nearest-centroid probe accuracy: centroids fit on the subset,
+    /// evaluated on the whole window (feature space).
+    pub probe_acc: f64,
+    /// Rank telemetry: the engine's mean decided rank where a rank stage
+    /// exists, else the mean subset size.
+    pub mean_rank: f64,
+    /// Total degradation-ladder steps recorded across the cell's windows
+    /// (0 on a healthy run).
+    pub degraded: u64,
+    /// Engine seed the cell ran with.
+    pub seed: u64,
+}
+
+impl ScenarioRecord {
+    /// Fixed-format serialisation: field order and float precision are
+    /// part of the schema, so byte-identical rows ⇔ identical cells.
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"scenario\":\"{}\",\"method\":\"{}\",\"shape\":\"{}\",\
+             \"fraction\":{:.4},\"budget\":{:.1},\"grad_error\":{:.6},\
+             \"coverage\":{:.6},\"mean_loss\":{:.6},\"probe_acc\":{:.6},\
+             \"mean_rank\":{:.3},\"degraded\":{},\"seed\":{}}}",
+            self.scenario,
+            self.method,
+            self.shape,
+            self.fraction,
+            self.budget,
+            self.grad_error,
+            self.coverage,
+            self.mean_loss,
+            self.probe_acc,
+            self.mean_rank,
+            self.degraded,
+            self.seed
+        )
+    }
+}
+
+/// Collects scenario rows and serialises the whole document.  Unlike the
+/// bench sink there is no merge-with-existing-file step: a scenario run is
+/// a complete matrix, so the document is always written whole.
+#[derive(Debug, Default)]
+pub struct ScenarioSink {
+    rows: Vec<ScenarioRecord>,
+}
+
+impl ScenarioSink {
+    pub fn new() -> ScenarioSink {
+        ScenarioSink::default()
+    }
+
+    pub fn record(&mut self, row: ScenarioRecord) {
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The complete `graft-scenario-v1` document, one record per line.
+    pub fn to_doc(&self) -> String {
+        let mut body = String::from("{\"schema\":\"graft-scenario-v1\",\"rows\":[\n");
+        let lines: Vec<String> = self.rows.iter().map(ScenarioRecord::to_json).collect();
+        body.push_str(&lines.join(",\n"));
+        body.push_str("\n]}\n");
+        body
+    }
+
+    /// Write the document to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<PathBuf> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_doc())?;
+        Ok(path.to_path_buf())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> ScenarioRecord {
+        ScenarioRecord {
+            scenario: "label_noise-0.20".into(),
+            method: "graft+gradpivot".into(),
+            shape: "serial".into(),
+            fraction: 0.25,
+            budget: 30.0,
+            grad_error: 0.4123456789,
+            coverage: 1.0,
+            mean_loss: 1.25,
+            probe_acc: 0.8125,
+            mean_rank: 30.0,
+            degraded: 0,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn doc_is_deterministic_and_schema_tagged() {
+        let mut a = ScenarioSink::new();
+        let mut b = ScenarioSink::new();
+        a.record(row());
+        b.record(row());
+        assert_eq!(a.to_doc(), b.to_doc(), "same rows must serialise to the same bytes");
+        let doc = a.to_doc();
+        assert!(doc.starts_with("{\"schema\":\"graft-scenario-v1\",\"rows\":["), "{doc}");
+        assert!(doc.contains("\"grad_error\":0.412346"), "fixed precision: {doc}");
+        assert!(doc.contains("\"fraction\":0.2500"), "{doc}");
+        assert!(doc.trim_end().ends_with("]}"), "{doc}");
+    }
+
+    #[test]
+    fn empty_sink_still_emits_a_valid_document() {
+        let doc = ScenarioSink::new().to_doc();
+        assert!(doc.contains("graft-scenario-v1"));
+    }
+}

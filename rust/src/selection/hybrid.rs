@@ -1,0 +1,168 @@
+//! Explore/exploit hybrid (GraND-style): a seeded random fraction mixed
+//! into the Fast MaxVol subset.
+//!
+//! The exploit share `1 − φ` of the budget is the plain feature-volume
+//! criterion ([`fast_maxvol_with`] + loss top-up, exactly the
+//! [`FastMaxVol`](super::maxvol::FastMaxVol) path); the explore share `φ`
+//! is drawn uniformly without replacement from the unselected complement
+//! with a seeded partial Fisher–Yates.  The two endpoints are **bitwise**
+//! pins, not approximations:
+//!
+//! * `φ = 0` runs the identical instruction stream as `FastMaxVol` and
+//!   draws no RNG at all;
+//! * `φ = 1` consumes the identical `Rng::below` sequence as
+//!   [`RandomSelector`](super::random::RandomSelector) with the same seed,
+//!   call after call.
+//!
+//! Stateful (the RNG advances per selection, like the random baseline), so
+//! the method is not shardable: the engine falls back to a serial instance
+//! with a recorded note, which also keeps selections identical across
+//! requested execution shapes.
+
+use super::maxvol::fast_maxvol_with;
+use super::{BatchView, Selector};
+use crate::linalg::Workspace;
+use crate::rng::Rng;
+
+/// Default explore fraction when the method is constructed by name
+/// (`selection::by_name("hybrid")`) without an explicit knob.
+pub const DEFAULT_EXPLORE: f64 = 0.25;
+
+pub struct Hybrid {
+    rng: Rng,
+    explore: f64,
+}
+
+impl Hybrid {
+    /// `explore` = φ ∈ [0, 1]: the fraction of the budget drawn at random.
+    /// Callers validating user input should go through
+    /// [`EngineBuilder::explore_fraction`](crate::engine::EngineBuilder::explore_fraction),
+    /// which returns a typed error instead of panicking.
+    pub fn new(seed: u64, explore: f64) -> Self {
+        assert!(
+            explore.is_finite() && (0.0..=1.0).contains(&explore),
+            "explore fraction must be in [0, 1], got {explore}"
+        );
+        Hybrid { rng: Rng::new(seed), explore }
+    }
+}
+
+impl Selector for Hybrid {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn select_into(
+        &mut self,
+        view: &BatchView<'_>,
+        r: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        let k = view.k();
+        if k == 0 {
+            return;
+        }
+        let want = r.min(k);
+        let explore_n = ((self.explore * want as f64).round() as usize).min(want);
+        let exploit_n = want - explore_n;
+        if exploit_n > 0 {
+            // The FastMaxVol path verbatim, at the exploit share of the
+            // budget: φ = 0 makes this the whole selection, bit for bit.
+            let width = view.features.cols().min(exploit_n);
+            fast_maxvol_with(view.features, width, ws, out);
+            super::top_up_by_loss(view, exploit_n, ws, out);
+        }
+        if explore_n > 0 {
+            // Ascending complement table + partial Fisher–Yates: with an
+            // empty exploit set (φ = 1) the table is 0..k in order, so the
+            // `below()` sequence — and the subset — is exactly
+            // `Rng::choose(k, want)`, matching the random baseline.
+            let taken = &mut ws.sel_taken;
+            taken.clear();
+            taken.resize(k, false);
+            for &i in out.iter() {
+                taken[i] = true;
+            }
+            let cand = &mut ws.sel_rest;
+            cand.clear();
+            cand.extend((0..k).filter(|&i| !taken[i]));
+            let m = cand.len();
+            let need = explore_n.min(m);
+            for i in 0..need {
+                let j = i + self.rng.below(m - i);
+                cand.swap(i, j);
+            }
+            out.extend(cand.iter().take(need).copied());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::maxvol::FastMaxVol;
+    use crate::selection::random::RandomSelector;
+    use crate::selection::testsupport::{check_selector, random_view};
+
+    #[test]
+    fn selector_contract() {
+        check_selector(|| Box::new(Hybrid::new(11, 0.25)));
+        check_selector(|| Box::new(Hybrid::new(11, 0.0)));
+        check_selector(|| Box::new(Hybrid::new(11, 1.0)));
+    }
+
+    #[test]
+    fn explore_zero_is_pure_maxvol_bitwise() {
+        let owned = random_view(64, 8, 16, 4, 21);
+        for r in [1usize, 4, 8, 24] {
+            let h = Hybrid::new(999, 0.0).select(&owned.view(), r);
+            let m = FastMaxVol.select(&owned.view(), r);
+            assert_eq!(h, m, "r={r}");
+        }
+    }
+
+    #[test]
+    fn explore_one_is_seeded_random_bitwise() {
+        let owned = random_view(64, 8, 16, 4, 22);
+        let mut h = Hybrid::new(7, 1.0);
+        let mut rnd = RandomSelector::new(7);
+        // Successive draws must track the baseline's RNG state exactly.
+        for r in [8usize, 8, 16, 3] {
+            assert_eq!(h.select(&owned.view(), r), rnd.select(&owned.view(), r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn intermediate_fraction_mixes_both_criteria() {
+        let owned = random_view(64, 8, 16, 4, 23);
+        let sel = Hybrid::new(5, 0.5).select(&owned.view(), 8);
+        assert_eq!(sel.len(), 8);
+        // Exploit half is the MaxVol prefix (prefix-nested greedy).
+        let exploit = FastMaxVol.select(&owned.view(), 4);
+        assert_eq!(&sel[..4], &exploit[..], "exploit share keeps the volume criterion");
+        let mut u = sel.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 8, "explore share never duplicates the exploit rows");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let owned = random_view(64, 8, 16, 4, 24);
+        let a = Hybrid::new(3, 0.5).select(&owned.view(), 12);
+        let b = Hybrid::new(3, 0.5).select(&owned.view(), 12);
+        assert_eq!(a, b);
+        let mut c = Hybrid::new(4, 0.5);
+        let c1 = c.select(&owned.view(), 12);
+        let c2 = c.select(&owned.view(), 12);
+        assert_ne!(c1, c2, "RNG advances across selections");
+    }
+
+    #[test]
+    #[should_panic(expected = "explore fraction")]
+    fn constructor_rejects_out_of_range() {
+        let _ = Hybrid::new(1, 1.5);
+    }
+}

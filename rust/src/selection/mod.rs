@@ -14,6 +14,7 @@ pub mod el2n;
 pub mod forget;
 pub mod glister;
 pub mod gradmatch;
+pub mod hybrid;
 pub mod maxvol;
 pub mod moderate;
 pub mod random;
@@ -186,6 +187,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Selector>> {
         "glister" => Box::new(glister::Glister::default()),
         "drop" => Box::new(drop_::Drop::new(seed)),
         "el2n" => Box::new(el2n::El2n),
+        "hybrid" => Box::new(hybrid::Hybrid::new(seed, hybrid::DEFAULT_EXPLORE)),
         "badge" => Box::new(badge::Badge::new(seed)),
         "moderate" => Box::new(moderate::Moderate),
         "forget" => Box::new(forget::Forget::default()),

@@ -1,0 +1,342 @@
+//! Engine-level pins for the PR 10 selector variants:
+//!
+//! * **Explore/exploit hybrid** — `explore_fraction(0.0)` is bitwise the
+//!   pure MaxVol path and `explore_fraction(1.0)` bitwise the seeded
+//!   random baseline, *through the engine* (builder plumbing, seed
+//!   derivation, shape fallback included); selections are identical
+//!   across requested execution shapes and deterministic in the seed.
+//! * **Gradient-aware pivot ordering** — zero gradient signal reproduces
+//!   the feature-volume order bitwise on the serial and sharded shapes;
+//!   non-zero signal is deterministic in the engine seed per shape.
+//! * **Typed rejections** — invalid pivot/explore configurations fail
+//!   `build()`/`build_streaming()` with `EngineError`s naming the field.
+
+use graft::engine::{EngineBuilder, EngineError, ExecShape, PivotMode};
+use graft::linalg::Mat;
+use graft::rng::Rng;
+use graft::selection::BatchView;
+
+struct Owned {
+    features: Mat,
+    grads: Mat,
+    losses: Vec<f64>,
+    labels: Vec<i32>,
+    preds: Vec<i32>,
+    classes: usize,
+    row_ids: Vec<usize>,
+}
+
+impl Owned {
+    fn view(&self) -> BatchView<'_> {
+        BatchView {
+            features: &self.features,
+            grads: &self.grads,
+            losses: &self.losses,
+            labels: &self.labels,
+            preds: &self.preds,
+            classes: self.classes,
+            row_ids: &self.row_ids,
+        }
+    }
+}
+
+fn random_owned(k: usize, rc: usize, e: usize, classes: usize, seed: u64) -> Owned {
+    let mut rng = Rng::new(seed);
+    let features = Mat::from_fn(k, rc, |_, _| rng.normal());
+    let grads = Mat::from_fn(k, e, |_, _| rng.normal());
+    let losses: Vec<f64> = (0..k).map(|_| rng.uniform() * 2.0).collect();
+    let labels: Vec<i32> = (0..k).map(|i| (i % classes) as i32).collect();
+    Owned {
+        features,
+        grads,
+        losses,
+        preds: labels.clone(),
+        labels,
+        classes,
+        row_ids: (0..k).collect(),
+    }
+}
+
+fn zero_grad_owned(k: usize, rc: usize, e: usize, classes: usize, seed: u64) -> Owned {
+    let mut o = random_owned(k, rc, e, classes, seed);
+    o.grads = Mat::zeros(k, e);
+    o
+}
+
+/// Run `windows` batches through a freshly built engine, collecting the
+/// index streams.
+fn select_stream(
+    build: impl FnOnce() -> EngineBuilder,
+    batches: &[Owned],
+    budget: usize,
+) -> Vec<Vec<usize>> {
+    let mut eng = build().budget(budget).build().expect("valid configuration");
+    batches
+        .iter()
+        .map(|b| eng.select(&b.view()).expect("healthy selection").indices.to_vec())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid endpoints through the engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hybrid_explore_zero_is_pure_maxvol_through_engine() {
+    let batches: Vec<Owned> = (0..3).map(|i| random_owned(48, 8, 12, 4, 100 + i)).collect();
+    // Budget 12 > feature width 8 exercises the loss top-up too.
+    let hybrid = select_stream(
+        || EngineBuilder::new().method("hybrid").explore_fraction(0.0).seed(7),
+        &batches,
+        12,
+    );
+    let maxvol = select_stream(|| EngineBuilder::new().method("maxvol").seed(7), &batches, 12);
+    assert_eq!(hybrid, maxvol, "explore 0 must be the FastMaxVol path bitwise");
+}
+
+#[test]
+fn hybrid_explore_one_is_seeded_random_through_engine() {
+    let batches: Vec<Owned> = (0..4).map(|i| random_owned(48, 8, 12, 4, 200 + i)).collect();
+    let hybrid = select_stream(
+        || EngineBuilder::new().method("hybrid").explore_fraction(1.0).seed(9),
+        &batches,
+        10,
+    );
+    let random = select_stream(|| EngineBuilder::new().method("random").seed(9), &batches, 10);
+    assert_eq!(hybrid, random, "explore 1 must track the random baseline's RNG exactly");
+}
+
+#[test]
+fn hybrid_identical_across_requested_shapes() {
+    let batches: Vec<Owned> = (0..3).map(|i| random_owned(40, 6, 10, 4, 300 + i)).collect();
+    // Hybrid is stateful (RNG advances per selection) so it is not
+    // shardable: every requested shape must fall back to one instance
+    // and reproduce the serial stream bitwise.
+    let serial = select_stream(
+        || EngineBuilder::new().method("hybrid").explore_fraction(0.5).seed(4),
+        &batches,
+        8,
+    );
+    let sharded = select_stream(
+        || {
+            EngineBuilder::new()
+                .method("hybrid")
+                .explore_fraction(0.5)
+                .seed(4)
+                .exec(ExecShape::Sharded { shards: 3 })
+        },
+        &batches,
+        8,
+    );
+    let pooled = select_stream(
+        || {
+            EngineBuilder::new()
+                .method("hybrid")
+                .explore_fraction(0.5)
+                .seed(4)
+                .exec(ExecShape::Pooled { shards: 2, workers: 2, overlap: false })
+        },
+        &batches,
+        8,
+    );
+    assert_eq!(serial, sharded, "sharded request falls back to the serial instance");
+    assert_eq!(serial, pooled, "pooled request hosts one instance, same stream");
+}
+
+#[test]
+fn hybrid_deterministic_in_seed_and_sensitive_to_it() {
+    let batches: Vec<Owned> = (0..3).map(|i| random_owned(40, 6, 10, 4, 400 + i)).collect();
+    let build = |seed: u64| {
+        select_stream(
+            move || EngineBuilder::new().method("hybrid").explore_fraction(0.5).seed(seed),
+            &batches,
+            8,
+        )
+    };
+    assert_eq!(build(11), build(11), "same seed, same stream");
+    assert_ne!(build(11), build(12), "the explore share must actually depend on the seed");
+}
+
+// ---------------------------------------------------------------------------
+// Gradient-aware pivot through the engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grad_pivot_zero_signal_is_feature_order_through_engine() {
+    let batches: Vec<Owned> = (0..2).map(|i| zero_grad_owned(48, 8, 12, 4, 500 + i)).collect();
+    for shape in [ExecShape::Serial, ExecShape::Sharded { shards: 2 }] {
+        let feature = select_stream(
+            || {
+                EngineBuilder::new()
+                    .method("graft")
+                    .seed(3)
+                    .exec(shape)
+                    .pivot(PivotMode::FeatureVol)
+            },
+            &batches,
+            6,
+        );
+        let pivot = select_stream(
+            || {
+                EngineBuilder::new()
+                    .method("graft")
+                    .seed(3)
+                    .exec(shape)
+                    .pivot(PivotMode::GradAware)
+            },
+            &batches,
+            6,
+        );
+        assert_eq!(
+            pivot, feature,
+            "zero gradient signal must keep the feature-volume order bitwise ({shape:?})"
+        );
+    }
+}
+
+#[test]
+fn grad_pivot_deterministic_per_shape() {
+    let batches: Vec<Owned> = (0..2).map(|i| random_owned(48, 8, 12, 4, 600 + i)).collect();
+    for shape in [
+        ExecShape::Serial,
+        ExecShape::Sharded { shards: 2 },
+        ExecShape::Pooled { shards: 2, workers: 2, overlap: false },
+    ] {
+        let run = || {
+            select_stream(
+                || {
+                    EngineBuilder::new()
+                        .method("graft")
+                        .seed(5)
+                        .exec(shape)
+                        .pivot(PivotMode::GradAware)
+                },
+                &batches,
+                6,
+            )
+        };
+        assert_eq!(run(), run(), "grad-aware pivot must be deterministic on {shape:?}");
+    }
+}
+
+#[test]
+fn grad_pivot_keeps_selection_membership_on_serial_full_budget() {
+    // At budget = feature width the strict cut keeps the whole pivot
+    // prefix, so the two orderings select the same SET (order may differ).
+    let o = random_owned(48, 8, 12, 4, 700);
+    let sel = |pivot: PivotMode| {
+        let mut eng = EngineBuilder::new()
+            .method("graft")
+            .seed(5)
+            .pivot(pivot)
+            .budget(8)
+            .build()
+            .expect("valid configuration");
+        let mut v = eng.select(&o.view()).expect("healthy").indices.to_vec();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sel(PivotMode::FeatureVol), sel(PivotMode::GradAware));
+}
+
+// ---------------------------------------------------------------------------
+// Typed rejections
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pivot_on_non_graft_method_is_a_typed_error() {
+    let err = EngineBuilder::new()
+        .method("maxvol")
+        .pivot(PivotMode::GradAware)
+        .build()
+        .err()
+        .expect("pivot needs a GRAFT method");
+    assert!(matches!(err, EngineError::PivotNeedsGraft { .. }), "{err}");
+    assert_eq!(err.field(), "pivot");
+    assert!(err.to_string().contains("no pivot stage"), "{err}");
+
+    let err = EngineBuilder::new()
+        .method("random")
+        .pivot(PivotMode::GradAware)
+        .budget(4)
+        .build_streaming()
+        .err()
+        .expect("streaming pivot needs a GRAFT method too");
+    assert!(matches!(err, EngineError::PivotNeedsGraft { .. }), "{err}");
+}
+
+#[test]
+fn pivot_at_shards_without_grad_merge_is_a_typed_error() {
+    for merge in ["flat", "hierarchical"] {
+        let err = EngineBuilder::new()
+            .method("graft")
+            .pivot(PivotMode::GradAware)
+            .exec(ExecShape::Sharded { shards: 2 })
+            .merge_name(merge)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("merge {merge} carries no gradient context"));
+        assert!(matches!(err, EngineError::PivotNeedsGradMerge { .. }), "{err}");
+        assert_eq!(err.field(), "pivot");
+        assert!(err.to_string().contains(merge), "{err}");
+    }
+    // One shard has no merge: the feature-only policy is fine there.
+    EngineBuilder::new()
+        .method("graft")
+        .pivot(PivotMode::GradAware)
+        .exec(ExecShape::Sharded { shards: 1 })
+        .merge_name("flat")
+        .build()
+        .expect("one shard never merges");
+}
+
+#[test]
+fn explore_out_of_range_is_a_typed_error() {
+    for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+        let err = EngineBuilder::new()
+            .method("hybrid")
+            .explore_fraction(bad)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("explore {bad} must be rejected"));
+        assert!(matches!(err, EngineError::ExploreOutOfRange { .. }), "{err}");
+        assert_eq!(err.field(), "explore");
+
+        let err = EngineBuilder::new()
+            .method("maxvol")
+            .explore_fraction(bad)
+            .budget(4)
+            .build_streaming()
+            .err()
+            .unwrap_or_else(|| panic!("streaming explore {bad} must be rejected"));
+        assert!(matches!(err, EngineError::ExploreOutOfRange { .. }), "{err}");
+    }
+}
+
+#[test]
+fn inert_knobs_surface_notes_not_errors() {
+    // Explore on a non-hybrid method builds, with a note.
+    let eng = EngineBuilder::new()
+        .method("maxvol")
+        .explore_fraction(0.5)
+        .build()
+        .expect("inert explore is a note, not an error");
+    assert!(
+        eng.notes().iter().any(|n| n.contains("explore fraction")),
+        "notes: {:?}",
+        eng.notes()
+    );
+    // Streaming GRAFT ignores the pivot (no merged union to re-sort) and
+    // says so.
+    let eng = EngineBuilder::new()
+        .method("graft")
+        .pivot(PivotMode::GradAware)
+        .budget(4)
+        .build_streaming()
+        .expect("streaming pivot is a note, not an error");
+    assert!(
+        eng.notes().iter().any(|n| n.contains("gradient-aware pivot ignored")),
+        "notes: {:?}",
+        eng.notes()
+    );
+}

@@ -26,4 +26,27 @@ if [ -n "$hits" ]; then
   echo "(Selection.decision / SelectionEngine::rank_stats)."
   exit 1
 fi
-echo "facade surface clean: no out-of-facade rank-authority plumbing in rust/src/"
+
+# CLI subcommands must build selections through EngineBuilder, never by
+# hand-wiring selectors (the PR 10 cmd/ audit).  `select_rows` is the one
+# carve-out: CrossMaxVol's (rows, cols) cross skeleton has no engine
+# expression, and table4 documents why at the call site.
+cmd_hits=$(grep -rn --include='*.rs' \
+    -e 'selection::by_name' \
+    -e 'fast_maxvol(' \
+    -e '\.select_into(' \
+    -e 'ShardedSelector::new' \
+    -e 'PooledSelector::new' \
+    -e 'with_grad_pivot' \
+    rust/src/cmd || true)
+
+if [ -n "$cmd_hits" ]; then
+  echo "facade violation: cmd/ wires selectors directly instead of using EngineBuilder:"
+  echo "$cmd_hits"
+  echo
+  echo "Build the selection through graft::engine::EngineBuilder (method/"
+  echo "budget/pivot knobs) so typed EngineErrors surface on the CLI."
+  exit 1
+fi
+echo "facade surface clean: no out-of-facade rank-authority plumbing in rust/src/,"
+echo "no hand-wired selectors in rust/src/cmd/"

@@ -1,18 +1,30 @@
 #!/usr/bin/env python3
-"""Validate a graft-bench-v1 JSON file (emitted by benches/bench_util.rs).
+"""Validate a graft-bench-v1 or graft-scenario-v1 JSON file.
 
-Usage: scripts/validate_bench.py [--allow-empty] [--strict] [--require OP ...] FILE [FILE ...]
+Usage: scripts/validate_bench.py [--schema bench|scenario] [--allow-empty]
+       [--strict] [--require NAME ...] FILE [FILE ...]
 
-Checks, per file:
+With --schema bench (the default; emitted by benches/bench_util.rs),
+checks per file:
   * top-level object with "schema": "graft-bench-v1" and a "records" list
   * every record has string "bench"/"op"/"shape" (non-empty) and finite,
     non-negative "mean_ns"/"std_ns"/"min_ns" numbers with min <= mean
   * at least one record, unless --allow-empty (the committed placeholder
     BENCH_pr1.json is empty until scripts/bench.sh runs on a machine with
     a Rust toolchain)
-  * every --require OP (repeatable) appears as the "op" of at least one
+  * every --require NAME (repeatable) appears as the "op" of at least one
     record — how CI pins that a bench family (e.g. the PR 3 "select_pooled"
     pool rows) cannot silently stop emitting
+
+With --schema scenario (emitted by `graft scenarios`), checks per file:
+  * top-level object with "schema": "graft-scenario-v1" and a "rows" list
+  * every row has string "scenario"/"method"/"shape" (non-empty), finite
+    numbers for the metric fields with fraction in (0, 1], budget >= 1,
+    and the [0, 1]-bounded metrics (grad_error/coverage/probe_acc) in
+    range
+  * every --require NAME appears as the "method" of at least one row — how
+    the scenario-smoke CI job pins that the roster (e.g. graft+gradpivot,
+    hybrid) cannot silently shrink
 
 A file whose top-level "note" marks it as a placeholder (the string
 "placeholder", any case) gets a non-fatal WARNING on stderr, so a
@@ -31,6 +43,21 @@ import sys
 SCHEMA = "graft-bench-v1"
 STR_FIELDS = ("bench", "op", "shape")
 NUM_FIELDS = ("mean_ns", "std_ns", "min_ns")
+
+SCENARIO_SCHEMA = "graft-scenario-v1"
+SCENARIO_STR_FIELDS = ("scenario", "method", "shape")
+SCENARIO_NUM_FIELDS = (
+    "fraction",
+    "budget",
+    "grad_error",
+    "coverage",
+    "mean_loss",
+    "probe_acc",
+    "mean_rank",
+    "degraded",
+    "seed",
+)
+SCENARIO_UNIT_FIELDS = ("grad_error", "coverage", "probe_acc")
 
 
 def validate(path, allow_empty, require=()):
@@ -81,6 +108,59 @@ def validate(path, allow_empty, require=()):
     return errors
 
 
+def validate_scenario(path, allow_empty, require=()):
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"unreadable or invalid JSON: {exc}"]
+
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    if doc.get("schema") != SCENARIO_SCHEMA:
+        errors.append(f'schema is {doc.get("schema")!r}, want {SCENARIO_SCHEMA!r}')
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return errors + ["'rows' is missing or not a list"]
+    if not rows and not allow_empty:
+        errors.append("no rows (pass --allow-empty to accept an empty matrix)")
+
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for f in SCENARIO_STR_FIELDS:
+            v = row.get(f)
+            if not isinstance(v, str) or not v:
+                errors.append(f"{where}.{f}: want non-empty string, got {v!r}")
+        for f in SCENARIO_NUM_FIELDS:
+            v = row.get(f)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                errors.append(f"{where}.{f}: want number, got {v!r}")
+            elif not math.isfinite(v) or v < 0:
+                errors.append(f"{where}.{f}: want finite >= 0, got {v!r}")
+        frac = row.get("fraction")
+        if isinstance(frac, (int, float)) and not 0 < frac <= 1:
+            errors.append(f"{where}.fraction: want in (0, 1], got {frac!r}")
+        budget = row.get("budget")
+        if isinstance(budget, (int, float)) and budget < 1:
+            errors.append(f"{where}.budget: want >= 1, got {budget!r}")
+        for f in SCENARIO_UNIT_FIELDS:
+            v = row.get(f)
+            if isinstance(v, (int, float)) and v > 1 + 1e-9:
+                errors.append(f"{where}.{f}: want <= 1, got {v!r}")
+        extra = set(row) - set(SCENARIO_STR_FIELDS) - set(SCENARIO_NUM_FIELDS)
+        if extra:
+            errors.append(f"{where}: unknown fields {sorted(extra)}")
+    methods = {row.get("method") for row in rows if isinstance(row, dict)}
+    for m in require:
+        if m not in methods:
+            errors.append(f"required method {m!r} has no rows")
+    return errors
+
+
 def placeholder_note(path):
     """The top-level "note" when it marks the file as a placeholder, else None."""
     try:
@@ -99,6 +179,7 @@ def placeholder_note(path):
 def main(argv):
     allow_empty = False
     strict = False
+    schema = "bench"
     require = []
     args = []
     it = iter(argv)
@@ -107,10 +188,15 @@ def main(argv):
             allow_empty = True
         elif a == "--strict":
             strict = True
+        elif a == "--schema":
+            schema = next(it, None)
+            if schema not in ("bench", "scenario"):
+                print("error: --schema wants 'bench' or 'scenario'", file=sys.stderr)
+                return 1
         elif a == "--require":
             op = next(it, None)
             if op is None:
-                print("error: --require needs an op name", file=sys.stderr)
+                print("error: --require needs a name", file=sys.stderr)
                 return 1
             require.append(op)
         else:
@@ -118,15 +204,19 @@ def main(argv):
     if not args:
         print(__doc__.strip())
         return 1
+    rows_key = "records" if schema == "bench" else "rows"
     failed = False
     for path in args:
-        note = placeholder_note(path)
-        errs = validate(path, allow_empty, require)
-        if note is not None:
-            if strict:
-                errs.append(f"placeholder bench file under --strict ({note})")
-            else:
-                print(f"WARNING {path}: placeholder bench file ({note})", file=sys.stderr)
+        if schema == "bench":
+            note = placeholder_note(path)
+            errs = validate(path, allow_empty, require)
+            if note is not None:
+                if strict:
+                    errs.append(f"placeholder bench file under --strict ({note})")
+                else:
+                    print(f"WARNING {path}: placeholder bench file ({note})", file=sys.stderr)
+        else:
+            errs = validate_scenario(path, allow_empty, require)
         if errs:
             failed = True
             print(f"FAIL {path}")
@@ -134,8 +224,8 @@ def main(argv):
                 print(f"  - {e}")
         else:
             with open(path, encoding="utf-8") as fh:
-                n = len(json.load(fh).get("records", []))
-            print(f"OK   {path} ({n} records)")
+                n = len(json.load(fh).get(rows_key, []))
+            print(f"OK   {path} ({n} {rows_key})")
     return 1 if failed else 0
 
 
